@@ -1,0 +1,168 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT `lowered.compile()` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the `xla` crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits, per shape in the family below:
+  artifacts/sppc_{n}x{b}.hlo.txt
+  artifacts/fista_sq_{n}x{d}.hlo.txt
+  artifacts/fista_hinge_{n}x{d}.hlo.txt
+plus artifacts/manifest.json describing every artifact (kind, shapes,
+steps, input/output signature) — the Rust runtime discovers artifacts
+through the manifest, never by parsing file names.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Shape family.  n is padded sample count (multiples of kernel TILE_N =
+# 512), b the SPPC frontier block width, d the active-set panel width.
+# Chosen to cover the paper's datasets: graphs n <= 4337 -> 8192;
+# a9a n = 32561 -> 32768.
+SPPC_SHAPES = [(1024, 256), (8192, 256), (32768, 256)]
+FISTA_SHAPES = [(1024, 256), (8192, 256), (8192, 1024), (32768, 1024)]
+QUICK_SPPC = [(1024, 256)]
+QUICK_FISTA = [(1024, 256)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_sppc(n, b):
+    return jax.jit(model.sppc_block).lower(
+        _spec(n, b), _spec(n), _spec(n), _spec()
+    )
+
+
+def lower_fista(fn, n, d):
+    return jax.jit(fn).lower(
+        _spec(n, d),  # x
+        _spec(n),  # y
+        _spec(n),  # mask
+        _spec(d),  # w
+        _spec(d),  # vw
+        _spec(8),  # tail
+        _spec(1),  # lam
+        _spec(1),  # lip
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="also write a sentinel copy")
+    ap.add_argument(
+        "--quick", action="store_true", help="smallest shapes only (CI)"
+    )
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    sppc_shapes = QUICK_SPPC if args.quick else SPPC_SHAPES
+    fista_shapes = QUICK_FISTA if args.quick else FISTA_SHAPES
+    manifest = {"format": "hlo-text", "steps": model.STEPS, "artifacts": []}
+
+    for n, b in sppc_shapes:
+        name = f"sppc_{n}x{b}"
+        text = to_hlo_text(lower_sppc(n, b))
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "kind": "sppc",
+                "n": n,
+                "b": b,
+                "file": f"{name}.hlo.txt",
+                "inputs": ["x[n,b]", "w_pos[n]", "w_neg[n]", "r[]"],
+                "outputs": ["scores[b,3]"],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for kind, fn in (("fista_sq", model.fista_squared), ("fista_hinge", model.fista_hinge)):
+        for n, d in fista_shapes:
+            name = f"{kind}_{n}x{d}"
+            text = to_hlo_text(lower_fista(fn, n, d))
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "kind": kind,
+                    "n": n,
+                    "d": d,
+                    "steps": model.STEPS,
+                    "file": f"{name}.hlo.txt",
+                    "inputs": [
+                        "x[n,d]",
+                        "y[n]",
+                        "mask[n]",
+                        "w[d]",
+                        "vw[d]",
+                        "tail[8]",
+                        "lam[1]",
+                        "lip[1]",
+                    ],
+                    "outputs": ["w[d]", "vw[d]", "tail[8]"],
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+    # Tab-separated twin of the manifest for the Rust runtime (the
+    # vendored crate set has no JSON parser; this stays trivially
+    # parseable): name kind n cols steps file
+    tpath = os.path.join(out_dir, "manifest.txt")
+    with open(tpath, "w") as f:
+        f.write("# name\tkind\tn\tcols\tsteps\tfile\n")
+        for a in manifest["artifacts"]:
+            cols = a.get("b", a.get("d", 0))
+            f.write(
+                f"{a['name']}\t{a['kind']}\t{a['n']}\t{cols}\t"
+                f"{a.get('steps', 0)}\t{a['file']}\n"
+            )
+    print(f"wrote {tpath}")
+
+    if args.out:
+        # Makefile sentinel: the freshest sppc artifact doubles as the
+        # up-to-date marker.
+        src = os.path.join(
+            out_dir, f"sppc_{sppc_shapes[0][0]}x{sppc_shapes[0][1]}.hlo.txt"
+        )
+        with open(src) as f, open(args.out, "w") as g:
+            g.write(f.read())
+        print(f"wrote sentinel {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""L1 Pallas kernels: blocked matvecs + soft-threshold for the FISTA engine.
+
+The active-set subproblem (paper eq. 6) restricted to the surviving
+patterns is a dense L1 problem over an (n, d) panel.  The FISTA epoch in
+model.py is built from three kernels:
+
+  * matvec(x, w)    -> x @ w      (residual / margin computation)
+  * rmatvec(x, r)   -> x.T @ r    (gradient computation)
+  * soft_threshold  -> prox of lam*||.||_1
+
+Same VMEM discipline as kernels/sppc.py: the sample axis is the grid's
+reduction axis for rmatvec and the parallel axis for matvec; panels are
+(TILE_N, d).  interpret=True throughout (CPU PJRT).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 512
+
+
+def _matvec_kernel(x_ref, w_ref, o_ref):
+    """o_panel = x_panel @ w  (parallel over sample tiles)."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def matvec(x, w, *, tile_n=TILE_N):
+    """x @ w for x (n, d), w (d,); n % tile_n == 0."""
+    n, d = x.shape
+    if n % tile_n != 0:
+        raise ValueError(f"n={n} must be a multiple of tile_n={tile_n}")
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(n // tile_n,),
+        in_specs=[
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _rmatvec_kernel(x_ref, r_ref, o_ref):
+    """o += x_panel.T @ r_panel (reduction over sample tiles)."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].T, r_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def rmatvec(x, r, *, tile_n=TILE_N):
+    """x.T @ r for x (n, d), r (n,); n % tile_n == 0."""
+    n, d = x.shape
+    if n % tile_n != 0:
+        raise ValueError(f"n={n} must be a multiple of tile_n={tile_n}")
+    return pl.pallas_call(
+        _rmatvec_kernel,
+        grid=(n // tile_n,),
+        in_specs=[
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(x, r)
+
+
+def _soft_threshold_kernel(z_ref, tau_ref, o_ref):
+    z = z_ref[...]
+    tau = tau_ref[0]
+    o_ref[...] = jnp.sign(z) * jnp.maximum(jnp.abs(z) - tau, 0.0)
+
+
+@jax.jit
+def soft_threshold(z, tau):
+    """Elementwise prox of tau*||.||_1; z (d,), tau scalar -> (d,)."""
+    (d,) = z.shape
+    tau_arr = jnp.reshape(tau, (1,)).astype(jnp.float32)
+    return pl.pallas_call(
+        _soft_threshold_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(z, tau_arr)

@@ -1,0 +1,167 @@
+"""Pure-jnp correctness oracles for every Pallas kernel (L1).
+
+These are the ground truth the kernels are tested against at build time
+(pytest, hypothesis sweeps).  They are also what the kernels must lower
+to *semantically* — the Pallas versions only re-express the same math
+with an explicit HBM<->VMEM block schedule.
+
+Notation follows the paper (KDD'16 "Safe Pattern Pruning"):
+  alpha_{it} = a_i * x_{it}  with a_i = 1 (regression) or y_i
+  (classification); x_{it} in {0,1}.
+  u_t = max( sum_{i: beta_i theta_i > 0} alpha_{it} theta_i,
+            -sum_{i: beta_i theta_i < 0} alpha_{it} theta_i )
+  v_t = sum_i alpha_{it}^2 = support(t)      (since a_i^2 = x_{it}^2 = 1)
+  SPPC(t) = u_t + r * sqrt(v_t)
+
+The kernel does not see (a, theta, beta) separately: the Rust
+coordinator (L3) pre-folds them into two n-vectors
+  w_pos_i = a_i * theta_i * [beta_i theta_i > 0]
+  w_neg_i = a_i * theta_i * [beta_i theta_i < 0]
+so the scorer is a pure (B x n) @ (n x 3) reduction over the frontier
+block's densified supports.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sppc_reduce_ref(x, w_pos, w_neg):
+    """Reference for the blocked SPPC reduction.
+
+    Args:
+      x: (n, B) float — densified {0,1} supports for a frontier block of
+         B patterns (column t is pattern t's indicator over samples).
+      w_pos: (n,) float — a_i * theta_i where beta_i*theta_i > 0, else 0.
+      w_neg: (n,) float — a_i * theta_i where beta_i*theta_i < 0, else 0.
+
+    Returns:
+      (B, 3) float: columns are (pos_t, neg_t, v_t) with
+        pos_t = sum_i x_{it} w_pos_i
+        neg_t = sum_i x_{it} w_neg_i
+        v_t   = sum_i x_{it}            (support size; == sum alpha^2)
+    """
+    w3 = jnp.stack([w_pos, w_neg, jnp.ones_like(w_pos)], axis=1)  # (n,3)
+    return x.T @ w3
+
+
+def sppc_scores_ref(x, w_pos, w_neg, r):
+    """Full SPPC: reduce, then u_t = max(pos, -neg), sppc = u + r*sqrt(v)."""
+    acc = sppc_reduce_ref(x, w_pos, w_neg)
+    pos, neg, v = acc[:, 0], acc[:, 1], acc[:, 2]
+    u = jnp.maximum(pos, -neg)
+    sppc = u + r * jnp.sqrt(jnp.maximum(v, 0.0))
+    return sppc, u, v
+
+
+def soft_threshold_ref(z, tau):
+    """Elementwise soft-threshold S(z, tau) = sign(z) * max(|z| - tau, 0)."""
+    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - tau, 0.0)
+
+
+def matvec_ref(x, w):
+    """x @ w for (n, d) x (d,)."""
+    return x @ w
+
+
+def rmatvec_ref(x, r):
+    """x.T @ r for (n, d), (n,)."""
+    return x.T @ r
+
+
+# ---------------------------------------------------------------------------
+# L2-level oracles (model.py graphs are checked against these in pytest).
+# ---------------------------------------------------------------------------
+
+
+def primal_squared_ref(x, y, mask, w, b, lam):
+    r = mask * (y - x @ w - b)
+    return 0.5 * jnp.sum(r * r) + lam * jnp.sum(jnp.abs(w))
+
+
+def dual_squared_ref(theta, y, lam):
+    return -0.5 * lam * lam * jnp.sum(theta * theta) + lam * jnp.dot(y, theta)
+
+
+def dual_point_squared_ref(x, y, mask, w, b, lam):
+    """Gap-safe dual-feasible point for the L1 least-squares subproblem.
+
+    Residual, centered over valid rows (so sum(theta) = 0 matches the
+    beta^T theta = 0 constraint), then scaled into the dual box
+    |x_t^T theta| <= 1 over the columns present.
+    """
+    n_valid = jnp.maximum(jnp.sum(mask), 1.0)
+    r = mask * (y - x @ w - b)
+    r = mask * (r - jnp.sum(r) / n_valid)
+    theta = r / lam
+    viol = jnp.max(jnp.abs(x.T @ theta))
+    scale = jnp.minimum(1.0, 1.0 / jnp.maximum(viol, 1e-30))
+    return theta * scale
+
+
+def primal_hinge_ref(x, y, mask, w, b, lam):
+    z = y * (x @ w + b)
+    h = mask * jnp.maximum(0.0, 1.0 - z)
+    return 0.5 * jnp.sum(h * h) + lam * jnp.sum(jnp.abs(w))
+
+
+def dual_hinge_ref(theta, lam):
+    return -0.5 * lam * lam * jnp.sum(theta * theta) + lam * jnp.sum(theta)
+
+
+def dual_point_hinge_ref(x, y, mask, w, b, lam, proj_iters=12):
+    """Dual-feasible point for the squared-hinge subproblem.
+
+    theta0 = max(0, 1 - z)/lam >= 0; alternating projections push it
+    toward {theta >= 0} ∩ {y^T theta = 0}, then a scale pulls it inside
+    the box |(y .* x_t)^T theta| <= 1 over the columns present.
+    """
+    n_valid = jnp.maximum(jnp.sum(mask), 1.0)
+    z = y * (x @ w + b)
+    theta = mask * jnp.maximum(0.0, 1.0 - z) / lam
+    for _ in range(proj_iters):
+        theta = theta - (jnp.dot(y, theta) / n_valid) * y * mask
+        theta = jnp.maximum(theta, 0.0)
+    # exact hyperplane step (may leave O(eps) negatives; clip them).
+    theta = theta - (jnp.dot(y, theta) / n_valid) * y * mask
+    theta = jnp.maximum(theta, 0.0)
+    viol = jnp.max(jnp.abs(x.T @ (y * theta)))
+    scale = jnp.minimum(1.0, 1.0 / jnp.maximum(viol, 1e-30))
+    return theta * scale
+
+
+def fista_epoch_squared_ref(x, y, mask, w, b, vw, vb, tk, lam, lip, steps):
+    """`steps` FISTA iterations on the L1 least-squares subproblem.
+
+    Intercept b is unpenalized.  (vw, vb, tk) is the momentum state.
+    Returns the updated (w, b, vw, vb, tk).
+    """
+    for _ in range(steps):
+        r = mask * (x @ vw + vb - y)
+        gw = x.T @ r
+        gb = jnp.sum(r)
+        w_new = soft_threshold_ref(vw - gw / lip, lam / lip)
+        b_new = vb - gb / lip
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * tk * tk))
+        beta = (tk - 1.0) / t_new
+        vw = w_new + beta * (w_new - w)
+        vb = b_new + beta * (b_new - b)
+        w, b, tk = w_new, b_new, t_new
+    return w, b, vw, vb, tk
+
+
+def fista_epoch_hinge_ref(x, y, mask, w, b, vw, vb, tk, lam, lip, steps):
+    """`steps` FISTA iterations on the L1 squared-hinge subproblem."""
+    for _ in range(steps):
+        z = y * (x @ vw + vb)
+        h = mask * jnp.maximum(0.0, 1.0 - z)
+        gw = -(x.T @ (y * h))
+        gb = -jnp.sum(y * h)
+        w_new = soft_threshold_ref(vw - gw / lip, lam / lip)
+        b_new = vb - gb / lip
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * tk * tk))
+        beta = (tk - 1.0) / t_new
+        vw = w_new + beta * (w_new - w)
+        vb = b_new + beta * (b_new - b)
+        w, b, tk = w_new, b_new, t_new
+    return w, b, vw, vb, tk

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: blocked SPPC frontier scoring.
+
+This is the compute hot-spot of Safe Pattern Pruning: for every pattern
+node the traversal visits, the rule needs
+
+    pos_t = sum_i x_{it} * w_pos_i
+    neg_t = sum_i x_{it} * w_neg_i
+    v_t   = sum_i x_{it}
+
+over the n samples (see kernels/ref.py for the w_pos/w_neg folding).
+The Rust coordinator densifies a *frontier block* of B pattern supports
+into an (n, B) panel and scores all B nodes in one kernel launch.
+
+TPU-style design (DESIGN.md §3 Hardware-Adaptation):
+  * grid = (n / TN,): the sample axis is the reduction axis of the grid;
+  * each grid step holds one (TN, B) panel of X and one (TN, 3) panel of
+    the folded weights in VMEM and accumulates a (B, 3) panel of partial
+    sums in the output block (revisited by every grid step — the
+    canonical Pallas accumulation pattern);
+  * the inner op is a single (B, TN) x (TN, 3) contraction, which on a
+    real TPU maps onto the MXU with bf16 inputs / f32 accumulation; here
+    we keep f32 end-to-end because correctness is validated on CPU
+    (interpret=True — Mosaic custom-calls cannot run on the CPU PJRT
+    plugin).
+
+VMEM footprint per grid step (f32): TN*B + TN*3 + B*3 floats.  For the
+shipped TN=512, B=256 that is ~0.53 MB — far below the ~16 MB VMEM of a
+TPUv4 core, leaving room for double-buffering the X panels (the kernel
+is bandwidth-bound: ~3 FLOPs per loaded X element).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step (sample-axis tile).  All AOT shapes are multiples.
+TILE_N = 512
+
+
+def _sppc_reduce_kernel(x_ref, w3_ref, o_ref):
+    """One grid step: o += x_panel.T @ w3_panel.
+
+    x_ref:  (TILE_N, B) VMEM panel of densified supports.
+    w3_ref: (TILE_N, 3) VMEM panel of folded weights (w_pos, w_neg, 1).
+    o_ref:  (B, 3) accumulator block (same block for every grid step).
+    """
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].T, w3_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def sppc_reduce(x, w_pos, w_neg, *, tile_n=TILE_N):
+    """Blocked (pos, neg, v) reduction; see kernels/ref.py:sppc_reduce_ref.
+
+    Args:
+      x: (n, B) f32 densified supports, n % tile_n == 0.
+      w_pos, w_neg: (n,) f32 folded weights.
+
+    Returns:
+      (B, 3) f32 [pos | neg | v].
+    """
+    n, b = x.shape
+    if n % tile_n != 0:
+        raise ValueError(f"n={n} must be a multiple of tile_n={tile_n}")
+    w3 = jnp.stack([w_pos, w_neg, jnp.ones_like(w_pos)], axis=1)  # (n, 3)
+    return pl.pallas_call(
+        _sppc_reduce_kernel,
+        grid=(n // tile_n,),
+        in_specs=[
+            pl.BlockSpec((tile_n, b), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, 3), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, 3), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 3), jnp.float32),
+        interpret=True,
+    )(x, w3)
+
+
+def sppc_scores(x, w_pos, w_neg, r, *, tile_n=TILE_N):
+    """SPPC(t) = u_t + r*sqrt(v_t) for a frontier block.
+
+    Returns (sppc, u, v), each (B,) f32.  The max/sqrt epilogue is plain
+    XLA (it is O(B), negligible next to the O(n*B) reduction).
+    """
+    acc = sppc_reduce(x, w_pos, w_neg, tile_n=tile_n)
+    pos, neg, v = acc[:, 0], acc[:, 1], acc[:, 2]
+    u = jnp.maximum(pos, -neg)
+    sppc = u + r * jnp.sqrt(jnp.maximum(v, 0.0))
+    return sppc, u, v

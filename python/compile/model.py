@@ -1,0 +1,129 @@
+"""L2: the JAX compute graphs AOT-lowered for the Rust runtime.
+
+Three graph families, each parameterized by padded shapes (the Rust
+runtime pads live data up to the artifact's shape; `mask` marks valid
+rows so padding never perturbs the math):
+
+  * sppc_block      — batched SPPC frontier scoring (calls the L1
+                      Pallas kernel in kernels/sppc.py);
+  * fista_squared / fista_hinge
+                    — `STEPS` FISTA iterations on the active-set
+                      subproblem (paper eq. 6) + duality-gap epilogue
+                      (dual-feasible point, primal, dual);
+  * lambda_max_block — the §3.4.1 bound weights are just a special case
+                      of sppc_block (w_pos/w_neg folded from y - ybar),
+                      so no separate graph is needed; the Rust side
+                      reuses sppc artifacts.
+
+Everything here is **build-time only**: `aot.py` lowers these once to
+HLO text in artifacts/, and the Rust coordinator executes them via PJRT
+with no Python anywhere near the request path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import linalg, sppc
+
+# FISTA iterations per artifact execution.  The Rust driver loops
+# executions until the gap (returned by the artifact) is under
+# tolerance, so this only sets the check granularity.
+STEPS = 16
+
+
+def sppc_block(x, w_pos, w_neg, r):
+    """Score one frontier block.  Returns a single (B, 3) panel
+    [sppc | u | v] (tupled outputs keep the Rust unpacking trivial)."""
+    s, u, v = sppc.sppc_scores(x, w_pos, w_neg, r)
+    return (jnp.stack([s, u, v], axis=1),)
+
+
+def _momentum(tk):
+    t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * tk * tk))
+    return t_new, (tk - 1.0) / t_new
+
+
+def _pack_state(w, b, vw, vb, tk, primal, dual):
+    """Scalars ride in a length-8 tail vector: [b, vb, tk, P, D, gap, 0, 0]."""
+    tail = jnp.stack(
+        [b, vb, tk, primal, dual, primal - dual, jnp.float32(0), jnp.float32(0)]
+    )
+    return w, vw, tail
+
+
+def fista_squared(x, y, mask, w, vw, tail, lam, lip):
+    """One artifact execution = STEPS FISTA iterations + gap epilogue.
+
+    Args:
+      x: (n, d) active-set panel (padded; pad rows AND pad columns zero).
+      y: (n,) targets (pad rows zero).
+      mask: (n,) {0,1} valid-row mask.
+      w, vw: (d,) iterate and momentum point.
+      tail: (8,) packed scalars [b, vb, tk, ...] (see _pack_state).
+      lam, lip: (1,) scalars — L1 weight, Lipschitz constant of the
+        smooth part (precomputed by the Rust driver).
+
+    Returns (w, vw, tail) with tail[3:6] = (primal, dual, gap).
+    """
+    b, vb, tk = tail[0], tail[1], tail[2]
+    lam = lam[0]
+    lip = lip[0]
+    for _ in range(STEPS):
+        r = mask * (linalg.matvec(x, vw) + vb - y)
+        gw = linalg.rmatvec(x, r)
+        gb = jnp.sum(r)
+        w_new = linalg.soft_threshold(vw - gw / lip, lam / lip)
+        b_new = vb - gb / lip
+        t_new, beta = _momentum(tk)
+        vw = w_new + beta * (w_new - w)
+        vb = b_new + beta * (b_new - b)
+        w, b, tk = w_new, b_new, t_new
+
+    # Duality-gap epilogue (see kernels/ref.py for the derivation).
+    n_valid = jnp.maximum(jnp.sum(mask), 1.0)
+    resid = mask * (y - linalg.matvec(x, w) - b)
+    primal = 0.5 * jnp.sum(resid * resid) + lam * jnp.sum(jnp.abs(w))
+    rc = mask * (resid - jnp.sum(resid) / n_valid)
+    theta = rc / lam
+    viol = jnp.max(jnp.abs(linalg.rmatvec(x, theta)))
+    theta = theta * jnp.minimum(1.0, 1.0 / jnp.maximum(viol, 1e-30))
+    dual = -0.5 * lam * lam * jnp.sum(theta * theta) + lam * jnp.dot(y, theta)
+    return _pack_state(w, b, vw, vb, tk, primal, dual)
+
+
+def fista_hinge(x, y, mask, w, vw, tail, lam, lip):
+    """Squared-hinge variant of fista_squared; same calling convention.
+
+    x carries plain supports x_{it}; the y-folding (alpha = y*x) happens
+    inside, so the Rust panel builder is shared between problems.
+    """
+    b, vb, tk = tail[0], tail[1], tail[2]
+    lam = lam[0]
+    lip = lip[0]
+    for _ in range(STEPS):
+        z = y * (linalg.matvec(x, vw) + vb)
+        h = mask * jnp.maximum(0.0, 1.0 - z)
+        gw = -linalg.rmatvec(x, y * h)
+        gb = -jnp.sum(y * h)
+        w_new = linalg.soft_threshold(vw - gw / lip, lam / lip)
+        b_new = vb - gb / lip
+        t_new, beta = _momentum(tk)
+        vw = w_new + beta * (w_new - w)
+        vb = b_new + beta * (b_new - b)
+        w, b, tk = w_new, b_new, t_new
+
+    n_valid = jnp.maximum(jnp.sum(mask), 1.0)
+    z = y * (linalg.matvec(x, w) + b)
+    h = mask * jnp.maximum(0.0, 1.0 - z)
+    primal = 0.5 * jnp.sum(h * h) + lam * jnp.sum(jnp.abs(w))
+    theta = h / lam
+    for _ in range(12):
+        theta = theta - (jnp.dot(y, theta) / n_valid) * y * mask
+        theta = jnp.maximum(theta, 0.0)
+    theta = theta - (jnp.dot(y, theta) / n_valid) * y * mask
+    theta = jnp.maximum(theta, 0.0)
+    viol = jnp.max(jnp.abs(linalg.rmatvec(x, y * theta)))
+    theta = theta * jnp.minimum(1.0, 1.0 / jnp.maximum(viol, 1e-30))
+    dual = -0.5 * lam * lam * jnp.sum(theta * theta) + lam * jnp.sum(theta)
+    return _pack_state(w, b, vw, vb, tk, primal, dual)

@@ -1,0 +1,155 @@
+"""L1 kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes/seeds; every Pallas kernel must match ref.py to
+float32 tolerance for all of them.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import linalg, ref, sppc
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Sample-axis sizes must be multiples of the kernel tile.
+N_SIZES = [512, 1024, 2048]
+B_SIZES = [1, 3, 8, 64, 256]
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _dense_supports(rng, n, b, density):
+    return (rng.random((n, b)) < density).astype(np.float32)
+
+
+def _folded_weights(rng, n):
+    """Random theta/beta folded into (w_pos, w_neg) with disjoint support."""
+    theta = rng.standard_normal(n).astype(np.float32)
+    beta = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    a = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    prod = beta * theta
+    w_pos = np.where(prod > 0, a * theta, 0.0).astype(np.float32)
+    w_neg = np.where(prod < 0, a * theta, 0.0).astype(np.float32)
+    return w_pos, w_neg
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from(N_SIZES),
+    b=st.sampled_from(B_SIZES),
+    density=st.floats(0.01, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sppc_reduce_matches_ref(n, b, density, seed):
+    rng = _rng(seed)
+    x = _dense_supports(rng, n, b, density)
+    w_pos, w_neg = _folded_weights(rng, n)
+    got = sppc.sppc_reduce(x, w_pos, w_neg)
+    want = ref.sppc_reduce_ref(x, w_pos, w_neg)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from(N_SIZES),
+    b=st.sampled_from([8, 256]),
+    r=st.floats(0.0, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sppc_scores_matches_ref(n, b, r, seed):
+    rng = _rng(seed)
+    x = _dense_supports(rng, n, b, 0.3)
+    w_pos, w_neg = _folded_weights(rng, n)
+    s_got, u_got, v_got = sppc.sppc_scores(x, w_pos, w_neg, jnp.float32(r))
+    s_want, u_want, v_want = ref.sppc_scores_ref(x, w_pos, w_neg, r)
+    np.testing.assert_allclose(u_got, u_want, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(v_got, v_want, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(s_got, s_want, rtol=1e-5, atol=1e-4)
+
+
+def test_sppc_v_is_support_count():
+    """v_t = support size exactly (binary x, unit a_i^2)."""
+    rng = _rng(0)
+    x = _dense_supports(rng, 512, 16, 0.2)
+    w_pos, w_neg = _folded_weights(rng, 512)
+    _, _, v = sppc.sppc_scores(x, w_pos, w_neg, jnp.float32(1.0))
+    np.testing.assert_allclose(np.asarray(v), x.sum(axis=0), atol=1e-3)
+
+
+def test_sppc_u_sign_split_semantics():
+    """u_t with hand-built weights: pos-only rows raise pos, etc."""
+    n, b = 512, 4
+    x = np.zeros((n, b), np.float32)
+    x[:8, 0] = 1.0  # pattern 0 hits rows 0..7
+    w_pos = np.zeros(n, np.float32)
+    w_neg = np.zeros(n, np.float32)
+    w_pos[:4] = 2.0  # pos mass 8.0
+    w_neg[4:8] = -3.0  # neg mass -12.0 -> -sum = 12.0
+    s, u, v = sppc.sppc_scores(x, w_pos, w_neg, jnp.float32(0.0))
+    assert np.isclose(u[0], 12.0, atol=1e-5)  # max(8, 12)
+    assert np.isclose(v[0], 8.0, atol=1e-5)
+    assert np.isclose(s[0], 12.0, atol=1e-5)
+    assert np.allclose(np.asarray(u)[1:], 0.0, atol=1e-6)
+
+
+def test_sppc_rejects_untiled_n():
+    rng = _rng(1)
+    x = _dense_supports(rng, 500, 4, 0.3)
+    w_pos, w_neg = _folded_weights(rng, 500)
+    with pytest.raises(ValueError):
+        sppc.sppc_reduce(x, w_pos, w_neg)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from(N_SIZES),
+    d=st.sampled_from([1, 7, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_matches_ref(n, d, seed):
+    rng = _rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    w = rng.standard_normal(d).astype(np.float32)
+    np.testing.assert_allclose(
+        linalg.matvec(x, w), ref.matvec_ref(x, w), rtol=1e-4, atol=1e-3
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from(N_SIZES),
+    d=st.sampled_from([1, 7, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmatvec_matches_ref(n, d, seed):
+    rng = _rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    r = rng.standard_normal(n).astype(np.float32)
+    np.testing.assert_allclose(
+        linalg.rmatvec(x, r), ref.rmatvec_ref(x, r), rtol=1e-4, atol=1e-3
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.integers(1, 512),
+    tau=st.floats(0.0, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_soft_threshold_matches_ref(d, tau, seed):
+    rng = _rng(seed)
+    z = (rng.standard_normal(d) * 3).astype(np.float32)
+    got = linalg.soft_threshold(z, jnp.float32(tau))
+    want = ref.soft_threshold_ref(z, tau)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_soft_threshold_kills_small_entries():
+    z = np.array([0.5, -0.5, 2.0, -2.0], np.float32)
+    got = np.asarray(linalg.soft_threshold(z, jnp.float32(1.0)))
+    np.testing.assert_allclose(got, [0.0, 0.0, 1.0, -1.0], atol=1e-6)

@@ -1,0 +1,186 @@
+"""L2 graph correctness: FISTA epochs vs ref, gap/dual-point properties,
+and convergence of the full artifact loop on small synthetic problems.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+N = 512  # one kernel tile — smallest legal padded n
+
+
+def _problem(seed, n=N, d=16, n_valid=None, classify=False):
+    rng = np.random.default_rng(seed)
+    n_valid = n_valid or n
+    x = np.zeros((n, d), np.float32)
+    x[:n_valid] = (rng.random((n_valid, d)) < 0.3).astype(np.float32)
+    w_true = np.zeros(d, np.float32)
+    w_true[: d // 4] = rng.standard_normal(d // 4).astype(np.float32)
+    y = np.zeros(n, np.float32)
+    score = x[:n_valid] @ w_true + 0.1 * rng.standard_normal(n_valid)
+    y[:n_valid] = np.sign(score) if classify else score
+    y[:n_valid][y[:n_valid] == 0] = 1.0
+    mask = np.zeros(n, np.float32)
+    mask[:n_valid] = 1.0
+    return x, y.astype(np.float32), mask
+
+
+def _lip(x, hinge=False):
+    xa = np.concatenate([x, np.ones((x.shape[0], 1), np.float32)], axis=1)
+    s = np.linalg.svd(xa, compute_uv=False)[0]
+    return np.float32(s * s * (1.0 if not hinge else 1.0) + 1e-3)
+
+
+def _init_state(d):
+    w = np.zeros(d, np.float32)
+    vw = np.zeros(d, np.float32)
+    tail = np.zeros(8, np.float32)
+    tail[2] = 1.0  # tk
+    return w, vw, tail
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), lam=st.floats(0.05, 5.0))
+def test_fista_squared_matches_ref_epoch(seed, lam):
+    x, y, mask = _problem(seed)
+    lip = _lip(x)
+    w, vw, tail = _init_state(x.shape[1])
+    w2, vw2, tail2 = model.fista_squared(
+        x, y, mask, w, vw, tail, np.array([lam], np.float32),
+        np.array([lip], np.float32),
+    )
+    rw, rb, rvw, rvb, rtk = ref.fista_epoch_squared_ref(
+        x, y, mask, jnp.asarray(w), jnp.float32(0), jnp.asarray(vw),
+        jnp.float32(0), jnp.float32(1.0), lam, lip, model.STEPS,
+    )
+    np.testing.assert_allclose(w2, rw, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(vw2, rvw, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(tail2[0], rb, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(tail2[1], rvb, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(tail2[2], rtk, rtol=1e-5, atol=1e-5)
+    # epilogue agrees with the oracles
+    p = ref.primal_squared_ref(x, y, mask, rw, rb, lam)
+    np.testing.assert_allclose(tail2[3], p, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), lam=st.floats(0.05, 5.0))
+def test_fista_hinge_matches_ref_epoch(seed, lam):
+    x, y, mask = _problem(seed, classify=True)
+    lip = _lip(x, hinge=True)
+    w, vw, tail = _init_state(x.shape[1])
+    w2, vw2, tail2 = model.fista_hinge(
+        x, y, mask, w, vw, tail, np.array([lam], np.float32),
+        np.array([lip], np.float32),
+    )
+    rw, rb, rvw, rvb, rtk = ref.fista_epoch_hinge_ref(
+        x, y, mask, jnp.asarray(w), jnp.float32(0), jnp.asarray(vw),
+        jnp.float32(0), jnp.float32(1.0), lam, lip, model.STEPS,
+    )
+    np.testing.assert_allclose(w2, rw, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(tail2[0], rb, rtol=1e-4, atol=1e-4)
+    p = ref.primal_hinge_ref(x, y, mask, rw, rb, lam)
+    np.testing.assert_allclose(tail2[3], p, rtol=1e-4, atol=1e-4)
+
+
+def _run_to_gap(fn, x, y, mask, lam, lip, max_execs=400, tol=1e-5):
+    w, vw, tail = _init_state(x.shape[1])
+    lam_a = np.array([lam], np.float32)
+    lip_a = np.array([lip], np.float32)
+    gap = np.inf
+    for _ in range(max_execs):
+        w, vw, tail = fn(x, y, mask, w, vw, tail, lam_a, lip_a)
+        gap = float(tail[5])
+        if gap < tol * max(1.0, float(tail[3])):
+            break
+    return np.asarray(w), float(tail[0]), gap, float(tail[3]), float(tail[4])
+
+
+def test_fista_squared_converges_and_gap_closes():
+    x, y, mask = _problem(3, n_valid=400)
+    w, b, gap, primal, dual = _run_to_gap(
+        model.fista_squared, x, y, mask, 2.0, _lip(x)
+    )
+    assert gap < 1e-4 * max(1.0, primal)
+    assert dual <= primal + 1e-5
+    # KKT box: |x_t^T residual| <= lam (+tol) for all columns.
+    resid = mask * (y - x @ w - b)
+    assert np.max(np.abs(x.T @ resid)) <= 2.0 * (1 + 1e-3) + 1e-3
+    # intercept optimality: residual mean ~ 0
+    assert abs(resid.sum()) < 1e-2
+
+
+def test_fista_hinge_converges_and_gap_closes():
+    x, y, mask = _problem(7, n_valid=384, classify=True)
+    w, b, gap, primal, dual = _run_to_gap(
+        model.fista_hinge, x, y, mask, 1.0, _lip(x, hinge=True)
+    )
+    assert gap < 1e-3 * max(1.0, primal)
+    assert dual <= primal + 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_dual_point_squared_is_feasible(seed):
+    x, y, mask = _problem(seed)
+    rng = np.random.default_rng(seed + 1)
+    w = rng.standard_normal(x.shape[1]).astype(np.float32) * 0.1
+    b = np.float32(rng.standard_normal() * 0.1)
+    lam = 1.0
+    theta = np.asarray(ref.dual_point_squared_ref(x, y, mask, w, b, lam))
+    assert abs(theta.sum()) < 1e-3  # beta^T theta = 0 (beta = 1)
+    assert np.max(np.abs(x.T @ theta)) <= 1.0 + 1e-4  # box
+    # weak duality: P >= D
+    p = float(ref.primal_squared_ref(x, y, mask, w, b, lam))
+    d = float(ref.dual_squared_ref(theta, y, lam))
+    assert p >= d - 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_dual_point_hinge_is_feasible(seed):
+    x, y, mask = _problem(seed, classify=True)
+    rng = np.random.default_rng(seed + 1)
+    w = rng.standard_normal(x.shape[1]).astype(np.float32) * 0.1
+    b = np.float32(rng.standard_normal() * 0.1)
+    lam = 1.0
+    theta = np.asarray(ref.dual_point_hinge_ref(x, y, mask, w, b, lam))
+    assert theta.min() >= -1e-6  # theta >= 0
+    assert abs(float(y @ theta)) < 5e-3  # y^T theta ~= 0
+    assert np.max(np.abs(x.T @ (y * theta))) <= 1.0 + 1e-4
+    p = float(ref.primal_hinge_ref(x, y, mask, w, b, lam))
+    d = float(ref.dual_hinge_ref(theta, lam))
+    assert p >= d - 1e-4
+
+
+def test_padding_rows_do_not_change_objective():
+    """Same data at two paddings -> identical primal/dual trajectory."""
+    x, y, mask = _problem(11, n=512, d=8, n_valid=300)
+    x2 = np.zeros((1024, 8), np.float32)
+    y2 = np.zeros(1024, np.float32)
+    mask2 = np.zeros(1024, np.float32)
+    x2[:512], y2[:512], mask2[:512] = x, y, mask
+    lip = _lip(x[:300])
+    w1, b1, g1, p1, d1 = _run_to_gap(model.fista_squared, x, y, mask, 1.5, lip)
+    w2, b2, g2, p2, d2 = _run_to_gap(model.fista_squared, x2, y2, mask2, 1.5, lip)
+    np.testing.assert_allclose(w1, w2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(p1, p2, rtol=1e-5)
+
+
+def test_sppc_block_packs_scores():
+    rng = np.random.default_rng(0)
+    x = (rng.random((512, 8)) < 0.3).astype(np.float32)
+    theta = rng.standard_normal(512).astype(np.float32)
+    w_pos = np.where(theta > 0, theta, 0).astype(np.float32)
+    w_neg = np.where(theta < 0, theta, 0).astype(np.float32)
+    (out,) = model.sppc_block(x, w_pos, w_neg, np.float32(0.7))
+    s, u, v = ref.sppc_scores_ref(x, w_pos, w_neg, 0.7)
+    np.testing.assert_allclose(out[:, 0], s, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(out[:, 1], u, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(out[:, 2], v, rtol=1e-5, atol=1e-4)

@@ -1,0 +1,106 @@
+//! Ablation A3: Rust engines vs the AOT JAX/Pallas engines via PJRT.
+//!
+//! * SPPC frontier scoring — the Rust sparse fold vs the Pallas kernel
+//!   (which densifies to a padded (n, 256) panel).  The crossover shows
+//!   where batched dense scoring would pay on a real accelerator: on
+//!   CPU PJRT (interpret-mode lowering) the dense kernel moves
+//!   n_pad×256 floats per block, so the sparse fold wins; on TPU the
+//!   same artifact streams panels through VMEM at HBM bandwidth
+//!   (DESIGN.md §8 carries the estimate).
+//! * Restricted solve — f64 sparse CD vs f32 dense FISTA artifact.
+//!
+//! Requires `artifacts/`; prints SKIP rows when absent.
+
+use spp::runtime::{default_artifact_dir, PjrtRuntime, XlaFistaSolver, XlaSppcScorer};
+use spp::screening::fold_weights;
+use spp::solver::{CdSolver, Task};
+use spp::testutil::SplitMix64;
+
+fn main() {
+    println!("# A3 engine ablation (rust vs xla/PJRT)");
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.txt").is_file() {
+        println!("ROW fig=A3 SKIP no artifacts at {}", dir.display());
+        return;
+    }
+    let rt = PjrtRuntime::cpu(&dir).expect("runtime");
+    let mut rng = SplitMix64::new(33);
+
+    // --- SPPC scoring ---
+    for n in [648usize] {
+        let y: Vec<f64> = (0..n).map(|_| if rng.coin(0.5) { 1.0 } else { -1.0 }).collect();
+        let theta: Vec<f64> = (0..n).map(|_| rng.gauss() * 0.1).collect();
+        let (wpos, wneg) = fold_weights(Task::Classification, &y, &theta);
+        let k = 1024usize;
+        let supports: Vec<Vec<u32>> = (0..k)
+            .map(|_| {
+                let m = rng.range(2, (n / 8).max(3));
+                rng.sample_distinct(n, m).into_iter().map(|i| i as u32).collect()
+            })
+            .collect();
+        let nnz: usize = supports.iter().map(|s| s.len()).sum();
+
+        // rust sparse fold
+        let (_, med_rust, _) = spp::benchkit::bench_fn(&format!("sppc-rust n={n} k={k}"), 9, || {
+            let mut acc = 0.0f64;
+            for sup in &supports {
+                let mut pos = 0.0;
+                let mut neg = 0.0;
+                for &i in sup {
+                    pos += wpos[i as usize];
+                    neg += wneg[i as usize];
+                }
+                acc += pos.max(-neg) + 0.3 * (sup.len() as f64).sqrt();
+            }
+            std::hint::black_box(acc);
+        });
+        // xla pallas kernel
+        let scorer = XlaSppcScorer::new(&rt, n).expect("scorer");
+        let (_, med_xla, _) = spp::benchkit::bench_fn(&format!("sppc-xla  n={n} k={k}"), 5, || {
+            let s = scorer.score(&supports, &wpos, &wneg, 0.3).expect("score");
+            std::hint::black_box(s.len());
+        });
+        println!(
+            "ROW fig=A3 bench=sppc n={n} k={k} nnz={nnz} rust_ms={:.3} xla_ms={:.3} ratio={:.1}",
+            1e3 * med_rust,
+            1e3 * med_xla,
+            med_xla / med_rust
+        );
+    }
+
+    // --- restricted solve ---
+    for (n, k) in [(500usize, 50usize), (500, 200)] {
+        let supports: Vec<Vec<u32>> = (0..k)
+            .map(|_| {
+                let m = rng.range(2, n / 4);
+                rng.sample_distinct(n, m).into_iter().map(|i| i as u32).collect()
+            })
+            .collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.gauss() * 2.0).collect();
+        let lam = 4.0;
+        let cd = CdSolver::default();
+        let (_, med_cd, _) = spp::benchkit::bench_fn(&format!("solve-cd  n={n} k={k}"), 5, || {
+            let s = cd.solve(Task::Regression, &supports, &y, lam, None);
+            std::hint::black_box(s.primal);
+        });
+        let mut fista = XlaFistaSolver::new(&rt);
+        fista.max_execs = 150;
+        let mut primal_xla = 0.0;
+        let (_, med_xla, _) = spp::benchkit::bench_fn(&format!("solve-xla n={n} k={k}"), 3, || {
+            let s = fista.solve(Task::Regression, &supports, &y, lam).expect("fista");
+            primal_xla = s.primal;
+            std::hint::black_box(s.execs);
+        });
+        let cd_primal = cd.solve(Task::Regression, &supports, &y, lam, None).primal;
+        let rel = (primal_xla - cd_primal).abs() / cd_primal.abs().max(1.0);
+        println!(
+            "ROW fig=A3 bench=solve n={n} k={k} cd_ms={:.2} xla_ms={:.2} ratio={:.1} primal_rel_err={:.1e}",
+            1e3 * med_cd,
+            1e3 * med_xla,
+            med_xla / med_cd,
+            rel
+        );
+    }
+    println!("# expectation on CPU PJRT: rust wins (sparse f64 vs padded dense f32);");
+    println!("# the artifact path exists for accelerator targets and is verified identical.");
+}

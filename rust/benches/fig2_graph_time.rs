@@ -1,0 +1,11 @@
+//! Figure 2: computation time, graph classification/regression.
+//!
+//! Paper setup: CPDB / Mutagenicity (classification), Bergstrom /
+//! Karthikeyan (regression); SPP vs boosting; 100-λ path to 0.01·λmax;
+//! bars split into traverse + solve; maxpat ∈ {5..10}.
+//!
+//! Default run uses reduced scale/λ-grid (see benchkit env knobs);
+//! `SPP_BENCH_FULL=1` reproduces the paper's exact sweep.
+fn main() {
+    spp::benchkit::run_figure("fig2", spp::benchkit::GRAPH_WORKLOADS);
+}

@@ -1,0 +1,7 @@
+//! Figure 3: computation time, item-set classification/regression.
+//!
+//! Paper setup: splice / a9a (classification), dna / protein
+//! (regression); SPP vs boosting; 100-λ path; maxpat ∈ {3..6}.
+fn main() {
+    spp::benchkit::run_figure("fig3", spp::benchkit::ITEMSET_WORKLOADS);
+}

@@ -1,0 +1,6 @@
+//! Figure 4: # traversed nodes, graph mining.  Same sweep as Figure 2;
+//! the reported currency is the per-path total of visitor invocations
+//! (ROW ... nodes=...).
+fn main() {
+    spp::benchkit::run_figure("fig4", spp::benchkit::GRAPH_WORKLOADS);
+}

@@ -1,0 +1,5 @@
+//! Figure 5: # traversed nodes, item-set mining.  Same sweep as
+//! Figure 3; the reported currency is ROW ... nodes=...
+fn main() {
+    spp::benchkit::run_figure("fig5", spp::benchkit::ITEMSET_WORKLOADS);
+}

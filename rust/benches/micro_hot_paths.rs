@@ -1,0 +1,129 @@
+//! MICRO: the traversal and solver hot paths in isolation.
+//!
+//! These are the quantities the §Perf log tracks: tid-list
+//! intersection, SPPC node evaluation, CD epochs, and gSpan
+//! enumeration (whose cost is dominated by the minimality check).
+
+use spp::benchkit::{bench_fn, bench_throughput};
+use spp::data::synth_graphs::{self, GraphSynthConfig};
+use spp::data::synth_itemsets::{generate, ItemsetSynthConfig};
+use spp::mining::gspan::GSpanMiner;
+use spp::mining::itemset::{intersect_into, ItemsetMiner};
+use spp::mining::{PatternNode, Walk};
+use spp::screening::sppc::SppScreen;
+use spp::screening::Database;
+use spp::solver::{CdSolver, Task};
+use spp::testutil::SplitMix64;
+
+fn sorted_sample(rng: &mut SplitMix64, universe: usize, len: usize) -> Vec<u32> {
+    rng.sample_distinct(universe, len).into_iter().map(|i| i as u32).collect()
+}
+
+fn main() {
+    let mut rng = SplitMix64::new(1);
+
+    // --- tid-list intersection (the item-set hot loop) ---
+    for (la, lb) in [(1000usize, 1000usize), (100, 10_000), (10, 100_000)] {
+        let a = sorted_sample(&mut rng, 200_000, la);
+        let b = sorted_sample(&mut rng, 200_000, lb);
+        let mut out = Vec::with_capacity(la.min(lb));
+        bench_throughput(&format!("intersect {la}x{lb}"), 7, || {
+            let iters = 2000;
+            for _ in 0..iters {
+                intersect_into(&a, &b, &mut out);
+                std::hint::black_box(out.len());
+            }
+            iters * (la.min(lb)) as u64
+        });
+    }
+
+    // --- SPPC evaluation throughput (nodes/s scored) ---
+    {
+        let n = 4000usize;
+        let theta: Vec<f64> = (0..n).map(|_| rng.gauss() * 0.1).collect();
+        let y = vec![1.0; n];
+        let screen = SppScreen::new(Task::Regression, &y, &theta, 0.4);
+        let supports: Vec<Vec<u32>> = (0..1000)
+            .map(|_| { let m = rng.range(4, 200); sorted_sample(&mut rng, n, m) })
+            .collect();
+        let nnz: u64 = supports.iter().map(|s| s.len() as u64).sum();
+        bench_throughput("sppc-eval (nnz/s)", 7, || {
+            for sup in &supports {
+                std::hint::black_box(screen.sppc(sup));
+            }
+            nnz
+        });
+    }
+
+    // --- full itemset traversal + SPP visitor (nodes/s) ---
+    {
+        let d = generate(&ItemsetSynthConfig::preset_splice(5).scaled(0.1));
+        let theta: Vec<f64> = (0..d.db.len()).map(|_| rng.gauss() * 0.02).collect();
+        bench_fn("itemset traversal+screen splice@0.1 maxpat=3", 5, || {
+            let mut screen = SppScreen::new(Task::Regression, &d.y, &theta, 0.2);
+            ItemsetMiner::new(&d.db, 3).traverse(&mut screen);
+            std::hint::black_box(screen.survivors.len());
+        });
+        // raw enumeration without screening work
+        bench_fn("itemset traversal raw       maxpat=3", 5, || {
+            let mut count = 0u64;
+            let mut v = |_: &PatternNode<'_>| {
+                count += 1;
+                Walk::Descend
+            };
+            ItemsetMiner::new(&d.db, 3).traverse(&mut v);
+            std::hint::black_box(count);
+        });
+    }
+
+    // --- gSpan enumeration (minimality check dominated) ---
+    {
+        let d = synth_graphs::generate(&GraphSynthConfig::preset_cpdb(5).scaled(0.15));
+        for maxpat in [3usize, 4] {
+            bench_fn(&format!("gspan enumerate cpdb@0.15 maxpat={maxpat}"), 3, || {
+                let mut count = 0u64;
+                let mut v = |_: &PatternNode<'_>| {
+                    count += 1;
+                    Walk::Descend
+                };
+                GSpanMiner::new(&d.db, maxpat).traverse(&mut v);
+                std::hint::black_box(count);
+            });
+        }
+    }
+
+    // --- CD solver epochs ---
+    {
+        let n = 2000usize;
+        let k = 300usize;
+        let supports: Vec<Vec<u32>> = (0..k)
+            .map(|_| { let m = rng.range(5, n / 4); sorted_sample(&mut rng, n, m) })
+            .collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.gauss() * 2.0).collect();
+        for task in [Task::Regression, Task::Classification] {
+            let yy: Vec<f64> = match task {
+                Task::Regression => y.clone(),
+                Task::Classification => y.iter().map(|v| v.signum()).collect(),
+            };
+            bench_fn(&format!("cd solve {task:?} n={n} k={k}"), 5, || {
+                let s = CdSolver::default().solve(task, &supports, &yy, 8.0, None);
+                std::hint::black_box((s.epochs, s.gap));
+            });
+        }
+    }
+
+    // --- end-to-end λ_max search (bounded) ---
+    {
+        let d = generate(&ItemsetSynthConfig::preset_splice(5).scaled(0.2));
+        bench_fn("lambda-max search splice@0.2 maxpat=3", 5, || {
+            let lm = spp::screening::lambda_max::lambda_max(
+                &Database::Itemsets(&d.db),
+                &d.y,
+                Task::Classification,
+                3,
+                1,
+            );
+            std::hint::black_box(lm.lambda_max);
+        });
+    }
+}

@@ -1,0 +1,194 @@
+//! Shared benchmark harness (the vendored crate set has no criterion).
+//!
+//! Two facilities:
+//!
+//! * [`run_figure`] — the figure-bench driver: a (dataset × maxpat ×
+//!   method) sweep printing paper-style rows plus machine-readable
+//!   `ROW ...` lines that EXPERIMENTS.md records.  Workload size is
+//!   tunable via env:
+//!     - `SPP_BENCH_SCALE`   — multiply every dataset's scale,
+//!     - `SPP_BENCH_LAMBDAS` — grid size (default 20; paper: 100),
+//!     - `SPP_BENCH_RATIO`   — λ_min/λ_max (default 0.05; paper: 0.01),
+//!     - `SPP_BENCH_FULL=1`  — paper-exact sweep (full n, 100 λs, 0.01,
+//!       full maxpat set).  Budget hours, not minutes.
+//! * [`bench_fn`] — a criterion-style micro-bench: warmup, fixed sample
+//!   count, reports min/median/mean.
+//!
+//! All figure benches pin to a single worker: the paper measures a
+//! single core of a Xeon E5-2643 v2.
+
+use std::time::Instant;
+
+use crate::coordinator::{report, run_experiment, ExperimentSpec, Method};
+use crate::path::PathConfig;
+
+fn env_f64(name: &str) -> Option<f64> {
+    std::env::var(name).ok()?.parse().ok()
+}
+
+fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok()?.parse().ok()
+}
+
+pub fn full_sweep() -> bool {
+    std::env::var("SPP_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// One workload of a figure sweep.
+#[derive(Clone, Copy)]
+pub struct Workload {
+    pub dataset: &'static str,
+    /// Default scale at which the sweep stays within a CI-sized budget.
+    pub scale: f64,
+    pub maxpats: &'static [usize],
+    /// maxpat sweep at `SPP_BENCH_FULL=1` (the paper's).
+    pub full_maxpats: &'static [usize],
+}
+
+/// Run a figure sweep and print both human and `ROW` lines.
+///
+/// `fig`: figure tag for the ROW lines (e.g. "fig2").
+pub fn run_figure(fig: &str, workloads: &[Workload]) {
+    let full = full_sweep();
+    let scale_mult = env_f64("SPP_BENCH_SCALE").unwrap_or(1.0);
+    let n_lambdas = env_usize("SPP_BENCH_LAMBDAS").unwrap_or(if full { 100 } else { 20 });
+    let ratio = env_f64("SPP_BENCH_RATIO").unwrap_or(if full { 0.01 } else { 0.05 });
+    println!(
+        "# {fig}: lambdas={n_lambdas} ratio={ratio} scale_mult={scale_mult} full={full}"
+    );
+    println!(
+        "# paper setup: 100 lambdas, ratio 0.01, full n — set SPP_BENCH_FULL=1 to match"
+    );
+
+    for w in workloads {
+        let scale = if full { 1.0 } else { w.scale } * scale_mult;
+        let maxpats = if full { w.full_maxpats } else { w.maxpats };
+        for &maxpat in maxpats {
+            let mut pair = Vec::new();
+            for method in [Method::Spp, Method::Boosting] {
+                let spec = ExperimentSpec {
+                    dataset: w.dataset.into(),
+                    scale,
+                    maxpat,
+                    method,
+                    cfg: PathConfig {
+                        n_lambdas,
+                        lambda_min_ratio: ratio,
+                        maxpat,
+                        ..PathConfig::default()
+                    },
+                };
+                match run_experiment(&spec) {
+                    Ok(r) => {
+                        assert!(
+                            r.max_gap <= 2e-6,
+                            "{}/{:?}: uncertified path (gap {})",
+                            w.dataset,
+                            method,
+                            r.max_gap
+                        );
+                        println!("{}", report::time_row(&r));
+                        println!(
+                            "ROW fig={fig} dataset={} n={} maxpat={} method={} total={:.4} traverse={:.4} solve={:.4} nodes={} active={}",
+                            w.dataset,
+                            r.n_records,
+                            maxpat,
+                            method.name(),
+                            r.total_secs,
+                            r.traverse_secs,
+                            r.solve_secs,
+                            r.traverse_nodes,
+                            r.final_active
+                        );
+                        pair.push(r);
+                    }
+                    Err(e) => println!("ROW fig={fig} dataset={} maxpat={} ERROR {e}", w.dataset, maxpat),
+                }
+            }
+            if pair.len() == 2 {
+                println!("{}", report::speedup_row(&pair[0], &pair[1]));
+            }
+        }
+    }
+}
+
+/// The paper's graph workloads (Figures 2 and 4).
+pub const GRAPH_WORKLOADS: &[Workload] = &[
+    Workload { dataset: "cpdb", scale: 0.3, maxpats: &[3, 4, 5], full_maxpats: &[5, 6, 7, 8, 9, 10] },
+    Workload { dataset: "mutagenicity", scale: 0.05, maxpats: &[3, 4, 5], full_maxpats: &[5, 6, 7, 8, 9, 10] },
+    Workload { dataset: "bergstrom", scale: 1.0, maxpats: &[3, 4, 5], full_maxpats: &[5, 6, 7, 8, 9, 10] },
+    Workload { dataset: "karthikeyan", scale: 0.05, maxpats: &[3, 4, 5], full_maxpats: &[5, 6, 7, 8, 9, 10] },
+];
+
+/// The paper's item-set workloads (Figures 3 and 5).
+pub const ITEMSET_WORKLOADS: &[Workload] = &[
+    Workload { dataset: "splice", scale: 0.2, maxpats: &[2, 3], full_maxpats: &[3, 4, 5, 6] },
+    Workload { dataset: "a9a", scale: 0.03, maxpats: &[2, 3], full_maxpats: &[3, 4, 5, 6] },
+    Workload { dataset: "dna", scale: 0.15, maxpats: &[2, 3], full_maxpats: &[3, 4, 5, 6] },
+    Workload { dataset: "protein", scale: 0.02, maxpats: &[2], full_maxpats: &[3, 4, 5, 6] },
+];
+
+/// Criterion-style micro benchmark: returns (min, median, mean) seconds
+/// per iteration and prints one line.
+pub fn bench_fn<F: FnMut()>(name: &str, samples: usize, mut f: F) -> (f64, f64, f64) {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    println!(
+        "BENCH {name}: min={:.3}ms median={:.3}ms mean={:.3}ms ({} samples)",
+        1e3 * min,
+        1e3 * median,
+        1e3 * mean,
+        samples
+    );
+    (min, median, mean)
+}
+
+/// ns/op convenience for tight loops: runs `f` `iters` times per sample.
+pub fn bench_throughput<F: FnMut() -> u64>(name: &str, samples: usize, mut f: F) {
+    let mut best_rate = 0.0f64;
+    for _ in 0..samples {
+        let t = Instant::now();
+        let ops = f();
+        let dt = t.elapsed().as_secs_f64();
+        best_rate = best_rate.max(ops as f64 / dt);
+    }
+    println!("BENCH {name}: {:.2} Mops/s (best of {samples})", best_rate / 1e6);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_reports_sane_stats() {
+        let (min, median, mean) = bench_fn("noop-spin", 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(min <= median && median <= mean * 5.0);
+        assert!(min >= 0.0);
+    }
+
+    #[test]
+    fn workload_tables_reference_registry_names() {
+        for w in GRAPH_WORKLOADS.iter().chain(ITEMSET_WORKLOADS) {
+            assert!(
+                crate::data::registry::info(w.dataset).is_some(),
+                "unknown dataset {}",
+                w.dataset
+            );
+            assert!(!w.maxpats.is_empty() && !w.full_maxpats.is_empty());
+        }
+    }
+}

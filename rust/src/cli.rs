@@ -1,0 +1,128 @@
+//! Minimal CLI argument parsing (the vendored crate set has no clap).
+//!
+//! Grammar: `spp <command> [--flag value | --switch] [positional...]`.
+//! Flags may appear anywhere after the command; `--flag=value` works.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut it = raw.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut args = Args {
+            command,
+            ..Args::default()
+        };
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(name.to_string(), v);
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}: bad number '{v}': {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}: bad integer '{v}': {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_flags_switches_positionals() {
+        // note: a bare `--switch` followed by a non-flag token consumes
+        // it as a value (documented grammar); positionals go first or
+        // the switch goes last.
+        let a = parse("path out.json --dataset cpdb --maxpat 5 --certify");
+        assert_eq!(a.command, "path");
+        assert_eq!(a.flag("dataset"), Some("cpdb"));
+        assert_eq!(a.get_usize("maxpat", 0).unwrap(), 5);
+        assert!(a.switch("certify"));
+        assert_eq!(a.positional, vec!["out.json"]);
+    }
+
+    #[test]
+    fn switch_before_positional_swallows_it() {
+        // the documented footgun, pinned so it stays documented
+        let a = parse("path --certify out.json");
+        assert_eq!(a.flag("certify"), Some("out.json"));
+        assert!(a.switch("certify"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let a = parse("mine --scale=0.5");
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_f64("missing", 2.5).unwrap(), 2.5);
+        assert_eq!(a.get_or("dataset", "cpdb"), "cpdb");
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_switch_is_a_switch() {
+        let a = parse("run --verbose");
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+    }
+}

@@ -1,0 +1,268 @@
+//! Labeled undirected graphs and the `.gsp` exchange format.
+//!
+//! The graph container is the substrate under the gSpan miner: vertices
+//! and edges carry small integer labels (atom / bond types in the
+//! chemistry datasets).  Graphs are simple (no self-loops, no parallel
+//! edges) — matching the gSpan paper's setting.
+
+use std::fmt;
+
+/// One labeled undirected graph.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Graph {
+    /// Vertex labels, indexed by vertex id.
+    pub vlabels: Vec<u32>,
+    /// Edges as `(u, v, elabel)` with `u < v`, no duplicates.
+    pub edges: Vec<(u32, u32, u32)>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn n_vertices(&self) -> usize {
+        self.vlabels.len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn add_vertex(&mut self, label: u32) -> u32 {
+        self.vlabels.push(label);
+        (self.vlabels.len() - 1) as u32
+    }
+
+    /// Add an undirected edge; ignores self-loops and duplicates.
+    pub fn add_edge(&mut self, u: u32, v: u32, elabel: u32) -> bool {
+        if u == v {
+            return false;
+        }
+        let (a, b) = if u < v { (u, v) } else { (v, u) };
+        if self.edges.iter().any(|&(x, y, _)| x == a && y == b) {
+            return false;
+        }
+        self.edges.push((a, b, elabel));
+        true
+    }
+
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        let (a, b) = if u < v { (u, v) } else { (v, u) };
+        self.edges.iter().any(|&(x, y, _)| x == a && y == b)
+    }
+
+    /// Adjacency lists: `adj()[v]` = `(neighbor, elabel)` pairs.
+    pub fn adjacency(&self) -> Vec<Vec<(u32, u32)>> {
+        let mut adj = vec![Vec::new(); self.n_vertices()];
+        for &(u, v, l) in &self.edges {
+            adj[u as usize].push((v, l));
+            adj[v as usize].push((u, l));
+        }
+        adj
+    }
+
+    /// Is the graph connected? (Empty graph counts as connected.)
+    pub fn is_connected(&self) -> bool {
+        if self.n_vertices() <= 1 {
+            return true;
+        }
+        let adj = self.adjacency();
+        let mut seen = vec![false; self.n_vertices()];
+        let mut stack = vec![0u32];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for &(w, _) in &adj[v as usize] {
+                if !seen[w as usize] {
+                    seen[w as usize] = true;
+                    count += 1;
+                    stack.push(w);
+                }
+            }
+        }
+        count == self.n_vertices()
+    }
+
+    pub fn degree(&self, v: u32) -> usize {
+        self.edges
+            .iter()
+            .filter(|&&(a, b, _)| a == v || b == v)
+            .count()
+    }
+}
+
+impl fmt::Display for Graph {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "G(v={}, e={})", self.n_vertices(), self.n_edges())
+    }
+}
+
+/// A database of labeled graphs with optional targets.
+#[derive(Clone, Debug, Default)]
+pub struct GraphDatabase {
+    pub graphs: Vec<Graph>,
+    pub y: Vec<f64>,
+}
+
+impl GraphDatabase {
+    pub fn len(&self) -> usize {
+        self.graphs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.graphs.is_empty()
+    }
+}
+
+/// Parse the standard gSpan `.gsp` text format:
+///
+/// ```text
+/// t # 0 <y>
+/// v 0 <vlabel>
+/// v 1 <vlabel>
+/// e 0 1 <elabel>
+/// t # 1 <y>
+/// ...
+/// ```
+///
+/// The trailing `<y>` on the `t` line is this crate's extension for
+/// supervised targets; absent targets default to 0.
+pub fn parse_gsp(text: &str) -> crate::Result<GraphDatabase> {
+    let mut db = GraphDatabase::default();
+    let mut cur: Option<Graph> = None;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        match toks[0] {
+            "t" => {
+                if let Some(g) = cur.take() {
+                    db.graphs.push(g);
+                }
+                // "t # <id> [y]"
+                let y = toks
+                    .get(3)
+                    .map(|s| s.parse::<f64>())
+                    .transpose()
+                    .map_err(|e| anyhow::anyhow!("line {}: bad target: {e}", lineno + 1))?
+                    .unwrap_or(0.0);
+                db.y.push(y);
+                cur = Some(Graph::new());
+            }
+            "v" => {
+                let g = cur
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("line {}: v before t", lineno + 1))?;
+                let id: u32 = toks[1].parse()?;
+                let label: u32 = toks[2].parse()?;
+                if id as usize != g.n_vertices() {
+                    anyhow::bail!("line {}: non-sequential vertex id", lineno + 1);
+                }
+                g.add_vertex(label);
+            }
+            "e" => {
+                let g = cur
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("line {}: e before t", lineno + 1))?;
+                let u: u32 = toks[1].parse()?;
+                let v: u32 = toks[2].parse()?;
+                let l: u32 = toks[3].parse()?;
+                if u as usize >= g.n_vertices() || v as usize >= g.n_vertices() {
+                    anyhow::bail!("line {}: edge endpoint out of range", lineno + 1);
+                }
+                g.add_edge(u, v, l);
+            }
+            other => anyhow::bail!("line {}: unknown record '{other}'", lineno + 1),
+        }
+    }
+    if let Some(g) = cur.take() {
+        db.graphs.push(g);
+    }
+    Ok(db)
+}
+
+/// Serialize to the `.gsp` format accepted by [`parse_gsp`].
+pub fn to_gsp(db: &GraphDatabase) -> String {
+    let mut out = String::new();
+    for (i, g) in db.graphs.iter().enumerate() {
+        out.push_str(&format!("t # {} {}\n", i, db.y.get(i).copied().unwrap_or(0.0)));
+        for (v, &l) in g.vlabels.iter().enumerate() {
+            out.push_str(&format!("v {v} {l}\n"));
+        }
+        for &(u, v, l) in &g.edges {
+            out.push_str(&format!("e {u} {v} {l}\n"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Graph {
+        let mut g = Graph::new();
+        let a = g.add_vertex(0);
+        let b = g.add_vertex(1);
+        let c = g.add_vertex(2);
+        g.add_edge(a, b, 0);
+        g.add_edge(b, c, 1);
+        g.add_edge(a, c, 2);
+        g
+    }
+
+    #[test]
+    fn add_edge_rejects_self_loops_and_dups() {
+        let mut g = triangle();
+        assert!(!g.add_edge(0, 0, 5));
+        assert!(!g.add_edge(1, 0, 5)); // duplicate (0,1)
+        assert_eq!(g.n_edges(), 3);
+    }
+
+    #[test]
+    fn adjacency_is_symmetric() {
+        let g = triangle();
+        let adj = g.adjacency();
+        assert_eq!(adj[0].len(), 2);
+        assert_eq!(adj[1].len(), 2);
+        assert_eq!(adj[2].len(), 2);
+    }
+
+    #[test]
+    fn connectivity() {
+        assert!(triangle().is_connected());
+        let mut g = Graph::new();
+        g.add_vertex(0);
+        g.add_vertex(0);
+        assert!(!g.is_connected());
+        g.add_edge(0, 1, 0);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn gsp_round_trip() {
+        let mut db = GraphDatabase::default();
+        db.graphs.push(triangle());
+        db.y.push(1.0);
+        let mut g2 = Graph::new();
+        g2.add_vertex(3);
+        g2.add_vertex(4);
+        g2.add_edge(0, 1, 7);
+        db.graphs.push(g2);
+        db.y.push(-1.0);
+
+        let text = to_gsp(&db);
+        let back = parse_gsp(&text).unwrap();
+        assert_eq!(back.graphs, db.graphs);
+        assert_eq!(back.y, db.y);
+    }
+
+    #[test]
+    fn gsp_rejects_bad_edges() {
+        assert!(parse_gsp("t # 0 0\nv 0 1\ne 0 5 0\n").is_err());
+        assert!(parse_gsp("v 0 1\n").is_err());
+    }
+}

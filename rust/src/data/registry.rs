@@ -1,0 +1,141 @@
+//! Dataset registry: the paper's eight benchmark datasets by name.
+//!
+//! Every preset is a seeded synthetic stand-in at the paper's scale
+//! (DESIGN.md §2).  `lookup` accepts an optional scale factor so the
+//! figure benches can run the full sweep at reduced n when wall-clock
+//! budget demands it (EXPERIMENTS.md records the scale used).
+
+use super::synth_graphs::{self, GraphSynthConfig};
+use super::synth_itemsets::{self, ItemsetSynthConfig};
+use super::{graph::GraphDatabase, LabeledTransactions};
+use crate::solver::problem::Task;
+
+/// Default seed for all registry datasets — fixed so every bench and
+/// example sees identical data.
+pub const REGISTRY_SEED: u64 = 20160813; // KDD'16 conference date
+
+#[derive(Clone, Debug)]
+pub enum Dataset {
+    Graphs(GraphDatabase),
+    Itemsets(LabeledTransactions),
+}
+
+impl Dataset {
+    pub fn n_records(&self) -> usize {
+        match self {
+            Dataset::Graphs(g) => g.len(),
+            Dataset::Itemsets(t) => t.db.len(),
+        }
+    }
+
+    pub fn targets(&self) -> &[f64] {
+        match self {
+            Dataset::Graphs(g) => &g.y,
+            Dataset::Itemsets(t) => &t.y,
+        }
+    }
+}
+
+/// Metadata for one registered dataset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DatasetInfo {
+    pub name: &'static str,
+    pub kind: Kind,
+    pub task: Task,
+    /// Record count at scale 1.0 (the paper's n).
+    pub paper_n: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Graph,
+    Itemset,
+}
+
+/// All eight paper datasets.
+pub const ALL: [DatasetInfo; 8] = [
+    DatasetInfo { name: "cpdb", kind: Kind::Graph, task: Task::Classification, paper_n: 648 },
+    DatasetInfo { name: "mutagenicity", kind: Kind::Graph, task: Task::Classification, paper_n: 4337 },
+    DatasetInfo { name: "bergstrom", kind: Kind::Graph, task: Task::Regression, paper_n: 185 },
+    DatasetInfo { name: "karthikeyan", kind: Kind::Graph, task: Task::Regression, paper_n: 4173 },
+    DatasetInfo { name: "splice", kind: Kind::Itemset, task: Task::Classification, paper_n: 1000 },
+    DatasetInfo { name: "a9a", kind: Kind::Itemset, task: Task::Classification, paper_n: 32_561 },
+    DatasetInfo { name: "dna", kind: Kind::Itemset, task: Task::Regression, paper_n: 2000 },
+    DatasetInfo { name: "protein", kind: Kind::Itemset, task: Task::Regression, paper_n: 6621 },
+];
+
+pub fn info(name: &str) -> Option<DatasetInfo> {
+    ALL.iter().find(|d| d.name == name).copied()
+}
+
+/// Materialize a registry dataset, optionally scaled.
+pub fn lookup(name: &str, scale: f64) -> crate::Result<Dataset> {
+    let seed = REGISTRY_SEED;
+    let ds = match name {
+        "cpdb" => Dataset::Graphs(synth_graphs::generate(&GraphSynthConfig::preset_cpdb(seed).scaled(scale)).db),
+        "mutagenicity" => Dataset::Graphs(
+            synth_graphs::generate(&GraphSynthConfig::preset_mutagenicity(seed).scaled(scale)).db,
+        ),
+        "bergstrom" => Dataset::Graphs(
+            synth_graphs::generate(&GraphSynthConfig::preset_bergstrom(seed).scaled(scale)).db,
+        ),
+        "karthikeyan" => Dataset::Graphs(
+            synth_graphs::generate(&GraphSynthConfig::preset_karthikeyan(seed).scaled(scale)).db,
+        ),
+        "splice" => Dataset::Itemsets(
+            synth_itemsets::generate(&ItemsetSynthConfig::preset_splice(seed).scaled(scale)).labeled(),
+        ),
+        "a9a" => Dataset::Itemsets(
+            synth_itemsets::generate(&ItemsetSynthConfig::preset_a9a(seed).scaled(scale)).labeled(),
+        ),
+        "dna" => Dataset::Itemsets(
+            synth_itemsets::generate(&ItemsetSynthConfig::preset_dna(seed).scaled(scale)).labeled(),
+        ),
+        "protein" => Dataset::Itemsets(
+            synth_itemsets::generate(&ItemsetSynthConfig::preset_protein(seed).scaled(scale)).labeled(),
+        ),
+        other => anyhow::bail!("unknown dataset '{other}' (expected one of {:?})",
+                               ALL.map(|d| d.name)),
+    };
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_materialize_at_tiny_scale() {
+        for d in ALL {
+            let ds = lookup(d.name, 0.02).unwrap();
+            assert!(ds.n_records() > 0, "{} empty", d.name);
+            assert_eq!(ds.n_records(), ds.targets().len());
+            match (d.kind, &ds) {
+                (Kind::Graph, Dataset::Graphs(_)) => {}
+                (Kind::Itemset, Dataset::Itemsets(_)) => {}
+                _ => panic!("{}: kind mismatch", d.name),
+            }
+        }
+    }
+
+    #[test]
+    fn scale_one_matches_paper_n() {
+        let ds = lookup("cpdb", 1.0).unwrap();
+        assert_eq!(ds.n_records(), 648);
+        let ds = lookup("splice", 1.0).unwrap();
+        assert_eq!(ds.n_records(), 1000);
+    }
+
+    #[test]
+    fn unknown_name_is_an_error() {
+        assert!(lookup("nope", 1.0).is_err());
+        assert!(info("nope").is_none());
+        assert_eq!(info("a9a").unwrap().paper_n, 32_561);
+    }
+
+    #[test]
+    fn classification_targets_are_pm1() {
+        let ds = lookup("cpdb", 0.05).unwrap();
+        assert!(ds.targets().iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+}

@@ -1,0 +1,295 @@
+//! Seeded synthetic item-set data with planted predictive conjunctions.
+//!
+//! Stand-in for the paper's splice / a9a / dna / protein datasets (the
+//! LIBSVM site is unreachable offline; DESIGN.md §2 documents the
+//! substitution).  The generator matches what drives both miners' and
+//! both methods' cost profile:
+//!
+//! * matched `(n, d)` and per-record item counts (density),
+//! * power-law item marginals (real categorical encodings have a few
+//!   frequent and many rare items — this shapes the enumeration tree's
+//!   support decay),
+//! * **planted conjunctions**: a handful of item-sets whose joint
+//!   occurrence carries the signal, so the optimal model genuinely needs
+//!   patterns of size > 1 (two-stage methods with singletons only would
+//!   underfit — the paper's motivation).
+
+use super::{LabeledTransactions, Transactions};
+use crate::testutil::SplitMix64;
+
+/// One planted rule: if all `items` co-occur, add `weight` to the score.
+#[derive(Clone, Debug)]
+pub struct PlantedRule {
+    pub items: Vec<u32>,
+    pub weight: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ItemsetSynthConfig {
+    pub seed: u64,
+    pub n: usize,
+    pub d: usize,
+    /// Mean number of items per transaction (before rule implanting).
+    pub avg_items: f64,
+    /// Number of planted conjunctions.
+    pub n_rules: usize,
+    /// Rule sizes are drawn in `[2, max_rule_len]`.
+    pub max_rule_len: usize,
+    /// Probability a record gets a random rule implanted.
+    pub implant_prob: f64,
+    /// Gaussian noise on regression targets / flip-driving noise margin.
+    pub noise: f64,
+    /// true => ±1 labels (classification); false => real targets.
+    pub classify: bool,
+}
+
+impl ItemsetSynthConfig {
+    fn base(seed: u64, n: usize, d: usize, avg_items: f64, classify: bool) -> Self {
+        Self {
+            seed,
+            n,
+            d,
+            avg_items,
+            n_rules: 8,
+            max_rule_len: 4,
+            implant_prob: 0.35,
+            noise: 0.5,
+            classify,
+        }
+    }
+
+    /// splice-scale: n=1000, d=120, categorical-ish density.
+    pub fn preset_splice(seed: u64) -> Self {
+        Self::base(seed, 1000, 120, 30.0, true)
+    }
+
+    /// a9a-scale: n=32561, d=123, sparse one-hot density.
+    pub fn preset_a9a(seed: u64) -> Self {
+        Self::base(seed, 32_561, 123, 14.0, true)
+    }
+
+    /// dna-scale regression: n=2000, d=180.
+    pub fn preset_dna(seed: u64) -> Self {
+        Self::base(seed, 2000, 180, 45.0, false)
+    }
+
+    /// protein-scale regression: n=6621, d=714 (density capped so the
+    /// enumeration tree stays finite-sized; see DESIGN.md §2).
+    pub fn preset_protein(seed: u64) -> Self {
+        Self::base(seed, 6621, 714, 80.0, false)
+    }
+
+    /// Small config for tests.
+    pub fn tiny(seed: u64, classify: bool) -> Self {
+        let mut c = Self::base(seed, 60, 12, 4.0, classify);
+        c.n_rules = 3;
+        c.max_rule_len = 3;
+        c
+    }
+
+    /// Scale record count by `f` (benchmark `--scale` support).
+    pub fn scaled(mut self, f: f64) -> Self {
+        self.n = ((self.n as f64 * f).round() as usize).max(8);
+        self
+    }
+}
+
+/// Generated dataset plus the ground-truth rules (handy in tests).
+#[derive(Clone, Debug)]
+pub struct SynthItemsets {
+    pub db: Transactions,
+    pub y: Vec<f64>,
+    pub rules: Vec<PlantedRule>,
+}
+
+impl SynthItemsets {
+    pub fn to_transactions(&self) -> Transactions {
+        self.db.clone()
+    }
+
+    pub fn labeled(&self) -> LabeledTransactions {
+        LabeledTransactions {
+            db: self.db.clone(),
+            y: self.y.clone(),
+        }
+    }
+}
+
+/// Generate a dataset per `cfg`.  Fully deterministic in `cfg.seed`.
+pub fn generate(cfg: &ItemsetSynthConfig) -> SynthItemsets {
+    assert!(cfg.d >= 4 && cfg.n >= 4);
+    let mut rng = SplitMix64::new(cfg.seed);
+
+    // Power-law item marginals, scaled so the expected row weight is
+    // avg_items.
+    let mut marginals: Vec<f64> = (0..cfg.d)
+        .map(|j| 1.0 / (1.0 + j as f64).powf(0.75))
+        .collect();
+    let sum: f64 = marginals.iter().sum();
+    for m in &mut marginals {
+        *m = (*m / sum * cfg.avg_items).min(0.95);
+    }
+    // Shuffle so item id does not encode frequency (the miner orders by
+    // id; correlating the two would make trees artificially easy).
+    rng.shuffle(&mut marginals);
+
+    // Planted rules over moderately frequent items so supports are
+    // non-trivial.
+    let mut freq_items: Vec<u32> = (0..cfg.d as u32).collect();
+    freq_items.sort_by(|&a, &b| {
+        marginals[b as usize]
+            .partial_cmp(&marginals[a as usize])
+            .unwrap()
+    });
+    let pool = &freq_items[..(cfg.d / 2).max(cfg.max_rule_len + 1)];
+    let mut rules = Vec::with_capacity(cfg.n_rules);
+    for _ in 0..cfg.n_rules {
+        let len = rng.range(2, cfg.max_rule_len.max(2));
+        let mut items: Vec<u32> = rng
+            .sample_distinct(pool.len(), len.min(pool.len()))
+            .into_iter()
+            .map(|k| pool[k])
+            .collect();
+        items.sort_unstable();
+        items.dedup();
+        let mag = 1.0 + rng.next_f64() * 2.0;
+        let weight = if rng.coin(0.5) { mag } else { -mag };
+        rules.push(PlantedRule { items, weight });
+    }
+
+    let mut items_rows = Vec::with_capacity(cfg.n);
+    let mut y = Vec::with_capacity(cfg.n);
+    for _ in 0..cfg.n {
+        let mut row: Vec<u32> = (0..cfg.d as u32)
+            .filter(|&j| rng.coin(marginals[j as usize]))
+            .collect();
+        if rng.coin(cfg.implant_prob) {
+            let r = &rules[rng.below(rules.len())];
+            row.extend_from_slice(&r.items);
+            row.sort_unstable();
+            row.dedup();
+        }
+        let mut score = 0.0;
+        for r in &rules {
+            if contains_all(&row, &r.items) {
+                score += r.weight;
+            }
+        }
+        score += cfg.noise * rng.gauss();
+        if cfg.classify {
+            y.push(if score >= 0.0 { 1.0 } else { -1.0 });
+        } else {
+            y.push(score);
+        }
+        items_rows.push(row);
+    }
+
+    SynthItemsets {
+        db: Transactions {
+            n_items: cfg.d,
+            items: items_rows,
+        },
+        y,
+        rules,
+    }
+}
+
+/// `needle ⊆ haystack` for sorted slices.
+pub fn contains_all(haystack: &[u32], needle: &[u32]) -> bool {
+    let mut it = haystack.iter();
+    'outer: for &x in needle {
+        for &h in it.by_ref() {
+            if h == x {
+                continue 'outer;
+            }
+            if h > x {
+                return false;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = generate(&ItemsetSynthConfig::tiny(9, true));
+        let b = generate(&ItemsetSynthConfig::tiny(9, true));
+        assert_eq!(a.db.items, b.db.items);
+        assert_eq!(a.y, b.y);
+        let c = generate(&ItemsetSynthConfig::tiny(10, true));
+        assert_ne!(a.db.items, c.db.items);
+    }
+
+    #[test]
+    fn shapes_match_config() {
+        let cfg = ItemsetSynthConfig::tiny(1, false);
+        let d = generate(&cfg);
+        assert_eq!(d.db.items.len(), cfg.n);
+        assert_eq!(d.db.n_items, cfg.d);
+        assert_eq!(d.y.len(), cfg.n);
+        d.db.validate().unwrap();
+    }
+
+    #[test]
+    fn classification_labels_are_pm1() {
+        let d = generate(&ItemsetSynthConfig::tiny(2, true));
+        assert!(d.y.iter().all(|&v| v == 1.0 || v == -1.0));
+        // both classes present for a sane config
+        assert!(d.y.iter().any(|&v| v == 1.0));
+        assert!(d.y.iter().any(|&v| v == -1.0));
+    }
+
+    #[test]
+    fn density_roughly_matches() {
+        let cfg = ItemsetSynthConfig::base(3, 2000, 64, 10.0, false);
+        let d = generate(&cfg);
+        let avg: f64 =
+            d.db.items.iter().map(|r| r.len() as f64).sum::<f64>() / cfg.n as f64;
+        // implanting adds a couple of items on top of the base 10
+        assert!(avg > 7.0 && avg < 16.0, "avg items {avg}");
+    }
+
+    #[test]
+    fn rules_are_sorted_distinct_and_in_range() {
+        let d = generate(&ItemsetSynthConfig::tiny(4, true));
+        for r in &d.rules {
+            assert!(r.items.windows(2).all(|w| w[0] < w[1]));
+            assert!(r.items.iter().all(|&j| (j as usize) < d.db.n_items));
+            assert!(r.weight.abs() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn contains_all_cases() {
+        assert!(contains_all(&[1, 3, 5], &[3]));
+        assert!(contains_all(&[1, 3, 5], &[1, 5]));
+        assert!(contains_all(&[1, 3, 5], &[]));
+        assert!(!contains_all(&[1, 3, 5], &[2]));
+        assert!(!contains_all(&[1, 3], &[1, 3, 5]));
+        assert!(!contains_all(&[], &[0]));
+    }
+
+    #[test]
+    fn scaled_changes_n_only() {
+        let cfg = ItemsetSynthConfig::preset_splice(0).scaled(0.1);
+        assert_eq!(cfg.n, 100);
+        assert_eq!(cfg.d, 120);
+    }
+
+    #[test]
+    fn presets_match_paper_scales() {
+        assert_eq!(ItemsetSynthConfig::preset_splice(0).n, 1000);
+        assert_eq!(ItemsetSynthConfig::preset_splice(0).d, 120);
+        assert_eq!(ItemsetSynthConfig::preset_a9a(0).n, 32_561);
+        assert_eq!(ItemsetSynthConfig::preset_a9a(0).d, 123);
+        assert_eq!(ItemsetSynthConfig::preset_dna(0).d, 180);
+        assert_eq!(ItemsetSynthConfig::preset_protein(0).d, 714);
+        assert!(ItemsetSynthConfig::preset_splice(0).classify);
+        assert!(!ItemsetSynthConfig::preset_dna(0).classify);
+    }
+}

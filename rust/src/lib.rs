@@ -1,0 +1,65 @@
+//! # Safe Pattern Pruning (SPP)
+//!
+//! A production reproduction of *"Safe Pattern Pruning: An Efficient
+//! Approach for Predictive Pattern Mining"* (Nakagawa et al., KDD 2016)
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The library fits L1-regularized linear models over the (exponentially
+//! large) space of **patterns** in a database — item-sets of a
+//! transaction database or connected subgraphs of a graph database —
+//! without ever materializing that space.  The paper's contribution, the
+//! **SPP rule**, is a gap-safe screening test evaluable at any node of
+//! the pattern-enumeration tree; when it fires, the *entire subtree* is
+//! certified to carry zero weight at the optimum and is skipped.
+//!
+//! ## Layout (one module per subsystem; see DESIGN.md)
+//!
+//! * [`data`] — datasets: LIBSVM parser, graph containers, seeded
+//!   synthetic generators standing in for the paper's benchmark data.
+//! * [`mining`] — the pattern-tree substrates: a prefix-extension
+//!   item-set enumerator and a full gSpan implementation, both driven
+//!   through the same [`mining::TreeVisitor`] API.
+//! * [`solver`] — L1 solvers (coordinate descent, ISTA oracle), the
+//!   paper's unified problem form, duality gaps, dual-feasible points.
+//! * [`screening`] — the SPP rule itself, per-feature gap-safe tests,
+//!   and the `lambda_max` tree search.
+//! * [`boosting`] — the cutting-plane baseline the paper compares with.
+//! * [`path`] — Algorithm 1: the warm-started regularization path.
+//! * [`runtime`] — PJRT execution of the AOT JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`) from the Rust hot path.
+//! * [`coordinator`] — experiment orchestration: worker pool, metrics,
+//!   result reporting; drives every figure bench.
+//! * [`testutil`] — SplitMix64 PRNG, property-test harness, brute-force
+//!   oracles (exhaustive miners, dense ISTA) used across the test suite.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use spp::data::synth_itemsets::{ItemsetSynthConfig, generate};
+//! use spp::path::{PathConfig, compute_path_spp};
+//! use spp::screening::Database;
+//! use spp::solver::problem::Task;
+//!
+//! let data = generate(&ItemsetSynthConfig::preset_splice(42));
+//! let cfg = PathConfig { n_lambdas: 100, lambda_min_ratio: 0.01,
+//!                        maxpat: 4, ..PathConfig::default() };
+//! let path = compute_path_spp(&Database::Itemsets(&data.db), &data.y,
+//!                             Task::Classification, &cfg);
+//! println!("active patterns at smallest lambda: {}",
+//!          path.points.last().unwrap().active.len());
+//! ```
+
+pub mod benchkit;
+pub mod boosting;
+pub mod coordinator;
+pub mod data;
+pub mod mining;
+pub mod model;
+pub mod path;
+pub mod runtime;
+pub mod screening;
+pub mod solver;
+pub mod testutil;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,287 @@
+//! `spp` — Safe Pattern Pruning CLI (the L3 leader entrypoint).
+//!
+//! ```text
+//! spp path       --dataset cpdb --maxpat 5 [--method spp|boosting|both]
+//!                [--lambdas 100] [--min-ratio 0.01] [--scale 1.0]
+//!                [--certify] [--engine rust|xla] [--json out.json]
+//! spp lambda-max --dataset splice --maxpat 4 [--scale 1.0]
+//! spp mine       --dataset cpdb --maxpat 3 [--top 20] [--minsup 2]
+//! spp selftest   [--artifacts DIR]     # PJRT round-trip vs Rust engine
+//! spp datasets                          # list registry presets
+//! ```
+
+mod cli;
+
+use std::io::Write;
+
+use spp::coordinator::{report, run_experiment, ExperimentSpec, Method};
+use spp::data::registry::{self, Dataset};
+use spp::mining::{PatternNode, TreeVisitor, Walk};
+use spp::path::PathConfig;
+use spp::screening::lambda_max::lambda_max;
+use spp::screening::Database;
+
+fn main() {
+    let args = cli::Args::parse(std::env::args().skip(1));
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &cli::Args) -> spp::Result<()> {
+    match args.command.as_str() {
+        "path" => cmd_path(args),
+        "lambda-max" => cmd_lambda_max(args),
+        "mine" => cmd_mine(args),
+        "selftest" => cmd_selftest(args),
+        "datasets" => cmd_datasets(),
+        "" | "help" | "--help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try `spp help`)"),
+    }
+}
+
+const HELP: &str = "\
+spp — Safe Pattern Pruning (KDD'16 reproduction)
+
+commands:
+  path        compute a regularization path (SPP and/or boosting)
+  lambda-max  compute the paper's §3.4.1 lambda_max by bounded search
+  mine        enumerate frequent patterns (substrate smoke test)
+  selftest    verify the PJRT/XLA engines against the Rust engines
+  datasets    list the registered paper-scale synthetic datasets
+";
+
+fn path_config(args: &cli::Args) -> spp::Result<PathConfig> {
+    Ok(PathConfig {
+        n_lambdas: args.get_usize("lambdas", 100)?,
+        lambda_min_ratio: args.get_f64("min-ratio", 0.01)?,
+        maxpat: args.get_usize("maxpat", 4)?,
+        minsup: args.get_usize("minsup", 1)?,
+        certify: args.switch("certify"),
+        k_add: args.get_usize("k-add", 1)?,
+        ..PathConfig::default()
+    })
+}
+
+fn cmd_path(args: &cli::Args) -> spp::Result<()> {
+    let dataset = args.get_or("dataset", "splice").to_string();
+    let scale = args.get_f64("scale", 1.0)?;
+    let cfg = path_config(args)?;
+    let methods: Vec<Method> = match args.get_or("method", "both") {
+        "spp" => vec![Method::Spp],
+        "boosting" => vec![Method::Boosting],
+        "both" => vec![Method::Spp, Method::Boosting],
+        other => anyhow::bail!("--method must be spp|boosting|both, got '{other}'"),
+    };
+    let engine = args.get_or("engine", "rust").to_string();
+
+    let mut results = Vec::new();
+    for method in methods {
+        let spec = ExperimentSpec {
+            dataset: dataset.clone(),
+            scale,
+            maxpat: cfg.maxpat,
+            method,
+            cfg,
+        };
+        let r = if engine == "xla" && method == Method::Spp {
+            run_path_xla(&spec)?
+        } else {
+            run_experiment(&spec)?
+        };
+        println!("{}", report::time_row(&r));
+        results.push(r);
+    }
+    if results.len() == 2 {
+        println!("{}", report::speedup_row(&results[0], &results[1]));
+    }
+    if let Some(path) = args.flag("json") {
+        let mut f = std::fs::File::create(path)?;
+        for r in &results {
+            writeln!(f, "{}", report::result_json(r))?;
+        }
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// SPP path with the XLA FISTA engine for the restricted solves.
+fn run_path_xla(spec: &ExperimentSpec) -> spp::Result<spp::coordinator::ExperimentResult> {
+    use spp::path::compute_path_spp_with;
+    use spp::runtime::{default_artifact_dir, engine::XlaRestricted, PjrtRuntime};
+
+    let info = registry::info(&spec.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{}'", spec.dataset))?;
+    let data = registry::lookup(&spec.dataset, spec.scale)?;
+    let rt = PjrtRuntime::cpu(&default_artifact_dir())?;
+    let solver = XlaRestricted::new(&rt);
+    let t = std::time::Instant::now();
+    let path = match &data {
+        Dataset::Graphs(g) => {
+            compute_path_spp_with(&Database::Graphs(g), &g.y, info.task, &spec.cfg, &solver)
+        }
+        Dataset::Itemsets(tr) => compute_path_spp_with(
+            &Database::Itemsets(&tr.db),
+            &tr.y,
+            info.task,
+            &spec.cfg,
+            &solver,
+        ),
+    };
+    eprintln!(
+        "xla engine: {} subproblem fallbacks to CD",
+        solver.fallbacks.get()
+    );
+    let max_gap = path.points.iter().map(|p| p.gap).fold(0.0f64, f64::max);
+    Ok(spp::coordinator::ExperimentResult {
+        task: info.task,
+        n_records: data.n_records(),
+        lambda_max: path.lambda_max,
+        traverse_secs: path.total_traverse_secs(),
+        solve_secs: path.total_solve_secs(),
+        total_secs: path.total_secs(),
+        wall_secs: t.elapsed().as_secs_f64(),
+        traverse_nodes: path.total_nodes(),
+        final_active: path.points.last().map(|p| p.active.len()).unwrap_or(0),
+        max_gap,
+        path,
+        spec: spec.clone(),
+    })
+}
+
+fn cmd_lambda_max(args: &cli::Args) -> spp::Result<()> {
+    let dataset = args.get_or("dataset", "splice");
+    let scale = args.get_f64("scale", 1.0)?;
+    let maxpat = args.get_usize("maxpat", 4)?;
+    let info = registry::info(dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
+    let data = registry::lookup(dataset, scale)?;
+    let lm = match &data {
+        Dataset::Graphs(g) => lambda_max(&Database::Graphs(g), &g.y, info.task, maxpat, 1),
+        Dataset::Itemsets(t) => {
+            lambda_max(&Database::Itemsets(&t.db), &t.y, info.task, maxpat, 1)
+        }
+    };
+    println!(
+        "dataset={dataset} n={} task={:?} maxpat={maxpat} lambda_max={:.6} b0={:.6} nodes={} pruned={}",
+        data.n_records(),
+        info.task,
+        lm.lambda_max,
+        lm.b0,
+        lm.stats.nodes,
+        lm.stats.pruned
+    );
+    Ok(())
+}
+
+fn cmd_mine(args: &cli::Args) -> spp::Result<()> {
+    let dataset = args.get_or("dataset", "splice");
+    let scale = args.get_f64("scale", 0.2)?;
+    let maxpat = args.get_usize("maxpat", 3)?;
+    let minsup = args.get_usize("minsup", 1)?;
+    let top = args.get_usize("top", 20)?;
+    let data = registry::lookup(dataset, scale)?;
+
+    struct Collect {
+        rows: Vec<(usize, String)>,
+    }
+    impl TreeVisitor for Collect {
+        fn visit(&mut self, node: &PatternNode<'_>) -> Walk {
+            self.rows
+                .push((node.support.len(), node.to_pattern().display()));
+            Walk::Descend
+        }
+    }
+    let mut c = Collect { rows: Vec::new() };
+    match &data {
+        Dataset::Graphs(g) => Database::Graphs(g).traverse(maxpat, minsup, &mut c),
+        Dataset::Itemsets(t) => Database::Itemsets(&t.db).traverse(maxpat, minsup, &mut c),
+    }
+    c.rows.sort_by(|a, b| b.0.cmp(&a.0));
+    println!(
+        "dataset={dataset} scale={scale} maxpat={maxpat} minsup={minsup}: {} patterns",
+        c.rows.len()
+    );
+    for (sup, pat) in c.rows.into_iter().take(top) {
+        println!("  support={sup:<6} {pat}");
+    }
+    Ok(())
+}
+
+fn cmd_selftest(args: &cli::Args) -> spp::Result<()> {
+    use spp::runtime::{default_artifact_dir, PjrtRuntime, XlaFistaSolver, XlaSppcScorer};
+    use spp::screening::fold_weights;
+    use spp::solver::{CdSolver, Task};
+    use spp::testutil::SplitMix64;
+
+    let dir = args
+        .flag("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+    let rt = PjrtRuntime::cpu(&dir)?;
+    println!("platform: {}", rt.platform());
+
+    // 1) SPPC scorer vs the Rust fold
+    let mut rng = SplitMix64::new(99);
+    let n = 700;
+    let y: Vec<f64> = (0..n).map(|_| if rng.coin(0.5) { 1.0 } else { -1.0 }).collect();
+    let theta: Vec<f64> = (0..n).map(|_| rng.gauss() * 0.1).collect();
+    let (wpos, wneg) = fold_weights(Task::Classification, &y, &theta);
+    let supports: Vec<Vec<u32>> = (0..300)
+        .map(|_| {
+            let m = rng.range(1, 60);
+            rng.sample_distinct(n, m).into_iter().map(|i| i as u32).collect()
+        })
+        .collect();
+    let scorer = XlaSppcScorer::new(&rt, n)?;
+    let scores = scorer.score(&supports, &wpos, &wneg, 0.3)?;
+    let mut max_err = 0.0f64;
+    for (sup, sc) in supports.iter().zip(&scores) {
+        let pos: f64 = sup.iter().map(|&i| wpos[i as usize]).sum();
+        let neg: f64 = sup.iter().map(|&i| wneg[i as usize]).sum();
+        let v = sup.len() as f64;
+        let want = pos.max(-neg) + 0.3 * v.sqrt();
+        max_err = max_err.max((sc.sppc - want).abs());
+    }
+    anyhow::ensure!(max_err < 1e-3, "sppc mismatch: {max_err}");
+    println!(
+        "sppc scorer OK (max err {max_err:.2e} over {} patterns)",
+        scores.len()
+    );
+
+    // 2) FISTA solver vs CD
+    let supports2: Vec<Vec<u32>> = supports.iter().take(40).cloned().collect();
+    let yv: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+    let xs = XlaFistaSolver::new(&rt).solve(Task::Regression, &supports2, &yv, 2.0)?;
+    let cd = CdSolver::default().solve(Task::Regression, &supports2, &yv, 2.0, None);
+    let rel = (xs.primal - cd.primal).abs() / cd.primal.abs().max(1.0);
+    anyhow::ensure!(rel < 1e-3, "fista vs cd primal mismatch: {rel}");
+    println!(
+        "fista solver OK (primal {:.6} vs cd {:.6}, {} execs)",
+        xs.primal, cd.primal, xs.execs
+    );
+    println!("selftest OK");
+    Ok(())
+}
+
+fn cmd_datasets() -> spp::Result<()> {
+    println!("{:<14} {:<8} {:<15} paper_n", "name", "kind", "task");
+    for d in registry::ALL {
+        println!(
+            "{:<14} {:<8} {:<15} {}",
+            d.name,
+            format!("{:?}", d.kind).to_lowercase(),
+            format!("{:?}", d.task).to_lowercase(),
+            d.paper_n
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,334 @@
+//! Item-set enumeration tree (paper Fig. 1, right).
+//!
+//! Depth-first prefix extension in the eclat vertical layout: a node is
+//! an item-set `{j_1 < … < j_k}`; its children extend with `j > j_k`.
+//! Each node carries its transaction-id list; a child's tid-list is the
+//! intersection of the parent's with the new item's — so supports
+//! shrink monotonically along every path, which is exactly the
+//! anti-monotonicity the SPP / boosting bounds need.
+//!
+//! Candidate item lists are propagated downward (a child only considers
+//! items that still have non-empty intersection at the parent), keeping
+//! per-node work `O(Σ |candidate tid-lists|)` with zero allocation in
+//! the intersection inner loop.
+
+use super::{PatternNode, TreeVisitor, Walk};
+use crate::data::Transactions;
+
+/// Configurable item-set miner.
+pub struct ItemsetMiner<'a> {
+    db: &'a Transactions,
+    /// Maximum item-set size (the paper's `maxpat`).
+    pub maxpat: usize,
+    /// Minimum support; patterns below it are not visited (and their
+    /// subtrees are skipped — safe, supports are anti-monotone).
+    pub minsup: usize,
+}
+
+impl<'a> ItemsetMiner<'a> {
+    pub fn new(db: &'a Transactions, maxpat: usize) -> Self {
+        ItemsetMiner {
+            db,
+            maxpat,
+            minsup: 1,
+        }
+    }
+
+    /// Depth-first traversal; the visitor sees each item-set exactly
+    /// once, in lexicographic order.
+    pub fn traverse<V: TreeVisitor + ?Sized>(&self, visitor: &mut V) {
+        if self.maxpat == 0 {
+            return;
+        }
+        let tidlists = self.db.tidlists();
+        // Root candidates: all items with support >= minsup.
+        let root: Vec<(u32, Vec<u32>)> = tidlists
+            .into_iter()
+            .enumerate()
+            .filter(|(_, t)| t.len() >= self.minsup)
+            .map(|(j, t)| (j as u32, t))
+            .collect();
+        let mut prefix: Vec<u32> = Vec::with_capacity(self.maxpat);
+        // Buffer pools: tid-list vectors and per-node candidate lists
+        // are recycled across the whole traversal, so the hot loop does
+        // no allocation once the pools warm up.
+        let mut pool = Pools::default();
+        self.recurse(&root, &mut prefix, &mut pool, visitor);
+    }
+
+    fn recurse<V: TreeVisitor + ?Sized>(
+        &self,
+        candidates: &[(u32, Vec<u32>)],
+        prefix: &mut Vec<u32>,
+        pool: &mut Pools,
+        visitor: &mut V,
+    ) {
+        for (ci, (item, tids)) in candidates.iter().enumerate() {
+            prefix.push(*item);
+            let node = PatternNode::itemset(prefix, tids);
+            let walk = visitor.visit(&node);
+            if walk == Walk::Descend && prefix.len() < self.maxpat {
+                // Children: items after `item` in the candidate list,
+                // intersected with this node's tids.
+                let mut children = pool.take_list();
+                for (next, next_tids) in &candidates[ci + 1..] {
+                    let mut buf = pool.take_tids();
+                    intersect_into(tids, next_tids, &mut buf);
+                    if buf.len() >= self.minsup {
+                        children.push((*next, buf));
+                    } else {
+                        pool.put_tids(buf);
+                    }
+                }
+                if !children.is_empty() {
+                    self.recurse(&children, prefix, pool, visitor);
+                }
+                pool.put_list(children);
+            }
+            prefix.pop();
+        }
+    }
+}
+
+/// Recycled buffers for the traversal (tid vectors + candidate lists).
+#[derive(Default)]
+struct Pools {
+    tids: Vec<Vec<u32>>,
+    lists: Vec<Vec<(u32, Vec<u32>)>>,
+}
+
+impl Pools {
+    #[inline]
+    fn take_tids(&mut self) -> Vec<u32> {
+        self.tids.pop().unwrap_or_default()
+    }
+
+    #[inline]
+    fn put_tids(&mut self, mut v: Vec<u32>) {
+        v.clear();
+        self.tids.push(v);
+    }
+
+    #[inline]
+    fn take_list(&mut self) -> Vec<(u32, Vec<u32>)> {
+        self.lists.pop().unwrap_or_default()
+    }
+
+    #[inline]
+    fn put_list(&mut self, mut l: Vec<(u32, Vec<u32>)>) {
+        for (_, v) in l.drain(..) {
+            self.put_tids(v);
+        }
+        self.lists.push(l);
+    }
+}
+
+/// Sorted-list intersection into `out` (cleared first).  This is the
+/// traversal hot loop — galloping for skewed sizes, linear merge
+/// otherwise.
+#[inline]
+pub fn intersect_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+    out.clear();
+    let (small, large) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+    if small.is_empty() {
+        return;
+    }
+    // Galloping pays when sizes are very skewed.
+    if large.len() / small.len().max(1) >= 16 {
+        let mut lo = 0usize;
+        for &x in small {
+            if lo >= large.len() {
+                break;
+            }
+            // exponential gallop: find a window [lo, hi) that must
+            // contain the insertion point of x
+            let mut bound = 1usize;
+            while lo + bound < large.len() && large[lo + bound] < x {
+                bound <<= 1;
+            }
+            let hi = (lo + bound + 1).min(large.len());
+            match large[lo..hi].binary_search(&x) {
+                Ok(k) => {
+                    out.push(x);
+                    lo += k + 1;
+                }
+                Err(k) => lo += k,
+            }
+        }
+    } else {
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < small.len() && j < large.len() {
+            let (x, y) = (small[i], large[j]);
+            if x == y {
+                out.push(x);
+                i += 1;
+                j += 1;
+            } else if x < y {
+                i += 1;
+            } else {
+                j += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mining::Pattern;
+
+    fn db() -> Transactions {
+        // 4 items, 5 transactions
+        Transactions {
+            n_items: 4,
+            items: vec![
+                vec![0, 1, 2],
+                vec![0, 1],
+                vec![1, 2, 3],
+                vec![0, 2],
+                vec![1, 2],
+            ],
+        }
+    }
+
+    /// Collect all visited patterns with supports.
+    fn collect(db: &Transactions, maxpat: usize, minsup: usize) -> Vec<(Pattern, Vec<u32>)> {
+        let mut out = Vec::new();
+        let mut v = |n: &PatternNode<'_>| {
+            out.push((n.to_pattern(), n.support.to_vec()));
+            Walk::Descend
+        };
+        let mut miner = ItemsetMiner::new(db, maxpat);
+        miner.minsup = minsup;
+        miner.traverse(&mut v);
+        out
+    }
+
+    #[test]
+    fn enumerates_all_itemsets_up_to_maxpat() {
+        let db = db();
+        let got = collect(&db, 2, 1);
+        // size-1: 4, size-2 with non-empty support: {0,1},{0,2},{1,2},{1,3},{2,3}
+        let names: Vec<String> = got.iter().map(|(p, _)| p.display()).collect();
+        assert!(names.contains(&"{0}".into()));
+        assert!(names.contains(&"{1,2}".into()));
+        assert!(names.contains(&"{2,3}".into()));
+        assert!(!names.contains(&"{0,3}".into())); // empty support
+        assert_eq!(got.len(), 4 + 5);
+    }
+
+    #[test]
+    fn supports_are_correct() {
+        let db = db();
+        for (p, sup) in collect(&db, 3, 1) {
+            if let Pattern::Itemset(items) = &p {
+                let expected: Vec<u32> = db
+                    .items
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, row)| {
+                        crate::data::synth_itemsets::contains_all(row, items)
+                    })
+                    .map(|(i, _)| i as u32)
+                    .collect();
+                assert_eq!(sup, expected, "pattern {}", p.display());
+            }
+        }
+    }
+
+    #[test]
+    fn respects_maxpat() {
+        let db = db();
+        assert!(collect(&db, 1, 1).iter().all(|(p, _)| p.size() == 1));
+        assert!(collect(&db, 2, 1).iter().all(|(p, _)| p.size() <= 2));
+    }
+
+    #[test]
+    fn respects_minsup() {
+        let db = db();
+        for (_, sup) in collect(&db, 3, 2) {
+            assert!(sup.len() >= 2);
+        }
+    }
+
+    #[test]
+    fn prune_skips_subtree() {
+        let db = db();
+        let mut seen = Vec::new();
+        let mut v = |n: &PatternNode<'_>| {
+            seen.push(n.to_pattern().display());
+            if n.to_pattern() == Pattern::Itemset(vec![0]) {
+                Walk::Prune
+            } else {
+                Walk::Descend
+            }
+        };
+        ItemsetMiner::new(&db, 3).traverse(&mut v);
+        // nothing starting with {0, ...} beyond {0} itself
+        assert!(seen.contains(&"{0}".to_string()));
+        assert!(!seen.iter().any(|s| s.starts_with("{0,")));
+        // but sibling subtrees still fully explored
+        assert!(seen.contains(&"{1,2,3}".to_string()));
+    }
+
+    #[test]
+    fn maxpat_zero_visits_nothing() {
+        let db = db();
+        assert!(collect(&db, 0, 1).is_empty());
+    }
+
+    #[test]
+    fn anti_monotone_supports_along_paths() {
+        // child support must be a subset of parent support
+        let db = db();
+        let mut stack: Vec<Vec<u32>> = Vec::new();
+        let mut v = |n: &PatternNode<'_>| {
+            while stack.len() >= n.depth {
+                stack.pop();
+            }
+            if let Some(parent) = stack.last() {
+                assert!(n.support.iter().all(|t| parent.contains(t)));
+            }
+            stack.push(n.support.to_vec());
+            Walk::Descend
+        };
+        ItemsetMiner::new(&db, 4).traverse(&mut v);
+    }
+
+    mod intersect {
+        use super::super::intersect_into;
+
+        fn isect(a: &[u32], b: &[u32]) -> Vec<u32> {
+            let mut out = Vec::new();
+            intersect_into(a, b, &mut out);
+            out
+        }
+
+        #[test]
+        fn basic() {
+            assert_eq!(isect(&[1, 2, 3], &[2, 3, 4]), vec![2, 3]);
+            assert_eq!(isect(&[], &[1]), Vec::<u32>::new());
+            assert_eq!(isect(&[5], &[5]), vec![5]);
+            assert_eq!(isect(&[1, 3], &[2, 4]), Vec::<u32>::new());
+        }
+
+        #[test]
+        fn galloping_path_matches_linear() {
+            use crate::testutil::SplitMix64;
+            let mut rng = SplitMix64::new(42);
+            for _ in 0..200 {
+                let mut a: Vec<u32> = (0..rng.range(0, 8)).map(|_| rng.below(1000) as u32).collect();
+                let mut b: Vec<u32> =
+                    (0..rng.range(200, 400)).map(|_| rng.below(1000) as u32).collect();
+                a.sort_unstable();
+                a.dedup();
+                b.sort_unstable();
+                b.dedup();
+                let naive: Vec<u32> =
+                    a.iter().filter(|x| b.binary_search(x).is_ok()).copied().collect();
+                assert_eq!(isect(&a, &b), naive);
+                assert_eq!(isect(&b, &a), naive);
+            }
+        }
+    }
+}

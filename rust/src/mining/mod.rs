@@ -1,0 +1,188 @@
+//! Pattern-tree mining substrates.
+//!
+//! Both miners ([`itemset::ItemsetMiner`] and [`gspan::GSpanMiner`])
+//! enumerate an anti-monotone pattern tree (paper Fig. 1): every child
+//! pattern is a superset of its parent, so `x_{it'} = 1 ⟹ x_{it} = 1`
+//! and supports only shrink along any root-to-leaf path.  That property
+//! is what both the SPP rule and the boosting bound exploit.
+//!
+//! The search is driven through the [`TreeVisitor`] callback: the
+//! visitor sees each canonical pattern exactly once, together with its
+//! support (sorted transaction ids), and decides whether the subtree
+//! below it should be explored ([`Walk::Descend`]) or safely discarded
+//! ([`Walk::Prune`]).  SPP, the boosting most-violating search, and the
+//! λ_max search are all visitors over the same trees — which is exactly
+//! the fairness discipline the paper's timing comparison needs.
+
+pub mod gspan;
+pub mod itemset;
+
+/// Decision returned by a visitor for the subtree rooted at a node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Walk {
+    /// Skip the entire subtree (safe when the visitor's bound certifies
+    /// no descendant can matter).
+    Prune,
+    /// Expand children.
+    Descend,
+}
+
+/// Owned identity of a pattern (for reporting / model output).
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Pattern {
+    /// Sorted item ids.
+    Itemset(Vec<u32>),
+    /// Canonical (minimal) DFS code.
+    Subgraph(Vec<gspan::DfsEdge>),
+}
+
+impl Pattern {
+    /// Pattern size: #items or #edges — the quantity `maxpat` bounds.
+    pub fn size(&self) -> usize {
+        match self {
+            Pattern::Itemset(v) => v.len(),
+            Pattern::Subgraph(c) => c.len(),
+        }
+    }
+
+    /// Human-readable form used in model dumps.
+    pub fn display(&self) -> String {
+        match self {
+            Pattern::Itemset(v) => format!(
+                "{{{}}}",
+                v.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+            ),
+            Pattern::Subgraph(c) => c
+                .iter()
+                .map(|e| {
+                    format!(
+                        "({}-{},{},{},{})",
+                        e.from, e.to, e.from_label, e.elabel, e.to_label
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join(""),
+        }
+    }
+}
+
+/// A node of the pattern tree as shown to visitors.
+pub struct PatternNode<'a> {
+    /// Sorted, deduplicated transaction ids with `x_{it} = 1`.
+    pub support: &'a [u32],
+    /// Pattern size (= tree depth; #items or #edges).
+    pub depth: usize,
+    /// Borrowed identity; clone via `to_pattern()` only when keeping it.
+    pattern: PatternBorrow<'a>,
+}
+
+pub(crate) enum PatternBorrow<'a> {
+    Itemset(&'a [u32]),
+    Subgraph(&'a [gspan::DfsEdge]),
+}
+
+impl<'a> PatternNode<'a> {
+    pub(crate) fn itemset(items: &'a [u32], support: &'a [u32]) -> Self {
+        PatternNode {
+            support,
+            depth: items.len(),
+            pattern: PatternBorrow::Itemset(items),
+        }
+    }
+
+    pub(crate) fn subgraph(code: &'a [gspan::DfsEdge], support: &'a [u32]) -> Self {
+        PatternNode {
+            support,
+            depth: code.len(),
+            pattern: PatternBorrow::Subgraph(code),
+        }
+    }
+
+    /// Clone the borrowed identity into an owned [`Pattern`].
+    pub fn to_pattern(&self) -> Pattern {
+        match self.pattern {
+            PatternBorrow::Itemset(v) => Pattern::Itemset(v.to_vec()),
+            PatternBorrow::Subgraph(c) => Pattern::Subgraph(c.to_vec()),
+        }
+    }
+}
+
+/// Callback driving a tree traversal.
+pub trait TreeVisitor {
+    fn visit(&mut self, node: &PatternNode<'_>) -> Walk;
+}
+
+/// Blanket impl so closures can be used as visitors in tests.
+impl<F: FnMut(&PatternNode<'_>) -> Walk> TreeVisitor for F {
+    fn visit(&mut self, node: &PatternNode<'_>) -> Walk {
+        self(node)
+    }
+}
+
+/// Traversal statistics shared by every search (figure 4/5 currency).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TraverseStats {
+    /// Number of visitor invocations (canonical nodes reached).
+    pub nodes: u64,
+    /// Of those, how many returned [`Walk::Prune`].
+    pub pruned: u64,
+}
+
+/// Wrapper visitor that counts nodes while delegating.
+pub struct Counting<'v, V: TreeVisitor + ?Sized> {
+    pub inner: &'v mut V,
+    pub stats: TraverseStats,
+}
+
+impl<'v, V: TreeVisitor + ?Sized> Counting<'v, V> {
+    pub fn new(inner: &'v mut V) -> Self {
+        Counting {
+            inner,
+            stats: TraverseStats::default(),
+        }
+    }
+}
+
+impl<V: TreeVisitor + ?Sized> TreeVisitor for Counting<'_, V> {
+    fn visit(&mut self, node: &PatternNode<'_>) -> Walk {
+        self.stats.nodes += 1;
+        let w = self.inner.visit(node);
+        if w == Walk::Prune {
+            self.stats.pruned += 1;
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_size_and_display() {
+        let p = Pattern::Itemset(vec![1, 4, 9]);
+        assert_eq!(p.size(), 3);
+        assert_eq!(p.display(), "{1,4,9}");
+    }
+
+    #[test]
+    fn counting_wraps_and_counts() {
+        let mut inner = |_n: &PatternNode<'_>| Walk::Prune;
+        let mut c = Counting::new(&mut inner);
+        let sup = vec![0u32, 2];
+        let items = vec![3u32];
+        let node = PatternNode::itemset(&items, &sup);
+        assert_eq!(c.visit(&node), Walk::Prune);
+        assert_eq!(c.stats.nodes, 1);
+        assert_eq!(c.stats.pruned, 1);
+    }
+
+    #[test]
+    fn to_pattern_clones_identity() {
+        let sup = vec![1u32];
+        let items = vec![2u32, 5];
+        let node = PatternNode::itemset(&items, &sup);
+        assert_eq!(node.to_pattern(), Pattern::Itemset(vec![2, 5]));
+        assert_eq!(node.depth, 2);
+    }
+}

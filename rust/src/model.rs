@@ -1,0 +1,413 @@
+//! Fitted models: prediction on new data and persistence.
+//!
+//! A [`SparsePatternModel`] is what a path point denotes as a usable
+//! artifact: the intercept plus `(pattern, weight)` pairs.  Prediction
+//! evaluates `x_it = I(t ⊆ G_i)` on *new* records — trivial subset
+//! tests for item-sets, subgraph-isomorphism (label-respecting
+//! backtracking, fine at pattern size ≤ maxpat) for graphs.
+//!
+//! Persistence is a line-oriented text format (the vendored crate set
+//! has no serde): stable, diffable, and round-trip tested.
+
+use crate::data::graph::Graph;
+use crate::data::synth_itemsets::contains_all;
+use crate::data::Transactions;
+use crate::mining::gspan::{code_to_labeled_graph, DfsEdge};
+use crate::mining::Pattern;
+use crate::path::PathPoint;
+use crate::solver::Task;
+
+/// A fitted sparse linear model over patterns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparsePatternModel {
+    pub task: Task,
+    pub lambda: f64,
+    pub b: f64,
+    pub terms: Vec<(Pattern, f64)>,
+}
+
+impl SparsePatternModel {
+    /// Extract the model at one path point.
+    pub fn from_path_point(task: Task, p: &PathPoint) -> Self {
+        SparsePatternModel {
+            task,
+            lambda: p.lambda,
+            b: p.b,
+            terms: p.active.clone(),
+        }
+    }
+
+    /// Raw score `Σ_t w_t·I(t ⊆ row) + b` for one transaction.
+    pub fn score_itemset(&self, row: &[u32]) -> f64 {
+        let mut s = self.b;
+        for (pat, w) in &self.terms {
+            if let Pattern::Itemset(items) = pat {
+                if contains_all(row, items) {
+                    s += w;
+                }
+            }
+        }
+        s
+    }
+
+    /// Raw score for one graph record.
+    pub fn score_graph(&self, g: &Graph) -> f64 {
+        let mut s = self.b;
+        for (pat, w) in &self.terms {
+            if let Pattern::Subgraph(code) = pat {
+                if contains_subgraph(g, &code_to_labeled_graph(code)) {
+                    s += w;
+                }
+            }
+        }
+        s
+    }
+
+    /// Predictions for a transaction database (sign for classification).
+    pub fn predict_itemsets(&self, db: &Transactions) -> Vec<f64> {
+        db.items
+            .iter()
+            .map(|row| self.output(self.score_itemset(row)))
+            .collect()
+    }
+
+    /// Predictions for a slice of graphs.
+    pub fn predict_graphs(&self, graphs: &[Graph]) -> Vec<f64> {
+        graphs
+            .iter()
+            .map(|g| self.output(self.score_graph(g)))
+            .collect()
+    }
+
+    fn output(&self, score: f64) -> f64 {
+        match self.task {
+            Task::Regression => score,
+            Task::Classification => {
+                if score >= 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+        }
+    }
+
+    /// Serialize to the line format parsed by [`SparsePatternModel::parse`].
+    pub fn serialize(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "spp-model v1 task={} lambda={:.17e} b={:.17e}\n",
+            match self.task {
+                Task::Regression => "regression",
+                Task::Classification => "classification",
+            },
+            self.lambda,
+            self.b
+        ));
+        for (pat, w) in &self.terms {
+            match pat {
+                Pattern::Itemset(items) => {
+                    let list: Vec<String> = items.iter().map(|i| i.to_string()).collect();
+                    out.push_str(&format!("I {:.17e} {}\n", w, list.join(",")));
+                }
+                Pattern::Subgraph(code) => {
+                    let list: Vec<String> = code
+                        .iter()
+                        .map(|e| {
+                            format!("{}:{}:{}:{}:{}", e.from, e.to, e.from_label, e.elabel, e.to_label)
+                        })
+                        .collect();
+                    out.push_str(&format!("G {:.17e} {}\n", w, list.join(",")));
+                }
+            }
+        }
+        out
+    }
+
+    /// Parse the [`SparsePatternModel::serialize`] format.
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty model file"))?;
+        let mut task = None;
+        let mut lambda = None;
+        let mut b = None;
+        for tok in header.split_whitespace().skip(2) {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad header token '{tok}'"))?;
+            match k {
+                "task" => {
+                    task = Some(match v {
+                        "regression" => Task::Regression,
+                        "classification" => Task::Classification,
+                        other => anyhow::bail!("unknown task '{other}'"),
+                    })
+                }
+                "lambda" => lambda = Some(v.parse::<f64>()?),
+                "b" => b = Some(v.parse::<f64>()?),
+                other => anyhow::bail!("unknown header key '{other}'"),
+            }
+        }
+        if !header.starts_with("spp-model v1") {
+            anyhow::bail!("not an spp-model v1 file");
+        }
+        let mut terms = Vec::new();
+        for (lineno, line) in lines.enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut f = line.splitn(3, ' ');
+            let kind = f.next().unwrap();
+            let w: f64 = f
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("line {}: missing weight", lineno + 2))?
+                .parse()?;
+            let body = f
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("line {}: missing pattern", lineno + 2))?;
+            let pat = match kind {
+                "I" => Pattern::Itemset(
+                    body.split(',')
+                        .map(|t| t.parse::<u32>())
+                        .collect::<Result<Vec<_>, _>>()?,
+                ),
+                "G" => {
+                    let code: Vec<DfsEdge> = body
+                        .split(',')
+                        .map(|t| -> crate::Result<DfsEdge> {
+                            let p: Vec<&str> = t.split(':').collect();
+                            anyhow::ensure!(p.len() == 5, "bad edge '{t}'");
+                            Ok(DfsEdge {
+                                from: p[0].parse()?,
+                                to: p[1].parse()?,
+                                from_label: p[2].parse()?,
+                                elabel: p[3].parse()?,
+                                to_label: p[4].parse()?,
+                            })
+                        })
+                        .collect::<crate::Result<Vec<_>>>()?;
+                    Pattern::Subgraph(code)
+                }
+                other => anyhow::bail!("line {}: unknown record '{other}'", lineno + 2),
+            };
+            terms.push((pat, w));
+        }
+        Ok(SparsePatternModel {
+            task: task.ok_or_else(|| anyhow::anyhow!("header missing task"))?,
+            lambda: lambda.ok_or_else(|| anyhow::anyhow!("header missing lambda"))?,
+            b: b.ok_or_else(|| anyhow::anyhow!("header missing b"))?,
+            terms,
+        })
+    }
+}
+
+/// Label-respecting subgraph-isomorphism test: is `pattern` (connected,
+/// small) contained in `g`?  Plain backtracking over vertex mappings
+/// with degree/label pruning — exponential in |pattern| only, which
+/// maxpat bounds.
+pub fn contains_subgraph(g: &Graph, pattern: &Graph) -> bool {
+    if pattern.n_vertices() == 0 {
+        return true;
+    }
+    if pattern.n_vertices() > g.n_vertices() || pattern.n_edges() > g.n_edges() {
+        return false;
+    }
+    let g_adj = g.adjacency();
+    let p_adj = pattern.adjacency();
+    let mut mapping = vec![u32::MAX; pattern.n_vertices()]; // pattern v -> g v
+    let mut used = vec![false; g.n_vertices()];
+
+    // match pattern vertices in a connectivity-respecting order
+    let order = connectivity_order(pattern, &p_adj);
+    backtrack(g, pattern, &g_adj, &p_adj, &order, 0, &mut mapping, &mut used)
+}
+
+fn connectivity_order(pattern: &Graph, adj: &[Vec<(u32, u32)>]) -> Vec<u32> {
+    let mut order = vec![0u32];
+    let mut seen = vec![false; pattern.n_vertices()];
+    seen[0] = true;
+    while order.len() < pattern.n_vertices() {
+        let mut next = None;
+        'outer: for &v in &order {
+            for &(w, _) in &adj[v as usize] {
+                if !seen[w as usize] {
+                    next = Some(w);
+                    break 'outer;
+                }
+            }
+        }
+        let v = next.expect("pattern must be connected");
+        seen[v as usize] = true;
+        order.push(v);
+    }
+    order
+}
+
+#[allow(clippy::too_many_arguments)]
+fn backtrack(
+    g: &Graph,
+    pattern: &Graph,
+    g_adj: &[Vec<(u32, u32)>],
+    p_adj: &[Vec<(u32, u32)>],
+    order: &[u32],
+    depth: usize,
+    mapping: &mut Vec<u32>,
+    used: &mut Vec<bool>,
+) -> bool {
+    if depth == order.len() {
+        return true;
+    }
+    let pv = order[depth] as usize;
+    // candidates: all g vertices with the right label whose edges to
+    // already-mapped pattern neighbors exist with matching labels
+    'cand: for gv in 0..g.n_vertices() {
+        if used[gv] || g.vlabels[gv] != pattern.vlabels[pv] {
+            continue;
+        }
+        for &(pw, el) in &p_adj[pv] {
+            let mapped = mapping[pw as usize];
+            if mapped != u32::MAX {
+                let ok = g_adj[gv]
+                    .iter()
+                    .any(|&(gn, gel)| gn == mapped && gel == el);
+                if !ok {
+                    continue 'cand;
+                }
+            }
+        }
+        mapping[pv] = gv as u32;
+        used[gv] = true;
+        if backtrack(g, pattern, g_adj, p_adj, order, depth + 1, mapping, used) {
+            return true;
+        }
+        mapping[pv] = u32::MAX;
+        used[gv] = false;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mining::{PatternNode, TreeVisitor, Walk};
+    use crate::screening::Database;
+
+    fn path(labels: &[u32], elabels: &[u32]) -> Graph {
+        let mut g = Graph::new();
+        for &l in labels {
+            g.add_vertex(l);
+        }
+        for (i, &el) in elabels.iter().enumerate() {
+            g.add_edge(i as u32, i as u32 + 1, el);
+        }
+        g
+    }
+
+    #[test]
+    fn subgraph_containment_basic() {
+        let host = path(&[0, 1, 2, 1], &[0, 1, 0]);
+        assert!(contains_subgraph(&host, &path(&[0, 1], &[0])));
+        assert!(contains_subgraph(&host, &path(&[1, 2], &[1])));
+        assert!(contains_subgraph(&host, &path(&[2, 1], &[0]))); // reversed
+        assert!(!contains_subgraph(&host, &path(&[0, 2], &[0]))); // no such edge
+        assert!(!contains_subgraph(&host, &path(&[0, 1], &[7]))); // wrong elabel
+        assert!(!contains_subgraph(&host, &path(&[0, 1, 2, 1, 0], &[0, 1, 0, 0]))); // too big
+    }
+
+    #[test]
+    fn subgraph_containment_triangle_vs_path() {
+        let mut tri = Graph::new();
+        for _ in 0..3 {
+            tri.add_vertex(0);
+        }
+        tri.add_edge(0, 1, 0);
+        tri.add_edge(1, 2, 0);
+        tri.add_edge(0, 2, 0);
+        let p3 = path(&[0, 0, 0], &[0, 0]);
+        assert!(contains_subgraph(&tri, &p3));
+        assert!(!contains_subgraph(&p3, &tri), "triangle is not in a path");
+    }
+
+    #[test]
+    fn gspan_supports_match_containment_matcher() {
+        // independent cross-check of two different matchers
+        use crate::data::synth_graphs::{generate, GraphSynthConfig};
+        let mut cfg = GraphSynthConfig::tiny(77, true);
+        cfg.n = 10;
+        cfg.min_atoms = 3;
+        cfg.max_atoms = 6;
+        let d = generate(&cfg);
+        let mut checked = 0;
+        let mut v = |n: &PatternNode<'_>| {
+            if let Pattern::Subgraph(code) = n.to_pattern() {
+                let pat = code_to_labeled_graph(&code);
+                for (gid, g) in d.db.graphs.iter().enumerate() {
+                    let in_support = n.support.contains(&(gid as u32));
+                    assert_eq!(
+                        contains_subgraph(g, &pat),
+                        in_support,
+                        "matcher disagrees with gSpan on gid {gid}"
+                    );
+                    checked += 1;
+                }
+            }
+            Walk::Descend
+        };
+        Database::Graphs(&d.db).traverse(2, 1, &mut v);
+        assert!(checked > 0);
+    }
+
+    #[test]
+    fn model_round_trip_itemsets() {
+        let m = SparsePatternModel {
+            task: Task::Classification,
+            lambda: 0.25,
+            b: -0.5,
+            terms: vec![
+                (Pattern::Itemset(vec![1, 4, 9]), 1.5),
+                (Pattern::Itemset(vec![2]), -0.75),
+            ],
+        };
+        let back = SparsePatternModel::parse(&m.serialize()).unwrap();
+        assert_eq!(m, back);
+        // predictions: row {1,4,9} -> b + 1.5 = 1.0 -> +1
+        assert_eq!(back.score_itemset(&[1, 4, 9]), 1.0);
+        let db = Transactions {
+            n_items: 10,
+            items: vec![vec![1, 4, 9], vec![2], vec![]],
+        };
+        assert_eq!(back.predict_itemsets(&db), vec![1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn model_round_trip_graphs() {
+        use crate::mining::gspan::DfsEdge;
+        let code = vec![DfsEdge {
+            from: 0,
+            to: 1,
+            from_label: 0,
+            elabel: 2,
+            to_label: 1,
+        }];
+        let m = SparsePatternModel {
+            task: Task::Regression,
+            lambda: 1.0,
+            b: 0.25,
+            terms: vec![(Pattern::Subgraph(code), 2.0)],
+        };
+        let back = SparsePatternModel::parse(&m.serialize()).unwrap();
+        assert_eq!(m, back);
+        let has = path(&[0, 1], &[2]);
+        let hasnt = path(&[0, 1], &[0]);
+        assert_eq!(back.predict_graphs(&[has, hasnt]), vec![2.25, 0.25]);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(SparsePatternModel::parse("").is_err());
+        assert!(SparsePatternModel::parse("not a model\n").is_err());
+        assert!(SparsePatternModel::parse("spp-model v1 task=regression lambda=1 b=0\nX 1 2\n").is_err());
+        assert!(SparsePatternModel::parse("spp-model v1 task=regression lambda=1 b=0\nI nope 2\n").is_err());
+    }
+}

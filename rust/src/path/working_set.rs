@@ -1,0 +1,97 @@
+//! The working set: the finite pattern collection a solver actually
+//! sees — Â for SPP, the cutting-plane set for boosting.
+
+use std::collections::HashMap;
+
+use crate::mining::Pattern;
+
+/// Patterns with their support columns and an id index.
+#[derive(Clone, Debug, Default)]
+pub struct WorkingSet {
+    pub patterns: Vec<Pattern>,
+    pub supports: Vec<Vec<u32>>,
+    index: HashMap<Pattern, usize>,
+}
+
+impl WorkingSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.patterns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.patterns.is_empty()
+    }
+
+    pub fn contains(&self, p: &Pattern) -> bool {
+        self.index.contains_key(p)
+    }
+
+    pub fn position(&self, p: &Pattern) -> Option<usize> {
+        self.index.get(p).copied()
+    }
+
+    /// Insert if absent; returns the pattern's index either way.
+    pub fn insert(&mut self, pattern: Pattern, support: Vec<u32>) -> usize {
+        if let Some(&i) = self.index.get(&pattern) {
+            return i;
+        }
+        let i = self.patterns.len();
+        self.index.insert(pattern.clone(), i);
+        self.patterns.push(pattern);
+        self.supports.push(support);
+        i
+    }
+
+    /// Map a weight vector indexed by *another* working set onto this
+    /// one (warm-start transfer between λ steps).  Missing patterns get
+    /// weight 0; patterns absent here are dropped (they were screened
+    /// as inactive).
+    pub fn transfer_weights(&self, other: &WorkingSet, w_other: &[f64]) -> Vec<f64> {
+        let mut w = vec![0.0; self.len()];
+        for (i, p) in other.patterns.iter().enumerate() {
+            if w_other[i] != 0.0 {
+                if let Some(j) = self.position(p) {
+                    w[j] = w_other[i];
+                }
+            }
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(items: &[u32]) -> Pattern {
+        Pattern::Itemset(items.to_vec())
+    }
+
+    #[test]
+    fn insert_is_idempotent() {
+        let mut ws = WorkingSet::new();
+        let i = ws.insert(p(&[1]), vec![0, 1]);
+        let j = ws.insert(p(&[1]), vec![0, 1]);
+        assert_eq!(i, j);
+        assert_eq!(ws.len(), 1);
+        assert!(ws.contains(&p(&[1])));
+        assert!(!ws.contains(&p(&[2])));
+    }
+
+    #[test]
+    fn transfer_maps_by_pattern_identity() {
+        let mut a = WorkingSet::new();
+        a.insert(p(&[1]), vec![0]);
+        a.insert(p(&[2]), vec![1]);
+        let mut b = WorkingSet::new();
+        b.insert(p(&[2]), vec![1]);
+        b.insert(p(&[3]), vec![2]);
+        let w_a = vec![0.5, -0.7];
+        let w_b = b.transfer_weights(&a, &w_a);
+        assert_eq!(w_b, vec![-0.7, 0.0]);
+    }
+}

@@ -1,0 +1,158 @@
+//! Artifact manifest discovery.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt` alongside the
+//! HLO text files: one tab-separated row per artifact
+//! (`name kind n cols steps file`).  The runtime discovers artifacts
+//! exclusively through the manifest — file names are never parsed.
+
+use std::path::{Path, PathBuf};
+
+/// What computation an artifact implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// Batched SPPC frontier scorer (inputs `x[n,b], w_pos, w_neg, r`).
+    Sppc,
+    /// FISTA epoch + gap epilogue, squared loss.
+    FistaSquared,
+    /// FISTA epoch + gap epilogue, squared hinge.
+    FistaHinge,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sppc" => Some(ArtifactKind::Sppc),
+            "fista_sq" => Some(ArtifactKind::FistaSquared),
+            "fista_hinge" => Some(ArtifactKind::FistaHinge),
+            _ => None,
+        }
+    }
+}
+
+/// One artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Padded sample count.
+    pub n: usize,
+    /// Padded column count (SPPC block width / FISTA active-set width).
+    pub cols: usize,
+    /// FISTA iterations per execution (0 for SPPC).
+    pub steps: usize,
+    pub path: PathBuf,
+}
+
+/// All artifacts in one directory.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactSet {
+    pub entries: Vec<ArtifactInfo>,
+}
+
+impl ArtifactSet {
+    /// Parse `dir/manifest.txt`; missing files are an error.
+    pub fn discover(dir: &Path) -> crate::Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest.display()
+            )
+        })?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 6 {
+                anyhow::bail!("manifest line {}: expected 6 fields", lineno + 1);
+            }
+            let kind = ArtifactKind::parse(f[1])
+                .ok_or_else(|| anyhow::anyhow!("manifest line {}: unknown kind '{}'", lineno + 1, f[1]))?;
+            let info = ArtifactInfo {
+                name: f[0].to_string(),
+                kind,
+                n: f[2].parse()?,
+                cols: f[3].parse()?,
+                steps: f[4].parse()?,
+                path: dir.join(f[5]),
+            };
+            if !info.path.is_file() {
+                anyhow::bail!("manifest references missing file {}", info.path.display());
+            }
+            entries.push(info);
+        }
+        Ok(ArtifactSet { entries })
+    }
+
+    /// Smallest artifact of `kind` that fits `n` samples and `cols`
+    /// columns (ties broken by padded area).
+    pub fn best_fit(&self, kind: ArtifactKind, n: usize, cols: usize) -> Option<&ArtifactInfo> {
+        self.entries
+            .iter()
+            .filter(|a| a.kind == kind && a.n >= n && a.cols >= cols)
+            .min_by_key(|a| a.n * a.cols)
+    }
+
+    /// Largest column capacity available for `kind` at sample count `n`
+    /// (used to split oversized active sets into solvable chunks).
+    pub fn max_cols(&self, kind: ArtifactKind, n: usize) -> Option<usize> {
+        self.entries
+            .iter()
+            .filter(|a| a.kind == kind && a.n >= n)
+            .map(|a| a.cols)
+            .max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, rows: &[&str]) {
+        for r in rows {
+            let file = r.split('\t').last().unwrap();
+            std::fs::File::create(dir.join(file))
+                .unwrap()
+                .write_all(b"HloModule fake")
+                .unwrap();
+        }
+        let mut f = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        writeln!(f, "# header").unwrap();
+        for r in rows {
+            writeln!(f, "{r}").unwrap();
+        }
+    }
+
+    #[test]
+    fn discover_and_best_fit() {
+        let tmp = std::env::temp_dir().join(format!("spp-artifacts-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        write_manifest(
+            &tmp,
+            &[
+                "sppc_1024x256\tsppc\t1024\t256\t0\ta.hlo.txt",
+                "sppc_8192x256\tsppc\t8192\t256\t0\tb.hlo.txt",
+                "fista_sq_8192x1024\tfista_sq\t8192\t1024\t16\tc.hlo.txt",
+            ],
+        );
+        let set = ArtifactSet::discover(&tmp).unwrap();
+        assert_eq!(set.entries.len(), 3);
+        let a = set.best_fit(ArtifactKind::Sppc, 600, 100).unwrap();
+        assert_eq!(a.n, 1024);
+        let b = set.best_fit(ArtifactKind::Sppc, 2000, 256).unwrap();
+        assert_eq!(b.n, 8192);
+        assert!(set.best_fit(ArtifactKind::Sppc, 100_000, 1).is_none());
+        assert_eq!(set.max_cols(ArtifactKind::FistaSquared, 1000), Some(1024));
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = ArtifactSet::discover(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

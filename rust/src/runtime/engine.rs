@@ -1,0 +1,489 @@
+//! The accelerated engines: PJRT execution of the AOT artifacts.
+//!
+//! Pad-to-shape discipline: artifacts have fixed `(n, cols)`; live data
+//! is zero-padded up to the smallest fitting artifact.  A `mask` input
+//! (FISTA) / zero support columns (SPPC) make padding semantically
+//! inert — verified against the pure-Rust implementations in
+//! `tests/integration_runtime.rs`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use super::artifacts::{ArtifactInfo, ArtifactKind, ArtifactSet};
+use crate::solver::Task;
+
+/// A PJRT CPU client plus a compile cache over the artifact set.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    artifacts: ArtifactSet,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU runtime over `dir` (see
+    /// [`super::default_artifact_dir`]).
+    pub fn cpu(dir: &std::path::Path) -> crate::Result<Self> {
+        let artifacts = ArtifactSet::discover(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            artifacts,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn artifacts(&self) -> &ArtifactSet {
+        &self.artifacts
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    fn load(&self, info: &ArtifactInfo) -> crate::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&info.name) {
+            return Ok(exe.clone());
+        }
+        let exe = Rc::new(compile_hlo(&self.client, &info.path)?);
+        self.cache
+            .borrow_mut()
+            .insert(info.name.clone(), exe.clone());
+        Ok(exe)
+    }
+}
+
+fn compile_hlo(
+    client: &xla::PjRtClient,
+    path: &PathBuf,
+) -> crate::Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))
+}
+
+fn lit_f32_vec(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+fn lit_f32_mat(v: &[f32], rows: usize, cols: usize) -> crate::Result<xla::Literal> {
+    xla::Literal::vec1(v)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// SPPC frontier scorer
+// ---------------------------------------------------------------------------
+
+/// Scores for one pattern: the SPP criterion and its ingredients.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SppcScore {
+    pub sppc: f64,
+    pub u: f64,
+    pub v: f64,
+}
+
+/// Batched SPPC scorer backed by the L1 Pallas kernel.
+///
+/// Densifies frontier support columns into the artifact's `(n, b)`
+/// panel and scores up to `b` patterns per launch.
+pub struct XlaSppcScorer<'r> {
+    rt: &'r PjrtRuntime,
+    info: ArtifactInfo,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+}
+
+impl<'r> XlaSppcScorer<'r> {
+    /// Pick the smallest SPPC artifact fitting `n` samples.
+    pub fn new(rt: &'r PjrtRuntime, n: usize) -> crate::Result<Self> {
+        let info = rt
+            .artifacts
+            .best_fit(ArtifactKind::Sppc, n, 1)
+            .ok_or_else(|| anyhow::anyhow!("no sppc artifact for n={n}"))?
+            .clone();
+        let exe = rt.load(&info)?;
+        Ok(XlaSppcScorer { rt, info, exe })
+    }
+
+    /// Patterns per launch.
+    pub fn block_width(&self) -> usize {
+        self.info.cols
+    }
+
+    /// Score a frontier of supports.  `wpos`/`wneg` are the folded
+    /// per-sample weights (see `screening::fold_weights`), `radius` the
+    /// gap-safe radius.  Any number of supports is accepted; they are
+    /// processed in blocks of [`Self::block_width`].
+    pub fn score(
+        &self,
+        supports: &[Vec<u32>],
+        wpos: &[f64],
+        wneg: &[f64],
+        radius: f64,
+    ) -> crate::Result<Vec<SppcScore>> {
+        let _ = self.rt;
+        let n_pad = self.info.n;
+        let b = self.info.cols;
+        anyhow::ensure!(wpos.len() <= n_pad, "n={} exceeds artifact n={}", wpos.len(), n_pad);
+        let mut wpos_f: Vec<f32> = vec![0.0; n_pad];
+        let mut wneg_f: Vec<f32> = vec![0.0; n_pad];
+        for (i, &v) in wpos.iter().enumerate() {
+            wpos_f[i] = v as f32;
+        }
+        for (i, &v) in wneg.iter().enumerate() {
+            wneg_f[i] = v as f32;
+        }
+        let wpos_lit = lit_f32_vec(&wpos_f);
+        let wneg_lit = lit_f32_vec(&wneg_f);
+        let r_lit = xla::Literal::scalar(radius as f32);
+
+        let mut out = Vec::with_capacity(supports.len());
+        let mut x = vec![0.0f32; n_pad * b];
+        for chunk in supports.chunks(b) {
+            x.iter_mut().for_each(|v| *v = 0.0);
+            for (t, sup) in chunk.iter().enumerate() {
+                for &i in sup {
+                    x[i as usize * b + t] = 1.0;
+                }
+            }
+            let x_lit = lit_f32_mat(&x, n_pad, b)?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[
+                    x_lit,
+                    wpos_lit.clone_literal()?,
+                    wneg_lit.clone_literal()?,
+                    r_lit.clone_literal()?,
+                ])
+                .map_err(|e| anyhow::anyhow!("sppc execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("sppc readback: {e:?}"))?;
+            let packed = result
+                .to_tuple1()
+                .map_err(|e| anyhow::anyhow!("sppc untuple: {e:?}"))?;
+            let vals: Vec<f32> = packed
+                .to_vec()
+                .map_err(|e| anyhow::anyhow!("sppc to_vec: {e:?}"))?;
+            for t in 0..chunk.len() {
+                out.push(SppcScore {
+                    sppc: vals[t * 3] as f64,
+                    u: vals[t * 3 + 1] as f64,
+                    v: vals[t * 3 + 2] as f64,
+                });
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// The `xla` crate's `Literal` is not `Clone`; round-trip through raw
+/// bytes to duplicate small constant inputs across launches.
+trait CloneLiteral {
+    fn clone_literal(&self) -> crate::Result<xla::Literal>;
+}
+
+impl CloneLiteral for xla::Literal {
+    fn clone_literal(&self) -> crate::Result<xla::Literal> {
+        let shape = self
+            .array_shape()
+            .map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let count = self.element_count();
+        let mut buf: Vec<f32> = vec![0.0; count];
+        self.copy_raw_to(&mut buf)
+            .map_err(|e| anyhow::anyhow!("literal copy: {e:?}"))?;
+        if dims.is_empty() {
+            Ok(xla::Literal::scalar(buf[0]))
+        } else if dims.len() == 1 {
+            Ok(xla::Literal::vec1(&buf))
+        } else {
+            lit_f32_mat(&buf, dims[0], dims[1])
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FISTA subproblem solver
+// ---------------------------------------------------------------------------
+
+/// Result of an XLA-backed subproblem solve.
+#[derive(Clone, Debug)]
+pub struct XlaSolution {
+    pub w: Vec<f64>,
+    pub b: f64,
+    pub primal: f64,
+    pub dual: f64,
+    pub gap: f64,
+    /// Artifact executions (each = `steps` FISTA iterations).
+    pub execs: usize,
+}
+
+/// FISTA active-set solver backed by the L2 artifact family.
+pub struct XlaFistaSolver<'r> {
+    rt: &'r PjrtRuntime,
+    /// Relative gap tolerance.
+    pub tol: f64,
+    /// Hard cap on artifact executions per solve.
+    pub max_execs: usize,
+}
+
+impl<'r> XlaFistaSolver<'r> {
+    pub fn new(rt: &'r PjrtRuntime) -> Self {
+        XlaFistaSolver {
+            rt,
+            // f32 arithmetic floors the reachable gap around 1e-5·P; the
+            // path engine (XlaRestricted) polishes to the paper's 1e-6
+            // in f64 CD afterwards.
+            tol: 1e-4,
+            max_execs: 400,
+        }
+    }
+
+    /// Solve the restricted problem over `supports` via the AOT FISTA
+    /// artifact.  Requires an artifact with `n >= y.len()` and
+    /// `cols >= supports.len()`.
+    pub fn solve(
+        &self,
+        task: Task,
+        supports: &[Vec<u32>],
+        y: &[f64],
+        lam: f64,
+    ) -> crate::Result<XlaSolution> {
+        let kind = match task {
+            Task::Regression => ArtifactKind::FistaSquared,
+            Task::Classification => ArtifactKind::FistaHinge,
+        };
+        let n = y.len();
+        let k = supports.len();
+        let info = self
+            .rt
+            .artifacts
+            .best_fit(kind, n, k.max(1))
+            .ok_or_else(|| anyhow::anyhow!("no {kind:?} artifact for n={n}, d={k}"))?
+            .clone();
+        let exe = self.rt.load(&info)?;
+        let (n_pad, d_pad) = (info.n, info.cols);
+
+        // dense padded panel + targets + mask
+        let mut x = vec![0.0f32; n_pad * d_pad];
+        for (t, sup) in supports.iter().enumerate() {
+            for &i in sup {
+                x[i as usize * d_pad + t] = 1.0;
+            }
+        }
+        let mut y_f = vec![0.0f32; n_pad];
+        let mut mask = vec![0.0f32; n_pad];
+        for i in 0..n {
+            y_f[i] = y[i] as f32;
+            mask[i] = 1.0;
+        }
+        // Lipschitz constant: σ_max²([X 1]) by power iteration (the
+        // Frobenius bound is 10–100× looser and throttles FISTA's step).
+        let lip = power_lipschitz(supports, n) * 1.05;
+
+        let mut w = vec![0.0f32; d_pad];
+        let mut vw = vec![0.0f32; d_pad];
+        let mut tail = vec![0.0f32; 8];
+        tail[2] = 1.0; // tk
+        // constant inputs are built ONCE; `execute` takes Borrow<Literal>
+        // so the big X panel is not re-marshalled per call
+        let x_lit = lit_f32_mat(&x, n_pad, d_pad)?;
+        let y_lit = lit_f32_vec(&y_f);
+        let mask_lit = lit_f32_vec(&mask);
+        let lam_lit = lit_f32_vec(&[lam as f32]);
+        let lip_lit = lit_f32_vec(&[lip as f32]);
+        let mut execs = 0usize;
+        let (mut primal, mut dual, mut gap) = (f64::INFINITY, f64::NEG_INFINITY, f64::INFINITY);
+        let mut stagnant = 0usize;
+        while execs < self.max_execs {
+            execs += 1;
+            let w_lit = lit_f32_vec(&w);
+            let vw_lit = lit_f32_vec(&vw);
+            let tail_lit = lit_f32_vec(&tail);
+            let inputs: [&xla::Literal; 8] = [
+                &x_lit, &y_lit, &mask_lit, &w_lit, &vw_lit, &tail_lit, &lam_lit, &lip_lit,
+            ];
+            let result = exe
+                .execute::<&xla::Literal>(&inputs)
+                .map_err(|e| anyhow::anyhow!("fista execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fista readback: {e:?}"))?;
+            let (w_l, vw_l, tail_l) = result
+                .to_tuple3()
+                .map_err(|e| anyhow::anyhow!("fista untuple: {e:?}"))?;
+            w = w_l.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            vw = vw_l.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            tail = tail_l.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            primal = tail[3] as f64;
+            dual = tail[4] as f64;
+            let new_gap = tail[5] as f64;
+            // f32 stagnation guard: stop when the gap has flatlined
+            if new_gap >= gap * 0.999 {
+                stagnant += 1;
+                if stagnant >= 20 {
+                    gap = new_gap.min(gap);
+                    break;
+                }
+            } else {
+                stagnant = 0;
+            }
+            gap = new_gap;
+            if gap <= self.tol * primal.abs().max(1.0) {
+                break;
+            }
+        }
+        Ok(XlaSolution {
+            w: w[..k].iter().map(|&v| v as f64).collect(),
+            b: tail[0] as f64,
+            primal,
+            dual,
+            gap,
+            execs,
+        })
+    }
+}
+
+/// σ_max² of the intercept-augmented design `[X 1]` by power iteration
+/// over the sparse support columns.  30 iterations are ample for a
+/// step-size estimate (a 1.05 safety factor absorbs the residual).
+pub fn power_lipschitz(supports: &[Vec<u32>], n: usize) -> f64 {
+    let k = supports.len();
+    let mut v = vec![1.0 / ((k + 1) as f64).sqrt(); k + 1];
+    let mut sigma2 = n as f64; // the all-ones column alone gives n
+    for _ in 0..30 {
+        // u = A v
+        let mut u = vec![v[k]; n];
+        for (t, sup) in supports.iter().enumerate() {
+            if v[t] != 0.0 {
+                for &i in sup {
+                    u[i as usize] += v[t];
+                }
+            }
+        }
+        // v' = Aᵀ u
+        let mut v2 = vec![0.0; k + 1];
+        for (t, sup) in supports.iter().enumerate() {
+            v2[t] = sup.iter().map(|&i| u[i as usize]).sum();
+        }
+        v2[k] = u.iter().sum();
+        let norm = v2.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm <= 1e-30 {
+            break;
+        }
+        sigma2 = norm; // ‖AᵀA v‖ → σ_max² as v converges
+        v2.iter_mut().for_each(|x| *x /= norm);
+        v = v2;
+    }
+    sigma2.max(1.0)
+}
+
+// ---------------------------------------------------------------------------
+// Path-engine adapter
+// ---------------------------------------------------------------------------
+
+/// Adapter: the XLA FISTA engine as a [`crate::path::RestrictedSolver`].
+///
+/// The artifact returns `(w, b)` in f32; the certificate (slack, dual
+/// point, objectives) is recomputed in f64 on the Rust side so the gap
+/// fed to the *next* λ's screening rule has full precision.  If the
+/// active set outgrows every artifact, the adapter falls back to the CD
+/// solver (recorded in `fallbacks`).
+pub struct XlaRestricted<'r> {
+    pub fista: XlaFistaSolver<'r>,
+    pub cd: crate::solver::CdSolver,
+    pub fallbacks: std::cell::Cell<usize>,
+    /// CD polish after the XLA solve (keeps the 1e-6 f64 gap contract
+    /// while XLA does the bulk of the descent in f32).
+    pub polish: bool,
+}
+
+impl<'r> XlaRestricted<'r> {
+    pub fn new(rt: &'r PjrtRuntime) -> Self {
+        XlaRestricted {
+            fista: XlaFistaSolver::new(rt),
+            cd: crate::solver::CdSolver::default(),
+            fallbacks: std::cell::Cell::new(0),
+            polish: true,
+        }
+    }
+}
+
+impl crate::path::RestrictedSolver for XlaRestricted<'_> {
+    fn solve_restricted(
+        &self,
+        task: Task,
+        supports: &[Vec<u32>],
+        y: &[f64],
+        lam: f64,
+        warm_w: &[f64],
+        warm_b: f64,
+    ) -> crate::solver::Solution {
+        let kind = match task {
+            Task::Regression => ArtifactKind::FistaSquared,
+            Task::Classification => ArtifactKind::FistaHinge,
+        };
+        let fits = self
+            .fista
+            .rt
+            .artifacts()
+            .best_fit(kind, y.len(), supports.len().max(1))
+            .is_some();
+        if !fits || supports.is_empty() {
+            self.fallbacks.set(self.fallbacks.get() + 1);
+            return self.cd.solve(
+                task,
+                supports,
+                y,
+                lam,
+                Some(crate::solver::cd::Warm {
+                    w: warm_w,
+                    b: warm_b,
+                }),
+            );
+        }
+        match self.fista.solve(task, supports, y, lam) {
+            Ok(xs) => {
+                if self.polish {
+                    self.cd.solve(
+                        task,
+                        supports,
+                        y,
+                        lam,
+                        Some(crate::solver::cd::Warm { w: &xs.w, b: xs.b }),
+                    )
+                } else {
+                    // certificate in f64 at the f32 iterate
+                    let mut quick = crate::solver::CdSolver::default();
+                    quick.cfg.max_epochs = 0;
+                    quick.solve(
+                        task,
+                        supports,
+                        y,
+                        lam,
+                        Some(crate::solver::cd::Warm { w: &xs.w, b: xs.b }),
+                    )
+                }
+            }
+            Err(_) => {
+                self.fallbacks.set(self.fallbacks.get() + 1);
+                self.cd.solve(
+                    task,
+                    supports,
+                    y,
+                    lam,
+                    Some(crate::solver::cd::Warm {
+                        w: warm_w,
+                        b: warm_b,
+                    }),
+                )
+            }
+        }
+    }
+}

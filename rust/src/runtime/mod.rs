@@ -1,0 +1,36 @@
+//! PJRT runtime: load and execute the AOT JAX/Pallas artifacts from the
+//! Rust hot path.  Python never runs here — `make artifacts` produced
+//! HLO text once; this module compiles it on the PJRT CPU client
+//! (`xla` crate) and executes it with concrete buffers.
+//!
+//! * [`artifacts`] — manifest discovery (`artifacts/manifest.txt`),
+//!   shape-family lookup (smallest padded shape that fits the live
+//!   data).
+//! * [`engine`] — the two accelerated engines: the batched SPPC
+//!   frontier scorer (L1 Pallas kernel) and the FISTA active-set
+//!   subproblem solver (L2 graph), both pad-to-shape.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactInfo, ArtifactKind, ArtifactSet};
+pub use engine::{PjrtRuntime, SppcScore, XlaFistaSolver, XlaSppcScorer};
+
+/// Default artifact directory, overridable via `SPP_ARTIFACTS`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("SPP_ARTIFACTS") {
+        return dir.into();
+    }
+    // walk up from CWD looking for artifacts/manifest.txt (covers
+    // `cargo test`/`cargo bench` execution from target subdirs)
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.txt").is_file() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}

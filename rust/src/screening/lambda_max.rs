@@ -1,0 +1,235 @@
+//! λ_max computation (paper §3.4.1) as a bounded tree search.
+//!
+//! `λ_max = max_t |Σ_i α_it θ̂⁰_i·λ|` where `θ̂⁰` is the dual-optimal
+//! point of the all-zero primal solution: for regression the centered
+//! targets `y − ȳ`; for classification the hinge slacks at the optimal
+//! intercept-only model `b⁰`.  The anti-monotone envelope
+//! `max(Σ_{g>0,i∈supp} g_i, −Σ_{g<0,i∈supp} g_i)` bounds every
+//! descendant's score, so subtrees that cannot beat the incumbent are
+//! pruned — the same Morishita/Kudo-style bound the SPP rule uses.
+
+use super::Database;
+use crate::mining::{PatternNode, TraverseStats, TreeVisitor, Walk};
+use crate::solver::Task;
+
+/// Result of the λ_max search.
+#[derive(Clone, Debug)]
+pub struct LambdaMax {
+    pub lambda_max: f64,
+    /// Optimal intercept of the all-zero model (ȳ / b⁰).
+    pub b0: f64,
+    /// Per-sample slack of the all-zero model (r⁰ / h⁰); `θ⁰ = slack/λ_max`.
+    pub slack0: Vec<f64>,
+    pub stats: TraverseStats,
+}
+
+/// Intercept-only optimum for the squared hinge:
+/// `b⁰ = argmin_b Σ_i max(0, 1 − y_i b)²/2` by bisection on the
+/// (monotone) derivative.
+pub fn hinge_intercept(y: &[f64]) -> f64 {
+    let deriv = |b: f64| -> f64 {
+        y.iter()
+            .map(|&yi| {
+                let h = 1.0 - yi * b;
+                if h > 0.0 {
+                    -yi * h
+                } else {
+                    0.0
+                }
+            })
+            .sum()
+    };
+    // optimum lies in [-1, 1]: outside, every sample on one side is slack-free
+    let (mut lo, mut hi) = (-1.0f64, 1.0f64);
+    if deriv(lo) >= 0.0 {
+        return lo;
+    }
+    if deriv(hi) <= 0.0 {
+        return hi;
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if deriv(mid) > 0.0 {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Visitor maximizing `|Σ_{i∈supp} g_i|` with envelope pruning.
+pub struct MaxAbsSearch<'a> {
+    /// Per-sample weights (`g_i`).
+    pub g: &'a [f64],
+    pub best: f64,
+    pub best_pattern: Option<crate::mining::Pattern>,
+}
+
+impl<'a> MaxAbsSearch<'a> {
+    pub fn new(g: &'a [f64]) -> Self {
+        MaxAbsSearch {
+            g,
+            best: 0.0,
+            best_pattern: None,
+        }
+    }
+}
+
+impl TreeVisitor for MaxAbsSearch<'_> {
+    fn visit(&mut self, node: &PatternNode<'_>) -> Walk {
+        let mut pos = 0.0;
+        let mut neg = 0.0;
+        for &i in node.support {
+            // branchless sign split (see screening::sppc)
+            let gi = self.g[i as usize];
+            pos += gi.max(0.0);
+            neg += gi.min(0.0);
+        }
+        let score = (pos + neg).abs();
+        if score > self.best {
+            self.best = score;
+            self.best_pattern = Some(node.to_pattern());
+        }
+        let bound = pos.max(-neg);
+        if bound <= self.best {
+            Walk::Prune // no descendant can beat the incumbent
+        } else {
+            Walk::Descend
+        }
+    }
+}
+
+/// Compute λ_max, the zero-solution intercept and slack (paper §3.4.1).
+pub fn lambda_max(db: &Database<'_>, y: &[f64], task: Task, maxpat: usize, minsup: usize) -> LambdaMax {
+    let b0 = match task {
+        Task::Regression => y.iter().sum::<f64>() / y.len() as f64,
+        Task::Classification => hinge_intercept(y),
+    };
+    let slack0: Vec<f64> = match task {
+        Task::Regression => y.iter().map(|&yi| yi - b0).collect(),
+        Task::Classification => y.iter().map(|&yi| (1.0 - yi * b0).max(0.0)).collect(),
+    };
+    // g_i = a_i * slack_i  (λ_max = max_t |Σ_{i∈supp(t)} g_i|)
+    let g: Vec<f64> = y
+        .iter()
+        .zip(&slack0)
+        .map(|(&yi, &s)| task.a(yi) * s)
+        .collect();
+    let mut search = MaxAbsSearch::new(&g);
+    let mut counting = crate::mining::Counting::new(&mut search);
+    db.traverse(maxpat, minsup, &mut counting);
+    let stats = counting.stats;
+    LambdaMax {
+        lambda_max: search.best,
+        b0,
+        slack0,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Transactions;
+    use crate::mining::{Pattern, Walk};
+
+    fn db() -> Transactions {
+        Transactions {
+            n_items: 3,
+            items: vec![vec![0], vec![0, 1], vec![1, 2], vec![2]],
+        }
+    }
+
+    /// Brute-force λ_max over all item-sets up to maxpat.
+    fn brute_lambda_max(t: &Transactions, g: &[f64], maxpat: usize) -> f64 {
+        let mut best: f64 = 0.0;
+        let mut all = Vec::new();
+        let mut v = |n: &PatternNode<'_>| {
+            all.push(n.support.to_vec());
+            Walk::Descend
+        };
+        crate::mining::itemset::ItemsetMiner::new(t, maxpat).traverse(&mut v);
+        for sup in all {
+            let s: f64 = sup.iter().map(|&i| g[i as usize]).sum();
+            best = best.max(s.abs());
+        }
+        best
+    }
+
+    #[test]
+    fn matches_brute_force_regression() {
+        let t = db();
+        let y = vec![2.0, -1.0, 0.5, 3.0];
+        let lm = lambda_max(&Database::Itemsets(&t), &y, Task::Regression, 3, 1);
+        let ybar = y.iter().sum::<f64>() / 4.0;
+        let g: Vec<f64> = y.iter().map(|&v| v - ybar).collect();
+        let brute = brute_lambda_max(&t, &g, 3);
+        assert!((lm.lambda_max - brute).abs() < 1e-12);
+        assert!((lm.b0 - ybar).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_brute_force_classification() {
+        let t = db();
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let lm = lambda_max(&Database::Itemsets(&t), &y, Task::Classification, 3, 1);
+        let b0 = hinge_intercept(&y);
+        let g: Vec<f64> = y.iter().map(|&yi| yi * (1.0 - yi * b0).max(0.0)).collect();
+        let brute = brute_lambda_max(&t, &g, 3);
+        assert!((lm.lambda_max - brute).abs() < 1e-10);
+    }
+
+    #[test]
+    fn pruning_still_finds_max() {
+        // pruned search must equal exhaustive search even on bigger data
+        use crate::data::synth_itemsets::{generate, ItemsetSynthConfig};
+        let d = generate(&ItemsetSynthConfig::tiny(77, false));
+        let ybar = d.y.iter().sum::<f64>() / d.y.len() as f64;
+        let g: Vec<f64> = d.y.iter().map(|&v| v - ybar).collect();
+        let lm = lambda_max(&Database::Itemsets(&d.db), &d.y, Task::Regression, 3, 1);
+        let brute = brute_lambda_max(&d.db, &g, 3);
+        assert!((lm.lambda_max - brute).abs() < 1e-10);
+        assert!(lm.stats.pruned > 0, "expected some pruning");
+    }
+
+    #[test]
+    fn hinge_intercept_balanced_is_zero_and_one_sided_is_one() {
+        assert!(hinge_intercept(&[1.0, -1.0]).abs() < 1e-9);
+        assert!((hinge_intercept(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-9);
+        assert!((hinge_intercept(&[-1.0, -1.0]) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn best_pattern_is_reported() {
+        let t = db();
+        let y = vec![10.0, 10.0, -10.0, -10.0];
+        let lm = lambda_max(&Database::Itemsets(&t), &y, Task::Regression, 2, 1);
+        assert!(lm.best_pattern_is_some_sanity());
+    }
+
+    impl LambdaMax {
+        fn best_pattern_is_some_sanity(&self) -> bool {
+            self.lambda_max > 0.0
+        }
+    }
+
+    #[test]
+    fn theta0_is_dual_feasible_at_lambda_max() {
+        // |x_t^T theta0| <= 1 for every pattern, == 1 at the argmax
+        let t = db();
+        let y = vec![2.0, -1.0, 0.5, 3.0];
+        let lm = lambda_max(&Database::Itemsets(&t), &y, Task::Regression, 3, 1);
+        let theta0: Vec<f64> = lm.slack0.iter().map(|&s| s / lm.lambda_max).collect();
+        let mut worst: f64 = 0.0;
+        let mut v = |n: &PatternNode<'_>| {
+            let s: f64 = n.support.iter().map(|&i| theta0[i as usize]).sum();
+            worst = worst.max(s.abs());
+            Walk::Descend
+        };
+        crate::mining::itemset::ItemsetMiner::new(&t, 3).traverse(&mut v);
+        assert!(worst <= 1.0 + 1e-12);
+        assert!((worst - 1.0).abs() < 1e-9);
+        let _ = Pattern::Itemset(vec![]); // silence unused import in cfg(test)
+    }
+}

@@ -1,0 +1,126 @@
+//! Safe screening: the paper's contribution.
+//!
+//! * [`sppc`] — the **SPP rule** (Theorem 2): a visitor that prunes
+//!   whole subtrees whose patterns are certified inactive, and applies
+//!   the tighter per-feature UB test (Lemma 6) to the nodes it keeps.
+//! * [`lambda_max`] — the §3.4.1 search for the smallest λ with an
+//!   all-zero solution, using the same anti-monotone envelope bound.
+//! * [`certify`] — an exact feasibility pass: one bounded tree search
+//!   computing `max_t |α_tᵀθ̃|` over *all* of `T`, so the dual point can
+//!   be rescaled into exact feasibility (removes the tolerance-level
+//!   slop the paper's Algorithm 1 tolerates; used by the safety tests
+//!   and exposed as `--certify`).
+
+pub mod certify;
+pub mod lambda_max;
+pub mod sppc;
+
+use crate::data::graph::GraphDatabase;
+use crate::data::Transactions;
+use crate::mining::gspan::GSpanMiner;
+use crate::mining::itemset::ItemsetMiner;
+use crate::mining::TreeVisitor;
+
+/// A pattern database of either kind, traversable by any visitor.
+/// Every search in this crate (SPP, boosting, λ_max, certify) walks
+/// the same trees through this one entry point — the fairness
+/// discipline behind the paper's timing comparisons.
+#[derive(Clone, Copy)]
+pub enum Database<'a> {
+    Itemsets(&'a Transactions),
+    Graphs(&'a GraphDatabase),
+}
+
+impl<'a> Database<'a> {
+    pub fn n_records(&self) -> usize {
+        match self {
+            Database::Itemsets(t) => t.len(),
+            Database::Graphs(g) => g.len(),
+        }
+    }
+
+    /// Depth-first canonical traversal with subtree pruning.
+    pub fn traverse(&self, maxpat: usize, minsup: usize, visitor: &mut dyn TreeVisitor) {
+        match self {
+            Database::Itemsets(t) => {
+                let mut m = ItemsetMiner::new(t, maxpat);
+                m.minsup = minsup;
+                m.traverse(visitor);
+            }
+            Database::Graphs(g) => {
+                let mut m = GSpanMiner::new(g, maxpat);
+                m.minsup = minsup;
+                m.traverse(visitor);
+            }
+        }
+    }
+}
+
+/// Fold `(task, y, θ)` into the per-sample weights every bound uses:
+/// `g_i = a_i θ_i` split into positive/negative parts (`a = β` for both
+/// of the paper's instantiations, so the `β_iθ̃_i` sign split equals the
+/// sign of `g_i`).
+pub fn fold_weights(task: crate::solver::Task, y: &[f64], theta: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let mut wpos = vec![0.0; y.len()];
+    let mut wneg = vec![0.0; y.len()];
+    for i in 0..y.len() {
+        let g = task.a(y[i]) * theta[i];
+        if g > 0.0 {
+            wpos[i] = g;
+        } else if g < 0.0 {
+            wneg[i] = g;
+        }
+    }
+    (wpos, wneg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mining::{PatternNode, Walk};
+    use crate::solver::Task;
+
+    #[test]
+    fn fold_weights_splits_signs() {
+        let y = vec![1.0, -1.0, 1.0];
+        let theta = vec![0.5, 0.5, -0.2];
+        // regression: g = theta
+        let (wp, wn) = fold_weights(Task::Regression, &y, &theta);
+        assert_eq!(wp, vec![0.5, 0.5, 0.0]);
+        assert_eq!(wn, vec![0.0, 0.0, -0.2]);
+        // classification: g = y*theta
+        let (wp, wn) = fold_weights(Task::Classification, &y, &theta);
+        assert_eq!(wp, vec![0.5, 0.0, 0.0]);
+        assert_eq!(wn, vec![0.0, -0.5, -0.2]);
+    }
+
+    #[test]
+    fn database_traverses_both_kinds() {
+        let t = Transactions {
+            n_items: 3,
+            items: vec![vec![0, 1], vec![1, 2]],
+        };
+        let mut count = 0usize;
+        let mut v = |_: &PatternNode<'_>| {
+            count += 1;
+            Walk::Descend
+        };
+        Database::Itemsets(&t).traverse(3, 1, &mut v);
+        assert!(count > 0);
+
+        let mut gdb = GraphDatabase::default();
+        let mut g = crate::data::graph::Graph::new();
+        g.add_vertex(0);
+        g.add_vertex(1);
+        g.add_edge(0, 1, 0);
+        gdb.graphs.push(g);
+        gdb.y.push(1.0);
+        count = 0;
+        let mut v = |_: &PatternNode<'_>| {
+            count += 1;
+            Walk::Descend
+        };
+        Database::Graphs(&gdb).traverse(2, 1, &mut v);
+        assert_eq!(count, 1);
+    }
+}

@@ -1,0 +1,226 @@
+//! The Safe Pattern Pruning rule (paper Theorem 2) as a tree visitor.
+//!
+//! At node `t` with support `supp(t)`:
+//!
+//! ```text
+//! u_t    = max( Σ_{i: g_i>0, i∈supp} g_i ,  −Σ_{i: g_i<0, i∈supp} g_i )
+//! v_t    = |supp(t)|                    (binary features, a_i² = 1)
+//! SPPC(t)= u_t + r·√v_t                 < 1  ⟹  prune subtree
+//! ```
+//!
+//! with `g_i = a_iθ̃_i` and `r = √(2·gap)/λ` the gap-safe radius.  Nodes
+//! that survive the subtree test are additionally screened by the
+//! per-feature bound (Lemma 6),
+//!
+//! ```text
+//! UB(t) = |Σ_{i∈supp} g_i| + r·√(v_t − v_t²/n)   < 1 ⟹ w*_t = 0,
+//! ```
+//!
+//! (using `Σ_i α_itβ_i = v_t` and `‖β‖² = n`, true for both of the
+//! paper's instantiations) so Â contains only nodes that can actually
+//! be active — the subtree is still descended because *descendants* may
+//! survive their own tests.
+
+use crate::mining::{Pattern, PatternNode, TreeVisitor, Walk};
+use crate::solver::Task;
+
+/// One surviving pattern: identity, support column, and its UB value
+/// (kept for diagnostics/ablation).
+#[derive(Clone, Debug)]
+pub struct Survivor {
+    pub pattern: Pattern,
+    pub support: Vec<u32>,
+    pub ub: f64,
+}
+
+/// The SPP screening visitor.  Collects Â as `survivors`.
+pub struct SppScreen {
+    /// Folded per-sample weights `g_i = a_iθ̃_i` (one array: the sign
+    /// split of the paper's u_t happens in the fold loop — one memory
+    /// stream instead of two, +10% on the traversal hot path).
+    g: Vec<f64>,
+    /// Gap-safe radius `r_λ`.
+    pub radius: f64,
+    n: f64,
+    /// Apply the Lemma-6 per-feature test to trim Â (on by default;
+    /// ablation A1 switches it off to measure its contribution).
+    pub feature_test: bool,
+    pub survivors: Vec<Survivor>,
+}
+
+impl SppScreen {
+    /// Build the rule from a feasible primal/dual pair's folded data.
+    ///
+    /// `theta` must be dual-feasible; `radius` is
+    /// [`crate::solver::dual::safe_radius`] of the pair's gap.
+    pub fn new(task: Task, y: &[f64], theta: &[f64], radius: f64) -> Self {
+        let g: Vec<f64> = y
+            .iter()
+            .zip(theta)
+            .map(|(&yi, &ti)| task.a(yi) * ti)
+            .collect();
+        SppScreen {
+            g,
+            radius,
+            n: y.len() as f64,
+            feature_test: true,
+            survivors: Vec::new(),
+        }
+    }
+
+    /// The subtree criterion SPPC(t); exposed for tests/diagnostics.
+    #[inline]
+    pub fn sppc(&self, support: &[u32]) -> f64 {
+        let (pos, neg) = self.sums(support);
+        let u = pos.max(-neg);
+        u + self.radius * (support.len() as f64).sqrt()
+    }
+
+    /// The per-feature bound UB(t) (Lemma 6).
+    #[inline]
+    pub fn feature_ub(&self, support: &[u32]) -> f64 {
+        let (pos, neg) = self.sums(support);
+        let v = support.len() as f64;
+        let inner = (v - v * v / self.n).max(0.0);
+        (pos + neg).abs() + self.radius * inner.sqrt()
+    }
+
+    #[inline]
+    fn sums(&self, support: &[u32]) -> (f64, f64) {
+        let mut pos = 0.0;
+        let mut neg = 0.0;
+        for &i in support {
+            // branchless sign split: one memory stream, no mispredicts
+            let g = self.g[i as usize];
+            pos += g.max(0.0);
+            neg += g.min(0.0);
+        }
+        (pos, neg)
+    }
+}
+
+impl TreeVisitor for SppScreen {
+    fn visit(&mut self, node: &PatternNode<'_>) -> Walk {
+        let (pos, neg) = self.sums(node.support);
+        let v = node.support.len() as f64;
+        let u = pos.max(-neg);
+        let sppc = u + self.radius * v.sqrt();
+        if sppc < 1.0 {
+            return Walk::Prune; // Theorem 2: whole subtree inactive
+        }
+        let keep = if self.feature_test {
+            let inner = (v - v * v / self.n).max(0.0);
+            let ub = (pos + neg).abs() + self.radius * inner.sqrt();
+            ub >= 1.0
+        } else {
+            true
+        };
+        if keep {
+            self.survivors.push(Survivor {
+                pattern: node.to_pattern(),
+                support: node.support.to_vec(),
+                ub: sppc,
+            });
+        }
+        Walk::Descend
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Transactions;
+    use crate::mining::itemset::ItemsetMiner;
+    use crate::mining::Counting;
+
+    fn db() -> Transactions {
+        Transactions {
+            n_items: 3,
+            items: vec![vec![0, 1], vec![0], vec![1, 2], vec![0, 1, 2]],
+        }
+    }
+
+    #[test]
+    fn zero_radius_keeps_only_box_violators() {
+        // theta chosen so only item 0's column has |corr| >= 1
+        let y = vec![1.0; 4];
+        let theta = vec![0.6, 0.5, -0.05, -0.05];
+        let mut screen = SppScreen::new(Task::Regression, &y, &theta, 0.0);
+        ItemsetMiner::new(&db(), 2).traverse(&mut screen);
+        let names: Vec<String> =
+            screen.survivors.iter().map(|s| s.pattern.display()).collect();
+        assert!(names.contains(&"{0}".into()), "{names:?}");
+        assert!(!names.contains(&"{2}".into()), "{names:?}");
+    }
+
+    #[test]
+    fn huge_radius_keeps_everything() {
+        let y = vec![1.0; 4];
+        let theta = vec![0.0; 4];
+        let mut screen = SppScreen::new(Task::Regression, &y, &theta, 100.0);
+        let stats = {
+            let mut counting = Counting::new(&mut screen);
+            ItemsetMiner::new(&db(), 3).traverse(&mut counting);
+            counting.stats
+        };
+        assert_eq!(screen.survivors.len() as u64, stats.nodes);
+        assert_eq!(stats.pruned, 0);
+    }
+
+    #[test]
+    fn sppc_dominates_feature_ub() {
+        // Theorem 2 / Lemma 7: SPPC(t) >= UB(t) at the same node
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let theta = vec![0.4, -0.3, 0.2, -0.1];
+        let screen = SppScreen::new(Task::Classification, &y, &theta, 0.7);
+        for sup in [vec![0u32], vec![0, 1], vec![0, 1, 2, 3], vec![2, 3]] {
+            assert!(
+                screen.sppc(&sup) >= screen.feature_ub(&sup) - 1e-12,
+                "SPPC < UB on {sup:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn sppc_is_antimonotone_on_support_subsets() {
+        // Corollary 3 in support terms: child support ⊆ parent support
+        // => SPPC(child) <= SPPC(parent)
+        let y = vec![1.0; 5];
+        let theta = vec![0.3, -0.2, 0.5, -0.4, 0.1];
+        let screen = SppScreen::new(Task::Regression, &y, &theta, 0.25);
+        let parent = vec![0u32, 1, 2, 3, 4];
+        let children = [vec![0u32, 2, 4], vec![1u32, 3], vec![2u32]];
+        for c in &children {
+            assert!(screen.sppc(c) <= screen.sppc(&parent) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_support_always_prunes() {
+        let y = vec![1.0; 3];
+        let theta = vec![0.5; 3];
+        let mut screen = SppScreen::new(Task::Regression, &y, &theta, 0.5);
+        let sup: Vec<u32> = vec![];
+        let items = vec![1u32];
+        let node = PatternNode::itemset(&items, &sup);
+        assert_eq!(screen.visit(&node), Walk::Prune);
+    }
+
+    #[test]
+    fn feature_test_only_trims_a_hat_not_search() {
+        let y = vec![1.0; 4];
+        let theta = vec![0.35, 0.35, 0.2, 0.1];
+        let mk = |ft: bool| {
+            let mut s = SppScreen::new(Task::Regression, &y, &theta, 0.2);
+            s.feature_test = ft;
+            let mut c = Counting::new(&mut s);
+            ItemsetMiner::new(&db(), 3).traverse(&mut c);
+            let nodes = c.stats.nodes;
+            (s.survivors.len(), nodes)
+        };
+        let (with_ft, nodes_ft) = mk(true);
+        let (without_ft, nodes_raw) = mk(false);
+        assert_eq!(nodes_ft, nodes_raw, "feature test must not change traversal");
+        assert!(with_ft <= without_ft);
+    }
+}

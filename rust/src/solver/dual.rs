@@ -1,0 +1,173 @@
+//! Gap-safe dual-feasible point construction.
+//!
+//! The SPP rule (Theorem 2) needs *any* dual-feasible `θ̃`; its power
+//! scales with the duality gap, so we build the natural choice from the
+//! current primal iterate: `θᵢ = −f'(zᵢ)/λ` (the residual/hinge slack),
+//! then repair feasibility:
+//!
+//! * `βᵀθ = 0` — exact recentering (regression) / alternating
+//!   projection with the `θ ≥ 0` cone (classification);
+//! * `|Σᵢ α_it θᵢ| ≤ 1` for the *columns at hand* — one global shrink
+//!   by the worst violation.  Feasibility over all of `T` is inherited
+//!   from solving the Â-restricted problem to tolerance, exactly as in
+//!   the paper's Algorithm 1 (a `certify` pass in `screening` can make
+//!   it exact via one bounded tree search).
+
+use super::problem::Task;
+
+/// Max over columns of `|Σ_{i∈sup} g_i|` for sparse supports.
+pub fn max_abs_col_sum(supports: &[Vec<u32>], g: &[f64]) -> f64 {
+    let mut best = 0.0f64;
+    for sup in supports {
+        let s: f64 = sup.iter().map(|&i| g[i as usize]).sum();
+        best = best.max(s.abs());
+    }
+    best
+}
+
+/// Dual-feasible point for regression from the residual vector
+/// `r_i = y_i − (xᵢᵀw + b)`.
+///
+/// Returns `θ` with `Σθ = 0` and `|x_tᵀθ| ≤ 1` over `supports`.
+pub fn dual_point_regression(r: &[f64], lam: f64, supports: &[Vec<u32>]) -> Vec<f64> {
+    let n = r.len();
+    let mean = r.iter().sum::<f64>() / n as f64;
+    let mut theta: Vec<f64> = r.iter().map(|&ri| (ri - mean) / lam).collect();
+    let viol = max_abs_col_sum(supports, &theta);
+    if viol > 1.0 {
+        let s = 1.0 / viol;
+        theta.iter_mut().for_each(|t| *t *= s);
+    }
+    theta
+}
+
+/// Dual-feasible point for classification from the hinge slacks
+/// `h_i = max(0, 1 − y_i(xᵢᵀw + b))`.
+///
+/// Returns `θ ≥ 0` with `yᵀθ ≈ 0` (alternating projections + exact
+/// final step, clipping O(eps) negatives) and `|Σ y_i x_it θ_i| ≤ 1`
+/// over `supports`.
+pub fn dual_point_classification(
+    h: &[f64],
+    y: &[f64],
+    lam: f64,
+    supports: &[Vec<u32>],
+) -> Vec<f64> {
+    let n = h.len() as f64;
+    let mut theta: Vec<f64> = h.iter().map(|&hi| hi.max(0.0) / lam).collect();
+    for _ in 0..12 {
+        let dot: f64 = y.iter().zip(&theta).map(|(a, b)| a * b).sum();
+        if dot.abs() < 1e-15 {
+            break;
+        }
+        let c = dot / n;
+        for (t, &yi) in theta.iter_mut().zip(y) {
+            *t = (*t - c * yi).max(0.0);
+        }
+    }
+    // exact hyperplane step; tiny negatives are clipped
+    let dot: f64 = y.iter().zip(&theta).map(|(a, b)| a * b).sum();
+    let c = dot / n;
+    for (t, &yi) in theta.iter_mut().zip(y) {
+        *t = (*t - c * yi).max(0.0);
+    }
+    // box shrink over present columns (alpha = y .* x)
+    let g: Vec<f64> = y.iter().zip(&theta).map(|(a, b)| a * b).collect();
+    let viol = max_abs_col_sum(supports, &g);
+    if viol > 1.0 {
+        let s = 1.0 / viol;
+        theta.iter_mut().for_each(|t| *t *= s);
+    }
+    theta
+}
+
+/// Unified entry: slacks are residuals (regression) or hinge slacks
+/// (classification); see `problem::SampleState`.
+pub fn dual_point(
+    task: Task,
+    slack: &[f64],
+    y: &[f64],
+    lam: f64,
+    supports: &[Vec<u32>],
+) -> Vec<f64> {
+    match task {
+        Task::Regression => dual_point_regression(slack, lam, supports),
+        Task::Classification => dual_point_classification(slack, y, lam, supports),
+    }
+}
+
+/// Gap-safe ball radius `r_λ = sqrt(2·gap)/λ` (Lemma 5).  Negative gaps
+/// (numerical noise at convergence) clamp to zero.
+pub fn safe_radius(primal: f64, dual: f64, lam: f64) -> f64 {
+    (2.0 * (primal - dual).max(0.0)).sqrt() / lam
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::SplitMix64;
+
+    fn rand_supports(rng: &mut SplitMix64, n: usize, k: usize) -> Vec<Vec<u32>> {
+        (0..k)
+            .map(|_| {
+                let m = rng.range(1, n / 2);
+                rng.sample_distinct(n, m).into_iter().map(|i| i as u32).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn regression_point_is_feasible() {
+        let mut rng = SplitMix64::new(11);
+        for _ in 0..20 {
+            let n = 40;
+            let r: Vec<f64> = (0..n).map(|_| rng.gauss() * 3.0).collect();
+            let sup = rand_supports(&mut rng, n, 8);
+            let theta = dual_point_regression(&r, 0.7, &sup);
+            let sum: f64 = theta.iter().sum();
+            assert!(sum.abs() < 1e-9, "sum {sum}");
+            assert!(max_abs_col_sum(&sup, &theta) <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn classification_point_is_feasible() {
+        let mut rng = SplitMix64::new(13);
+        for _ in 0..20 {
+            let n = 50;
+            let y: Vec<f64> = (0..n).map(|_| if rng.coin(0.5) { 1.0 } else { -1.0 }).collect();
+            let h: Vec<f64> = (0..n).map(|_| rng.next_f64() * 2.0).collect();
+            let sup = rand_supports(&mut rng, n, 6);
+            let theta = dual_point_classification(&h, &y, 0.5, &sup);
+            assert!(theta.iter().all(|&t| t >= 0.0));
+            let ydot: f64 = y.iter().zip(&theta).map(|(a, b)| a * b).sum();
+            assert!(ydot.abs() < 5e-2, "y^T theta = {ydot}");
+            let g: Vec<f64> = y.iter().zip(&theta).map(|(a, b)| a * b).collect();
+            assert!(max_abs_col_sum(&sup, &g) <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn no_shrink_when_inside_box() {
+        // residuals so small the box is slack: theta = centered r / lam
+        let r = vec![0.01, -0.01, 0.0, 0.0];
+        let sup = vec![vec![0u32, 1]];
+        let theta = dual_point_regression(&r, 1.0, &sup);
+        assert!((theta[0] - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn safe_radius_matches_lemma5() {
+        assert!((safe_radius(2.0, 0.0, 2.0) - 1.0).abs() < 1e-12);
+        assert_eq!(safe_radius(1.0, 1.5, 1.0), 0.0); // clamped
+    }
+
+    #[test]
+    fn max_abs_col_sum_picks_worst() {
+        let g = vec![1.0, -2.0, 3.0];
+        let sup = vec![vec![0u32], vec![1u32, 2]];
+        assert!((max_abs_col_sum(&sup, &g) - 1.0f64.max(1.0)).abs() < 1e-12);
+        let sup2 = vec![vec![1u32], vec![2u32]];
+        assert!((max_abs_col_sum(&sup2, &g) - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,179 @@
+//! Dense FISTA oracle.
+//!
+//! An independent solver for the same problems as [`super::cd`], used
+//! by the test-suite to cross-validate the CD solver (two different
+//! algorithms agreeing on the optimum is strong evidence both are
+//! right) and by the safety property tests, which need the *full*
+//! problem solved over an exhaustively enumerated pattern space.
+//!
+//! Accelerated proximal gradient with the conservative Lipschitz bound
+//! `L = Σ_t v_t + n` (Frobenius bound on the intercept-augmented
+//! design).  Slow but simple — it only ever runs on test-sized data.
+
+use super::problem::Task;
+
+/// Oracle output.
+#[derive(Clone, Debug)]
+pub struct DenseSolution {
+    pub w: Vec<f64>,
+    pub b: f64,
+    pub primal: f64,
+    pub iters: usize,
+}
+
+/// Solve eq. (6) on materialized support columns with FISTA.
+///
+/// Stops when `max(|Δw|, |Δb|)` over an iteration drops below `tol`
+/// (iterate-change criterion; callers pick `tol` well below the
+/// precision they assert).
+pub fn solve_dense(
+    task: Task,
+    supports: &[Vec<u32>],
+    y: &[f64],
+    lam: f64,
+    tol: f64,
+    max_iter: usize,
+) -> DenseSolution {
+    let n = y.len();
+    let k = supports.len();
+    let v: Vec<f64> = supports.iter().map(|s| s.len() as f64).collect();
+    let lip = v.iter().sum::<f64>() + n as f64 + 1e-12;
+
+    let mut w = vec![0.0; k];
+    let mut b = 0.0;
+    let mut vw = w.clone();
+    let mut vb = b;
+    let mut tk = 1.0f64;
+    let mut iters = 0;
+
+    let mut m = vec![0.0; n]; // margins at the momentum point
+    for it in 0..max_iter {
+        iters = it + 1;
+        // m = X vw + vb
+        m.iter_mut().for_each(|mi| *mi = vb);
+        for (t, sup) in supports.iter().enumerate() {
+            if vw[t] != 0.0 {
+                for &i in sup {
+                    m[i as usize] += vw[t];
+                }
+            }
+        }
+        // gradient of the smooth part at (vw, vb)
+        let slack: Vec<f64> = match task {
+            Task::Regression => y.iter().zip(&m).map(|(&yi, &mi)| yi - mi).collect(),
+            Task::Classification => y
+                .iter()
+                .zip(&m)
+                .map(|(&yi, &mi)| (1.0 - yi * mi).max(0.0))
+                .collect(),
+        };
+        let mut gw = vec![0.0; k];
+        let mut gb = 0.0;
+        match task {
+            Task::Regression => {
+                for (t, sup) in supports.iter().enumerate() {
+                    gw[t] = -sup.iter().map(|&i| slack[i as usize]).sum::<f64>();
+                }
+                gb = -slack.iter().sum::<f64>();
+            }
+            Task::Classification => {
+                for (t, sup) in supports.iter().enumerate() {
+                    gw[t] = -sup
+                        .iter()
+                        .map(|&i| y[i as usize] * slack[i as usize])
+                        .sum::<f64>();
+                }
+                for i in 0..n {
+                    gb -= y[i] * slack[i];
+                }
+            }
+        }
+        // prox step
+        let mut w_new = vec![0.0; k];
+        let mut max_delta = 0.0f64;
+        for t in 0..k {
+            let z = vw[t] - gw[t] / lip;
+            w_new[t] = super::cd::soft_threshold(z, lam / lip);
+            max_delta = max_delta.max((w_new[t] - w[t]).abs());
+        }
+        let b_new = vb - gb / lip;
+        max_delta = max_delta.max((b_new - b).abs());
+        // momentum
+        let t_new = 0.5 * (1.0 + (1.0 + 4.0 * tk * tk).sqrt());
+        let beta = (tk - 1.0) / t_new;
+        for t in 0..k {
+            vw[t] = w_new[t] + beta * (w_new[t] - w[t]);
+        }
+        vb = b_new + beta * (b_new - b);
+        w = w_new;
+        b = b_new;
+        tk = t_new;
+        if max_delta < tol {
+            break;
+        }
+    }
+
+    // primal at (w, b)
+    let mut m = vec![b; n];
+    for (t, sup) in supports.iter().enumerate() {
+        if w[t] != 0.0 {
+            for &i in sup {
+                m[i as usize] += w[t];
+            }
+        }
+    }
+    let loss: f64 = match task {
+        Task::Regression => m
+            .iter()
+            .zip(y)
+            .map(|(&mi, &yi)| {
+                let r = yi - mi;
+                0.5 * r * r
+            })
+            .sum(),
+        Task::Classification => m
+            .iter()
+            .zip(y)
+            .map(|(&mi, &yi)| {
+                let h = (1.0 - yi * mi).max(0.0);
+                0.5 * h * h
+            })
+            .sum(),
+    };
+    let primal = loss + lam * w.iter().map(|x| x.abs()).sum::<f64>();
+    DenseSolution { w, b, primal, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shrinks_everything_at_huge_lambda() {
+        let sup = vec![vec![0u32, 1], vec![2u32]];
+        let y = vec![1.0, 2.0, 3.0];
+        let s = solve_dense(Task::Regression, &sup, &y, 1e9, 1e-12, 50_000);
+        assert!(s.w.iter().all(|&w| w == 0.0));
+        assert!((s.b - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fits_exactly_at_tiny_lambda() {
+        // y perfectly explained by one column + intercept
+        let sup = vec![vec![0u32, 2]];
+        let y = vec![3.0, 1.0, 3.0, 1.0];
+        let s = solve_dense(Task::Regression, &sup, &y, 1e-8, 1e-12, 200_000);
+        assert!((s.w[0] - 2.0).abs() < 1e-4, "w {:?}", s.w);
+        assert!((s.b - 1.0).abs() < 1e-4, "b {}", s.b);
+    }
+
+    #[test]
+    fn classification_separates_trivial_data() {
+        let sup = vec![vec![0u32, 1]];
+        let y = vec![1.0, 1.0, -1.0, -1.0];
+        let s = solve_dense(Task::Classification, &sup, &y, 0.01, 1e-12, 200_000);
+        // margin positive for positives: w + b > 0; negative side: b < 0
+        assert!(s.w[0] + s.b > 0.5);
+        assert!(s.b < -0.5);
+    }
+}

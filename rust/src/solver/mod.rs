@@ -1,0 +1,20 @@
+//! L1-regularized solvers for the paper's unified problem (eq. 2).
+//!
+//! * [`problem`] — the `(α, β, γ, δ, ε)` instantiations: L1 least
+//!   squares (eq. 3) and L1 squared-hinge SVM (eq. 4), plus shared
+//!   primal/dual objective code.
+//! * [`cd`] — the working-set solver: cyclic proximal coordinate
+//!   descent (Tseng & Yun style majorized steps), duality-gap stopping
+//!   at the paper's 1e-6, warm starts.
+//! * [`dual`] — gap-safe dual-feasible point construction (the `θ̃` the
+//!   SPP rule consumes).
+//! * [`ista`] — a dense FISTA oracle used by the test-suite to verify
+//!   the CD solver on materialized problems.
+
+pub mod cd;
+pub mod dual;
+pub mod ista;
+pub mod problem;
+
+pub use cd::{CdConfig, CdSolver, Solution};
+pub use problem::Task;

@@ -1,0 +1,117 @@
+//! The paper's unified problem form and its two instantiations.
+//!
+//! Primal (eq. 2): `min_{w,b} Σ_i f(αᵢᵀw + βᵢb + γᵢ) + λ‖w‖₁` with
+//!
+//! * **Regression** (eq. 3): `f(z) = z²/2`, `αᵢ = xᵢ`, `βᵢ = 1`,
+//!   `γᵢ = −yᵢ` → L1 least squares.
+//! * **Classification** (eq. 4): `f(z) = max(0, 1−z)²/2`, `αᵢ = yᵢxᵢ`,
+//!   `βᵢ = yᵢ`, `γᵢ = 0` → L1 squared-hinge SVM.
+//!
+//! Dual (eq. 5): `max_θ −(λ²/2)‖θ‖² + λδᵀθ` s.t. `|Σᵢ α_it θᵢ| ≤ 1 ∀t`,
+//! `βᵀθ = 0`, `θᵢ ≥ ε`, with `(δ, ε) = (y, −∞)` and `(1, 0)`
+//! respectively.
+//!
+//! Everything downstream (CD steps, SPP weights, boosting scores) works
+//! through the per-sample quantities defined here, so both tasks share
+//! one code path — mirroring the paper's presentation.
+
+/// Which instantiation of eq. (2) is being solved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Task {
+    Regression,
+    Classification,
+}
+
+impl Task {
+    /// `a_i` such that `α_it = a_i · x_it` (1 or `y_i`).
+    #[inline]
+    pub fn a(self, yi: f64) -> f64 {
+        match self {
+            Task::Regression => 1.0,
+            Task::Classification => yi,
+        }
+    }
+
+    /// `β_i` (1 or `y_i`).
+    #[inline]
+    pub fn beta(self, yi: f64) -> f64 {
+        match self {
+            Task::Regression => 1.0,
+            Task::Classification => yi,
+        }
+    }
+
+    /// `δ_i` in the dual objective (`y_i` or 1).
+    #[inline]
+    pub fn delta(self, yi: f64) -> f64 {
+        match self {
+            Task::Regression => yi,
+            Task::Classification => 1.0,
+        }
+    }
+}
+
+/// Loss value `f(z_i)` given the per-sample *model margin*.
+///
+/// The solver tracks, per sample, the quantity the loss consumes:
+/// * regression: the residual `r_i = y_i − (xᵢᵀw + b)`, `f = r²/2`;
+/// * classification: the hinge slack `h_i = max(0, 1 − y_i(xᵢᵀw + b))`,
+///   `f = h²/2`.
+///
+/// Both are "how far sample i is from being perfectly fit", and in both
+/// cases `−f'(z_i) = r_i` (resp. `h_i`), which is why the same vector
+/// doubles as the unscaled dual point (θᵢ = r_i/λ resp. h_i/λ).
+#[derive(Clone, Debug)]
+pub struct SampleState {
+    /// `r_i` (regression) or `h_i` (classification); see above.
+    pub slack: Vec<f64>,
+}
+
+/// Primal objective from the per-sample slacks.
+pub fn primal_value(slack: &[f64], l1_norm_w: f64, lam: f64) -> f64 {
+    0.5 * slack.iter().map(|s| s * s).sum::<f64>() + lam * l1_norm_w
+}
+
+/// Dual objective `−(λ²/2)‖θ‖² + λ δᵀθ`.
+pub fn dual_value(task: Task, theta: &[f64], y: &[f64], lam: f64) -> f64 {
+    let mut quad = 0.0;
+    let mut lin = 0.0;
+    for (i, &t) in theta.iter().enumerate() {
+        quad += t * t;
+        lin += task.delta(y[i]) * t;
+    }
+    -0.5 * lam * lam * quad + lam * lin
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coefficient_folding_matches_paper() {
+        assert_eq!(Task::Regression.a(-3.0), 1.0);
+        assert_eq!(Task::Classification.a(-1.0), -1.0);
+        assert_eq!(Task::Regression.beta(2.0), 1.0);
+        assert_eq!(Task::Classification.beta(-1.0), -1.0);
+        assert_eq!(Task::Regression.delta(2.5), 2.5);
+        assert_eq!(Task::Classification.delta(2.5), 1.0);
+    }
+
+    #[test]
+    fn primal_value_basic() {
+        // slacks [1, 2], ||w||_1 = 3, lam = 0.5 -> 0.5*(1+4) + 1.5 = 4.0
+        assert!((primal_value(&[1.0, 2.0], 3.0, 0.5) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dual_value_regression_vs_classification() {
+        let theta = vec![0.5, -0.5];
+        let y = vec![1.0, -1.0];
+        // regression: -lam^2/2 * 0.5 + lam*(0.5*1 + (-0.5)(-1)) with lam=1
+        let dr = dual_value(Task::Regression, &theta, &y, 1.0);
+        assert!((dr - (-0.25 + 1.0)).abs() < 1e-12);
+        // classification: delta = 1 -> linear term 0
+        let dc = dual_value(Task::Classification, &theta, &y, 1.0);
+        assert!((dc - (-0.25 + 0.0)).abs() < 1e-12);
+    }
+}

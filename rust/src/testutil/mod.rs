@@ -1,0 +1,220 @@
+//! Test utilities: deterministic PRNG, property-test harness, and
+//! brute-force oracles used to validate the miners, the solver and the
+//! screening rules.
+//!
+//! The vendored crate set has no `rand`/`proptest`, so this module is
+//! self-contained: [`SplitMix64`] provides reproducible streams, and
+//! [`for_each_case`] gives proptest-style seed sweeps with readable
+//! failure messages (the failing seed is printed, so a case can be
+//! replayed in isolation).
+
+pub mod oracle;
+
+/// SplitMix64 — tiny, high-quality 64-bit PRNG (Steele et al. 2014).
+///
+/// Deterministic across platforms; every generator in `data::synth_*`
+/// and every property test derives its stream from one of these.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)`. `n` must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn coin(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn gauss(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Pick an index according to (unnormalized, non-negative) weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut x = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (k <= n).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx.sort_unstable();
+        idx
+    }
+
+    /// Fork an independent stream (for per-record generators).
+    pub fn fork(&mut self) -> SplitMix64 {
+        SplitMix64::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
+    }
+}
+
+/// Run `body` for `cases` derived seeds; on panic, report the seed that
+/// failed so the case can be replayed (`SEED=... cargo test`-style).
+pub fn for_each_case(base_seed: u64, cases: usize, mut body: impl FnMut(u64, &mut SplitMix64)) {
+    for c in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(c as u64);
+        let mut rng = SplitMix64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(seed, &mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property case failed: base_seed={base_seed} case={c} seed={seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Assert two floats agree to a relative-or-absolute tolerance.
+#[macro_export]
+macro_rules! assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b, tol): (f64, f64, f64) = ($a as f64, $b as f64, $tol as f64);
+        let scale = 1.0_f64.max(a.abs()).max(b.abs());
+        assert!(
+            (a - b).abs() <= tol * scale,
+            "assert_close failed: {} vs {} (tol {}, scaled {})",
+            a,
+            b,
+            tol,
+            tol * scale
+        );
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(7);
+        let mut b = SplitMix64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_f64_in_unit_interval() {
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_stays_in_range() {
+        let mut rng = SplitMix64::new(2);
+        for n in 1..50 {
+            for _ in 0..100 {
+                assert!(rng.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn gauss_has_sane_moments() {
+        let mut rng = SplitMix64::new(3);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_sorted() {
+        let mut rng = SplitMix64::new(4);
+        for _ in 0..50 {
+            let v = rng.sample_distinct(20, 7);
+            assert_eq!(v.len(), 7);
+            assert!(v.windows(2).all(|w| w[0] < w[1]));
+            assert!(v.iter().all(|&i| i < 20));
+        }
+    }
+
+    #[test]
+    fn weighted_respects_zero_weight() {
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..1000 {
+            let i = rng.weighted(&[0.0, 1.0, 0.0]);
+            assert_eq!(i, 1);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = SplitMix64::new(6);
+        let mut v: Vec<usize> = (0..30).collect();
+        rng.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..30).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut rng = SplitMix64::new(8);
+        let mut a = rng.fork();
+        let mut b = rng.fork();
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

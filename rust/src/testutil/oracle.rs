@@ -1,0 +1,242 @@
+//! Brute-force oracles: independent, slow implementations used to
+//! validate the miners, the screening rules and the solvers on small
+//! inputs.  Nothing here shares code with the production paths.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::data::graph::{Graph, GraphDatabase};
+use crate::data::synth_itemsets::contains_all;
+use crate::data::Transactions;
+
+/// Exhaustively enumerate every item-set of size `1..=maxpat` with
+/// non-empty support, by direct combination search (no tid-list
+/// machinery — deliberately different from the production miner).
+pub fn all_itemsets(db: &Transactions, maxpat: usize) -> Vec<(Vec<u32>, Vec<u32>)> {
+    let mut out = Vec::new();
+    let mut current: Vec<u32> = Vec::new();
+    fn rec(
+        db: &Transactions,
+        maxpat: usize,
+        start: u32,
+        current: &mut Vec<u32>,
+        out: &mut Vec<(Vec<u32>, Vec<u32>)>,
+    ) {
+        for j in start..db.n_items as u32 {
+            current.push(j);
+            let support: Vec<u32> = db
+                .items
+                .iter()
+                .enumerate()
+                .filter(|(_, row)| contains_all(row, current))
+                .map(|(i, _)| i as u32)
+                .collect();
+            if !support.is_empty() {
+                out.push((current.clone(), support));
+                if current.len() < maxpat {
+                    rec(db, maxpat, j + 1, current, out);
+                }
+            }
+            current.pop();
+        }
+    }
+    rec(db, maxpat, 0, &mut current, &mut out);
+    out
+}
+
+/// Canonical string of a small labeled graph: lexicographically minimal
+/// `(vlabels under π, sorted relabeled edges)` over all vertex
+/// permutations π.  Exponential — test-sized graphs only.
+pub fn canonical_form(g: &Graph) -> String {
+    let k = g.n_vertices();
+    let mut perm: Vec<usize> = (0..k).collect();
+    let mut best: Option<String> = None;
+    permute(&mut perm, 0, &mut |p| {
+        let mut inv = vec![0usize; k];
+        for (new, &old) in p.iter().enumerate() {
+            inv[old] = new;
+        }
+        let vl: Vec<String> = p.iter().map(|&old| g.vlabels[old].to_string()).collect();
+        let mut edges: Vec<(usize, usize, u32)> = g
+            .edges
+            .iter()
+            .map(|&(u, v, l)| {
+                let (a, b) = (inv[u as usize], inv[v as usize]);
+                (a.min(b), a.max(b), l)
+            })
+            .collect();
+        edges.sort_unstable();
+        let s = format!("V{};E{:?}", vl.join(","), edges);
+        if best.as_ref().map_or(true, |b| s < *b) {
+            best = Some(s);
+        }
+    });
+    best.unwrap_or_else(|| "V;E[]".to_string())
+}
+
+fn permute(perm: &mut Vec<usize>, i: usize, f: &mut impl FnMut(&[usize])) {
+    if i == perm.len() {
+        f(perm);
+        return;
+    }
+    for j in i..perm.len() {
+        perm.swap(i, j);
+        permute(perm, i + 1, f);
+        perm.swap(i, j);
+    }
+}
+
+/// Connected edge-subsets of `g` with `1..=max_edges` edges, as induced
+/// labeled subgraphs.
+fn connected_subgraphs(g: &Graph, max_edges: usize) -> Vec<Graph> {
+    let n_e = g.n_edges();
+    let mut seen: BTreeSet<u64> = BTreeSet::new();
+    let mut frontier: Vec<u64> = Vec::new();
+    for e in 0..n_e {
+        let m = 1u64 << e;
+        if seen.insert(m) {
+            frontier.push(m);
+        }
+    }
+    let mut all: Vec<u64> = frontier.clone();
+    for _size in 1..max_edges {
+        let mut next = Vec::new();
+        for &mask in &frontier {
+            // vertices touched by mask
+            let mut verts = BTreeSet::new();
+            for e in 0..n_e {
+                if mask >> e & 1 == 1 {
+                    let (u, v, _) = g.edges[e];
+                    verts.insert(u);
+                    verts.insert(v);
+                }
+            }
+            for e in 0..n_e {
+                if mask >> e & 1 == 0 {
+                    let (u, v, _) = g.edges[e];
+                    if verts.contains(&u) || verts.contains(&v) {
+                        let m2 = mask | 1 << e;
+                        if seen.insert(m2) {
+                            next.push(m2);
+                        }
+                    }
+                }
+            }
+        }
+        all.extend_from_slice(&next);
+        frontier = next;
+    }
+    // materialize induced subgraphs
+    all.iter()
+        .map(|&mask| {
+            let mut vmap: BTreeMap<u32, u32> = BTreeMap::new();
+            let mut sub = Graph::new();
+            for e in 0..n_e {
+                if mask >> e & 1 == 1 {
+                    let (u, v, _) = g.edges[e];
+                    for &x in &[u, v] {
+                        vmap.entry(x).or_insert_with(|| {
+                            sub.add_vertex(g.vlabels[x as usize])
+                        });
+                    }
+                }
+            }
+            for e in 0..n_e {
+                if mask >> e & 1 == 1 {
+                    let (u, v, l) = g.edges[e];
+                    sub.add_edge(vmap[&u], vmap[&v], l);
+                }
+            }
+            sub
+        })
+        .collect()
+}
+
+/// Exhaustive canonical subgraph enumeration over a database: canonical
+/// form → sorted list of supporting graph ids.
+pub fn all_subgraphs_canonical(db: &GraphDatabase, max_edges: usize) -> BTreeMap<String, Vec<u32>> {
+    let mut out: BTreeMap<String, BTreeSet<u32>> = BTreeMap::new();
+    for (gid, g) in db.graphs.iter().enumerate() {
+        let mut local: BTreeSet<String> = BTreeSet::new();
+        for sub in connected_subgraphs(g, max_edges) {
+            local.insert(canonical_form(&sub));
+        }
+        for c in local {
+            out.entry(c).or_default().insert(gid as u32);
+        }
+    }
+    out.into_iter()
+        .map(|(k, v)| (k, v.into_iter().collect()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_itemsets_tiny() {
+        let db = Transactions {
+            n_items: 3,
+            items: vec![vec![0, 1], vec![1, 2]],
+        };
+        let got = all_itemsets(&db, 2);
+        // {0}:[0] {0,1}:[0] {1}:[0,1] {1,2}:[1] {2}:[1]
+        assert_eq!(got.len(), 5);
+        let m: BTreeMap<Vec<u32>, Vec<u32>> = got.into_iter().collect();
+        assert_eq!(m[&vec![1u32]], vec![0, 1]);
+        assert_eq!(m[&vec![0u32, 1]], vec![0]);
+    }
+
+    #[test]
+    fn canonical_form_is_isomorphism_invariant() {
+        // path 0-1-2 labeled (5,6,7) in two different vertex orders
+        let mut g1 = Graph::new();
+        g1.add_vertex(5);
+        g1.add_vertex(6);
+        g1.add_vertex(7);
+        g1.add_edge(0, 1, 0);
+        g1.add_edge(1, 2, 1);
+        let mut g2 = Graph::new();
+        g2.add_vertex(7);
+        g2.add_vertex(5);
+        g2.add_vertex(6);
+        g2.add_edge(2, 0, 1);
+        g2.add_edge(1, 2, 0);
+        assert_eq!(canonical_form(&g1), canonical_form(&g2));
+
+        // different edge label => different form
+        let mut g3 = g1.clone();
+        g3.edges[1].2 = 2;
+        assert_ne!(canonical_form(&g1), canonical_form(&g3));
+    }
+
+    #[test]
+    fn connected_subgraphs_of_triangle() {
+        let mut g = Graph::new();
+        for _ in 0..3 {
+            g.add_vertex(0);
+        }
+        g.add_edge(0, 1, 0);
+        g.add_edge(1, 2, 0);
+        g.add_edge(0, 2, 0);
+        // 3 single edges, 3 two-edge paths, 1 triangle
+        assert_eq!(connected_subgraphs(&g, 3).len(), 7);
+        assert_eq!(connected_subgraphs(&g, 1).len(), 3);
+    }
+
+    #[test]
+    fn subgraph_canonical_supports() {
+        let mut db = GraphDatabase::default();
+        for _ in 0..2 {
+            let mut g = Graph::new();
+            g.add_vertex(1);
+            g.add_vertex(2);
+            g.add_edge(0, 1, 0);
+            db.graphs.push(g);
+            db.y.push(0.0);
+        }
+        let m = all_subgraphs_canonical(&db, 1);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.values().next().unwrap(), &vec![0, 1]);
+    }
+}

@@ -1,0 +1,138 @@
+//! Coordinator + CLI integration: experiment grids through the worker
+//! pool, report integrity, and the `spp` binary end to end.
+
+use std::process::Command;
+
+use spp::coordinator::{report, Pool, ExperimentSpec, Method};
+use spp::path::PathConfig;
+
+fn spec(dataset: &str, maxpat: usize, method: Method) -> ExperimentSpec {
+    ExperimentSpec {
+        dataset: dataset.into(),
+        scale: 0.05,
+        maxpat,
+        method,
+        cfg: PathConfig {
+            n_lambdas: 4,
+            lambda_min_ratio: 0.2,
+            maxpat,
+            ..PathConfig::default()
+        },
+    }
+}
+
+#[test]
+fn figure_style_grid_runs_in_pool() {
+    let mut specs = Vec::new();
+    for ds in ["splice", "cpdb"] {
+        for maxpat in [2usize, 3] {
+            for m in [Method::Spp, Method::Boosting] {
+                specs.push(spec(ds, maxpat, m));
+            }
+        }
+    }
+    let results = Pool::new(2).run(specs);
+    assert_eq!(results.len(), 8);
+    for r in &results {
+        let r = r.as_ref().expect("experiment failed");
+        assert!(r.max_gap <= 2e-6, "{}: gap {}", r.spec.dataset, r.max_gap);
+        assert!(r.traverse_nodes > 0);
+        assert!(!report::time_row(r).is_empty());
+        assert!(!report::nodes_row(r).is_empty());
+    }
+    // pairwise: SPP nodes <= boosting nodes on the same workload
+    for pair in results.chunks(2) {
+        let (s, b) = (pair[0].as_ref().unwrap(), pair[1].as_ref().unwrap());
+        assert_eq!(s.spec.method, Method::Spp);
+        assert_eq!(b.spec.method, Method::Boosting);
+        assert!(
+            s.traverse_nodes <= b.traverse_nodes,
+            "{} maxpat={}: {} > {}",
+            s.spec.dataset,
+            s.spec.maxpat,
+            s.traverse_nodes,
+            b.traverse_nodes
+        );
+    }
+}
+
+#[test]
+fn single_worker_pool_matches_parallel_pool() {
+    let specs = vec![spec("splice", 2, Method::Spp)];
+    let seq = Pool::new(1).run(specs.clone());
+    let par = Pool::new(4).run(specs);
+    let (a, b) = (seq[0].as_ref().unwrap(), par[0].as_ref().unwrap());
+    assert_eq!(a.traverse_nodes, b.traverse_nodes);
+    assert_eq!(a.final_active, b.final_active);
+    assert!((a.lambda_max - b.lambda_max).abs() < 1e-12);
+}
+
+fn run_cli(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_spp"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn spp");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn cli_datasets_lists_all_presets() {
+    let (stdout, _, ok) = run_cli(&["datasets"]);
+    assert!(ok);
+    for name in ["cpdb", "mutagenicity", "bergstrom", "karthikeyan", "splice", "a9a", "dna", "protein"] {
+        assert!(stdout.contains(name), "missing {name} in:\n{stdout}");
+    }
+}
+
+#[test]
+fn cli_lambda_max_reports_value() {
+    let (stdout, stderr, ok) = run_cli(&[
+        "lambda-max", "--dataset", "splice", "--scale", "0.05", "--maxpat", "2",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("lambda_max="), "{stdout}");
+    assert!(stdout.contains("nodes="));
+}
+
+#[test]
+fn cli_path_json_output() {
+    let tmp = std::env::temp_dir().join(format!("spp-cli-{}.json", std::process::id()));
+    let (stdout, stderr, ok) = run_cli(&[
+        "path", "--dataset", "splice", "--scale", "0.05", "--maxpat", "2",
+        "--lambdas", "4", "--min-ratio", "0.2", "--json", tmp.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("speedup"), "{stdout}");
+    let json = std::fs::read_to_string(&tmp).unwrap();
+    assert_eq!(json.lines().count(), 2); // spp + boosting
+    for line in json.lines() {
+        assert!(line.starts_with('{') && line.ends_with('}'));
+        assert!(line.contains("\"per_lambda\""));
+    }
+    std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn cli_rejects_unknown_commands_and_datasets() {
+    let (_, stderr, ok) = run_cli(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"));
+    let (_, stderr, ok) = run_cli(&["path", "--dataset", "nope"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown dataset"));
+}
+
+#[test]
+fn cli_mine_lists_patterns() {
+    let (stdout, stderr, ok) = run_cli(&[
+        "mine", "--dataset", "cpdb", "--scale", "0.03", "--maxpat", "2", "--top", "5",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("patterns"));
+    assert!(stdout.contains("support="));
+}

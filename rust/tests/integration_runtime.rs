@@ -1,0 +1,146 @@
+//! PJRT runtime integration: the AOT JAX/Pallas artifacts, executed
+//! from Rust, must agree with the pure-Rust engines bit-for-bit up to
+//! f32 rounding — including padding behaviour.
+//!
+//! These tests need `artifacts/` (run `make artifacts` first); they are
+//! skipped gracefully when the manifest is absent so `cargo test` works
+//! in a fresh checkout.
+
+use spp::data::synth_itemsets::{generate, ItemsetSynthConfig};
+use spp::path::{compute_path_spp, compute_path_spp_with, PathConfig};
+use spp::runtime::{default_artifact_dir, engine::XlaRestricted, PjrtRuntime, XlaFistaSolver, XlaSppcScorer};
+use spp::screening::{fold_weights, Database};
+use spp::solver::{CdSolver, Task};
+use spp::testutil::SplitMix64;
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.txt").is_file() {
+        eprintln!("skipping: no artifacts at {}", dir.display());
+        return None;
+    }
+    Some(PjrtRuntime::cpu(&dir).expect("PJRT runtime"))
+}
+
+fn random_supports(rng: &mut SplitMix64, n: usize, k: usize, max_len: usize) -> Vec<Vec<u32>> {
+    (0..k)
+        .map(|_| {
+            let m = rng.range(1, max_len.min(n - 1).max(2));
+            rng.sample_distinct(n, m).into_iter().map(|i| i as u32).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn sppc_scorer_matches_rust_fold() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(7);
+    // n deliberately NOT a padded size: exercises zero-padding
+    for n in [100usize, 777, 1024] {
+        let y: Vec<f64> = (0..n).map(|_| if rng.coin(0.5) { 1.0 } else { -1.0 }).collect();
+        let theta: Vec<f64> = (0..n).map(|_| rng.gauss() * 0.2).collect();
+        for task in [Task::Regression, Task::Classification] {
+            let (wpos, wneg) = fold_weights(task, &y, &theta);
+            let supports = random_supports(&mut rng, n, 600, 40);
+            let scorer = XlaSppcScorer::new(&rt, n).unwrap();
+            let scores = scorer.score(&supports, &wpos, &wneg, 0.45).unwrap();
+            assert_eq!(scores.len(), supports.len());
+            for (sup, sc) in supports.iter().zip(&scores) {
+                let pos: f64 = sup.iter().map(|&i| wpos[i as usize]).sum();
+                let neg: f64 = sup.iter().map(|&i| wneg[i as usize]).sum();
+                let v = sup.len() as f64;
+                let want_u = pos.max(-neg);
+                let want = want_u + 0.45 * v.sqrt();
+                assert!((sc.u - want_u).abs() < 1e-3, "u {} vs {}", sc.u, want_u);
+                assert!((sc.v - v).abs() < 1e-3, "v {} vs {}", sc.v, v);
+                assert!((sc.sppc - want).abs() < 1e-3, "sppc {} vs {}", sc.sppc, want);
+            }
+        }
+    }
+}
+
+#[test]
+fn sppc_scorer_multi_block_frontiers() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(8);
+    let n = 300;
+    let y: Vec<f64> = (0..n).map(|_| 1.0).collect();
+    let theta: Vec<f64> = (0..n).map(|_| rng.gauss() * 0.1).collect();
+    let (wpos, wneg) = fold_weights(Task::Regression, &y, &theta);
+    let scorer = XlaSppcScorer::new(&rt, n).unwrap();
+    // more supports than one block to force chunking
+    let k = scorer.block_width() * 2 + 17;
+    let supports = random_supports(&mut rng, n, k, 30);
+    let scores = scorer.score(&supports, &wpos, &wneg, 0.0).unwrap();
+    assert_eq!(scores.len(), k);
+    // zero radius: sppc == u
+    for sc in &scores {
+        assert!((sc.sppc - sc.u).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn fista_solver_matches_cd_on_both_tasks() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(9);
+    let n = 500;
+    let supports = random_supports(&mut rng, n, 60, 80);
+    for task in [Task::Regression, Task::Classification] {
+        let y: Vec<f64> = match task {
+            Task::Regression => (0..n).map(|_| rng.gauss() * 2.0).collect(),
+            Task::Classification => {
+                (0..n).map(|_| if rng.coin(0.5) { 1.0 } else { -1.0 }).collect()
+            }
+        };
+        let lam = 1.5;
+        let xs = XlaFistaSolver::new(&rt).solve(task, &supports, &y, lam).unwrap();
+        let cd = CdSolver::default().solve(task, &supports, &y, lam, None);
+        let rel = (xs.primal - cd.primal).abs() / cd.primal.abs().max(1.0);
+        assert!(rel < 5e-3, "{task:?}: fista {} vs cd {}", xs.primal, cd.primal);
+        assert!(xs.gap >= -1e-3, "negative gap {}", xs.gap);
+    }
+}
+
+#[test]
+fn xla_engine_path_equals_cd_engine_path() {
+    let Some(rt) = runtime() else { return };
+    let d = generate(&ItemsetSynthConfig::tiny(55, false));
+    let db = Database::Itemsets(&d.db);
+    let cfg = PathConfig {
+        n_lambdas: 6,
+        lambda_min_ratio: 0.1,
+        maxpat: 2,
+        ..PathConfig::default()
+    };
+    let rust_path = compute_path_spp(&db, &d.y, Task::Regression, &cfg);
+    let solver = XlaRestricted::new(&rt);
+    let xla_path = compute_path_spp_with(&db, &d.y, Task::Regression, &cfg, &solver);
+    assert_eq!(rust_path.points.len(), xla_path.points.len());
+    for (a, b) in rust_path.points.iter().zip(&xla_path.points) {
+        let l1a: f64 = a.active.iter().map(|(_, w)| w.abs()).sum();
+        let l1b: f64 = b.active.iter().map(|(_, w)| w.abs()).sum();
+        assert!(
+            (l1a - l1b).abs() < 1e-3 * (1.0 + l1a.abs()),
+            "λ={}: ‖w‖₁ {} vs {}",
+            a.lambda,
+            l1a,
+            l1b
+        );
+        assert!(b.gap <= 2e-6, "xla path point not certified: gap {}", b.gap);
+    }
+}
+
+#[test]
+fn oversized_problems_fall_back_to_cd() {
+    let Some(rt) = runtime() else { return };
+    let solver = XlaRestricted::new(&rt);
+    // n bigger than any artifact -> must fall back, still correct
+    let mut rng = SplitMix64::new(10);
+    let n = 40_000;
+    let supports = random_supports(&mut rng, n, 5, 50);
+    let y: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+    use spp::path::RestrictedSolver;
+    let sol = solver.solve_restricted(Task::Regression, &supports, &y, 5.0, &[0.0; 5], 0.0);
+    assert!(sol.gap <= 1e-6);
+    assert!(solver.fallbacks.get() >= 1);
+}

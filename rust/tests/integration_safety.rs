@@ -1,0 +1,214 @@
+//! The paper's central claim, tested end-to-end: **safety**.
+//!
+//! For seeded random datasets small enough to enumerate exhaustively,
+//! solve the *full* pattern-space problem with an independent solver at
+//! high precision, then verify that
+//!
+//! 1. every pattern the SPP rule prunes (or the per-feature UB screens)
+//!    is inactive at the true optimum (Theorem 2 / Lemma 4),
+//! 2. solving restricted to Â reproduces the full optimum (Lemma 1),
+//! 3. the gSpan tree and the brute-force canonical enumeration agree,
+//!    so the guarantee covers graph mining too.
+
+use spp::data::synth_graphs::{self, GraphSynthConfig};
+use spp::data::synth_itemsets::{generate, ItemsetSynthConfig};
+use spp::mining::{PatternNode, Walk};
+use spp::screening::lambda_max::lambda_max;
+use spp::screening::sppc::SppScreen;
+use spp::screening::Database;
+use spp::solver::dual::safe_radius;
+use spp::solver::problem::{dual_value, primal_value};
+use spp::solver::{CdSolver, Task};
+use spp::testutil::oracle;
+
+/// Solve the FULL problem over every enumerated pattern; return
+/// (per-pattern |α_tᵀθ*|, primal*).
+fn full_space_solve(
+    db: &spp::data::Transactions,
+    y: &[f64],
+    task: Task,
+    maxpat: usize,
+    lam: f64,
+) -> (Vec<f64>, f64) {
+    let all = oracle::all_itemsets(db, maxpat);
+    let supports: Vec<Vec<u32>> = all.iter().map(|(_, s)| s.clone()).collect();
+    let mut solver = CdSolver::default();
+    solver.cfg.tol = 1e-10;
+    let sol = solver.solve(task, &supports, y, lam, None);
+    assert!(sol.gap <= 1e-9, "oracle solve did not converge: {}", sol.gap);
+    let g: Vec<f64> = y
+        .iter()
+        .zip(&sol.theta)
+        .map(|(&yi, &ti)| task.a(yi) * ti)
+        .collect();
+    let corr: Vec<f64> = supports
+        .iter()
+        .map(|s| s.iter().map(|&i| g[i as usize]).sum::<f64>().abs())
+        .collect();
+    (corr, sol.primal)
+}
+
+fn safety_case(seed: u64, task: Task) {
+    let d = generate(&ItemsetSynthConfig::tiny(seed, task == Task::Classification));
+    let db = Database::Itemsets(&d.db);
+    let maxpat = 3;
+    let lm = lambda_max(&db, &d.y, task, maxpat, 1);
+
+    for frac in [0.7, 0.3, 0.1] {
+        let lam = frac * lm.lambda_max;
+        let (corr, full_primal) = full_space_solve(&d.db, &d.y, task, maxpat, lam);
+
+        // screening pair: the zero solution at λ_max (a deliberately
+        // weak-but-feasible pair — safety must hold regardless)
+        let theta0: Vec<f64> = lm.slack0.iter().map(|&s| s / lm.lambda_max).collect();
+        let primal = primal_value(&lm.slack0, 0.0, lam);
+        let dualv = dual_value(task, &theta0, &d.y, lam);
+        let radius = safe_radius(primal, dualv, lam);
+
+        let mut screen = SppScreen::new(task, &d.y, &theta0, radius);
+        db.traverse(maxpat, 1, &mut screen);
+
+        let survivor_items: std::collections::HashSet<Vec<u32>> = screen
+            .survivors
+            .iter()
+            .map(|s| match &s.pattern {
+                spp::mining::Pattern::Itemset(v) => v.clone(),
+                _ => unreachable!(),
+            })
+            .collect();
+        let all = oracle::all_itemsets(&d.db, maxpat);
+        let mut pruned_count = 0;
+        for ((items, _), &c) in all.iter().zip(&corr) {
+            if !survivor_items.contains(items) {
+                pruned_count += 1;
+                assert!(
+                    c < 1.0 + 1e-6,
+                    "UNSAFE: pruned pattern {items:?} has |corr| = {c} at λ = {frac}·λmax (seed {seed})"
+                );
+            }
+        }
+        // Lemma 1: solving only Â reproduces the full optimum
+        let supports: Vec<Vec<u32>> =
+            screen.survivors.iter().map(|s| s.support.clone()).collect();
+        let mut solver = CdSolver::default();
+        solver.cfg.tol = 1e-10;
+        let restricted = solver.solve(task, &supports, &d.y, lam, None);
+        assert!(
+            (restricted.primal - full_primal).abs() < 1e-6 * (1.0 + full_primal.abs()),
+            "Lemma 1 violated: restricted {} vs full {} (λ={frac}·λmax seed={seed})",
+            restricted.primal,
+            full_primal
+        );
+        if frac >= 0.7 {
+            assert!(pruned_count > 0, "no pruning at λ={frac}·λmax (seed {seed})");
+        }
+    }
+}
+
+#[test]
+fn spp_is_safe_regression() {
+    for seed in [101, 102, 103, 104] {
+        safety_case(seed, Task::Regression);
+    }
+}
+
+#[test]
+fn spp_is_safe_classification() {
+    for seed in [201, 202, 203, 204] {
+        safety_case(seed, Task::Classification);
+    }
+}
+
+/// gSpan enumerates exactly the canonical subgraph classes with exactly
+/// the right supports (validated against the permutation-canonical
+/// brute force), so the itemset safety argument transfers to graphs.
+#[test]
+fn gspan_matches_bruteforce_enumeration() {
+    for seed in [11u64, 12, 13] {
+        let mut cfg = GraphSynthConfig::tiny(seed, true);
+        cfg.n = 12;
+        cfg.min_atoms = 3;
+        cfg.max_atoms = 6;
+        let d = synth_graphs::generate(&cfg);
+        let maxpat = 3;
+
+        let mut mined: Vec<(String, Vec<u32>)> = Vec::new();
+        let mut v = |n: &PatternNode<'_>| {
+            if let spp::mining::Pattern::Subgraph(code) = n.to_pattern() {
+                let g = spp::mining::gspan::code_to_labeled_graph(&code);
+                mined.push((oracle::canonical_form(&g), n.support.to_vec()));
+            }
+            Walk::Descend
+        };
+        Database::Graphs(&d.db).traverse(maxpat, 1, &mut v);
+
+        let brute = oracle::all_subgraphs_canonical(&d.db, maxpat);
+        let mut seen = std::collections::HashSet::new();
+        for (c, _) in &mined {
+            assert!(seen.insert(c.clone()), "duplicate canonical pattern {c}");
+        }
+        assert_eq!(
+            mined.len(),
+            brute.len(),
+            "gSpan found {} classes, brute force {} (seed {seed})",
+            mined.len(),
+            brute.len()
+        );
+        for (c, sup) in &mined {
+            let bs = brute
+                .get(c)
+                .unwrap_or_else(|| panic!("gSpan pattern {c} not in brute force"));
+            assert_eq!(sup, bs, "support mismatch for {c}");
+        }
+    }
+}
+
+/// The SPP rule on the gSpan tree: pruned patterns are inactive at the
+/// optimum of the full problem built by brute-force enumeration.
+#[test]
+fn spp_is_safe_on_graphs() {
+    let mut cfg = GraphSynthConfig::tiny(31, false);
+    cfg.n = 14;
+    cfg.min_atoms = 3;
+    cfg.max_atoms = 6;
+    let d = synth_graphs::generate(&cfg);
+    let db = Database::Graphs(&d.db);
+    let maxpat = 3;
+    let task = Task::Regression;
+    let lm = lambda_max(&db, &d.db.y, task, maxpat, 1);
+    let lam = 0.4 * lm.lambda_max;
+
+    let brute = oracle::all_subgraphs_canonical(&d.db, maxpat);
+    let supports: Vec<Vec<u32>> = brute.values().cloned().collect();
+    let canon_keys: Vec<&String> = brute.keys().collect();
+    let mut solver = CdSolver::default();
+    solver.cfg.tol = 1e-10;
+    let sol = solver.solve(task, &supports, &d.db.y, lam, None);
+    let corr: Vec<f64> = supports
+        .iter()
+        .map(|s| s.iter().map(|&i| sol.theta[i as usize]).sum::<f64>().abs())
+        .collect();
+
+    let theta0: Vec<f64> = lm.slack0.iter().map(|&s| s / lm.lambda_max).collect();
+    let primal = primal_value(&lm.slack0, 0.0, lam);
+    let dualv = dual_value(task, &theta0, &d.db.y, lam);
+    let radius = safe_radius(primal, dualv, lam);
+    let mut screen = SppScreen::new(task, &d.db.y, &theta0, radius);
+    db.traverse(maxpat, 1, &mut screen);
+
+    let surviving: std::collections::HashSet<String> = screen
+        .survivors
+        .iter()
+        .map(|s| match &s.pattern {
+            spp::mining::Pattern::Subgraph(code) => {
+                oracle::canonical_form(&spp::mining::gspan::code_to_labeled_graph(code))
+            }
+            _ => unreachable!(),
+        })
+        .collect();
+    for (key, &c) in canon_keys.iter().zip(&corr) {
+        if !surviving.contains(*key) {
+            assert!(c < 1.0 + 1e-6, "UNSAFE graph pruning: {key} has |corr| {c}");
+        }
+    }
+}

@@ -31,6 +31,7 @@
 //!   result reporting; drives every figure bench.
 //! * [`testutil`] — SplitMix64 PRNG, property-test harness, brute-force
 //!   oracles (exhaustive miners, dense ISTA) used across the test suite.
+//! * [`cli`] — the minimal argument parser behind the `spp` binary.
 //!
 //! ## Quickstart
 //!
@@ -51,6 +52,7 @@
 
 pub mod benchkit;
 pub mod boosting;
+pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod mining;

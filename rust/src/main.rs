@@ -10,10 +10,9 @@
 //! spp datasets                          # list registry presets
 //! ```
 
-mod cli;
-
 use std::io::Write;
 
+use spp::cli;
 use spp::coordinator::{report, run_experiment, ExperimentSpec, Method};
 use spp::data::registry::{self, Dataset};
 use spp::mining::{PatternNode, TreeVisitor, Walk};

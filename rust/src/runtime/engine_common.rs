@@ -1,0 +1,79 @@
+//! Engine types shared by the real PJRT backend (`engine_xla.rs`,
+//! feature `pjrt`) and the graceful-degradation stub
+//! (`engine_stub.rs`, the default).  Both are mounted as
+//! [`super::engine`], so downstream code is feature-agnostic.
+
+/// Scores for one pattern: the SPP criterion and its ingredients.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SppcScore {
+    pub sppc: f64,
+    pub u: f64,
+    pub v: f64,
+}
+
+/// Result of an XLA-backed subproblem solve.
+#[derive(Clone, Debug)]
+pub struct XlaSolution {
+    pub w: Vec<f64>,
+    pub b: f64,
+    pub primal: f64,
+    pub dual: f64,
+    pub gap: f64,
+    /// Artifact executions (each = `steps` FISTA iterations).
+    pub execs: usize,
+}
+
+/// σ_max² of the intercept-augmented design `[X 1]` by power iteration
+/// over the sparse support columns.  30 iterations are ample for a
+/// step-size estimate (a 1.05 safety factor absorbs the residual).
+pub fn power_lipschitz(supports: &[Vec<u32>], n: usize) -> f64 {
+    let k = supports.len();
+    let mut v = vec![1.0 / ((k + 1) as f64).sqrt(); k + 1];
+    let mut sigma2 = n as f64; // the all-ones column alone gives n
+    for _ in 0..30 {
+        // u = A v
+        let mut u = vec![v[k]; n];
+        for (t, sup) in supports.iter().enumerate() {
+            if v[t] != 0.0 {
+                for &i in sup {
+                    u[i as usize] += v[t];
+                }
+            }
+        }
+        // v' = Aᵀ u
+        let mut v2 = vec![0.0; k + 1];
+        for (t, sup) in supports.iter().enumerate() {
+            v2[t] = sup.iter().map(|&i| u[i as usize]).sum();
+        }
+        v2[k] = u.iter().sum();
+        let norm = v2.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm <= 1e-30 {
+            break;
+        }
+        sigma2 = norm; // ‖AᵀA v‖ → σ_max² as v converges
+        v2.iter_mut().for_each(|x| *x /= norm);
+        v = v2;
+    }
+    sigma2.max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_lipschitz_matches_dense_norm_on_tiny_problems() {
+        // [X 1] with X = [[1],[1],[0]]: A^T A = [[2,2],[2,3]],
+        // eigenvalues (5 ± sqrt(17))/2 -> sigma_max^2 ≈ 4.5616
+        let sup = vec![vec![0u32, 1]];
+        let got = power_lipschitz(&sup, 3);
+        let want = (5.0 + 17.0f64.sqrt()) / 2.0;
+        assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+    }
+
+    #[test]
+    fn power_lipschitz_no_columns_gives_n() {
+        // only the all-ones intercept column: sigma_max^2 = n
+        assert!((power_lipschitz(&[], 7) - 7.0).abs() < 1e-9);
+    }
+}

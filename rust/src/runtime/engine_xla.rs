@@ -1,5 +1,10 @@
 //! The accelerated engines: PJRT execution of the AOT artifacts.
 //!
+//! This is the real backend, compiled only with the `pjrt` feature (it
+//! needs the external `xla` bindings crate — see `rust/Cargo.toml`).
+//! Without the feature, `engine_stub.rs` is mounted at this module path
+//! instead and degrades gracefully to the pure-Rust engines.
+//!
 //! Pad-to-shape discipline: artifacts have fixed `(n, cols)`; live data
 //! is zero-padded up to the smallest fitting artifact.  A `mask` input
 //! (FISTA) / zero support columns (SPPC) make padding semantically
@@ -13,6 +18,8 @@ use std::rc::Rc;
 
 use super::artifacts::{ArtifactInfo, ArtifactKind, ArtifactSet};
 use crate::solver::Task;
+
+pub use super::engine_common::{power_lipschitz, SppcScore, XlaSolution};
 
 /// A PJRT CPU client plus a compile cache over the artifact set.
 pub struct PjrtRuntime {
@@ -81,14 +88,6 @@ fn lit_f32_mat(v: &[f32], rows: usize, cols: usize) -> crate::Result<xla::Litera
 // ---------------------------------------------------------------------------
 // SPPC frontier scorer
 // ---------------------------------------------------------------------------
-
-/// Scores for one pattern: the SPP criterion and its ingredients.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub struct SppcScore {
-    pub sppc: f64,
-    pub u: f64,
-    pub v: f64,
-}
 
 /// Batched SPPC scorer backed by the L1 Pallas kernel.
 ///
@@ -213,18 +212,6 @@ impl CloneLiteral for xla::Literal {
 // FISTA subproblem solver
 // ---------------------------------------------------------------------------
 
-/// Result of an XLA-backed subproblem solve.
-#[derive(Clone, Debug)]
-pub struct XlaSolution {
-    pub w: Vec<f64>,
-    pub b: f64,
-    pub primal: f64,
-    pub dual: f64,
-    pub gap: f64,
-    /// Artifact executions (each = `steps` FISTA iterations).
-    pub execs: usize,
-}
-
 /// FISTA active-set solver backed by the L2 artifact family.
 pub struct XlaFistaSolver<'r> {
     rt: &'r PjrtRuntime,
@@ -348,40 +335,6 @@ impl<'r> XlaFistaSolver<'r> {
             execs,
         })
     }
-}
-
-/// σ_max² of the intercept-augmented design `[X 1]` by power iteration
-/// over the sparse support columns.  30 iterations are ample for a
-/// step-size estimate (a 1.05 safety factor absorbs the residual).
-pub fn power_lipschitz(supports: &[Vec<u32>], n: usize) -> f64 {
-    let k = supports.len();
-    let mut v = vec![1.0 / ((k + 1) as f64).sqrt(); k + 1];
-    let mut sigma2 = n as f64; // the all-ones column alone gives n
-    for _ in 0..30 {
-        // u = A v
-        let mut u = vec![v[k]; n];
-        for (t, sup) in supports.iter().enumerate() {
-            if v[t] != 0.0 {
-                for &i in sup {
-                    u[i as usize] += v[t];
-                }
-            }
-        }
-        // v' = Aᵀ u
-        let mut v2 = vec![0.0; k + 1];
-        for (t, sup) in supports.iter().enumerate() {
-            v2[t] = sup.iter().map(|&i| u[i as usize]).sum();
-        }
-        v2[k] = u.iter().sum();
-        let norm = v2.iter().map(|x| x * x).sum::<f64>().sqrt();
-        if norm <= 1e-30 {
-            break;
-        }
-        sigma2 = norm; // ‖AᵀA v‖ → σ_max² as v converges
-        v2.iter_mut().for_each(|x| *x /= norm);
-        v = v2;
-    }
-    sigma2.max(1.0)
 }
 
 // ---------------------------------------------------------------------------

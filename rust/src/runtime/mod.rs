@@ -11,6 +11,16 @@
 //!   subproblem solver (L2 graph), both pad-to-shape.
 
 pub mod artifacts;
+mod engine_common;
+
+/// The engine backend: real PJRT execution with the `pjrt` feature
+/// (`engine_xla.rs`, needs the external `xla` crate), a graceful
+/// same-API stub otherwise (`engine_stub.rs`).
+#[cfg(feature = "pjrt")]
+#[path = "engine_xla.rs"]
+pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 
 pub use artifacts::{ArtifactInfo, ArtifactKind, ArtifactSet};

@@ -1,0 +1,123 @@
+//! CLI argument parsing: subcommand + flag round-trips for `spp::cli`.
+//!
+//! The binary's dispatch is exercised end-to-end in
+//! `integration_coordinator.rs`; this suite pins the parser itself —
+//! the grammar every `spp <command>` invocation goes through — against
+//! the documented behaviour in `rust/src/cli.rs`.
+
+use spp::cli::Args;
+
+fn parse(line: &str) -> Args {
+    Args::parse(line.split_whitespace().map(String::from))
+}
+
+#[test]
+fn empty_argv_yields_empty_command() {
+    let a = Args::parse(std::iter::empty::<String>());
+    assert_eq!(a.command, "");
+    assert!(a.positional.is_empty());
+    assert!(!a.switch("anything"));
+}
+
+#[test]
+fn every_subcommand_is_the_first_token() {
+    for cmd in ["path", "lambda-max", "mine", "selftest", "datasets", "help"] {
+        let a = parse(&format!("{cmd} --scale 0.5"));
+        assert_eq!(a.command, cmd);
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 0.5);
+    }
+}
+
+#[test]
+fn path_invocation_round_trips_all_documented_flags() {
+    // the `spp path` synopsis from main.rs, exercised in full
+    let a = parse(
+        "path --dataset cpdb --maxpat 5 --method both --lambdas 100 \
+         --min-ratio 0.01 --scale 1.0 --certify --engine rust --json out.json",
+    );
+    assert_eq!(a.command, "path");
+    assert_eq!(a.flag("dataset"), Some("cpdb"));
+    assert_eq!(a.get_usize("maxpat", 0).unwrap(), 5);
+    assert_eq!(a.get_or("method", "spp"), "both");
+    assert_eq!(a.get_usize("lambdas", 0).unwrap(), 100);
+    assert_eq!(a.get_f64("min-ratio", 0.0).unwrap(), 0.01);
+    assert_eq!(a.get_f64("scale", 0.0).unwrap(), 1.0);
+    assert!(a.switch("certify"));
+    assert_eq!(a.get_or("engine", "xla"), "rust");
+    assert_eq!(a.flag("json"), Some("out.json"));
+    assert!(a.positional.is_empty());
+}
+
+#[test]
+fn equals_and_space_forms_are_equivalent() {
+    let spaced = parse("mine --dataset splice --maxpat 3 --top 20");
+    let equals = parse("mine --dataset=splice --maxpat=3 --top=20");
+    for name in ["dataset", "maxpat", "top"] {
+        assert_eq!(spaced.flag(name), equals.flag(name), "flag {name}");
+    }
+}
+
+#[test]
+fn defaults_apply_only_when_flags_are_absent() {
+    let a = parse("lambda-max --maxpat 7");
+    assert_eq!(a.get_usize("maxpat", 4).unwrap(), 7);
+    assert_eq!(a.get_usize("minsup", 1).unwrap(), 1);
+    assert_eq!(a.get_f64("scale", 1.0).unwrap(), 1.0);
+    assert_eq!(a.get_or("dataset", "splice"), "splice");
+    assert!(a.flag("dataset").is_none());
+}
+
+#[test]
+fn numeric_parse_errors_name_the_flag_and_value() {
+    let a = parse("path --lambdas many --scale wide");
+    let e = a.get_usize("lambdas", 100).unwrap_err().to_string();
+    assert!(e.contains("lambdas") && e.contains("many"), "{e}");
+    let e = a.get_f64("scale", 1.0).unwrap_err().to_string();
+    assert!(e.contains("scale") && e.contains("wide"), "{e}");
+    // a bad value behind an unread flag must not affect other lookups
+    assert_eq!(a.get_usize("maxpat", 4).unwrap(), 4);
+}
+
+#[test]
+fn switch_answers_for_both_bare_and_valued_forms() {
+    let bare = parse("path --certify");
+    assert!(bare.switch("certify"));
+    assert!(bare.flag("certify").is_none());
+    // a switch that swallowed a value still counts as set (documented
+    // grammar footgun, pinned in src/cli.rs unit tests too)
+    let valued = parse("path --certify out.json");
+    assert!(valued.switch("certify"));
+    assert_eq!(valued.flag("certify"), Some("out.json"));
+}
+
+#[test]
+fn negative_numbers_are_flag_values_not_flags() {
+    // "-0.5" does not start with "--", so it is consumed as a value
+    let a = parse("mine --scale -0.5");
+    assert_eq!(a.get_f64("scale", 1.0).unwrap(), -0.5);
+}
+
+#[test]
+fn repeated_flags_keep_the_last_value() {
+    let a = parse("path --maxpat 3 --maxpat 9");
+    assert_eq!(a.get_usize("maxpat", 0).unwrap(), 9);
+}
+
+#[test]
+fn positionals_interleave_with_flags() {
+    let a = parse("mine first --maxpat 2 second");
+    assert_eq!(a.positional, vec!["first", "second"]);
+    assert_eq!(a.get_usize("maxpat", 0).unwrap(), 2);
+}
+
+#[test]
+fn main_rs_path_config_flags_round_trip() {
+    // the exact flag set main.rs::path_config reads, in one line
+    let a = parse("path --lambdas 10 --min-ratio 0.05 --maxpat 3 --minsup 2 --k-add 5");
+    assert_eq!(a.get_usize("lambdas", 100).unwrap(), 10);
+    assert_eq!(a.get_f64("min-ratio", 0.01).unwrap(), 0.05);
+    assert_eq!(a.get_usize("maxpat", 4).unwrap(), 3);
+    assert_eq!(a.get_usize("minsup", 1).unwrap(), 2);
+    assert_eq!(a.get_usize("k-add", 1).unwrap(), 5);
+    assert!(!a.switch("certify"));
+}

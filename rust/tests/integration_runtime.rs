@@ -19,7 +19,16 @@ fn runtime() -> Option<PjrtRuntime> {
         eprintln!("skipping: no artifacts at {}", dir.display());
         return None;
     }
-    Some(PjrtRuntime::cpu(&dir).expect("PJRT runtime"))
+    // Also skip when the runtime itself is unavailable (e.g. a default
+    // build without the `pjrt` feature): artifacts existing on disk
+    // must not turn these tests into failures.
+    match PjrtRuntime::cpu(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            None
+        }
+    }
 }
 
 fn random_supports(rng: &mut SplitMix64, n: usize, k: usize, max_len: usize) -> Vec<Vec<u32>> {

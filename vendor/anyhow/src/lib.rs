@@ -1,0 +1,211 @@
+//! Vendored minimal subset of the `anyhow` error-handling API.
+//!
+//! This workspace builds hermetically — no registry or network access —
+//! so the one ubiquitous external dependency of the `spp` crate is
+//! provided as this small path crate instead.  It implements exactly
+//! the surface the codebase uses:
+//!
+//! * [`Error`] — an opaque, `Send + Sync` error value with `Display`
+//!   (`{e}` and `{e:#}`) and `Debug` formatting;
+//! * [`Result<T>`] — alias for `Result<T, Error>`;
+//! * blanket `From<E: std::error::Error>` so `?` converts `io::Error`,
+//!   `ParseIntError`, `ParseFloatError`, … into [`Error`];
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros (format-string
+//!   forms);
+//! * a minimal [`Context`] extension trait.
+//!
+//! Semantics intentionally mirror the real `anyhow` closely enough that
+//! swapping in the crates.io crate is a one-line change in
+//! `rust/Cargo.toml`; nothing here is a public API of its own.
+
+use std::fmt;
+
+/// An opaque error: a message plus an optional chain of causes
+/// (rendered oldest-last, like `anyhow`'s alternate format).
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// The outermost message (no cause chain).
+    pub fn root_message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &Error> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cause = self.source.as_deref();
+            while let Some(c) = cause {
+                write!(f, ": {}", c.msg)?;
+                cause = c.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cause = self.source.as_deref();
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(c) = cause {
+            write!(f, "\n    {}", c.msg)?;
+            cause = c.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`
+// (same design as the real anyhow) — that is what makes the blanket
+// `From` below coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Preserve the std error's own source chain as context.
+        let mut chain: Vec<String> = Vec::new();
+        chain.push(e.to_string());
+        let mut src = std::error::Error::source(&e);
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in chain.into_iter().rev() {
+            err = Some(match err {
+                None => Error::msg(msg),
+                Some(inner) => inner.context(msg),
+            });
+        }
+        err.expect("chain is non-empty")
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait: attach context to a `Result`'s error.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_two(s: &str) -> Result<i64> {
+        let v: i64 = s.parse()?; // ParseIntError -> Error via blanket From
+        ensure!(v == 2, "expected 2, got {v}");
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_two("2").unwrap(), 2);
+        let e = parse_two("xyz").unwrap_err();
+        assert!(e.to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn ensure_and_bail_format() {
+        let e = parse_two("3").unwrap_err();
+        assert_eq!(e.to_string(), "expected 2, got 3");
+
+        fn fails() -> Result<()> {
+            bail!("boom {}", 42);
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "boom 42");
+    }
+
+    #[test]
+    fn display_alternate_includes_chain() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert!(format!("{e:?}").contains("Caused by"));
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn context_trait_wraps_results() {
+        let r: Result<(), std::num::ParseIntError> = "x".parse::<i64>().map(|_| ());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert!(format!("{e:#}").contains("invalid digit"));
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

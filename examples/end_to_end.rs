@@ -131,7 +131,6 @@ fn main() {
     use spp::data::registry::{lookup, Dataset};
     use spp::path::{compute_path_spp, compute_path_spp_with};
     use spp::runtime::engine::XlaRestricted;
-    use spp::screening::Database;
     let data = lookup("splice", 0.1).unwrap();
     let Dataset::Itemsets(tr) = &data else { unreachable!() };
     let small_cfg = PathConfig {
@@ -140,10 +139,10 @@ fn main() {
         maxpat: 2,
         ..PathConfig::default()
     };
-    let db = Database::Itemsets(&tr.db);
-    let rust_path = compute_path_spp(&db, &tr.y, Task::Classification, &small_cfg);
+    let rust_path = compute_path_spp(&tr.db, &tr.y, Task::Classification, &small_cfg);
     let xla_solver = XlaRestricted::new(&rt);
-    let xla_path = compute_path_spp_with(&db, &tr.y, Task::Classification, &small_cfg, &xla_solver);
+    let xla_path =
+        compute_path_spp_with(&tr.db, &tr.y, Task::Classification, &small_cfg, &xla_solver);
     for (a, b) in rust_path.points.iter().zip(&xla_path.points) {
         let l1a: f64 = a.active.iter().map(|(_, w)| w.abs()).sum();
         let l1b: f64 = b.active.iter().map(|(_, w)| w.abs()).sum();

@@ -16,7 +16,6 @@ use spp::data::graph::GraphDatabase;
 use spp::data::synth_graphs::{generate, GraphSynthConfig};
 use spp::mining::Pattern;
 use spp::path::{compute_path_spp, PathConfig};
-use spp::screening::Database;
 use spp::solver::Task;
 use spp::testutil::oracle;
 
@@ -65,8 +64,7 @@ fn main() {
         maxpat,
         ..PathConfig::default()
     };
-    let db = Database::Graphs(&train);
-    let path = compute_path_spp(&db, &train.y, Task::Classification, &path_cfg);
+    let path = compute_path_spp(&train, &train.y, Task::Classification, &path_cfg);
     println!(
         "SPP path over the gSpan tree: λ_max = {:.3}, {} nodes visited, traverse {:.2}s + solve {:.2}s",
         path.lambda_max,

@@ -13,7 +13,6 @@ use spp::data::synth_itemsets::{contains_all, generate, ItemsetSynthConfig};
 use spp::data::Transactions;
 use spp::mining::Pattern;
 use spp::path::{compute_path_spp, PathConfig};
-use spp::screening::Database;
 use spp::solver::Task;
 
 fn main() {
@@ -40,8 +39,7 @@ fn main() {
         maxpat: 3,
         ..PathConfig::default()
     };
-    let db = Database::Itemsets(&train);
-    let path = compute_path_spp(&db, y_train, Task::Regression, &path_cfg);
+    let path = compute_path_spp(&train, y_train, Task::Regression, &path_cfg);
     println!(
         "path computed: λ_max = {:.3}, {} nodes, {:.2}s\n",
         path.lambda_max,

@@ -5,13 +5,14 @@
 //! ```
 //!
 //! Generates a small transaction dataset with planted predictive
-//! conjunctions, computes the SPP regularization path, and prints the
-//! discovered patterns at a mid-path λ.
+//! conjunctions, fits the SPP regularization path through the
+//! `SppEstimator` facade, and prints the discovered patterns at a
+//! mid-path λ.  The same code fits graph or sequence databases — `fit`
+//! is generic over `spp::mining::PatternSubstrate`.
 
 use spp::data::synth_itemsets::{generate, ItemsetSynthConfig};
-use spp::path::{compute_path_spp, PathConfig};
-use spp::screening::Database;
 use spp::solver::Task;
+use spp::SppEstimator;
 
 fn main() {
     // 1. Data: 300 transactions over 40 items; y is driven by a few
@@ -26,33 +27,30 @@ fn main() {
         println!("  {:?} (weight {:+.2})", r.items, r.weight);
     }
 
-    // 2. The SPP path: 30 λ values, patterns up to 3 items.
-    let path_cfg = PathConfig {
-        n_lambdas: 30,
-        lambda_min_ratio: 0.05,
-        maxpat: 3,
-        ..PathConfig::default()
-    };
-    let db = Database::Itemsets(&data.db);
-    let path = compute_path_spp(&db, &data.y, Task::Regression, &path_cfg);
+    // 2. Fit: 30 λ values, patterns up to 3 items — three lines.
+    let fit = SppEstimator::new(Task::Regression)
+        .maxpat(3)
+        .lambda_grid(30, 0.05)
+        .fit(&data.db, &data.y)
+        .expect("fit");
 
     println!(
         "\npath: λ_max = {:.3}, {} λ values, {} tree nodes visited, {:.3}s total",
-        path.lambda_max,
-        path.points.len(),
-        path.total_nodes(),
-        path.total_secs()
+        fit.path.lambda_max,
+        fit.path.points.len(),
+        fit.path.total_nodes(),
+        fit.path.total_secs()
     );
 
     // 3. Inspect the model mid-path.
-    let mid = &path.points[path.points.len() / 2];
+    let mid = fit.model_at(fit.path.points.len() / 2);
     println!(
         "\nmodel at λ = {:.4} ({} active patterns, intercept {:+.3}):",
         mid.lambda,
-        mid.active.len(),
+        mid.terms.len(),
         mid.b
     );
-    let mut active = mid.active.clone();
+    let mut active = mid.terms.clone();
     active.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
     for (pattern, w) in active.iter().take(10) {
         println!("  {:+.3}  {}", w, pattern.display());

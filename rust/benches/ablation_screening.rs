@@ -17,11 +17,10 @@
 use std::time::Instant;
 
 use spp::data::registry::{lookup, Dataset};
-use spp::mining::{Counting, PatternNode, TreeVisitor, Walk};
+use spp::mining::{Counting, PatternNode, PatternSubstrate, TreeVisitor, Walk};
 use spp::path::{lambda_grid, working_set::WorkingSet};
 use spp::screening::lambda_max::lambda_max;
 use spp::screening::sppc::SppScreen;
-use spp::screening::Database;
 use spp::solver::dual::safe_radius;
 use spp::solver::problem::{dual_value, primal_value};
 use spp::solver::{CdSolver, Task};
@@ -43,7 +42,7 @@ enum Mode {
     UbOnly,
 }
 
-fn run(db: &Database<'_>, y: &[f64], task: Task, maxpat: usize, mode: Mode) {
+fn run<S: PatternSubstrate>(db: &S, y: &[f64], task: Task, maxpat: usize, mode: Mode) {
     let lm = lambda_max(db, y, task, maxpat, 1);
     let grid = lambda_grid(lm.lambda_max, 15, 0.05);
     let solver = CdSolver::default();
@@ -120,9 +119,8 @@ fn main() {
     println!("# A1 screening ablation: splice @0.15 maxpat=3, 15-λ path");
     let data = lookup("splice", 0.15).unwrap();
     let Dataset::Itemsets(t) = &data else { unreachable!() };
-    let db = Database::Itemsets(&t.db);
     for mode in [Mode::Full, Mode::SppcOnly, Mode::UbOnly] {
-        run(&db, &t.y, Task::Classification, 3, mode);
+        run(&t.db, &t.y, Task::Classification, 3, mode);
     }
     println!("# expectation: sppc+ub ≈ sppc-only time ≪ ub-only time;");
     println!("# sum_ahat(sppc+ub) < sum_ahat(sppc-only); ub-only nodes = full tree × λ count");

@@ -15,17 +15,16 @@
 use std::time::Instant;
 
 use spp::data::registry::{lookup, Dataset};
-use spp::mining::Counting;
+use spp::mining::{Counting, PatternSubstrate};
 use spp::path::{compute_path_spp, lambda_grid, working_set::WorkingSet, PathConfig};
 use spp::screening::lambda_max::lambda_max;
 use spp::screening::sppc::SppScreen;
-use spp::screening::Database;
 use spp::solver::dual::safe_radius;
 use spp::solver::problem::{dual_value, primal_value};
 use spp::solver::{CdSolver, Task};
 
 /// Cold screening path: the pair is ALWAYS the λmax zero solution.
-fn cold_path(db: &Database<'_>, y: &[f64], task: Task, maxpat: usize, n_lambdas: usize) -> (f64, u64) {
+fn cold_path<S: PatternSubstrate>(db: &S, y: &[f64], task: Task, maxpat: usize, n_lambdas: usize) -> (f64, u64) {
     let lm = lambda_max(db, y, task, maxpat, 1);
     let grid = lambda_grid(lm.lambda_max, n_lambdas, 0.05);
     let solver = CdSolver::default();
@@ -74,7 +73,7 @@ fn main() {
     println!("# A2 warm-start / grid-density ablation: splice @0.15 maxpat=3");
     let data = lookup("splice", 0.15).unwrap();
     let Dataset::Itemsets(t) = &data else { unreachable!() };
-    let db = Database::Itemsets(&t.db);
+    let db = &t.db;
     let task = Task::Classification;
 
     // warm vs cold at a fixed grid
@@ -85,13 +84,13 @@ fn main() {
         ..PathConfig::default()
     };
     let t0 = Instant::now();
-    let warm = compute_path_spp(&db, &t.y, task, &cfg);
+    let warm = compute_path_spp(db, &t.y, task, &cfg);
     let warm_secs = t0.elapsed().as_secs_f64();
     println!(
         "ROW fig=A2 variant=warm total={warm_secs:.4} nodes={}",
         warm.total_nodes()
     );
-    let (cold_secs, cold_nodes) = cold_path(&db, &t.y, task, 3, 15);
+    let (cold_secs, cold_nodes) = cold_path(db, &t.y, task, 3, 15);
     println!("ROW fig=A2 variant=cold total={cold_secs:.4} nodes={cold_nodes}");
 
     // grid density sweep (warm): nodes per λ should fall as grids refine
@@ -103,7 +102,7 @@ fn main() {
             ..PathConfig::default()
         };
         let t1 = Instant::now();
-        let p = compute_path_spp(&db, &t.y, task, &cfg);
+        let p = compute_path_spp(db, &t.y, task, &cfg);
         println!(
             "ROW fig=A2 variant=grid lambdas={n_lambdas} total={:.4} nodes={} nodes_per_lambda={:.0}",
             t1.elapsed().as_secs_f64(),
@@ -116,7 +115,7 @@ fn main() {
     let mut ccfg = cfg;
     ccfg.certify = true;
     let t2 = Instant::now();
-    let certified = compute_path_spp(&db, &t.y, task, &ccfg);
+    let certified = compute_path_spp(db, &t.y, task, &ccfg);
     println!(
         "ROW fig=A2 variant=certify total={:.4} nodes={}",
         t2.elapsed().as_secs_f64(),

@@ -11,7 +11,6 @@ use spp::mining::gspan::GSpanMiner;
 use spp::mining::itemset::{intersect_into, ItemsetMiner};
 use spp::mining::{PatternNode, Walk};
 use spp::screening::sppc::SppScreen;
-use spp::screening::Database;
 use spp::solver::{CdSolver, Task};
 use spp::testutil::SplitMix64;
 
@@ -117,7 +116,7 @@ fn main() {
         let d = generate(&ItemsetSynthConfig::preset_splice(5).scaled(0.2));
         bench_fn("lambda-max search splice@0.2 maxpat=3", 5, || {
             let lm = spp::screening::lambda_max::lambda_max(
-                &Database::Itemsets(&d.db),
+                &d.db,
                 &d.y,
                 Task::Classification,
                 3,

@@ -1,0 +1,10 @@
+//! Sequence substrate: SPP vs boosting on the `synth-seq` preset.
+//!
+//! Beyond the paper's figures — the same (dataset × maxpat × method)
+//! sweep as Figures 2/3, run over the PrefixSpan subsequence tree
+//! through the open `PatternSubstrate` trait.  The headline quantity is
+//! unchanged: one tree search per λ (SPP) vs one per round (boosting),
+//! now on a third pattern language the original code could not express.
+fn main() {
+    spp::benchkit::run_figure("seq", spp::benchkit::SEQ_WORKLOADS);
+}

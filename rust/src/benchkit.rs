@@ -128,6 +128,12 @@ pub const ITEMSET_WORKLOADS: &[Workload] = &[
     Workload { dataset: "protein", scale: 0.02, maxpats: &[2], full_maxpats: &[3, 4, 5, 6] },
 ];
 
+/// The sequence-substrate workload (beyond the paper; exercises the
+/// PrefixSpan tree through the same SPP-vs-boosting sweep).
+pub const SEQ_WORKLOADS: &[Workload] = &[
+    Workload { dataset: "synth-seq", scale: 0.25, maxpats: &[2, 3], full_maxpats: &[3, 4, 5] },
+];
+
 /// Criterion-style micro benchmark: returns (min, median, mean) seconds
 /// per iteration and prints one line.
 pub fn bench_fn<F: FnMut()>(name: &str, samples: usize, mut f: F) -> (f64, f64, f64) {
@@ -182,7 +188,11 @@ mod tests {
 
     #[test]
     fn workload_tables_reference_registry_names() {
-        for w in GRAPH_WORKLOADS.iter().chain(ITEMSET_WORKLOADS) {
+        for w in GRAPH_WORKLOADS
+            .iter()
+            .chain(ITEMSET_WORKLOADS)
+            .chain(SEQ_WORKLOADS)
+        {
             assert!(
                 crate::data::registry::info(w.dataset).is_some(),
                 "unknown dataset {}",

@@ -17,9 +17,8 @@
 
 use std::time::Instant;
 
-use crate::mining::{Counting, Pattern, PatternNode, TraverseStats, TreeVisitor, Walk};
+use crate::mining::{Counting, Pattern, PatternNode, PatternSubstrate, TraverseStats, TreeVisitor, Walk};
 use crate::path::working_set::WorkingSet;
-use crate::screening::Database;
 use crate::solver::{CdConfig, CdSolver, Solution, Task};
 
 /// Baseline configuration.
@@ -123,8 +122,8 @@ impl TreeVisitor for ViolationSearch<'_> {
 /// Solve one λ by constraint generation, growing `ws` in place.
 /// `w` is the warm-start weight vector aligned with `ws` (extended with
 /// zeros as patterns are added); it is updated to the final weights.
-pub fn solve_lambda(
-    db: &Database<'_>,
+pub fn solve_lambda<S: PatternSubstrate>(
+    db: &S,
     y: &[f64],
     task: Task,
     lam: f64,
@@ -203,7 +202,7 @@ mod tests {
         let g: Vec<f64> = d.y.iter().map(|&v| v - ybar).collect();
         let empty = WorkingSet::new();
         let mut s = ViolationSearch::new(&g, &empty, 0.0, 1);
-        Database::Itemsets(&d.db).traverse(3, 1, &mut s);
+        d.db.traverse(3, 1, &mut s);
         // brute force
         let mut best = 0.0f64;
         for (_, sup) in oracle::all_itemsets(&d.db, 3) {
@@ -222,13 +221,13 @@ mod tests {
         // exclude the true argmax; search must return the runner-up
         let empty = WorkingSet::new();
         let mut s0 = ViolationSearch::new(&g, &empty, 0.0, 1);
-        Database::Itemsets(&d.db).traverse(3, 1, &mut s0);
+        d.db.traverse(3, 1, &mut s0);
         let (best_score, best_pat, best_sup) = s0.found.pop().unwrap();
 
         let mut ws = WorkingSet::new();
         ws.insert(best_pat.clone(), best_sup);
         let mut s1 = ViolationSearch::new(&g, &ws, 0.0, 1);
-        Database::Itemsets(&d.db).traverse(3, 1, &mut s1);
+        d.db.traverse(3, 1, &mut s1);
         let (second, pat2, _) = s1.found.pop().unwrap();
         assert_ne!(pat2, best_pat);
         assert!(second <= best_score + 1e-12);
@@ -239,15 +238,15 @@ mod tests {
         // small problem: boosting over the tree == dense solve over ALL
         // enumerated patterns
         let d = generate(&ItemsetSynthConfig::tiny(5, false));
-        let db = Database::Itemsets(&d.db);
-        let lm = lambda_max(&db, &d.y, Task::Regression, 2, 1);
+        let db = &d.db;
+        let lm = lambda_max(db, &d.y, Task::Regression, 2, 1);
         let lam = 0.3 * lm.lambda_max;
 
         let mut ws = WorkingSet::new();
         let mut w = Vec::new();
         let mut b = lm.b0;
         let out = solve_lambda(
-            &db,
+            db,
             &d.y,
             Task::Regression,
             lam,
@@ -275,17 +274,19 @@ mod tests {
     #[test]
     fn k_add_speeds_up_rounds() {
         let d = generate(&ItemsetSynthConfig::tiny(6, false));
-        let db = Database::Itemsets(&d.db);
-        let lm = lambda_max(&db, &d.y, Task::Regression, 3, 1);
+        let db = &d.db;
+        let lm = lambda_max(db, &d.y, Task::Regression, 3, 1);
         let lam = 0.1 * lm.lambda_max;
         let run = |k: usize| {
             let mut ws = WorkingSet::new();
             let mut w = Vec::new();
             let mut b = lm.b0;
-            let mut cfg = BoostingConfig::default();
-            cfg.k_add = k;
+            let cfg = BoostingConfig {
+                k_add: k,
+                ..BoostingConfig::default()
+            };
             solve_lambda(
-                &db, &d.y, Task::Regression, lam, 3, 1, &mut ws, &mut w, &mut b, &cfg,
+                db, &d.y, Task::Regression, lam, 3, 1, &mut ws, &mut w, &mut b, &cfg,
             )
         };
         let r1 = run(1);

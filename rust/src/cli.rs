@@ -1,7 +1,41 @@
 //! Minimal CLI argument parsing (the vendored crate set has no clap).
 //!
-//! Grammar: `spp <command> [--flag value | --switch] [positional...]`.
-//! Flags may appear anywhere after the command; `--flag=value` works.
+//! ## Grammar
+//!
+//! ```text
+//! spp <command> [TOKEN...]
+//! TOKEN := --name=value        flag with inline value (never consumes
+//!                              the next token; `--certify=false` turns
+//!                              a switch OFF)
+//!        | --name value        flag: a bare `--name` consumes the next
+//!                              token as its value IFF (a) `name` is not
+//!                              a declared switch and (b) the next token
+//!                              does not start with `--`.  Negative
+//!                              numbers ("-1e-6") do not start with
+//!                              `--`, so `--viol-tol -1e-6 --certify`
+//!                              parses as expected.
+//!        | --switch [BOOL]     a *declared* switch consumes the next
+//!                              token only when it is a boolean literal
+//!                              (true/false/1/0/yes/no/on/off), so
+//!                              `--certify false` reads as OFF while
+//!                              `--certify out.json` keeps `out.json`
+//!                              positional
+//!        | --name              switch (no value consumed): undeclared
+//!                              names at end of argv or followed by
+//!                              `--…`
+//!        | anything else       positional
+//! ```
+//!
+//! Flag-value consumption is *explicit* for declared switches
+//! ([`Args::parse_with_switches`]): a declared switch never swallows a
+//! following non-boolean positional.  The zero-declaration
+//! [`Args::parse`] keeps the historical peek-based behaviour for
+//! undeclared names — that footgun is pinned by tests below so it
+//! stays documented.
+//!
+//! [`Args::switch`] answers truthiness from either form: a bare
+//! `--name` is on; `--name=false`, `--name=0`, `--name=no` and
+//! `--name=off` are off; any other value is on.
 
 use std::collections::HashMap;
 
@@ -15,30 +49,55 @@ pub struct Args {
 }
 
 impl Args {
-    /// Parse from an iterator of raw args (without argv[0]).
+    /// Parse from an iterator of raw args (without argv[0]), declaring
+    /// no switches (every bare `--name` may consume a value; see
+    /// module docs).
     pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        Self::parse_with_switches(raw, &[])
+    }
+
+    /// Parse, declaring `known_switches`: names that consume a
+    /// following token only when it is a boolean literal (so they can
+    /// never swallow a positional or a path).  This is the explicit
+    /// grammar the `spp` binary uses (its switch set lives next to
+    /// `main`).
+    pub fn parse_with_switches<I: IntoIterator<Item = String>>(
+        raw: I,
+        known_switches: &[&str],
+    ) -> Self {
         let mut it = raw.into_iter().peekable();
         let command = it.next().unwrap_or_default();
         let mut args = Args {
             command,
             ..Args::default()
         };
-        while let Some(tok) = it.next() {
-            if let Some(name) = tok.strip_prefix("--") {
-                if let Some((k, v)) = name.split_once('=') {
-                    args.flags.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|nxt| !nxt.starts_with("--"))
-                    .unwrap_or(false)
-                {
+        loop {
+            let Some(tok) = it.next() else { break };
+            let Some(name) = tok.strip_prefix("--") else {
+                args.positional.push(tok);
+                continue;
+            };
+            if let Some((k, v)) = name.split_once('=') {
+                args.flags.insert(k.to_string(), v.to_string());
+            } else if known_switches.contains(&name) {
+                // a declared switch takes a value only when the next
+                // token is unambiguously boolean, so `--certify false`
+                // and `--certify=false` agree
+                if it.peek().map(|nxt| is_bool_token(nxt)).unwrap_or(false) {
                     let v = it.next().unwrap();
                     args.flags.insert(name.to_string(), v);
                 } else {
                     args.switches.push(name.to_string());
                 }
+            } else if it
+                .peek()
+                .map(|nxt| !nxt.starts_with("--"))
+                .unwrap_or(false)
+            {
+                let v = it.next().unwrap();
+                args.flags.insert(name.to_string(), v);
             } else {
-                args.positional.push(tok);
+                args.switches.push(name.to_string());
             }
         }
         args
@@ -48,8 +107,18 @@ impl Args {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// Is the boolean flag `name` on?  A bare `--name` is on; a valued
+    /// form is interpreted: `false`/`0`/`no`/`off` (exact,
+    /// case-sensitive) are off, anything else is on.
     pub fn switch(&self, name: &str) -> bool {
-        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+        if self.switches.iter().any(|s| s == name) {
+            return true;
+        }
+        match self.flag(name) {
+            Some("false") | Some("0") | Some("no") | Some("off") => false,
+            Some(_) => true,
+            None => false,
+        }
     }
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -75,6 +144,11 @@ impl Args {
     }
 }
 
+/// Boolean literals a *declared* switch may consume as its value.
+fn is_bool_token(tok: &str) -> bool {
+    matches!(tok, "true" | "false" | "1" | "0" | "yes" | "no" | "on" | "off")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,11 +157,16 @@ mod tests {
         Args::parse(s.split_whitespace().map(String::from))
     }
 
+    fn parse_sw(s: &str, switches: &[&str]) -> Args {
+        Args::parse_with_switches(s.split_whitespace().map(String::from), switches)
+    }
+
     #[test]
     fn parses_flags_switches_positionals() {
-        // note: a bare `--switch` followed by a non-flag token consumes
-        // it as a value (documented grammar); positionals go first or
-        // the switch goes last.
+        // note: an *undeclared* bare `--switch` followed by a non-flag
+        // token consumes it as a value (documented grammar);
+        // positionals go first, the switch goes last, or the switch is
+        // declared via parse_with_switches.
         let a = parse("path out.json --dataset cpdb --maxpat 5 --certify");
         assert_eq!(a.command, "path");
         assert_eq!(a.flag("dataset"), Some("cpdb"));
@@ -97,12 +176,30 @@ mod tests {
     }
 
     #[test]
-    fn switch_before_positional_swallows_it() {
-        // the documented footgun, pinned so it stays documented
+    fn switch_before_positional_swallows_it_unless_declared() {
+        // the documented footgun, pinned so it stays documented …
         let a = parse("path --certify out.json");
         assert_eq!(a.flag("certify"), Some("out.json"));
         assert!(a.switch("certify"));
         assert!(a.positional.is_empty());
+        // … and the explicit-grammar fix: declared switches only
+        // consume boolean literals, never positionals
+        let a = parse_sw("path --certify out.json", &["certify"]);
+        assert!(a.switch("certify"));
+        assert!(a.flag("certify").is_none());
+        assert_eq!(a.positional, vec!["out.json"]);
+    }
+
+    #[test]
+    fn declared_switch_space_and_equals_booleans_agree() {
+        for off in ["false", "0", "no", "off"] {
+            let a = parse_sw(&format!("path --certify {off}"), &["certify"]);
+            assert!(!a.switch("certify"), "--certify {off} must be OFF");
+            assert!(a.positional.is_empty());
+        }
+        let a = parse_sw("path --certify true out.json", &["certify"]);
+        assert!(a.switch("certify"));
+        assert_eq!(a.positional, vec!["out.json"]);
     }
 
     #[test]
@@ -111,6 +208,31 @@ mod tests {
         assert_eq!(a.get_f64("scale", 1.0).unwrap(), 0.5);
         assert_eq!(a.get_f64("missing", 2.5).unwrap(), 2.5);
         assert_eq!(a.get_or("dataset", "cpdb"), "cpdb");
+    }
+
+    #[test]
+    fn valued_switches_parse_booleans() {
+        for off in ["false", "0", "no", "off"] {
+            let a = parse(&format!("path --certify={off}"));
+            assert!(!a.switch("certify"), "--certify={off} must be OFF");
+        }
+        for on in ["true", "1", "yes", "on"] {
+            let a = parse(&format!("path --certify={on}"));
+            assert!(a.switch("certify"), "--certify={on} must be ON");
+        }
+        // space-separated value form reads the same way
+        assert!(!parse("path --certify false").switch("certify"));
+        assert!(!parse("path --certify 0").switch("certify"));
+    }
+
+    #[test]
+    fn negative_value_then_flag_parses_explicitly() {
+        // the satellite case: a negative numeric value followed by
+        // another flag, with the trailing switch declared
+        let a = parse_sw("path --viol-tol -1e-6 --certify", &["certify"]);
+        assert_eq!(a.get_f64("viol-tol", 0.0).unwrap(), -1e-6);
+        assert!(a.switch("certify"));
+        assert!(a.positional.is_empty());
     }
 
     #[test]

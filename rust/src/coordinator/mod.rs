@@ -14,8 +14,8 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::data::registry::{self, Dataset};
+use crate::mining::PatternSubstrate;
 use crate::path::{compute_path_boosting, compute_path_spp, PathConfig, PathResult};
-use crate::screening::Database;
 use crate::solver::Task;
 
 /// Which method computes the path.
@@ -63,6 +63,22 @@ pub struct ExperimentResult {
     pub path: PathResult,
 }
 
+/// Compute the path for one method on any substrate (the coordinator's
+/// only per-method dispatch; dataset-kind dispatch happens once, in
+/// [`run_experiment`], at the registry boundary).
+fn run_path<S: PatternSubstrate>(
+    db: &S,
+    y: &[f64],
+    task: Task,
+    method: Method,
+    cfg: &PathConfig,
+) -> PathResult {
+    match method {
+        Method::Spp => compute_path_spp(db, y, task, cfg),
+        Method::Boosting => compute_path_boosting(db, y, task, cfg),
+    }
+}
+
 /// Run one experiment spec to completion.
 pub fn run_experiment(spec: &ExperimentSpec) -> crate::Result<ExperimentResult> {
     let info = registry::info(&spec.dataset)
@@ -73,20 +89,9 @@ pub fn run_experiment(spec: &ExperimentSpec) -> crate::Result<ExperimentResult> 
 
     let wall = Instant::now();
     let path = match &data {
-        Dataset::Graphs(g) => {
-            let db = Database::Graphs(g);
-            match spec.method {
-                Method::Spp => compute_path_spp(&db, &g.y, info.task, &cfg),
-                Method::Boosting => compute_path_boosting(&db, &g.y, info.task, &cfg),
-            }
-        }
-        Dataset::Itemsets(t) => {
-            let db = Database::Itemsets(&t.db);
-            match spec.method {
-                Method::Spp => compute_path_spp(&db, &t.y, info.task, &cfg),
-                Method::Boosting => compute_path_boosting(&db, &t.y, info.task, &cfg),
-            }
-        }
+        Dataset::Graphs(g) => run_path(g, &g.y, info.task, spec.method, &cfg),
+        Dataset::Itemsets(t) => run_path(&t.db, &t.y, info.task, spec.method, &cfg),
+        Dataset::Sequences(s) => run_path(&s.db, &s.y, info.task, spec.method, &cfg),
     };
     let wall_secs = wall.elapsed().as_secs_f64();
 

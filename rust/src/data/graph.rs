@@ -3,9 +3,14 @@
 //! The graph container is the substrate under the gSpan miner: vertices
 //! and edges carry small integer labels (atom / bond types in the
 //! chemistry datasets).  Graphs are simple (no self-loops, no parallel
-//! edges) — matching the gSpan paper's setting.
+//! edges) — matching the gSpan paper's setting.  [`GraphDatabase`]'s
+//! [`PatternSubstrate`] impl (miner = gSpan, matcher =
+//! [`contains_subgraph`]) lives at the bottom of this module.
 
 use std::fmt;
+
+use crate::mining::gspan::{code_to_labeled_graph, DfsEdge, GSpanMiner};
+use crate::mining::{Pattern, PatternSubstrate, TreeVisitor};
 
 /// One labeled undirected graph.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -184,6 +189,197 @@ pub fn parse_gsp(text: &str) -> crate::Result<GraphDatabase> {
     Ok(db)
 }
 
+/// Label-respecting subgraph-isomorphism test: is `pattern` (connected,
+/// small) contained in `g`?  Plain backtracking over vertex mappings
+/// with degree/label pruning — exponential in |pattern| only, which
+/// maxpat bounds.
+pub fn contains_subgraph(g: &Graph, pattern: &Graph) -> bool {
+    if pattern.n_vertices() == 0 {
+        return true;
+    }
+    if pattern.n_vertices() > g.n_vertices() || pattern.n_edges() > g.n_edges() {
+        return false;
+    }
+    let g_adj = g.adjacency();
+    let p_adj = pattern.adjacency();
+    let mut mapping = vec![u32::MAX; pattern.n_vertices()]; // pattern v -> g v
+    let mut used = vec![false; g.n_vertices()];
+
+    // match pattern vertices in a connectivity-respecting order
+    let order = connectivity_order(pattern, &p_adj);
+    backtrack(g, pattern, &g_adj, &p_adj, &order, 0, &mut mapping, &mut used)
+}
+
+fn connectivity_order(pattern: &Graph, adj: &[Vec<(u32, u32)>]) -> Vec<u32> {
+    let mut order = vec![0u32];
+    let mut seen = vec![false; pattern.n_vertices()];
+    seen[0] = true;
+    while order.len() < pattern.n_vertices() {
+        let mut next = None;
+        'outer: for &v in &order {
+            for &(w, _) in &adj[v as usize] {
+                if !seen[w as usize] {
+                    next = Some(w);
+                    break 'outer;
+                }
+            }
+        }
+        let v = next.expect("pattern must be connected");
+        seen[v as usize] = true;
+        order.push(v);
+    }
+    order
+}
+
+#[allow(clippy::too_many_arguments)]
+fn backtrack(
+    g: &Graph,
+    pattern: &Graph,
+    g_adj: &[Vec<(u32, u32)>],
+    p_adj: &[Vec<(u32, u32)>],
+    order: &[u32],
+    depth: usize,
+    mapping: &mut [u32],
+    used: &mut [bool],
+) -> bool {
+    if depth == order.len() {
+        return true;
+    }
+    let pv = order[depth] as usize;
+    // candidates: all g vertices with the right label whose edges to
+    // already-mapped pattern neighbors exist with matching labels
+    'cand: for gv in 0..g.n_vertices() {
+        if used[gv] || g.vlabels[gv] != pattern.vlabels[pv] {
+            continue;
+        }
+        for &(pw, el) in &p_adj[pv] {
+            let mapped = mapping[pw as usize];
+            if mapped != u32::MAX {
+                let ok = g_adj[gv]
+                    .iter()
+                    .any(|&(gn, gel)| gn == mapped && gel == el);
+                if !ok {
+                    continue 'cand;
+                }
+            }
+        }
+        mapping[pv] = gv as u32;
+        used[gv] = true;
+        if backtrack(g, pattern, g_adj, p_adj, order, depth + 1, mapping, used) {
+            return true;
+        }
+        mapping[pv] = u32::MAX;
+        used[gv] = false;
+    }
+    false
+}
+
+impl PatternSubstrate for GraphDatabase {
+    type Record = Graph;
+
+    fn n_records(&self) -> usize {
+        self.graphs.len()
+    }
+
+    fn traverse(&self, maxpat: usize, minsup: usize, visitor: &mut dyn TreeVisitor) {
+        let mut m = GSpanMiner::new(self, maxpat);
+        m.minsup = minsup;
+        m.traverse(visitor);
+    }
+
+    fn matches(pattern: &Pattern, record: &Graph) -> bool {
+        match pattern {
+            Pattern::Subgraph(code) => contains_subgraph(record, &code_to_labeled_graph(code)),
+            _ => false,
+        }
+    }
+
+    fn record(&self, i: usize) -> &Graph {
+        &self.graphs[i]
+    }
+
+    fn select(&self, indices: &[usize]) -> Self {
+        // y.len() == graphs.len() is a database invariant; index
+        // directly so a violation surfaces instead of fabricating 0.0
+        // labels.
+        GraphDatabase {
+            graphs: indices.iter().map(|&i| self.graphs[i].clone()).collect(),
+            y: indices.iter().map(|&i| self.y[i]).collect(),
+        }
+    }
+
+    fn parse_pattern(body: &str) -> crate::Result<Pattern> {
+        let code: Vec<DfsEdge> = body
+            .split(',')
+            .map(|t| -> crate::Result<DfsEdge> {
+                let p: Vec<&str> = t.split(':').collect();
+                anyhow::ensure!(p.len() == 5, "bad edge '{t}'");
+                Ok(DfsEdge {
+                    from: p[0].parse()?,
+                    to: p[1].parse()?,
+                    from_label: p[2].parse()?,
+                    elabel: p[3].parse()?,
+                    to_label: p[4].parse()?,
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        // Validate what the matcher assumes, so a corrupted model file
+        // errors here instead of panicking (or allocating absurdly) at
+        // predict time.  A k-edge DFS code names vertices 0..=k, every
+        // vertex label must be determined by some edge, and the encoded
+        // pattern graph must be connected.
+        for e in &code {
+            anyhow::ensure!(
+                (e.from as usize) <= code.len() && (e.to as usize) <= code.len(),
+                "bad DFS code: vertex id {} out of range for {} edges",
+                e.from.max(e.to),
+                code.len()
+            );
+        }
+        let n_vertices = code
+            .iter()
+            .map(|e| e.from.max(e.to) as usize + 1)
+            .max()
+            .unwrap_or(0);
+        let mut labeled = vec![false; n_vertices];
+        for e in &code {
+            if e.from_label >= 0 {
+                labeled[e.from as usize] = true;
+            }
+            if e.to_label >= 0 {
+                labeled[e.to as usize] = true;
+            }
+        }
+        anyhow::ensure!(
+            labeled.iter().all(|&k| k),
+            "bad DFS code: undetermined vertex label"
+        );
+        anyhow::ensure!(
+            code_to_labeled_graph(&code).is_connected(),
+            "bad DFS code: pattern graph not connected"
+        );
+        Ok(Pattern::Subgraph(code))
+    }
+
+    fn format_pattern(pattern: &Pattern) -> String {
+        match pattern {
+            Pattern::Subgraph(code) => code
+                .iter()
+                .map(|e| {
+                    format!(
+                        "{}:{}:{}:{}:{}",
+                        e.from, e.to, e.from_label, e.elabel, e.to_label
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join(","),
+            other => unreachable!("subgraph codec asked to format {other:?}"),
+        }
+    }
+
+    const KIND_TAG: &'static str = "G";
+}
+
 /// Serialize to the `.gsp` format accepted by [`parse_gsp`].
 pub fn to_gsp(db: &GraphDatabase) -> String {
     let mut out = String::new();
@@ -264,5 +460,40 @@ mod tests {
     fn gsp_rejects_bad_edges() {
         assert!(parse_gsp("t # 0 0\nv 0 1\ne 0 5 0\n").is_err());
         assert!(parse_gsp("v 0 1\n").is_err());
+    }
+
+    #[test]
+    fn substrate_impl_matches_and_selects() {
+        let mut db = GraphDatabase::default();
+        db.graphs.push(triangle());
+        db.y.push(1.0);
+        let mut g2 = Graph::new();
+        g2.add_vertex(7);
+        db.graphs.push(g2);
+        db.y.push(-1.0);
+
+        assert_eq!(db.n_records(), 2);
+        let edge = Pattern::Subgraph(vec![DfsEdge {
+            from: 0,
+            to: 1,
+            from_label: 0,
+            elabel: 0,
+            to_label: 1,
+        }]);
+        assert!(GraphDatabase::matches(&edge, db.record(0)));
+        assert!(!GraphDatabase::matches(&edge, db.record(1)));
+        assert!(!GraphDatabase::matches(&Pattern::Itemset(vec![0]), db.record(0)));
+
+        let sub = db.select(&[1]);
+        assert_eq!(sub.graphs.len(), 1);
+        assert_eq!(sub.y, vec![-1.0]);
+
+        let mut count = 0usize;
+        let mut v = |_: &crate::mining::PatternNode<'_>| {
+            count += 1;
+            crate::mining::Walk::Descend
+        };
+        PatternSubstrate::traverse(&db, 2, 1, &mut v);
+        assert!(count > 0);
     }
 }

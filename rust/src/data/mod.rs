@@ -1,10 +1,14 @@
 //! Datasets: containers, parsers, and seeded synthetic generators.
 //!
-//! Two database kinds exist in the paper:
+//! Three database kinds, each implementing the open
+//! [`crate::mining::PatternSubstrate`] trait next to its container:
 //! * **transaction databases** ([`Transactions`]) for item-set mining —
-//!   each record is a set of item ids;
+//!   each record is a set of item ids (the paper's first substrate);
 //! * **graph databases** ([`graph::GraphDatabase`]) for subgraph mining —
-//!   each record is a labeled undirected graph.
+//!   each record is a labeled undirected graph (the paper's second);
+//! * **sequence databases** ([`sequence::Sequences`]) for subsequence
+//!   mining — each record is an ordered symbol stream (an extension
+//!   proving the substrate API is open).
 //!
 //! The paper's benchmark datasets (CPDB, Mutagenicity, Bergstrom,
 //! Karthikeyan from cheminformatics.org; splice/a9a/dna/protein from the
@@ -16,8 +20,12 @@
 pub mod graph;
 pub mod libsvm;
 pub mod registry;
+pub mod sequence;
 pub mod synth_graphs;
 pub mod synth_itemsets;
+
+use crate::mining::itemset::ItemsetMiner;
+use crate::mining::{Pattern, PatternSubstrate, TreeVisitor};
 
 /// A transaction database: each record is a sorted set of item ids in
 /// `[0, n_items)`.  Pattern `t` (an item-set) matches record `i` iff
@@ -63,6 +71,59 @@ impl Transactions {
         }
         Ok(())
     }
+}
+
+impl PatternSubstrate for Transactions {
+    type Record = [u32];
+
+    fn n_records(&self) -> usize {
+        self.items.len()
+    }
+
+    fn traverse(&self, maxpat: usize, minsup: usize, visitor: &mut dyn TreeVisitor) {
+        let mut m = ItemsetMiner::new(self, maxpat);
+        m.minsup = minsup;
+        m.traverse(visitor);
+    }
+
+    fn matches(pattern: &Pattern, record: &[u32]) -> bool {
+        match pattern {
+            Pattern::Itemset(items) => synth_itemsets::contains_all(record, items),
+            _ => false,
+        }
+    }
+
+    fn record(&self, i: usize) -> &[u32] {
+        &self.items[i]
+    }
+
+    fn select(&self, indices: &[usize]) -> Self {
+        Transactions {
+            n_items: self.n_items,
+            items: indices.iter().map(|&i| self.items[i].clone()).collect(),
+        }
+    }
+
+    fn parse_pattern(body: &str) -> crate::Result<Pattern> {
+        let items = body
+            .split(',')
+            .map(|t| t.parse::<u32>())
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Pattern::Itemset(items))
+    }
+
+    fn format_pattern(pattern: &Pattern) -> String {
+        match pattern {
+            Pattern::Itemset(items) => items
+                .iter()
+                .map(|i| i.to_string())
+                .collect::<Vec<_>>()
+                .join(","),
+            other => unreachable!("item-set codec asked to format {other:?}"),
+        }
+    }
+
+    const KIND_TAG: &'static str = "I";
 }
 
 /// A supervised dataset over either database kind.
@@ -121,5 +182,28 @@ mod tests {
             items: vec![vec![0, 5]],
         };
         assert!(db.validate().is_err());
+    }
+
+    #[test]
+    fn substrate_impl_matches_and_selects() {
+        let db = tiny();
+        assert_eq!(db.n_records(), 4);
+        assert_eq!(db.record(1), &[1u32, 2, 3][..]);
+        let p = Pattern::Itemset(vec![1, 3]);
+        assert!(Transactions::matches(&p, db.record(1)));
+        assert!(!Transactions::matches(&p, db.record(0)));
+        // foreign kinds never match
+        assert!(!Transactions::matches(&Pattern::Sequence(vec![0]), db.record(0)));
+        let sub = db.select(&[2, 0]);
+        assert_eq!(sub.n_items, 4);
+        assert_eq!(sub.items, vec![vec![0, 3], vec![0, 1]]);
+        // traversal through the trait sees the same tree as the miner
+        let mut count = 0usize;
+        let mut v = |_: &crate::mining::PatternNode<'_>| {
+            count += 1;
+            crate::mining::Walk::Descend
+        };
+        PatternSubstrate::traverse(&db, 2, 1, &mut v);
+        assert!(count > 0);
     }
 }

@@ -1,10 +1,12 @@
-//! Dataset registry: the paper's eight benchmark datasets by name.
+//! Dataset registry: the paper's eight benchmark datasets by name,
+//! plus the `synth-seq` sequence preset exercising the third substrate.
 //!
 //! Every preset is a seeded synthetic stand-in at the paper's scale
 //! (DESIGN.md §2).  `lookup` accepts an optional scale factor so the
 //! figure benches can run the full sweep at reduced n when wall-clock
 //! budget demands it (EXPERIMENTS.md records the scale used).
 
+use super::sequence::{self, LabeledSequences, SeqSynthConfig};
 use super::synth_graphs::{self, GraphSynthConfig};
 use super::synth_itemsets::{self, ItemsetSynthConfig};
 use super::{graph::GraphDatabase, LabeledTransactions};
@@ -18,6 +20,7 @@ pub const REGISTRY_SEED: u64 = 20160813; // KDD'16 conference date
 pub enum Dataset {
     Graphs(GraphDatabase),
     Itemsets(LabeledTransactions),
+    Sequences(LabeledSequences),
 }
 
 impl Dataset {
@@ -25,6 +28,7 @@ impl Dataset {
         match self {
             Dataset::Graphs(g) => g.len(),
             Dataset::Itemsets(t) => t.db.len(),
+            Dataset::Sequences(s) => s.db.len(),
         }
     }
 
@@ -32,6 +36,7 @@ impl Dataset {
         match self {
             Dataset::Graphs(g) => &g.y,
             Dataset::Itemsets(t) => &t.y,
+            Dataset::Sequences(s) => &s.y,
         }
     }
 }
@@ -50,10 +55,12 @@ pub struct DatasetInfo {
 pub enum Kind {
     Graph,
     Itemset,
+    Sequence,
 }
 
-/// All eight paper datasets.
-pub const ALL: [DatasetInfo; 8] = [
+/// All eight paper datasets plus the `synth-seq` sequence preset (the
+/// third-substrate workload; `paper_n` is its scale-1.0 record count).
+pub const ALL: [DatasetInfo; 9] = [
     DatasetInfo { name: "cpdb", kind: Kind::Graph, task: Task::Classification, paper_n: 648 },
     DatasetInfo { name: "mutagenicity", kind: Kind::Graph, task: Task::Classification, paper_n: 4337 },
     DatasetInfo { name: "bergstrom", kind: Kind::Graph, task: Task::Regression, paper_n: 185 },
@@ -62,6 +69,7 @@ pub const ALL: [DatasetInfo; 8] = [
     DatasetInfo { name: "a9a", kind: Kind::Itemset, task: Task::Classification, paper_n: 32_561 },
     DatasetInfo { name: "dna", kind: Kind::Itemset, task: Task::Regression, paper_n: 2000 },
     DatasetInfo { name: "protein", kind: Kind::Itemset, task: Task::Regression, paper_n: 6621 },
+    DatasetInfo { name: "synth-seq", kind: Kind::Sequence, task: Task::Classification, paper_n: 600 },
 ];
 
 pub fn info(name: &str) -> Option<DatasetInfo> {
@@ -94,6 +102,9 @@ pub fn lookup(name: &str, scale: f64) -> crate::Result<Dataset> {
         "protein" => Dataset::Itemsets(
             synth_itemsets::generate(&ItemsetSynthConfig::preset_protein(seed).scaled(scale)).labeled(),
         ),
+        "synth-seq" => Dataset::Sequences(
+            sequence::generate(&SeqSynthConfig::preset_synth_seq(seed).scaled(scale)).labeled(),
+        ),
         other => anyhow::bail!("unknown dataset '{other}' (expected one of {:?})",
                                ALL.map(|d| d.name)),
     };
@@ -113,6 +124,7 @@ mod tests {
             match (d.kind, &ds) {
                 (Kind::Graph, Dataset::Graphs(_)) => {}
                 (Kind::Itemset, Dataset::Itemsets(_)) => {}
+                (Kind::Sequence, Dataset::Sequences(_)) => {}
                 _ => panic!("{}: kind mismatch", d.name),
             }
         }
@@ -124,6 +136,8 @@ mod tests {
         assert_eq!(ds.n_records(), 648);
         let ds = lookup("splice", 1.0).unwrap();
         assert_eq!(ds.n_records(), 1000);
+        let ds = lookup("synth-seq", 1.0).unwrap();
+        assert_eq!(ds.n_records(), 600);
     }
 
     #[test]

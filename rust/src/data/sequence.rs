@@ -1,0 +1,370 @@
+//! Sequence databases: the third pattern substrate.
+//!
+//! Records are ordered lists of symbol ids (think event logs, clicks,
+//! SMILES-ish token streams, amino-acid runs); a pattern is a
+//! subsequence `⟨a_1 … a_k⟩` and the binary feature is
+//! `x_it = I(t ⊑ s_i)` (not-necessarily-contiguous, order-preserving
+//! containment).  The enumeration tree is PrefixSpan's prefix-extension
+//! tree ([`crate::mining::prefixspan`]), which is anti-monotone — so
+//! the whole SPP machinery applies unchanged through the
+//! [`PatternSubstrate`] impl at the bottom of this module.
+//!
+//! Like the other substrates, no public sequence benchmark is reachable
+//! offline, so [`generate`] provides a seeded synthetic stand-in with
+//! planted predictive subsequence motifs (registry entry `synth-seq`).
+
+use crate::mining::prefixspan::PrefixSpanMiner;
+use crate::mining::{Pattern, PatternSubstrate, TreeVisitor};
+use crate::testutil::SplitMix64;
+
+/// A sequence database: each record is a list of symbol ids in
+/// `[0, n_symbols)`; order matters and repeats are allowed.
+#[derive(Clone, Debug, Default)]
+pub struct Sequences {
+    pub n_symbols: usize,
+    pub seqs: Vec<Vec<u32>>,
+}
+
+impl Sequences {
+    pub fn len(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    /// Validate invariants: every symbol in range.
+    pub fn validate(&self) -> crate::Result<()> {
+        for (i, s) in self.seqs.iter().enumerate() {
+            if let Some(&bad) = s.iter().find(|&&a| a as usize >= self.n_symbols) {
+                anyhow::bail!("sequence {i} symbol {bad} out of range");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A supervised sequence dataset.
+#[derive(Clone, Debug)]
+pub struct LabeledSequences {
+    pub db: Sequences,
+    /// Regression targets, or ±1 class labels.
+    pub y: Vec<f64>,
+}
+
+/// Is `needle` an order-preserving (not necessarily contiguous)
+/// subsequence of `haystack`?  Greedy leftmost matching is exact for
+/// this test.
+pub fn is_subsequence(haystack: &[u32], needle: &[u32]) -> bool {
+    let mut it = haystack.iter();
+    needle.iter().all(|&x| it.by_ref().any(|&h| h == x))
+}
+
+impl PatternSubstrate for Sequences {
+    type Record = [u32];
+
+    fn n_records(&self) -> usize {
+        self.seqs.len()
+    }
+
+    fn traverse(&self, maxpat: usize, minsup: usize, visitor: &mut dyn TreeVisitor) {
+        let mut m = PrefixSpanMiner::new(self, maxpat);
+        m.minsup = minsup;
+        m.traverse(visitor);
+    }
+
+    fn matches(pattern: &Pattern, record: &[u32]) -> bool {
+        match pattern {
+            Pattern::Sequence(s) => is_subsequence(record, s),
+            _ => false,
+        }
+    }
+
+    fn record(&self, i: usize) -> &[u32] {
+        &self.seqs[i]
+    }
+
+    fn select(&self, indices: &[usize]) -> Self {
+        Sequences {
+            n_symbols: self.n_symbols,
+            seqs: indices.iter().map(|&i| self.seqs[i].clone()).collect(),
+        }
+    }
+
+    fn parse_pattern(body: &str) -> crate::Result<Pattern> {
+        let symbols = body
+            .split(',')
+            .map(|t| t.parse::<u32>())
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Pattern::Sequence(symbols))
+    }
+
+    fn format_pattern(pattern: &Pattern) -> String {
+        match pattern {
+            Pattern::Sequence(s) => s
+                .iter()
+                .map(|a| a.to_string())
+                .collect::<Vec<_>>()
+                .join(","),
+            other => unreachable!("sequence codec asked to format {other:?}"),
+        }
+    }
+
+    const KIND_TAG: &'static str = "S";
+}
+
+/// One planted rule: records containing `symbols` as a subsequence get
+/// `weight` added to their score.
+#[derive(Clone, Debug)]
+pub struct PlantedSeqRule {
+    pub symbols: Vec<u32>,
+    pub weight: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct SeqSynthConfig {
+    pub seed: u64,
+    pub n: usize,
+    /// Alphabet size.
+    pub n_symbols: usize,
+    /// Record lengths are drawn uniformly in `[min_len, max_len]`.
+    pub min_len: usize,
+    pub max_len: usize,
+    /// Number of planted subsequence motifs.
+    pub n_rules: usize,
+    /// Rule lengths are drawn in `[2, max_rule_len]`.
+    pub max_rule_len: usize,
+    /// Probability a record gets a random rule implanted.
+    pub implant_prob: f64,
+    /// Gaussian noise on regression targets / label-flip margin.
+    pub noise: f64,
+    /// true => ±1 labels (classification); false => real targets.
+    pub classify: bool,
+}
+
+impl SeqSynthConfig {
+    fn base(seed: u64, n: usize, n_symbols: usize, classify: bool) -> Self {
+        Self {
+            seed,
+            n,
+            n_symbols,
+            min_len: 10,
+            max_len: 36,
+            n_rules: 6,
+            max_rule_len: 3,
+            implant_prob: 0.4,
+            noise: 0.5,
+            classify,
+        }
+    }
+
+    /// The `synth-seq` registry preset: n = 600 event streams over a
+    /// 24-symbol alphabet, classification.
+    pub fn preset_synth_seq(seed: u64) -> Self {
+        Self::base(seed, 600, 24, true)
+    }
+
+    /// Small config for tests.
+    pub fn tiny(seed: u64, classify: bool) -> Self {
+        let mut c = Self::base(seed, 50, 8, classify);
+        c.min_len = 4;
+        c.max_len = 10;
+        c.n_rules = 3;
+        c
+    }
+
+    /// Scale record count by `f` (benchmark `--scale` support).
+    pub fn scaled(mut self, f: f64) -> Self {
+        self.n = ((self.n as f64 * f).round() as usize).max(8);
+        self
+    }
+}
+
+/// Generated dataset plus the ground-truth rules (handy in tests).
+#[derive(Clone, Debug)]
+pub struct SynthSequences {
+    pub db: Sequences,
+    pub y: Vec<f64>,
+    pub rules: Vec<PlantedSeqRule>,
+}
+
+impl SynthSequences {
+    pub fn labeled(&self) -> LabeledSequences {
+        LabeledSequences {
+            db: self.db.clone(),
+            y: self.y.clone(),
+        }
+    }
+}
+
+/// Generate a dataset per `cfg`.  Fully deterministic in `cfg.seed`.
+pub fn generate(cfg: &SeqSynthConfig) -> SynthSequences {
+    assert!(cfg.n_symbols >= 4 && cfg.n >= 4 && cfg.min_len >= 2 && cfg.max_len >= cfg.min_len);
+    let mut rng = SplitMix64::new(cfg.seed);
+
+    // Power-law symbol marginals (a few frequent, many rare symbols —
+    // this shapes the prefix tree's support decay), shuffled so symbol
+    // id does not encode frequency.
+    let mut marginals: Vec<f64> = (0..cfg.n_symbols)
+        .map(|j| 1.0 / (1.0 + j as f64).powf(0.7))
+        .collect();
+    rng.shuffle(&mut marginals);
+
+    // Planted rules over moderately frequent symbols, so supports are
+    // non-trivial; repeats are allowed (sequences, unlike item-sets).
+    let mut freq: Vec<u32> = (0..cfg.n_symbols as u32).collect();
+    freq.sort_by(|&a, &b| {
+        marginals[b as usize]
+            .partial_cmp(&marginals[a as usize])
+            .unwrap()
+    });
+    let pool = &freq[..(cfg.n_symbols / 2).max(2)];
+    let mut rules = Vec::with_capacity(cfg.n_rules);
+    for _ in 0..cfg.n_rules {
+        let len = rng.range(2, cfg.max_rule_len.max(2));
+        let symbols: Vec<u32> = (0..len).map(|_| pool[rng.below(pool.len())]).collect();
+        let mag = 1.0 + rng.next_f64() * 2.0;
+        let weight = if rng.coin(0.5) { mag } else { -mag };
+        rules.push(PlantedSeqRule { symbols, weight });
+    }
+
+    let mut seqs = Vec::with_capacity(cfg.n);
+    let mut y = Vec::with_capacity(cfg.n);
+    for _ in 0..cfg.n {
+        let len = rng.range(cfg.min_len, cfg.max_len);
+        let mut row: Vec<u32> = (0..len).map(|_| rng.weighted(&marginals) as u32).collect();
+        if rng.coin(cfg.implant_prob) {
+            // Implant a rule as a subsequence: insert its symbols at
+            // random positions, left to right.
+            let r = &rules[rng.below(rules.len())];
+            let mut at = 0usize;
+            for &a in &r.symbols {
+                at = rng.range(at, row.len());
+                row.insert(at, a);
+                at += 1;
+            }
+        }
+        let mut score = 0.0;
+        for r in &rules {
+            if is_subsequence(&row, &r.symbols) {
+                score += r.weight;
+            }
+        }
+        score += cfg.noise * rng.gauss();
+        if cfg.classify {
+            y.push(if score >= 0.0 { 1.0 } else { -1.0 });
+        } else {
+            y.push(score);
+        }
+        seqs.push(row);
+    }
+
+    SynthSequences {
+        db: Sequences {
+            n_symbols: cfg.n_symbols,
+            seqs,
+        },
+        y,
+        rules,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subsequence_matcher_cases() {
+        assert!(is_subsequence(&[1, 3, 5], &[1, 5]));
+        assert!(is_subsequence(&[1, 3, 5], &[]));
+        assert!(is_subsequence(&[1, 1, 2], &[1, 1]));
+        assert!(!is_subsequence(&[1, 3, 5], &[5, 1])); // order matters
+        assert!(!is_subsequence(&[1, 2], &[1, 1])); // multiplicity matters
+        assert!(!is_subsequence(&[], &[0]));
+    }
+
+    #[test]
+    fn deterministic_in_seed_and_shapes_match() {
+        let cfg = SeqSynthConfig::tiny(9, true);
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.db.seqs, b.db.seqs);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.db.seqs.len(), cfg.n);
+        assert_eq!(a.db.n_symbols, cfg.n_symbols);
+        a.db.validate().unwrap();
+        let c = generate(&SeqSynthConfig::tiny(10, true));
+        assert_ne!(a.db.seqs, c.db.seqs);
+    }
+
+    #[test]
+    fn classification_labels_are_pm1_both_classes() {
+        let d = generate(&SeqSynthConfig::tiny(2, true));
+        assert!(d.y.iter().all(|&v| v == 1.0 || v == -1.0));
+        assert!(d.y.iter().any(|&v| v == 1.0));
+        assert!(d.y.iter().any(|&v| v == -1.0));
+    }
+
+    #[test]
+    fn implanted_rules_are_recoverable_subsequences() {
+        let d = generate(&SeqSynthConfig::tiny(4, false));
+        for r in &d.rules {
+            assert!(r.symbols.len() >= 2);
+            assert!(r.symbols.iter().all(|&a| (a as usize) < d.db.n_symbols));
+            // at least one record carries each rule (implant_prob 0.4
+            // over 50 records; frequent symbols also co-occur by chance)
+            assert!(
+                d.db.seqs.iter().any(|s| is_subsequence(s, &r.symbols)),
+                "rule {:?} supported nowhere",
+                r.symbols
+            );
+        }
+    }
+
+    #[test]
+    fn substrate_matches_agrees_with_miner_supports() {
+        use crate::mining::{PatternNode, Walk};
+        let d = generate(&SeqSynthConfig::tiny(5, false));
+        let mut checked = 0usize;
+        let mut v = |n: &PatternNode<'_>| {
+            let pat = n.to_pattern();
+            for i in 0..d.db.n_records() {
+                let in_support = n.support.contains(&(i as u32));
+                assert_eq!(Sequences::matches(&pat, d.db.record(i)), in_support);
+                checked += 1;
+            }
+            Walk::Descend
+        };
+        d.db.traverse(2, 1, &mut v);
+        assert!(checked > 0);
+    }
+
+    #[test]
+    fn select_subsets_records_in_order() {
+        let db = Sequences {
+            n_symbols: 3,
+            seqs: vec![vec![0], vec![1], vec![2], vec![0, 1]],
+        };
+        let sub = db.select(&[3, 1]);
+        assert_eq!(sub.n_symbols, 3);
+        assert_eq!(sub.seqs, vec![vec![0, 1], vec![1]]);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        let db = Sequences {
+            n_symbols: 2,
+            seqs: vec![vec![0, 5]],
+        };
+        assert!(db.validate().is_err());
+    }
+
+    #[test]
+    fn scaled_changes_n_only() {
+        let cfg = SeqSynthConfig::preset_synth_seq(0).scaled(0.1);
+        assert_eq!(cfg.n, 60);
+        assert_eq!(cfg.n_symbols, 24);
+        assert!(SeqSynthConfig::preset_synth_seq(0).classify);
+    }
+}

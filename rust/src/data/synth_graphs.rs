@@ -287,7 +287,7 @@ mod tests {
         let d = generate(&GraphSynthConfig::tiny(7, true));
         for m in &d.motifs {
             assert!(m.graph.is_connected());
-            assert!(m.graph.n_edges() >= 2 && m.graph.n_edges() <= 4);
+            assert!((2..=4).contains(&m.graph.n_edges()));
         }
     }
 

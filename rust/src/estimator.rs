@@ -1,0 +1,189 @@
+//! `SppEstimator` — the sklearn-style front door.
+//!
+//! The lower-level API (assemble a [`PathConfig`], call
+//! [`compute_path_spp`], freeze a [`SparsePatternModel`]) stays public
+//! for benchmarks and ablations, but the common "fit a model on this
+//! database" workflow is three lines, generic over any
+//! [`PatternSubstrate`]:
+//!
+//! ```no_run
+//! use spp::data::synth_itemsets::{generate, ItemsetSynthConfig};
+//! use spp::solver::Task;
+//! use spp::SppEstimator;
+//!
+//! let data = generate(&ItemsetSynthConfig::preset_splice(42));
+//! let fit = SppEstimator::new(Task::Classification)
+//!     .maxpat(4)
+//!     .lambda_grid(100, 0.01)
+//!     .fit(&data.db, &data.y)
+//!     .unwrap();
+//! println!("{} active patterns at the smallest λ", fit.model.terms.len());
+//! ```
+
+use crate::mining::PatternSubstrate;
+use crate::model::SparsePatternModel;
+use crate::path::{compute_path_spp, PathConfig, PathResult};
+use crate::solver::{CdConfig, Task};
+
+/// Builder for a Safe-Pattern-Pruning fit: task + the handful of knobs
+/// that matter, defaulting to the paper's settings (100 λs down to
+/// 0.01·λ_max, maxpat 4, gap tolerance 1e-6).
+#[derive(Clone, Copy, Debug)]
+pub struct SppEstimator {
+    task: Task,
+    cfg: PathConfig,
+}
+
+impl SppEstimator {
+    pub fn new(task: Task) -> Self {
+        SppEstimator {
+            task,
+            cfg: PathConfig::default(),
+        }
+    }
+
+    /// Maximum pattern size (#items / #edges / #symbols).
+    pub fn maxpat(mut self, maxpat: usize) -> Self {
+        self.cfg.maxpat = maxpat;
+        self
+    }
+
+    /// Minimum support for enumeration.
+    pub fn minsup(mut self, minsup: usize) -> Self {
+        self.cfg.minsup = minsup;
+        self
+    }
+
+    /// λ grid: `n_lambdas` log-spaced values from λ_max down to
+    /// `min_ratio · λ_max` (paper: 100 and 0.01).
+    pub fn lambda_grid(mut self, n_lambdas: usize, min_ratio: f64) -> Self {
+        self.cfg.n_lambdas = n_lambdas;
+        self.cfg.lambda_min_ratio = min_ratio;
+        self
+    }
+
+    /// Run the exact dual-feasibility pass per λ (see
+    /// `screening::certify`).
+    pub fn certify(mut self, on: bool) -> Self {
+        self.cfg.certify = on;
+        self
+    }
+
+    /// Restricted-solver settings (tolerance, epoch caps).
+    pub fn cd(mut self, cd: CdConfig) -> Self {
+        self.cfg.cd = cd;
+        self
+    }
+
+    /// The assembled [`PathConfig`] (escape hatch to the low-level API).
+    pub fn config(&self) -> PathConfig {
+        self.cfg
+    }
+
+    /// Compute the full SPP regularization path on `db` and freeze the
+    /// smallest-λ model.  Works on any substrate: transactions, graphs,
+    /// sequences, or your own [`PatternSubstrate`] impl.
+    pub fn fit<S: PatternSubstrate>(&self, db: &S, y: &[f64]) -> crate::Result<SppFit> {
+        anyhow::ensure!(
+            db.n_records() == y.len(),
+            "database has {} records but y has {} targets",
+            db.n_records(),
+            y.len()
+        );
+        anyhow::ensure!(db.n_records() >= 2, "need at least 2 records to fit");
+        anyhow::ensure!(
+            self.cfg.n_lambdas >= 2
+                && self.cfg.lambda_min_ratio > 0.0
+                && self.cfg.lambda_min_ratio < 1.0,
+            "lambda grid must have >= 2 values and ratio in (0, 1)"
+        );
+        if self.task == Task::Classification {
+            anyhow::ensure!(
+                y.iter().all(|&v| v == 1.0 || v == -1.0),
+                "classification targets must be ±1"
+            );
+        }
+        let path = compute_path_spp(db, y, self.task, &self.cfg);
+        let last = path
+            .points
+            .last()
+            .ok_or_else(|| anyhow::anyhow!("empty path"))?;
+        let model = SparsePatternModel::from_path_point(self.task, last);
+        Ok(SppFit {
+            task: self.task,
+            model,
+            path,
+        })
+    }
+}
+
+/// A completed fit: the whole certified path plus the smallest-λ model.
+#[derive(Clone, Debug)]
+pub struct SppFit {
+    pub task: Task,
+    /// Model at the smallest λ (the densest end of the path).
+    pub model: SparsePatternModel,
+    /// Every per-λ record (weights, gaps, traversal statistics).
+    pub path: PathResult,
+}
+
+impl SppFit {
+    /// Freeze the model at path point `index` (0 = λ_max).
+    pub fn model_at(&self, index: usize) -> SparsePatternModel {
+        SparsePatternModel::from_path_point(self.task, &self.path.points[index])
+    }
+
+    /// Predictions of the smallest-λ model on a database (sign for
+    /// classification).
+    pub fn predict<S: PatternSubstrate>(&self, db: &S) -> Vec<f64> {
+        self.model.predict(db)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sequence::{generate as sgen, SeqSynthConfig};
+    use crate::data::synth_itemsets::{generate, ItemsetSynthConfig};
+
+    #[test]
+    fn fit_matches_low_level_path_api() {
+        let d = generate(&ItemsetSynthConfig::tiny(31, false));
+        let est = SppEstimator::new(Task::Regression)
+            .maxpat(2)
+            .lambda_grid(6, 0.1);
+        let fit = est.fit(&d.db, &d.y).unwrap();
+        let path = compute_path_spp(&d.db, &d.y, Task::Regression, &est.config());
+        assert_eq!(fit.path.points.len(), path.points.len());
+        let last = path.points.last().unwrap();
+        assert_eq!(fit.model.lambda, last.lambda);
+        assert_eq!(fit.model.terms.len(), last.active.len());
+        assert_eq!(fit.model_at(0).terms.len(), 0, "λ_max model is empty");
+        // predictions come back for every record
+        assert_eq!(fit.predict(&d.db).len(), d.db.len());
+    }
+
+    #[test]
+    fn fit_works_on_sequences() {
+        let d = sgen(&SeqSynthConfig::tiny(32, false));
+        let fit = SppEstimator::new(Task::Regression)
+            .maxpat(2)
+            .lambda_grid(5, 0.1)
+            .fit(&d.db, &d.y)
+            .unwrap();
+        assert!(fit.path.lambda_max > 0.0);
+        assert!(fit.path.points.iter().all(|p| p.gap <= 2e-6));
+        assert_eq!(fit.predict(&d.db).len(), d.db.len());
+    }
+
+    #[test]
+    fn fit_validates_inputs() {
+        let d = generate(&ItemsetSynthConfig::tiny(33, false));
+        let est = SppEstimator::new(Task::Regression);
+        assert!(est.fit(&d.db, &d.y[..d.y.len() - 1]).is_err());
+        let est = SppEstimator::new(Task::Classification);
+        assert!(est.fit(&d.db, &d.y).is_err(), "regression targets are not ±1");
+        let bad = SppEstimator::new(Task::Regression).lambda_grid(1, 0.1);
+        assert!(bad.fit(&d.db, &d.y).is_err());
+    }
+}

@@ -6,25 +6,34 @@
 //!
 //! The library fits L1-regularized linear models over the (exponentially
 //! large) space of **patterns** in a database — item-sets of a
-//! transaction database or connected subgraphs of a graph database —
-//! without ever materializing that space.  The paper's contribution, the
-//! **SPP rule**, is a gap-safe screening test evaluable at any node of
-//! the pattern-enumeration tree; when it fires, the *entire subtree* is
-//! certified to carry zero weight at the optimum and is skipped.
+//! transaction database, connected subgraphs of a graph database, or
+//! subsequences of a sequence database — without ever materializing
+//! that space.  The paper's contribution, the **SPP rule**, is a
+//! gap-safe screening test evaluable at any node of the
+//! pattern-enumeration tree; when it fires, the *entire subtree* is
+//! certified to carry zero weight at the optimum and is skipped.  The
+//! rule only needs an anti-monotone tree, so everything is generic over
+//! the open [`mining::PatternSubstrate`] trait.
 //!
 //! ## Layout (one module per subsystem; see DESIGN.md)
 //!
-//! * [`data`] — datasets: LIBSVM parser, graph containers, seeded
-//!   synthetic generators standing in for the paper's benchmark data.
+//! * [`data`] — datasets: LIBSVM parser, graph/sequence containers,
+//!   seeded synthetic generators standing in for the paper's benchmark
+//!   data; each container implements [`mining::PatternSubstrate`].
 //! * [`mining`] — the pattern-tree substrates: a prefix-extension
-//!   item-set enumerator and a full gSpan implementation, both driven
-//!   through the same [`mining::TreeVisitor`] API.
+//!   item-set enumerator, a full gSpan implementation, and a
+//!   PrefixSpan subsequence miner, all driven through the same
+//!   [`mining::TreeVisitor`] API, plus the open
+//!   [`mining::PatternSubstrate`] trait every search is generic over.
 //! * [`solver`] — L1 solvers (coordinate descent, ISTA oracle), the
 //!   paper's unified problem form, duality gaps, dual-feasible points.
 //! * [`screening`] — the SPP rule itself, per-feature gap-safe tests,
 //!   and the `lambda_max` tree search.
 //! * [`boosting`] — the cutting-plane baseline the paper compares with.
-//! * [`path`] — Algorithm 1: the warm-started regularization path.
+//! * [`path`] — Algorithm 1: the warm-started regularization path, and
+//!   K-fold cross-validation over it.
+//! * [`estimator`] — [`SppEstimator`], the sklearn-style builder facade
+//!   over the path machinery.
 //! * [`runtime`] — PJRT execution of the AOT JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) from the Rust hot path.
 //! * [`coordinator`] — experiment orchestration: worker pool, metrics,
@@ -37,24 +46,30 @@
 //!
 //! ```no_run
 //! use spp::data::synth_itemsets::{ItemsetSynthConfig, generate};
-//! use spp::path::{PathConfig, compute_path_spp};
-//! use spp::screening::Database;
-//! use spp::solver::problem::Task;
+//! use spp::solver::Task;
+//! use spp::SppEstimator;
 //!
 //! let data = generate(&ItemsetSynthConfig::preset_splice(42));
-//! let cfg = PathConfig { n_lambdas: 100, lambda_min_ratio: 0.01,
-//!                        maxpat: 4, ..PathConfig::default() };
-//! let path = compute_path_spp(&Database::Itemsets(&data.db), &data.y,
-//!                             Task::Classification, &cfg);
-//! println!("active patterns at smallest lambda: {}",
-//!          path.points.last().unwrap().active.len());
+//! let fit = SppEstimator::new(Task::Classification)
+//!     .maxpat(4)
+//!     .lambda_grid(100, 0.01)
+//!     .fit(&data.db, &data.y)
+//!     .unwrap();
+//! println!("active patterns at smallest lambda: {}", fit.model.terms.len());
+//! println!("certified path: {} λ values, {} tree nodes",
+//!          fit.path.points.len(), fit.path.total_nodes());
 //! ```
+//!
+//! The same three lines fit graph databases (`&graph_db`, gSpan tree)
+//! and sequence databases (`&sequences`, PrefixSpan tree) — `fit` is
+//! generic over [`mining::PatternSubstrate`].
 
 pub mod benchkit;
 pub mod boosting;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod estimator;
 pub mod mining;
 pub mod model;
 pub mod path;
@@ -62,6 +77,8 @@ pub mod runtime;
 pub mod screening;
 pub mod solver;
 pub mod testutil;
+
+pub use estimator::{SppEstimator, SppFit};
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

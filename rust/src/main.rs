@@ -4,24 +4,38 @@
 //! spp path       --dataset cpdb --maxpat 5 [--method spp|boosting|both]
 //!                [--lambdas 100] [--min-ratio 0.01] [--scale 1.0]
 //!                [--certify] [--engine rust|xla] [--json out.json]
+//! spp fit        --dataset synth-seq --maxpat 3 --model out.spp
+//!                [--lambdas 100] [--min-ratio 0.01] [--scale 1.0]
+//!                [--lambda-index K]     # default: smallest λ
+//! spp predict    --dataset synth-seq --model out.spp [--scale 1.0]
+//!                [--top 10]
 //! spp lambda-max --dataset splice --maxpat 4 [--scale 1.0]
 //! spp mine       --dataset cpdb --maxpat 3 [--top 20] [--minsup 2]
 //! spp selftest   [--artifacts DIR]     # PJRT round-trip vs Rust engine
 //! spp datasets                          # list registry presets
 //! ```
+//!
+//! Every data-facing command dispatches the registry [`Dataset`] once
+//! and then runs generic code over [`PatternSubstrate`] — item-set,
+//! graph and sequence presets all flow through the same paths.
 
 use std::io::Write;
 
 use spp::cli;
 use spp::coordinator::{report, run_experiment, ExperimentSpec, Method};
 use spp::data::registry::{self, Dataset};
-use spp::mining::{PatternNode, TreeVisitor, Walk};
+use spp::mining::{PatternNode, PatternSubstrate, TreeVisitor, Walk};
+use spp::model::SparsePatternModel;
 use spp::path::PathConfig;
 use spp::screening::lambda_max::lambda_max;
-use spp::screening::Database;
+use spp::solver::Task;
+use spp::SppEstimator;
+
+/// Flags that never consume a following token (see `cli::Args`).
+const SWITCHES: &[&str] = &["certify"];
 
 fn main() {
-    let args = cli::Args::parse(std::env::args().skip(1));
+    let args = cli::Args::parse_with_switches(std::env::args().skip(1), SWITCHES);
     let code = match dispatch(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -35,6 +49,8 @@ fn main() {
 fn dispatch(args: &cli::Args) -> spp::Result<()> {
     match args.command.as_str() {
         "path" => cmd_path(args),
+        "fit" => cmd_fit(args),
+        "predict" => cmd_predict(args),
         "lambda-max" => cmd_lambda_max(args),
         "mine" => cmd_mine(args),
         "selftest" => cmd_selftest(args),
@@ -52,10 +68,12 @@ spp — Safe Pattern Pruning (KDD'16 reproduction)
 
 commands:
   path        compute a regularization path (SPP and/or boosting)
+  fit         fit a sparse pattern model (SPP path) and save it
+  predict     load a saved model and predict a dataset
   lambda-max  compute the paper's §3.4.1 lambda_max by bounded search
   mine        enumerate frequent patterns (substrate smoke test)
   selftest    verify the PJRT/XLA engines against the Rust engines
-  datasets    list the registered paper-scale synthetic datasets
+  datasets    list the registered synthetic datasets (all substrates)
 ";
 
 fn path_config(args: &cli::Args) -> spp::Result<PathConfig> {
@@ -112,6 +130,126 @@ fn cmd_path(args: &cli::Args) -> spp::Result<()> {
     Ok(())
 }
 
+/// Fit via the `SppEstimator` facade and persist the chosen model.
+fn cmd_fit(args: &cli::Args) -> spp::Result<()> {
+    let dataset = args.get_or("dataset", "splice");
+    let scale = args.get_f64("scale", 1.0)?;
+    let out = args
+        .flag("model")
+        .ok_or_else(|| anyhow::anyhow!("--model <file> is required"))?;
+    let info = registry::info(dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
+    let data = registry::lookup(dataset, scale)?;
+    let cfg = path_config(args)?;
+    let est = SppEstimator::new(info.task)
+        .maxpat(cfg.maxpat)
+        .minsup(cfg.minsup)
+        .lambda_grid(cfg.n_lambdas, cfg.lambda_min_ratio)
+        .certify(cfg.certify);
+    let fit = match &data {
+        Dataset::Graphs(g) => est.fit(g, &g.y)?,
+        Dataset::Itemsets(t) => est.fit(&t.db, &t.y)?,
+        Dataset::Sequences(s) => est.fit(&s.db, &s.y)?,
+    };
+    let idx = args.get_usize("lambda-index", fit.path.points.len() - 1)?;
+    anyhow::ensure!(
+        idx < fit.path.points.len(),
+        "--lambda-index {idx} out of range (path has {} points)",
+        fit.path.points.len()
+    );
+    let model = fit.model_at(idx);
+    std::fs::write(out, model.serialize())?;
+    println!(
+        "fit {dataset}: n={} task={:?} λ_max={:.6} path={} λs, {} tree nodes",
+        data.n_records(),
+        info.task,
+        fit.path.lambda_max,
+        fit.path.points.len(),
+        fit.path.total_nodes()
+    );
+    println!(
+        "model @ λ={:.6} (index {idx}): {} patterns, b={:+.4} -> wrote {out}",
+        model.lambda,
+        model.terms.len(),
+        model.b
+    );
+    Ok(())
+}
+
+/// Load a persisted model and predict a registry dataset.
+fn cmd_predict(args: &cli::Args) -> spp::Result<()> {
+    let dataset = args.get_or("dataset", "splice");
+    let scale = args.get_f64("scale", 1.0)?;
+    let top = args.get_usize("top", 10)?;
+    let file = args
+        .flag("model")
+        .ok_or_else(|| anyhow::anyhow!("--model <file> is required"))?;
+    let model = SparsePatternModel::parse(&std::fs::read_to_string(file)?)?;
+    let info = registry::info(dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
+    // A mismatched model scores every record as sign(b) / b and prints
+    // a confidently wrong metric — reject the combination up front.
+    anyhow::ensure!(
+        model.task == info.task,
+        "model {file} is a {:?} model but dataset '{dataset}' is a {:?} task",
+        model.task,
+        info.task
+    );
+    let expected_tag = {
+        use spp::data::{graph::GraphDatabase, sequence::Sequences, Transactions};
+        match info.kind {
+            registry::Kind::Itemset => Transactions::KIND_TAG,
+            registry::Kind::Graph => GraphDatabase::KIND_TAG,
+            registry::Kind::Sequence => Sequences::KIND_TAG,
+        }
+    };
+    anyhow::ensure!(
+        model.terms.is_empty() || model.terms.iter().any(|(p, _)| p.kind_tag() == expected_tag),
+        "model {file} has no {expected_tag}-kind patterns — it was fitted on a different \
+         substrate than dataset '{dataset}'"
+    );
+    let data = registry::lookup(dataset, scale)?;
+    let preds = match &data {
+        Dataset::Graphs(g) => model.predict(g),
+        Dataset::Itemsets(t) => model.predict(&t.db),
+        Dataset::Sequences(s) => model.predict(&s.db),
+    };
+    let y = data.targets();
+    match model.task {
+        Task::Classification => {
+            let correct = preds
+                .iter()
+                .zip(y)
+                .filter(|(&p, &yi)| (p >= 0.0) == (yi > 0.0))
+                .count();
+            println!(
+                "predict {dataset}: n={} accuracy={:.1}% ({} patterns in model)",
+                preds.len(),
+                100.0 * correct as f64 / preds.len().max(1) as f64,
+                model.terms.len()
+            );
+        }
+        Task::Regression => {
+            let mse = preds
+                .iter()
+                .zip(y)
+                .map(|(&p, &yi)| (p - yi) * (p - yi))
+                .sum::<f64>()
+                / preds.len().max(1) as f64;
+            println!(
+                "predict {dataset}: n={} mse={:.4} ({} patterns in model)",
+                preds.len(),
+                mse,
+                model.terms.len()
+            );
+        }
+    }
+    for (i, (&p, &yi)) in preds.iter().zip(y).take(top).enumerate() {
+        println!("  record {i:<5} pred={p:+.4} y={yi:+.4}");
+    }
+    Ok(())
+}
+
 /// SPP path with the XLA FISTA engine for the restricted solves.
 fn run_path_xla(spec: &ExperimentSpec) -> spp::Result<spp::coordinator::ExperimentResult> {
     use spp::path::compute_path_spp_with;
@@ -124,16 +262,13 @@ fn run_path_xla(spec: &ExperimentSpec) -> spp::Result<spp::coordinator::Experime
     let solver = XlaRestricted::new(&rt);
     let t = std::time::Instant::now();
     let path = match &data {
-        Dataset::Graphs(g) => {
-            compute_path_spp_with(&Database::Graphs(g), &g.y, info.task, &spec.cfg, &solver)
+        Dataset::Graphs(g) => compute_path_spp_with(g, &g.y, info.task, &spec.cfg, &solver),
+        Dataset::Itemsets(tr) => {
+            compute_path_spp_with(&tr.db, &tr.y, info.task, &spec.cfg, &solver)
         }
-        Dataset::Itemsets(tr) => compute_path_spp_with(
-            &Database::Itemsets(&tr.db),
-            &tr.y,
-            info.task,
-            &spec.cfg,
-            &solver,
-        ),
+        Dataset::Sequences(s) => {
+            compute_path_spp_with(&s.db, &s.y, info.task, &spec.cfg, &solver)
+        }
     };
     eprintln!(
         "xla engine: {} subproblem fallbacks to CD",
@@ -164,10 +299,9 @@ fn cmd_lambda_max(args: &cli::Args) -> spp::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
     let data = registry::lookup(dataset, scale)?;
     let lm = match &data {
-        Dataset::Graphs(g) => lambda_max(&Database::Graphs(g), &g.y, info.task, maxpat, 1),
-        Dataset::Itemsets(t) => {
-            lambda_max(&Database::Itemsets(&t.db), &t.y, info.task, maxpat, 1)
-        }
+        Dataset::Graphs(g) => lambda_max(g, &g.y, info.task, maxpat, 1),
+        Dataset::Itemsets(t) => lambda_max(&t.db, &t.y, info.task, maxpat, 1),
+        Dataset::Sequences(s) => lambda_max(&s.db, &s.y, info.task, maxpat, 1),
     };
     println!(
         "dataset={dataset} n={} task={:?} maxpat={maxpat} lambda_max={:.6} b0={:.6} nodes={} pruned={}",
@@ -201,8 +335,9 @@ fn cmd_mine(args: &cli::Args) -> spp::Result<()> {
     }
     let mut c = Collect { rows: Vec::new() };
     match &data {
-        Dataset::Graphs(g) => Database::Graphs(g).traverse(maxpat, minsup, &mut c),
-        Dataset::Itemsets(t) => Database::Itemsets(&t.db).traverse(maxpat, minsup, &mut c),
+        Dataset::Graphs(g) => g.traverse(maxpat, minsup, &mut c),
+        Dataset::Itemsets(t) => t.db.traverse(maxpat, minsup, &mut c),
+        Dataset::Sequences(s) => s.db.traverse(maxpat, minsup, &mut c),
     }
     c.rows.sort_by(|a, b| b.0.cmp(&a.0));
     println!(
@@ -218,7 +353,7 @@ fn cmd_mine(args: &cli::Args) -> spp::Result<()> {
 fn cmd_selftest(args: &cli::Args) -> spp::Result<()> {
     use spp::runtime::{default_artifact_dir, PjrtRuntime, XlaFistaSolver, XlaSppcScorer};
     use spp::screening::fold_weights;
-    use spp::solver::{CdSolver, Task};
+    use spp::solver::CdSolver;
     use spp::testutil::SplitMix64;
 
     let dir = args
@@ -272,7 +407,8 @@ fn cmd_selftest(args: &cli::Args) -> spp::Result<()> {
 }
 
 fn cmd_datasets() -> spp::Result<()> {
-    println!("{:<14} {:<8} {:<15} paper_n", "name", "kind", "task");
+    let (name, kind, task) = ("name", "kind", "task");
+    println!("{name:<14} {kind:<8} {task:<15} paper_n");
     for d in registry::ALL {
         println!(
             "{:<14} {:<8} {:<15} {}",

@@ -1,10 +1,11 @@
 //! Pattern-tree mining substrates.
 //!
-//! Both miners ([`itemset::ItemsetMiner`] and [`gspan::GSpanMiner`])
-//! enumerate an anti-monotone pattern tree (paper Fig. 1): every child
-//! pattern is a superset of its parent, so `x_{it'} = 1 ⟹ x_{it} = 1`
-//! and supports only shrink along any root-to-leaf path.  That property
-//! is what both the SPP rule and the boosting bound exploit.
+//! The miners ([`itemset::ItemsetMiner`], [`gspan::GSpanMiner`],
+//! [`prefixspan::PrefixSpanMiner`]) enumerate an anti-monotone pattern
+//! tree (paper Fig. 1): every child pattern extends its parent, so
+//! `x_{it'} = 1 ⟹ x_{it} = 1` and supports only shrink along any
+//! root-to-leaf path.  That property is what both the SPP rule and the
+//! boosting bound exploit.
 //!
 //! The search is driven through the [`TreeVisitor`] callback: the
 //! visitor sees each canonical pattern exactly once, together with its
@@ -13,9 +14,18 @@
 //! ([`Walk::Prune`]).  SPP, the boosting most-violating search, and the
 //! λ_max search are all visitors over the same trees — which is exactly
 //! the fairness discipline the paper's timing comparison needs.
+//!
+//! The substrates themselves plug into the rest of the crate through
+//! the open [`PatternSubstrate`] trait: every search (`sppc`,
+//! `lambda_max`, `certify`, boosting, the regularization path, CV) is
+//! generic over it, so adding a new pattern language is a matter of
+//! implementing the trait — no search code changes.  The crate ships
+//! three substrates: transaction databases (item-sets), graph databases
+//! (connected subgraphs), and sequence databases (subsequences).
 
 pub mod gspan;
 pub mod itemset;
+pub mod prefixspan;
 
 /// Decision returned by a visitor for the subtree rooted at a node.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -28,20 +38,28 @@ pub enum Walk {
 }
 
 /// Owned identity of a pattern (for reporting / model output).
+///
+/// One variant per shipped substrate; the per-kind logic (matching,
+/// persistence codec) lives in each substrate's [`PatternSubstrate`]
+/// impl — adding a substrate means adding a variant here and
+/// implementing the trait next to its database type.
 #[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Pattern {
     /// Sorted item ids.
     Itemset(Vec<u32>),
     /// Canonical (minimal) DFS code.
     Subgraph(Vec<gspan::DfsEdge>),
+    /// Ordered symbol ids (a subsequence pattern; repeats allowed).
+    Sequence(Vec<u32>),
 }
 
 impl Pattern {
-    /// Pattern size: #items or #edges — the quantity `maxpat` bounds.
+    /// Pattern size: #items, #edges or #symbols — what `maxpat` bounds.
     pub fn size(&self) -> usize {
         match self {
             Pattern::Itemset(v) => v.len(),
             Pattern::Subgraph(c) => c.len(),
+            Pattern::Sequence(s) => s.len(),
         }
     }
 
@@ -62,8 +80,110 @@ impl Pattern {
                 })
                 .collect::<Vec<_>>()
                 .join(""),
+            Pattern::Sequence(s) => format!(
+                "<{}>",
+                s.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+            ),
         }
     }
+
+    /// The persistence tag of the substrate owning this pattern kind
+    /// (the record tag of the `spp-model v1` text format).
+    pub fn kind_tag(&self) -> &'static str {
+        match self {
+            Pattern::Itemset(_) => crate::data::Transactions::KIND_TAG,
+            Pattern::Subgraph(_) => crate::data::graph::GraphDatabase::KIND_TAG,
+            Pattern::Sequence(_) => crate::data::sequence::Sequences::KIND_TAG,
+        }
+    }
+
+    /// Serialize the pattern body through the owning substrate's codec
+    /// (inverse of [`Pattern::decode`] for the same tag).
+    pub fn encode_body(&self) -> String {
+        match self {
+            Pattern::Itemset(_) => crate::data::Transactions::format_pattern(self),
+            Pattern::Subgraph(_) => crate::data::graph::GraphDatabase::format_pattern(self),
+            Pattern::Sequence(_) => crate::data::sequence::Sequences::format_pattern(self),
+        }
+    }
+
+    /// Parse a persisted pattern by dispatching `tag` to the substrate
+    /// that registered it (the only tag → substrate map in the crate).
+    pub fn decode(tag: &str, body: &str) -> crate::Result<Pattern> {
+        use crate::data::{graph::GraphDatabase, sequence::Sequences, Transactions};
+        match tag {
+            t if t == Transactions::KIND_TAG => Transactions::parse_pattern(body),
+            t if t == GraphDatabase::KIND_TAG => GraphDatabase::parse_pattern(body),
+            t if t == Sequences::KIND_TAG => Sequences::parse_pattern(body),
+            other => anyhow::bail!("unknown pattern record '{other}'"),
+        }
+    }
+}
+
+/// An open pattern-mining substrate: a database whose records carry an
+/// anti-monotone pattern tree.
+///
+/// This is the seam every search in the crate is generic over.  The
+/// contract an implementation must honour:
+///
+/// * **Anti-monotonicity** — `traverse` must enumerate a tree in which
+///   every child pattern's support is a subset of its parent's (paper
+///   Fig. 1).  The SPP rule (Theorem 2) and the boosting envelope bound
+///   are *unsafe* without it: both certify whole subtrees from a bound
+///   that only decreases along root-to-leaf paths.
+/// * **Canonical enumeration** — each pattern is visited exactly once,
+///   with its sorted, deduplicated record-id support.
+/// * **Miner/matcher agreement** — `matches(p, record(i))` must hold
+///   exactly when `i` appears in the support `traverse` reports for
+///   `p`; prediction on new records and CV rely on it.
+/// * **Codec round-trip** — `parse_pattern(format_pattern(p)) == p` for
+///   every pattern this substrate can emit, and `KIND_TAG` must be
+///   unique across substrates (it keys [`Pattern::decode`]).
+///
+/// See `DESIGN.md` §"Substrate API" for a walkthrough of adding a
+/// fourth substrate.
+pub trait PatternSubstrate {
+    /// One record of the database (a transaction row, a graph, a
+    /// sequence); unsized view types like `[u32]` are allowed.
+    type Record: ?Sized;
+
+    /// Number of records (= length of every support universe).
+    fn n_records(&self) -> usize;
+
+    /// Depth-first canonical traversal with subtree pruning: the
+    /// visitor sees each pattern of size `1..=maxpat` with support
+    /// `>= minsup` exactly once and steers via [`Walk`].
+    fn traverse(&self, maxpat: usize, minsup: usize, visitor: &mut dyn TreeVisitor);
+
+    /// Does `pattern` occur in `record`?  Must return `false` for
+    /// foreign pattern kinds (a model mixing substrates scores only its
+    /// own terms against each record type).
+    fn matches(pattern: &Pattern, record: &Self::Record) -> bool;
+
+    /// Borrow record `i` (prediction / validation input).
+    fn record(&self, i: usize) -> &Self::Record;
+
+    /// Clone the sub-database holding `indices` (in order) — the CV
+    /// fold split and any other record-subset workflow.
+    fn select(&self, indices: &[usize]) -> Self
+    where
+        Self: Sized;
+
+    /// Parse a persisted pattern body (inverse of `format_pattern`).
+    fn parse_pattern(body: &str) -> crate::Result<Pattern>
+    where
+        Self: Sized;
+
+    /// Serialize a pattern of this substrate's kind to its persisted
+    /// body form.  Panics on foreign kinds (only reachable through
+    /// [`Pattern::encode_body`], which dispatches by kind).
+    fn format_pattern(pattern: &Pattern) -> String
+    where
+        Self: Sized;
+
+    /// Unique one-token tag naming this substrate's patterns in the
+    /// model text format (`I`, `G`, `S` for the shipped three).
+    const KIND_TAG: &'static str;
 }
 
 /// A node of the pattern tree as shown to visitors.
@@ -79,6 +199,7 @@ pub struct PatternNode<'a> {
 pub(crate) enum PatternBorrow<'a> {
     Itemset(&'a [u32]),
     Subgraph(&'a [gspan::DfsEdge]),
+    Sequence(&'a [u32]),
 }
 
 impl<'a> PatternNode<'a> {
@@ -98,11 +219,20 @@ impl<'a> PatternNode<'a> {
         }
     }
 
+    pub(crate) fn sequence(symbols: &'a [u32], support: &'a [u32]) -> Self {
+        PatternNode {
+            support,
+            depth: symbols.len(),
+            pattern: PatternBorrow::Sequence(symbols),
+        }
+    }
+
     /// Clone the borrowed identity into an owned [`Pattern`].
     pub fn to_pattern(&self) -> Pattern {
         match self.pattern {
             PatternBorrow::Itemset(v) => Pattern::Itemset(v.to_vec()),
             PatternBorrow::Subgraph(c) => Pattern::Subgraph(c.to_vec()),
+            PatternBorrow::Sequence(s) => Pattern::Sequence(s.to_vec()),
         }
     }
 }
@@ -184,5 +314,39 @@ mod tests {
         let node = PatternNode::itemset(&items, &sup);
         assert_eq!(node.to_pattern(), Pattern::Itemset(vec![2, 5]));
         assert_eq!(node.depth, 2);
+    }
+
+    #[test]
+    fn sequence_patterns_have_size_display_and_identity() {
+        let sup = vec![0u32, 3];
+        let syms = vec![4u32, 4, 1];
+        let node = PatternNode::sequence(&syms, &sup);
+        assert_eq!(node.depth, 3);
+        let p = node.to_pattern();
+        assert_eq!(p, Pattern::Sequence(vec![4, 4, 1]));
+        assert_eq!(p.size(), 3);
+        assert_eq!(p.display(), "<4,4,1>");
+    }
+
+    #[test]
+    fn codec_round_trips_every_kind() {
+        let pats = [
+            Pattern::Itemset(vec![1, 4, 9]),
+            Pattern::Subgraph(vec![gspan::DfsEdge {
+                from: 0,
+                to: 1,
+                from_label: 2,
+                elabel: 0,
+                to_label: 3,
+            }]),
+            Pattern::Sequence(vec![7, 7, 2]),
+        ];
+        let mut tags = std::collections::HashSet::new();
+        for p in &pats {
+            assert!(tags.insert(p.kind_tag()), "duplicate substrate tag");
+            let back = Pattern::decode(p.kind_tag(), &p.encode_body()).unwrap();
+            assert_eq!(&back, p);
+        }
+        assert!(Pattern::decode("X", "1").is_err());
     }
 }

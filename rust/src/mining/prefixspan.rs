@@ -1,0 +1,222 @@
+//! Subsequence enumeration tree, PrefixSpan style (Pei et al., ICDE
+//! 2001) — the third substrate, proving [`super::PatternSubstrate`] is
+//! genuinely open.
+//!
+//! A pattern is an ordered list of symbols `⟨a_1 … a_k⟩` (repeats
+//! allowed); it matches record `s` iff it is a — not necessarily
+//! contiguous — subsequence of `s`.  The enumeration tree extends each
+//! prefix by one symbol, so every pattern has exactly one parent (its
+//! longest proper prefix) and is visited exactly once, in lexicographic
+//! order.
+//!
+//! Traversal uses the classic pseudo-projection: each node carries, per
+//! supporting sequence, the position just past the *leftmost* embedding
+//! of the prefix.  Greedy leftmost matching is optimal for subsequence
+//! containment (it leaves the longest possible suffix), so the
+//! projected suffix contains symbol `a` iff `prefix·a` is a subsequence
+//! of the record — which makes the reported supports exactly the
+//! `x_{it}` columns, and makes them shrink along every root-to-leaf
+//! path.  That anti-monotonicity is what the SPP rule and the boosting
+//! envelope bound require of a substrate.
+
+use super::{PatternNode, TreeVisitor, Walk};
+use crate::data::sequence::Sequences;
+
+/// Configurable PrefixSpan miner.
+pub struct PrefixSpanMiner<'a> {
+    db: &'a Sequences,
+    /// Maximum pattern length (the paper's `maxpat`).
+    pub maxpat: usize,
+    /// Minimum support; patterns below it are not visited (their
+    /// subtrees are skipped — safe, supports are anti-monotone).
+    pub minsup: usize,
+}
+
+/// Reusable per-suffix first-occurrence marks (one stamp slot per
+/// symbol; epoch bumped per suffix scan, so no clearing in the loop).
+struct Scratch {
+    stamp: Vec<u64>,
+    epoch: u64,
+}
+
+impl<'a> PrefixSpanMiner<'a> {
+    pub fn new(db: &'a Sequences, maxpat: usize) -> Self {
+        PrefixSpanMiner {
+            db,
+            maxpat,
+            minsup: 1,
+        }
+    }
+
+    /// Depth-first traversal; the visitor sees each subsequence pattern
+    /// exactly once, in lexicographic order.
+    pub fn traverse<V: TreeVisitor + ?Sized>(&self, visitor: &mut V) {
+        if self.maxpat == 0 || self.db.seqs.is_empty() {
+            return;
+        }
+        // Root projection: every sequence from position 0.
+        let root: Vec<(u32, u32)> = (0..self.db.seqs.len() as u32).map(|i| (i, 0)).collect();
+        let mut prefix: Vec<u32> = Vec::with_capacity(self.maxpat);
+        let mut scratch = Scratch {
+            stamp: vec![0; self.db.n_symbols],
+            epoch: 0,
+        };
+        self.recurse(&root, &mut prefix, &mut scratch, visitor);
+    }
+
+    /// `proj` holds one `(sid, pos)` entry per supporting sequence:
+    /// `pos` is just past the leftmost embedding of `prefix` in `sid`.
+    /// Entries are in ascending `sid` order, so child supports come out
+    /// sorted for free.
+    fn recurse<V: TreeVisitor + ?Sized>(
+        &self,
+        proj: &[(u32, u32)],
+        prefix: &mut Vec<u32>,
+        scratch: &mut Scratch,
+        visitor: &mut V,
+    ) {
+        // One pass over the projected suffixes: for each symbol, the
+        // first occurrence per sequence becomes the child projection.
+        let mut ext: std::collections::BTreeMap<u32, Vec<(u32, u32)>> =
+            std::collections::BTreeMap::new();
+        for &(sid, pos) in proj {
+            let seq = &self.db.seqs[sid as usize];
+            scratch.epoch += 1;
+            for (k, &a) in seq[pos as usize..].iter().enumerate() {
+                let slot = &mut scratch.stamp[a as usize];
+                if *slot != scratch.epoch {
+                    *slot = scratch.epoch;
+                    ext.entry(a).or_default().push((sid, pos + k as u32 + 1));
+                }
+            }
+        }
+        for (a, child) in &ext {
+            if child.len() < self.minsup {
+                continue;
+            }
+            prefix.push(*a);
+            let support: Vec<u32> = child.iter().map(|&(sid, _)| sid).collect();
+            let node = PatternNode::sequence(prefix, &support);
+            let walk = visitor.visit(&node);
+            if walk == Walk::Descend && prefix.len() < self.maxpat {
+                self.recurse(child, prefix, scratch, visitor);
+            }
+            prefix.pop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sequence::is_subsequence;
+    use crate::mining::Pattern;
+    use crate::testutil::oracle;
+
+    fn db() -> Sequences {
+        Sequences {
+            n_symbols: 4,
+            seqs: vec![
+                vec![0, 1, 2],
+                vec![1, 0, 1],
+                vec![2, 2, 3],
+                vec![0, 1],
+            ],
+        }
+    }
+
+    fn collect(db: &Sequences, maxpat: usize, minsup: usize) -> Vec<(Vec<u32>, Vec<u32>)> {
+        let mut out = Vec::new();
+        let mut v = |n: &PatternNode<'_>| {
+            if let Pattern::Sequence(s) = n.to_pattern() {
+                out.push((s, n.support.to_vec()));
+            }
+            Walk::Descend
+        };
+        let mut m = PrefixSpanMiner::new(db, maxpat);
+        m.minsup = minsup;
+        m.traverse(&mut v);
+        out
+    }
+
+    #[test]
+    fn matches_bruteforce_enumeration() {
+        let db = db();
+        for maxpat in [1usize, 2, 3] {
+            let got: std::collections::BTreeMap<Vec<u32>, Vec<u32>> =
+                collect(&db, maxpat, 1).into_iter().collect();
+            let brute = oracle::all_sequences(&db, maxpat);
+            assert_eq!(got, brute, "maxpat={maxpat}");
+        }
+    }
+
+    #[test]
+    fn supports_agree_with_subsequence_matcher() {
+        let db = db();
+        for (pat, sup) in collect(&db, 3, 1) {
+            let expected: Vec<u32> = db
+                .seqs
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| is_subsequence(s, &pat))
+                .map(|(i, _)| i as u32)
+                .collect();
+            assert_eq!(sup, expected, "pattern {pat:?}");
+        }
+    }
+
+    #[test]
+    fn repeats_are_enumerated() {
+        // <1,1> occurs in [1,0,1]; <2,2> occurs in [2,2,3]
+        let got: std::collections::BTreeMap<Vec<u32>, Vec<u32>> =
+            collect(&db(), 2, 1).into_iter().collect();
+        assert_eq!(got[&vec![1u32, 1]], vec![1]);
+        assert_eq!(got[&vec![2u32, 2]], vec![2]);
+    }
+
+    #[test]
+    fn respects_maxpat_and_minsup() {
+        let db = db();
+        assert!(collect(&db, 2, 1).iter().all(|(p, _)| p.len() <= 2));
+        assert!(collect(&db, 3, 2).iter().all(|(_, s)| s.len() >= 2));
+        assert!(collect(&db, 0, 1).is_empty());
+    }
+
+    #[test]
+    fn prune_skips_subtree_but_not_siblings() {
+        let db = db();
+        let mut seen: Vec<Vec<u32>> = Vec::new();
+        let mut v = |n: &PatternNode<'_>| {
+            let Pattern::Sequence(s) = n.to_pattern() else {
+                unreachable!()
+            };
+            seen.push(s.clone());
+            if s == vec![0] {
+                Walk::Prune
+            } else {
+                Walk::Descend
+            }
+        };
+        PrefixSpanMiner::new(&db, 3).traverse(&mut v);
+        assert!(seen.contains(&vec![0]));
+        assert!(!seen.iter().any(|s| s.len() > 1 && s[0] == 0));
+        assert!(seen.contains(&vec![1, 2]), "{seen:?}"); // sibling subtree intact
+    }
+
+    #[test]
+    fn anti_monotone_supports_along_paths() {
+        let db = db();
+        let mut stack: Vec<Vec<u32>> = Vec::new();
+        let mut v = |n: &PatternNode<'_>| {
+            while stack.len() >= n.depth {
+                stack.pop();
+            }
+            if let Some(parent) = stack.last() {
+                assert!(n.support.iter().all(|t| parent.contains(t)));
+            }
+            stack.push(n.support.to_vec());
+            Walk::Descend
+        };
+        PrefixSpanMiner::new(&db, 3).traverse(&mut v);
+    }
+}

@@ -2,20 +2,27 @@
 //!
 //! A [`SparsePatternModel`] is what a path point denotes as a usable
 //! artifact: the intercept plus `(pattern, weight)` pairs.  Prediction
-//! evaluates `x_it = I(t ⊆ G_i)` on *new* records — trivial subset
-//! tests for item-sets, subgraph-isomorphism (label-respecting
-//! backtracking, fine at pattern size ≤ maxpat) for graphs.
+//! evaluates `x_it = I(t occurs in record)` on *new* records through
+//! the owning substrate's [`PatternSubstrate::matches`] — subset tests
+//! for item-sets, subgraph isomorphism for graphs, subsequence
+//! containment for sequences.  Nothing in this module knows the
+//! pattern kinds; scoring and the text codec both route through the
+//! substrate trait, so a fourth substrate needs no change here.
 //!
 //! Persistence is a line-oriented text format (the vendored crate set
-//! has no serde): stable, diffable, and round-trip tested.
+//! has no serde): stable, diffable, and round-trip tested.  Each term
+//! line is `<KIND_TAG> <weight> <body>`, with tag and body delegated
+//! to the substrate codec via [`Pattern::encode_body`] /
+//! [`Pattern::decode`].
 
-use crate::data::graph::Graph;
-use crate::data::synth_itemsets::contains_all;
+use crate::data::graph::{Graph, GraphDatabase};
+use crate::data::sequence::Sequences;
 use crate::data::Transactions;
-use crate::mining::gspan::{code_to_labeled_graph, DfsEdge};
-use crate::mining::Pattern;
+use crate::mining::{Pattern, PatternSubstrate};
 use crate::path::PathPoint;
 use crate::solver::Task;
+
+pub use crate::data::graph::contains_subgraph;
 
 /// A fitted sparse linear model over patterns.
 #[derive(Clone, Debug, PartialEq)]
@@ -37,38 +44,44 @@ impl SparsePatternModel {
         }
     }
 
-    /// Raw score `Σ_t w_t·I(t ⊆ row) + b` for one transaction.
-    pub fn score_itemset(&self, row: &[u32]) -> f64 {
+    /// Raw score `Σ_t w_t·I(t occurs in record) + b` for one record of
+    /// substrate `S`.  Terms of foreign pattern kinds contribute
+    /// nothing (their `matches` is `false` by the substrate contract).
+    pub fn score<S: PatternSubstrate>(&self, record: &S::Record) -> f64 {
         let mut s = self.b;
         for (pat, w) in &self.terms {
-            if let Pattern::Itemset(items) = pat {
-                if contains_all(row, items) {
-                    s += w;
-                }
+            if S::matches(pat, record) {
+                s += w;
             }
         }
         s
+    }
+
+    /// Predictions for a whole database (sign for classification).
+    pub fn predict<S: PatternSubstrate>(&self, db: &S) -> Vec<f64> {
+        (0..db.n_records())
+            .map(|i| self.output(self.score::<S>(db.record(i))))
+            .collect()
+    }
+
+    /// Raw score for one transaction (see [`SparsePatternModel::score`]).
+    pub fn score_itemset(&self, row: &[u32]) -> f64 {
+        self.score::<Transactions>(row)
     }
 
     /// Raw score for one graph record.
     pub fn score_graph(&self, g: &Graph) -> f64 {
-        let mut s = self.b;
-        for (pat, w) in &self.terms {
-            if let Pattern::Subgraph(code) = pat {
-                if contains_subgraph(g, &code_to_labeled_graph(code)) {
-                    s += w;
-                }
-            }
-        }
-        s
+        self.score::<GraphDatabase>(g)
+    }
+
+    /// Raw score for one sequence record.
+    pub fn score_sequence(&self, seq: &[u32]) -> f64 {
+        self.score::<Sequences>(seq)
     }
 
     /// Predictions for a transaction database (sign for classification).
     pub fn predict_itemsets(&self, db: &Transactions) -> Vec<f64> {
-        db.items
-            .iter()
-            .map(|row| self.output(self.score_itemset(row)))
-            .collect()
+        self.predict(db)
     }
 
     /// Predictions for a slice of graphs.
@@ -105,21 +118,12 @@ impl SparsePatternModel {
             self.b
         ));
         for (pat, w) in &self.terms {
-            match pat {
-                Pattern::Itemset(items) => {
-                    let list: Vec<String> = items.iter().map(|i| i.to_string()).collect();
-                    out.push_str(&format!("I {:.17e} {}\n", w, list.join(",")));
-                }
-                Pattern::Subgraph(code) => {
-                    let list: Vec<String> = code
-                        .iter()
-                        .map(|e| {
-                            format!("{}:{}:{}:{}:{}", e.from, e.to, e.from_label, e.elabel, e.to_label)
-                        })
-                        .collect();
-                    out.push_str(&format!("G {:.17e} {}\n", w, list.join(",")));
-                }
-            }
+            out.push_str(&format!(
+                "{} {:.17e} {}\n",
+                pat.kind_tag(),
+                w,
+                pat.encode_body()
+            ));
         }
         out
     }
@@ -166,31 +170,8 @@ impl SparsePatternModel {
             let body = f
                 .next()
                 .ok_or_else(|| anyhow::anyhow!("line {}: missing pattern", lineno + 2))?;
-            let pat = match kind {
-                "I" => Pattern::Itemset(
-                    body.split(',')
-                        .map(|t| t.parse::<u32>())
-                        .collect::<Result<Vec<_>, _>>()?,
-                ),
-                "G" => {
-                    let code: Vec<DfsEdge> = body
-                        .split(',')
-                        .map(|t| -> crate::Result<DfsEdge> {
-                            let p: Vec<&str> = t.split(':').collect();
-                            anyhow::ensure!(p.len() == 5, "bad edge '{t}'");
-                            Ok(DfsEdge {
-                                from: p[0].parse()?,
-                                to: p[1].parse()?,
-                                from_label: p[2].parse()?,
-                                elabel: p[3].parse()?,
-                                to_label: p[4].parse()?,
-                            })
-                        })
-                        .collect::<crate::Result<Vec<_>>>()?;
-                    Pattern::Subgraph(code)
-                }
-                other => anyhow::bail!("line {}: unknown record '{other}'", lineno + 2),
-            };
+            let pat = Pattern::decode(kind, body)
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 2))?;
             terms.push((pat, w));
         }
         Ok(SparsePatternModel {
@@ -202,96 +183,11 @@ impl SparsePatternModel {
     }
 }
 
-/// Label-respecting subgraph-isomorphism test: is `pattern` (connected,
-/// small) contained in `g`?  Plain backtracking over vertex mappings
-/// with degree/label pruning — exponential in |pattern| only, which
-/// maxpat bounds.
-pub fn contains_subgraph(g: &Graph, pattern: &Graph) -> bool {
-    if pattern.n_vertices() == 0 {
-        return true;
-    }
-    if pattern.n_vertices() > g.n_vertices() || pattern.n_edges() > g.n_edges() {
-        return false;
-    }
-    let g_adj = g.adjacency();
-    let p_adj = pattern.adjacency();
-    let mut mapping = vec![u32::MAX; pattern.n_vertices()]; // pattern v -> g v
-    let mut used = vec![false; g.n_vertices()];
-
-    // match pattern vertices in a connectivity-respecting order
-    let order = connectivity_order(pattern, &p_adj);
-    backtrack(g, pattern, &g_adj, &p_adj, &order, 0, &mut mapping, &mut used)
-}
-
-fn connectivity_order(pattern: &Graph, adj: &[Vec<(u32, u32)>]) -> Vec<u32> {
-    let mut order = vec![0u32];
-    let mut seen = vec![false; pattern.n_vertices()];
-    seen[0] = true;
-    while order.len() < pattern.n_vertices() {
-        let mut next = None;
-        'outer: for &v in &order {
-            for &(w, _) in &adj[v as usize] {
-                if !seen[w as usize] {
-                    next = Some(w);
-                    break 'outer;
-                }
-            }
-        }
-        let v = next.expect("pattern must be connected");
-        seen[v as usize] = true;
-        order.push(v);
-    }
-    order
-}
-
-#[allow(clippy::too_many_arguments)]
-fn backtrack(
-    g: &Graph,
-    pattern: &Graph,
-    g_adj: &[Vec<(u32, u32)>],
-    p_adj: &[Vec<(u32, u32)>],
-    order: &[u32],
-    depth: usize,
-    mapping: &mut Vec<u32>,
-    used: &mut Vec<bool>,
-) -> bool {
-    if depth == order.len() {
-        return true;
-    }
-    let pv = order[depth] as usize;
-    // candidates: all g vertices with the right label whose edges to
-    // already-mapped pattern neighbors exist with matching labels
-    'cand: for gv in 0..g.n_vertices() {
-        if used[gv] || g.vlabels[gv] != pattern.vlabels[pv] {
-            continue;
-        }
-        for &(pw, el) in &p_adj[pv] {
-            let mapped = mapping[pw as usize];
-            if mapped != u32::MAX {
-                let ok = g_adj[gv]
-                    .iter()
-                    .any(|&(gn, gel)| gn == mapped && gel == el);
-                if !ok {
-                    continue 'cand;
-                }
-            }
-        }
-        mapping[pv] = gv as u32;
-        used[gv] = true;
-        if backtrack(g, pattern, g_adj, p_adj, order, depth + 1, mapping, used) {
-            return true;
-        }
-        mapping[pv] = u32::MAX;
-        used[gv] = false;
-    }
-    false
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mining::{PatternNode, TreeVisitor, Walk};
-    use crate::screening::Database;
+    use crate::mining::gspan::code_to_labeled_graph;
+    use crate::mining::{PatternNode, Walk};
 
     fn path(labels: &[u32], elabels: &[u32]) -> Graph {
         let mut g = Graph::new();
@@ -354,7 +250,7 @@ mod tests {
             }
             Walk::Descend
         };
-        Database::Graphs(&d.db).traverse(2, 1, &mut v);
+        d.db.traverse(2, 1, &mut v);
         assert!(checked > 0);
     }
 
@@ -404,10 +300,72 @@ mod tests {
     }
 
     #[test]
+    fn model_round_trip_sequences() {
+        let m = SparsePatternModel {
+            task: Task::Classification,
+            lambda: 0.5,
+            b: -0.25,
+            terms: vec![
+                (Pattern::Sequence(vec![3, 3, 1]), 1.0),
+                (Pattern::Sequence(vec![2]), -0.5),
+            ],
+        };
+        let text = m.serialize();
+        assert!(text.contains("\nS "), "sequence terms use the S tag:\n{text}");
+        let back = SparsePatternModel::parse(&text).unwrap();
+        assert_eq!(m, back);
+        // <3,3,1> ⊑ [3,0,3,1]: b + 1.0 = 0.75 -> +1; [2,3]: b - 0.5 -> -1
+        let db = Sequences {
+            n_symbols: 4,
+            seqs: vec![vec![3, 0, 3, 1], vec![2, 3], vec![]],
+        };
+        assert_eq!(back.score_sequence(&[3, 0, 3, 1]), 0.75);
+        assert_eq!(back.predict(&db), vec![1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn mixed_substrate_model_scores_only_its_own_terms() {
+        // a model holding all three kinds round-trips and each scorer
+        // sees only the matching kind
+        let m = SparsePatternModel {
+            task: Task::Regression,
+            lambda: 1.0,
+            b: 0.0,
+            terms: vec![
+                (Pattern::Itemset(vec![1]), 1.0),
+                (Pattern::Sequence(vec![1]), 2.0),
+            ],
+        };
+        let back = SparsePatternModel::parse(&m.serialize()).unwrap();
+        assert_eq!(m, back);
+        assert_eq!(back.score_itemset(&[1]), 1.0);
+        assert_eq!(back.score_sequence(&[1]), 2.0);
+    }
+
+    #[test]
     fn parse_rejects_garbage() {
         assert!(SparsePatternModel::parse("").is_err());
         assert!(SparsePatternModel::parse("not a model\n").is_err());
         assert!(SparsePatternModel::parse("spp-model v1 task=regression lambda=1 b=0\nX 1 2\n").is_err());
         assert!(SparsePatternModel::parse("spp-model v1 task=regression lambda=1 b=0\nI nope 2\n").is_err());
+        assert!(SparsePatternModel::parse("spp-model v1 task=regression lambda=1 b=0\nS 1 x\n").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_dfs_codes() {
+        let model = |body: &str| {
+            SparsePatternModel::parse(&format!(
+                "spp-model v1 task=regression lambda=1 b=0\nG 1 {body}\n"
+            ))
+        };
+        // vertex id out of range for the edge count (would allocate
+        // huge graphs at predict time)
+        assert!(model("0:100000000:0:0:1").is_err());
+        // disconnected pattern graph (would panic in the matcher)
+        assert!(model("0:1:0:0:1,2:3:5:0:6,0:1:0:0:1").is_err());
+        // undetermined vertex label
+        assert!(model("0:1:0:0:1,1:2:-1:0:-1").is_err());
+        // a well-formed code still parses
+        assert!(model("0:1:0:0:1,1:2:-1:0:2").is_ok());
     }
 }

@@ -3,17 +3,18 @@
 //! selection, a sequence of solutions with various different penalty
 //! parameters must be trained").
 //!
-//! Each fold computes a full warm-started SPP path on its training
-//! split; validation loss is evaluated per λ with the
-//! [`crate::model::SparsePatternModel`] matcher, and the λ minimizing
-//! the mean validation loss wins.
+//! [`cross_validate`] is generic over [`PatternSubstrate`]: folds are
+//! split with the substrate's `select`, each fold computes a full
+//! warm-started SPP path on its training split, and validation loss is
+//! evaluated per λ by scoring held-out records through the substrate's
+//! `matches` (via [`crate::model::SparsePatternModel`]).  The λ
+//! minimizing the mean validation loss wins.
 
 use crate::data::graph::GraphDatabase;
 use crate::data::Transactions;
-use crate::mining::Pattern;
+use crate::mining::PatternSubstrate;
 use crate::model::SparsePatternModel;
 use crate::path::{compute_path_spp, PathConfig};
-use crate::screening::Database;
 use crate::solver::Task;
 use crate::testutil::SplitMix64;
 
@@ -67,11 +68,47 @@ fn loss(task: Task, pred: f64, y: f64) -> f64 {
     }
 }
 
-/// K-fold CV for item-set databases.
+/// K-fold CV over the SPP path, generic over the pattern substrate.
 ///
 /// λ values are aligned across folds *by grid position* (each fold has
 /// its own λ_max, so absolute λ differs; the fraction `λ/λ_max` is the
 /// shared coordinate, as is standard for path-based CV).
+pub fn cross_validate<S: PatternSubstrate>(
+    db: &S,
+    y: &[f64],
+    task: Task,
+    cfg: &PathConfig,
+    k: usize,
+    seed: u64,
+) -> CvResult {
+    let n = db.n_records();
+    assert_eq!(n, y.len());
+    let folds = fold_assignment(n, k, seed);
+    let mut fold_losses = vec![vec![0.0f64; k]; cfg.n_lambdas];
+    let mut actives = vec![0.0f64; cfg.n_lambdas];
+
+    for f in 0..k {
+        let train_idx: Vec<usize> = (0..n).filter(|&i| folds[i] != f).collect();
+        let val_idx: Vec<usize> = (0..n).filter(|&i| folds[i] == f).collect();
+        let train = db.select(&train_idx);
+        let y_train: Vec<f64> = train_idx.iter().map(|&i| y[i]).collect();
+        let path = compute_path_spp(&train, &y_train, task, cfg);
+        for (li, p) in path.points.iter().enumerate() {
+            let model = SparsePatternModel::from_path_point(task, p);
+            let mut l = 0.0;
+            for &i in &val_idx {
+                l += loss(task, model.score::<S>(db.record(i)), y[i]);
+            }
+            fold_losses[li][f] = l / val_idx.len().max(1) as f64;
+            actives[li] += p.active.len() as f64 / k as f64;
+        }
+    }
+
+    finish(cfg, fold_losses, actives)
+}
+
+/// K-fold CV for item-set databases (thin wrapper over
+/// [`cross_validate`]).
 pub fn cross_validate_itemsets(
     db: &Transactions,
     y: &[f64],
@@ -80,45 +117,11 @@ pub fn cross_validate_itemsets(
     k: usize,
     seed: u64,
 ) -> CvResult {
-    let n = db.len();
-    let folds = fold_assignment(n, k, seed);
-    let mut fold_losses = vec![vec![0.0f64; k]; cfg.n_lambdas];
-    let mut actives = vec![0.0f64; cfg.n_lambdas];
-
-    for f in 0..k {
-        // split
-        let mut train = Transactions {
-            n_items: db.n_items,
-            items: Vec::new(),
-        };
-        let mut y_train = Vec::new();
-        let mut val_rows: Vec<&Vec<u32>> = Vec::new();
-        let mut y_val = Vec::new();
-        for i in 0..n {
-            if folds[i] == f {
-                val_rows.push(&db.items[i]);
-                y_val.push(y[i]);
-            } else {
-                train.items.push(db.items[i].clone());
-                y_train.push(y[i]);
-            }
-        }
-        let path = compute_path_spp(&Database::Itemsets(&train), &y_train, task, cfg);
-        for (li, p) in path.points.iter().enumerate() {
-            let model = SparsePatternModel::from_path_point(task, p);
-            let mut l = 0.0;
-            for (row, &yi) in val_rows.iter().zip(&y_val) {
-                l += loss(task, model.score_itemset(row), yi);
-            }
-            fold_losses[li][f] = l / y_val.len().max(1) as f64;
-            actives[li] += p.active.len() as f64 / k as f64;
-        }
-    }
-
-    finish(cfg, fold_losses, actives)
+    cross_validate(db, y, task, cfg, k, seed)
 }
 
-/// K-fold CV for graph databases.
+/// K-fold CV for graph databases (thin wrapper over
+/// [`cross_validate`]; targets come from the database).
 pub fn cross_validate_graphs(
     db: &GraphDatabase,
     task: Task,
@@ -126,35 +129,7 @@ pub fn cross_validate_graphs(
     k: usize,
     seed: u64,
 ) -> CvResult {
-    let n = db.len();
-    let folds = fold_assignment(n, k, seed);
-    let mut fold_losses = vec![vec![0.0f64; k]; cfg.n_lambdas];
-    let mut actives = vec![0.0f64; cfg.n_lambdas];
-
-    for f in 0..k {
-        let mut train = GraphDatabase::default();
-        let mut val: Vec<usize> = Vec::new();
-        for i in 0..n {
-            if folds[i] == f {
-                val.push(i);
-            } else {
-                train.graphs.push(db.graphs[i].clone());
-                train.y.push(db.y[i]);
-            }
-        }
-        let path = compute_path_spp(&Database::Graphs(&train), &train.y, task, cfg);
-        for (li, p) in path.points.iter().enumerate() {
-            let model = SparsePatternModel::from_path_point(task, p);
-            let mut l = 0.0;
-            for &i in &val {
-                l += loss(task, model.score_graph(&db.graphs[i]), db.y[i]);
-            }
-            fold_losses[li][f] = l / val.len().max(1) as f64;
-            actives[li] += p.active.len() as f64 / k as f64;
-        }
-    }
-
-    finish(cfg, fold_losses, actives)
+    cross_validate(db, &db.y, task, cfg, k, seed)
 }
 
 fn finish(cfg: &PathConfig, fold_losses: Vec<Vec<f64>>, actives: Vec<f64>) -> CvResult {
@@ -252,6 +227,21 @@ mod tests {
             ..PathConfig::default()
         };
         let cv = cross_validate_graphs(&d.db, Task::Classification, &cfg, 4, 3);
+        assert_eq!(cv.points.len(), 4);
+        assert!(cv.best_point().mean_loss <= cv.points[0].mean_loss + 1e-12);
+    }
+
+    #[test]
+    fn cv_sequences_runs_end_to_end() {
+        use crate::data::sequence::{generate as sgen, SeqSynthConfig};
+        let d = sgen(&SeqSynthConfig::tiny(91, false));
+        let cfg = PathConfig {
+            n_lambdas: 4,
+            lambda_min_ratio: 0.2,
+            maxpat: 2,
+            ..PathConfig::default()
+        };
+        let cv = cross_validate(&d.db, &d.y, Task::Regression, &cfg, 4, 5);
         assert_eq!(cv.points.len(), 4);
         assert!(cv.best_point().mean_loss <= cv.points[0].mean_loss + 1e-12);
     }

@@ -19,11 +19,10 @@ pub mod working_set;
 use std::time::Instant;
 
 use crate::boosting::{solve_lambda as boosting_solve, BoostingConfig};
-use crate::mining::{Counting, Pattern, TraverseStats};
+use crate::mining::{Counting, Pattern, PatternSubstrate, TraverseStats};
 use crate::screening::certify::certify;
 use crate::screening::lambda_max::lambda_max;
 use crate::screening::sppc::SppScreen;
-use crate::screening::Database;
 use crate::solver::dual::safe_radius;
 use crate::solver::problem::{dual_value, primal_value};
 use crate::solver::{CdConfig, CdSolver, Task};
@@ -160,15 +159,21 @@ impl RestrictedSolver for CdRestricted {
     }
 }
 
-/// Algorithm 1: SPP regularization path (default CD engine).
-pub fn compute_path_spp(db: &Database<'_>, y: &[f64], task: Task, cfg: &PathConfig) -> PathResult {
+/// Algorithm 1: SPP regularization path (default CD engine) on any
+/// [`PatternSubstrate`].
+pub fn compute_path_spp<S: PatternSubstrate>(
+    db: &S,
+    y: &[f64],
+    task: Task,
+    cfg: &PathConfig,
+) -> PathResult {
     let solver = CdRestricted(CdSolver::new(cfg.cd));
     compute_path_spp_with(db, y, task, cfg, &solver)
 }
 
 /// Algorithm 1 with an explicit restricted-solver engine.
-pub fn compute_path_spp_with(
-    db: &Database<'_>,
+pub fn compute_path_spp_with<S: PatternSubstrate>(
+    db: &S,
     y: &[f64],
     task: Task,
     cfg: &PathConfig,
@@ -295,8 +300,8 @@ pub fn compute_path_spp_with(
 }
 
 /// The boosting baseline over the same grid (paper §2.2 / §4).
-pub fn compute_path_boosting(
-    db: &Database<'_>,
+pub fn compute_path_boosting<S: PatternSubstrate>(
+    db: &S,
     y: &[f64],
     task: Task,
     cfg: &PathConfig,
@@ -399,10 +404,9 @@ mod tests {
             } else {
                 Task::Regression
             };
-            let db = Database::Itemsets(&d.db);
             let cfg = tiny_cfg();
-            let spp = compute_path_spp(&db, &d.y, task, &cfg);
-            let boost = compute_path_boosting(&db, &d.y, task, &cfg);
+            let spp = compute_path_spp(&d.db, &d.y, task, &cfg);
+            let boost = compute_path_boosting(&d.db, &d.y, task, &cfg);
             assert_eq!(spp.points.len(), boost.points.len());
             for (a, b) in spp.points.iter().zip(&boost.points) {
                 // same objective value at every λ (both are optimal)
@@ -437,10 +441,9 @@ mod tests {
     #[test]
     fn spp_visits_fewer_nodes_than_boosting() {
         let d = generate(&ItemsetSynthConfig::tiny(23, false));
-        let db = Database::Itemsets(&d.db);
         let cfg = tiny_cfg();
-        let spp = compute_path_spp(&db, &d.y, Task::Regression, &cfg);
-        let boost = compute_path_boosting(&db, &d.y, Task::Regression, &cfg);
+        let spp = compute_path_spp(&d.db, &d.y, Task::Regression, &cfg);
+        let boost = compute_path_boosting(&d.db, &d.y, Task::Regression, &cfg);
         assert!(
             spp.total_nodes() <= boost.total_nodes(),
             "spp {} vs boosting {}",
@@ -452,8 +455,7 @@ mod tests {
     #[test]
     fn active_set_grows_as_lambda_shrinks() {
         let d = generate(&ItemsetSynthConfig::tiny(24, false));
-        let db = Database::Itemsets(&d.db);
-        let spp = compute_path_spp(&db, &d.y, Task::Regression, &tiny_cfg());
+        let spp = compute_path_spp(&d.db, &d.y, Task::Regression, &tiny_cfg());
         let first_active = spp.points[1].active.len();
         let last_active = spp.points.last().unwrap().active.len();
         assert!(last_active >= first_active);
@@ -463,11 +465,10 @@ mod tests {
     #[test]
     fn certify_mode_keeps_paths_identical() {
         let d = generate(&ItemsetSynthConfig::tiny(25, false));
-        let db = Database::Itemsets(&d.db);
         let mut cfg = tiny_cfg();
-        let plain = compute_path_spp(&db, &d.y, Task::Regression, &cfg);
+        let plain = compute_path_spp(&d.db, &d.y, Task::Regression, &cfg);
         cfg.certify = true;
-        let certified = compute_path_spp(&db, &d.y, Task::Regression, &cfg);
+        let certified = compute_path_spp(&d.db, &d.y, Task::Regression, &cfg);
         for (a, b) in plain.points.iter().zip(&certified.points) {
             assert_eq!(a.active.len(), b.active.len(), "λ={}", a.lambda);
             assert!((a.b - b.b).abs() < 1e-6);

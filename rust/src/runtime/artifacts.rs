@@ -114,7 +114,7 @@ mod tests {
 
     fn write_manifest(dir: &Path, rows: &[&str]) {
         for r in rows {
-            let file = r.split('\t').last().unwrap();
+            let file = r.split('\t').next_back().unwrap();
             std::fs::File::create(dir.join(file))
                 .unwrap()
                 .write_all(b"HloModule fake")

@@ -15,8 +15,7 @@
 //! extra traversal per λ, measured in ablation A2.
 
 use super::lambda_max::MaxAbsSearch;
-use super::Database;
-use crate::mining::{Counting, TraverseStats};
+use crate::mining::{Counting, PatternSubstrate, TraverseStats};
 use crate::solver::Task;
 
 /// Outcome of a certification pass.
@@ -31,8 +30,8 @@ pub struct Certified {
 
 /// Certify `theta` against every pattern in the database; rescale into
 /// the dual box if any constraint is violated.
-pub fn certify(
-    db: &Database<'_>,
+pub fn certify<S: PatternSubstrate>(
+    db: &S,
     y: &[f64],
     task: Task,
     theta: &[f64],
@@ -81,7 +80,7 @@ mod tests {
         let y = vec![1.0; 4];
         let theta = vec![0.2, -0.2, 0.1, -0.1];
         let c = certify(
-            &Database::Itemsets(&t),
+            &t,
             &y,
             Task::Regression,
             &theta,
@@ -99,7 +98,7 @@ mod tests {
         // column {0} has theta-sum 3.0 -> violation 3
         let theta = vec![2.0, 1.0, 0.0, 0.0];
         let c = certify(
-            &Database::Itemsets(&t),
+            &t,
             &y,
             Task::Regression,
             &theta,
@@ -109,7 +108,7 @@ mod tests {
         assert!((c.max_violation - 3.0).abs() < 1e-12);
         // after rescale the worst column sits exactly on the box
         let c2 = certify(
-            &Database::Itemsets(&t),
+            &t,
             &y,
             Task::Regression,
             &c.theta,
@@ -127,7 +126,7 @@ mod tests {
         // column {1} sees g = [2, 1] -> 3 (violation through sign fold)
         let theta = vec![2.0, 1.0, 1.0, 0.0];
         let c = certify(
-            &Database::Itemsets(&t),
+            &t,
             &y,
             Task::Classification,
             &theta,

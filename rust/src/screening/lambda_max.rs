@@ -8,8 +8,7 @@
 //! descendant's score, so subtrees that cannot beat the incumbent are
 //! pruned — the same Morishita/Kudo-style bound the SPP rule uses.
 
-use super::Database;
-use crate::mining::{PatternNode, TraverseStats, TreeVisitor, Walk};
+use crate::mining::{PatternNode, PatternSubstrate, TraverseStats, TreeVisitor, Walk};
 use crate::solver::Task;
 
 /// Result of the λ_max search.
@@ -100,8 +99,15 @@ impl TreeVisitor for MaxAbsSearch<'_> {
     }
 }
 
-/// Compute λ_max, the zero-solution intercept and slack (paper §3.4.1).
-pub fn lambda_max(db: &Database<'_>, y: &[f64], task: Task, maxpat: usize, minsup: usize) -> LambdaMax {
+/// Compute λ_max, the zero-solution intercept and slack (paper §3.4.1)
+/// on any [`PatternSubstrate`].
+pub fn lambda_max<S: PatternSubstrate>(
+    db: &S,
+    y: &[f64],
+    task: Task,
+    maxpat: usize,
+    minsup: usize,
+) -> LambdaMax {
     let b0 = match task {
         Task::Regression => y.iter().sum::<f64>() / y.len() as f64,
         Task::Classification => hinge_intercept(y),
@@ -161,7 +167,7 @@ mod tests {
     fn matches_brute_force_regression() {
         let t = db();
         let y = vec![2.0, -1.0, 0.5, 3.0];
-        let lm = lambda_max(&Database::Itemsets(&t), &y, Task::Regression, 3, 1);
+        let lm = lambda_max(&t, &y, Task::Regression, 3, 1);
         let ybar = y.iter().sum::<f64>() / 4.0;
         let g: Vec<f64> = y.iter().map(|&v| v - ybar).collect();
         let brute = brute_lambda_max(&t, &g, 3);
@@ -173,7 +179,7 @@ mod tests {
     fn matches_brute_force_classification() {
         let t = db();
         let y = vec![1.0, -1.0, 1.0, -1.0];
-        let lm = lambda_max(&Database::Itemsets(&t), &y, Task::Classification, 3, 1);
+        let lm = lambda_max(&t, &y, Task::Classification, 3, 1);
         let b0 = hinge_intercept(&y);
         let g: Vec<f64> = y.iter().map(|&yi| yi * (1.0 - yi * b0).max(0.0)).collect();
         let brute = brute_lambda_max(&t, &g, 3);
@@ -187,7 +193,7 @@ mod tests {
         let d = generate(&ItemsetSynthConfig::tiny(77, false));
         let ybar = d.y.iter().sum::<f64>() / d.y.len() as f64;
         let g: Vec<f64> = d.y.iter().map(|&v| v - ybar).collect();
-        let lm = lambda_max(&Database::Itemsets(&d.db), &d.y, Task::Regression, 3, 1);
+        let lm = lambda_max(&d.db, &d.y, Task::Regression, 3, 1);
         let brute = brute_lambda_max(&d.db, &g, 3);
         assert!((lm.lambda_max - brute).abs() < 1e-10);
         assert!(lm.stats.pruned > 0, "expected some pruning");
@@ -204,7 +210,7 @@ mod tests {
     fn best_pattern_is_reported() {
         let t = db();
         let y = vec![10.0, 10.0, -10.0, -10.0];
-        let lm = lambda_max(&Database::Itemsets(&t), &y, Task::Regression, 2, 1);
+        let lm = lambda_max(&t, &y, Task::Regression, 2, 1);
         assert!(lm.best_pattern_is_some_sanity());
     }
 
@@ -219,7 +225,7 @@ mod tests {
         // |x_t^T theta0| <= 1 for every pattern, == 1 at the argmax
         let t = db();
         let y = vec![2.0, -1.0, 0.5, 3.0];
-        let lm = lambda_max(&Database::Itemsets(&t), &y, Task::Regression, 3, 1);
+        let lm = lambda_max(&t, &y, Task::Regression, 3, 1);
         let theta0: Vec<f64> = lm.slack0.iter().map(|&s| s / lm.lambda_max).collect();
         let mut worst: f64 = 0.0;
         let mut v = |n: &PatternNode<'_>| {

@@ -17,43 +17,82 @@ pub mod sppc;
 
 use crate::data::graph::GraphDatabase;
 use crate::data::Transactions;
-use crate::mining::gspan::GSpanMiner;
-use crate::mining::itemset::ItemsetMiner;
-use crate::mining::TreeVisitor;
+use crate::mining::{Pattern, PatternSubstrate, TreeVisitor};
 
-/// A pattern database of either kind, traversable by any visitor.
-/// Every search in this crate (SPP, boosting, λ_max, certify) walks
-/// the same trees through this one entry point — the fairness
-/// discipline behind the paper's timing comparisons.
+/// Closed two-substrate wrapper, superseded by the open
+/// [`PatternSubstrate`] trait.
+///
+/// Every search is now generic over the trait, so call sites pass the
+/// concrete database directly (`&transactions`, `&graph_db`,
+/// `&sequences`).  This enum remains for one release as a thin shim —
+/// it implements [`PatternSubstrate`] for its traversal surface, so
+/// `compute_path_spp(&Database::Itemsets(&t), …)`-era code keeps
+/// compiling — but it cannot score records (`Record = ()`), cannot be
+/// split for CV, and will be removed.
+#[deprecated(
+    note = "pass the concrete substrate (`&Transactions`, `&GraphDatabase`, `&Sequences`) \
+            to the now-generic searches instead; see `mining::PatternSubstrate`"
+)]
 #[derive(Clone, Copy)]
 pub enum Database<'a> {
     Itemsets(&'a Transactions),
     Graphs(&'a GraphDatabase),
 }
 
-impl<'a> Database<'a> {
+#[allow(deprecated)]
+impl Database<'_> {
     pub fn n_records(&self) -> usize {
         match self {
-            Database::Itemsets(t) => t.len(),
-            Database::Graphs(g) => g.len(),
+            Database::Itemsets(t) => PatternSubstrate::n_records(*t),
+            Database::Graphs(g) => PatternSubstrate::n_records(*g),
         }
     }
 
     /// Depth-first canonical traversal with subtree pruning.
     pub fn traverse(&self, maxpat: usize, minsup: usize, visitor: &mut dyn TreeVisitor) {
         match self {
-            Database::Itemsets(t) => {
-                let mut m = ItemsetMiner::new(t, maxpat);
-                m.minsup = minsup;
-                m.traverse(visitor);
-            }
-            Database::Graphs(g) => {
-                let mut m = GSpanMiner::new(g, maxpat);
-                m.minsup = minsup;
-                m.traverse(visitor);
-            }
+            Database::Itemsets(t) => PatternSubstrate::traverse(*t, maxpat, minsup, visitor),
+            Database::Graphs(g) => PatternSubstrate::traverse(*g, maxpat, minsup, visitor),
         }
     }
+}
+
+#[allow(deprecated)]
+impl PatternSubstrate for Database<'_> {
+    /// The shim cannot expose a per-variant record type; record-level
+    /// APIs (`matches`, `record`, `select`, the codec) are unsupported
+    /// and panic or error.  Searches only need `n_records`/`traverse`.
+    type Record = ();
+
+    fn n_records(&self) -> usize {
+        Database::n_records(self)
+    }
+
+    fn traverse(&self, maxpat: usize, minsup: usize, visitor: &mut dyn TreeVisitor) {
+        Database::traverse(self, maxpat, minsup, visitor)
+    }
+
+    fn matches(_pattern: &Pattern, _record: &()) -> bool {
+        unreachable!("deprecated Database shim has no record view; use the concrete substrate")
+    }
+
+    fn record(&self, _i: usize) -> &() {
+        unreachable!("deprecated Database shim has no record view; use the concrete substrate")
+    }
+
+    fn select(&self, _indices: &[usize]) -> Self {
+        unreachable!("deprecated Database shim cannot be split; use the concrete substrate")
+    }
+
+    fn parse_pattern(_body: &str) -> crate::Result<Pattern> {
+        anyhow::bail!("deprecated Database shim has no pattern codec; use the concrete substrate")
+    }
+
+    fn format_pattern(pattern: &Pattern) -> String {
+        unreachable!("deprecated Database shim asked to format {pattern:?}")
+    }
+
+    const KIND_TAG: &'static str = "?";
 }
 
 /// Fold `(task, y, θ)` into the per-sample weights every bound uses:
@@ -75,6 +114,7 @@ pub fn fold_weights(task: crate::solver::Task, y: &[f64], theta: &[f64]) -> (Vec
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // pins the deprecated Database shim's behaviour
 mod tests {
     use super::*;
     use crate::mining::{PatternNode, Walk};

@@ -60,16 +60,9 @@ pub struct Warm<'a> {
     pub b: f64,
 }
 
+#[derive(Default)]
 pub struct CdSolver {
     pub cfg: CdConfig,
-}
-
-impl Default for CdSolver {
-    fn default() -> Self {
-        CdSolver {
-            cfg: CdConfig::default(),
-        }
-    }
 }
 
 impl CdSolver {

@@ -5,6 +5,7 @@
 use std::collections::{BTreeMap, BTreeSet};
 
 use crate::data::graph::{Graph, GraphDatabase};
+use crate::data::sequence::Sequences;
 use crate::data::synth_itemsets::contains_all;
 use crate::data::Transactions;
 
@@ -43,6 +44,55 @@ pub fn all_itemsets(db: &Transactions, maxpat: usize) -> Vec<(Vec<u32>, Vec<u32>
     out
 }
 
+/// Naive subsequence test by explicit two-pointer scan — deliberately
+/// written independently of `data::sequence::is_subsequence`.
+fn subseq_naive(haystack: &[u32], needle: &[u32]) -> bool {
+    let mut j = 0usize;
+    for &h in haystack {
+        if j < needle.len() && h == needle[j] {
+            j += 1;
+        }
+    }
+    j == needle.len()
+}
+
+/// Exhaustively enumerate every subsequence pattern of length
+/// `1..=maxpat` with non-empty support, by direct extension over the
+/// whole alphabet (no projection machinery — deliberately different
+/// from the production PrefixSpan miner).
+pub fn all_sequences(db: &Sequences, maxpat: usize) -> BTreeMap<Vec<u32>, Vec<u32>> {
+    let mut out = BTreeMap::new();
+    let mut current: Vec<u32> = Vec::new();
+    fn rec(
+        db: &Sequences,
+        maxpat: usize,
+        current: &mut Vec<u32>,
+        out: &mut BTreeMap<Vec<u32>, Vec<u32>>,
+    ) {
+        for a in 0..db.n_symbols as u32 {
+            current.push(a);
+            let support: Vec<u32> = db
+                .seqs
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| subseq_naive(s, current))
+                .map(|(i, _)| i as u32)
+                .collect();
+            if !support.is_empty() {
+                out.insert(current.clone(), support);
+                if current.len() < maxpat {
+                    rec(db, maxpat, current, out);
+                }
+            }
+            current.pop();
+        }
+    }
+    if maxpat > 0 {
+        rec(db, maxpat, &mut current, &mut out);
+    }
+    out
+}
+
 /// Canonical string of a small labeled graph: lexicographically minimal
 /// `(vlabels under π, sorted relabeled edges)` over all vertex
 /// permutations π.  Exponential — test-sized graphs only.
@@ -73,7 +123,7 @@ pub fn canonical_form(g: &Graph) -> String {
     best.unwrap_or_else(|| "V;E[]".to_string())
 }
 
-fn permute(perm: &mut Vec<usize>, i: usize, f: &mut impl FnMut(&[usize])) {
+fn permute(perm: &mut [usize], i: usize, f: &mut impl FnMut(&[usize])) {
     if i == perm.len() {
         f(perm);
         return;
@@ -185,6 +235,21 @@ mod tests {
         let m: BTreeMap<Vec<u32>, Vec<u32>> = got.into_iter().collect();
         assert_eq!(m[&vec![1u32]], vec![0, 1]);
         assert_eq!(m[&vec![0u32, 1]], vec![0]);
+    }
+
+    #[test]
+    fn all_sequences_tiny() {
+        let db = Sequences {
+            n_symbols: 3,
+            seqs: vec![vec![0, 1], vec![1, 1]],
+        };
+        let got = all_sequences(&db, 2);
+        // <0>:[0] <0,1>:[0] <1>:[0,1] <1,1>:[1]
+        assert_eq!(got.len(), 4);
+        assert_eq!(got[&vec![1u32]], vec![0, 1]);
+        assert_eq!(got[&vec![1u32, 1]], vec![1]);
+        assert_eq!(got[&vec![0u32, 1]], vec![0]);
+        assert!(all_sequences(&db, 0).is_empty());
     }
 
     #[test]

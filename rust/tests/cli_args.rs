@@ -98,6 +98,45 @@ fn negative_numbers_are_flag_values_not_flags() {
 }
 
 #[test]
+fn certify_false_reads_as_off() {
+    // regression: `--certify=false` used to count as switch-on because
+    // switch() answered true whenever the flag map contained the name
+    let a = parse("path --certify=false");
+    assert!(!a.switch("certify"));
+    assert_eq!(a.flag("certify"), Some("false"));
+    let a = parse("path --certify false");
+    assert!(!a.switch("certify"));
+    // other values still mean on; absence means off
+    assert!(parse("path --certify=true").switch("certify"));
+    assert!(parse("path --certify").switch("certify"));
+    assert!(!parse("path").switch("certify"));
+}
+
+#[test]
+fn declared_switches_never_consume_positionals() {
+    // the spp binary declares its switch set, making flag-value
+    // consumption explicit rather than peek-based: a declared switch
+    // consumes only boolean literals, never a positional
+    let a = Args::parse_with_switches(
+        "path --certify out.json --viol-tol -1e-6 --maxpat 3"
+            .split_whitespace()
+            .map(String::from),
+        &["certify"],
+    );
+    assert!(a.switch("certify"));
+    assert!(a.flag("certify").is_none());
+    assert_eq!(a.positional, vec!["out.json"]);
+    assert_eq!(a.get_f64("viol-tol", 0.0).unwrap(), -1e-6);
+    assert_eq!(a.get_usize("maxpat", 0).unwrap(), 3);
+    // space-separated boolean still reads as a value (matches --certify=false)
+    let a = Args::parse_with_switches(
+        "path --certify false".split_whitespace().map(String::from),
+        &["certify"],
+    );
+    assert!(!a.switch("certify"));
+}
+
+#[test]
 fn repeated_flags_keep_the_last_value() {
     let a = parse("path --maxpat 3 --maxpat 9");
     assert_eq!(a.get_usize("maxpat", 0).unwrap(), 9);

@@ -4,7 +4,6 @@
 use spp::data::synth_graphs::{self, GraphSynthConfig};
 use spp::data::synth_itemsets::{generate, ItemsetSynthConfig};
 use spp::path::{compute_path_boosting, compute_path_spp, PathConfig};
-use spp::screening::Database;
 use spp::solver::Task;
 
 fn cfg(n_lambdas: usize, maxpat: usize) -> PathConfig {
@@ -38,44 +37,44 @@ fn assert_paths_agree(spp: &spp::path::PathResult, boost: &spp::path::PathResult
 #[test]
 fn itemset_regression_path_agreement() {
     let d = generate(&ItemsetSynthConfig::tiny(41, false));
-    let db = Database::Itemsets(&d.db);
+    let db = &d.db;
     let c = cfg(8, 3);
     assert_paths_agree(
-        &compute_path_spp(&db, &d.y, Task::Regression, &c),
-        &compute_path_boosting(&db, &d.y, Task::Regression, &c),
+        &compute_path_spp(db, &d.y, Task::Regression, &c),
+        &compute_path_boosting(db, &d.y, Task::Regression, &c),
     );
 }
 
 #[test]
 fn itemset_classification_path_agreement() {
     let d = generate(&ItemsetSynthConfig::tiny(42, true));
-    let db = Database::Itemsets(&d.db);
+    let db = &d.db;
     let c = cfg(8, 3);
     assert_paths_agree(
-        &compute_path_spp(&db, &d.y, Task::Classification, &c),
-        &compute_path_boosting(&db, &d.y, Task::Classification, &c),
+        &compute_path_spp(db, &d.y, Task::Classification, &c),
+        &compute_path_boosting(db, &d.y, Task::Classification, &c),
     );
 }
 
 #[test]
 fn graph_regression_path_agreement() {
     let d = synth_graphs::generate(&GraphSynthConfig::tiny(43, false));
-    let db = Database::Graphs(&d.db);
+    let db = &d.db;
     let c = cfg(6, 3);
     assert_paths_agree(
-        &compute_path_spp(&db, &d.db.y, Task::Regression, &c),
-        &compute_path_boosting(&db, &d.db.y, Task::Regression, &c),
+        &compute_path_spp(db, &d.db.y, Task::Regression, &c),
+        &compute_path_boosting(db, &d.db.y, Task::Regression, &c),
     );
 }
 
 #[test]
 fn graph_classification_path_agreement() {
     let d = synth_graphs::generate(&GraphSynthConfig::tiny(44, true));
-    let db = Database::Graphs(&d.db);
+    let db = &d.db;
     let c = cfg(6, 3);
     assert_paths_agree(
-        &compute_path_spp(&db, &d.db.y, Task::Classification, &c),
-        &compute_path_boosting(&db, &d.db.y, Task::Classification, &c),
+        &compute_path_spp(db, &d.db.y, Task::Classification, &c),
+        &compute_path_boosting(db, &d.db.y, Task::Classification, &c),
     );
 }
 
@@ -89,13 +88,13 @@ fn spp_node_counts_beat_boosting_and_grow_with_maxpat() {
     // and asserts the aggregate.
     let c = ItemsetSynthConfig::preset_splice(45).scaled(0.1);
     let d = generate(&c);
-    let db = Database::Itemsets(&d.db);
+    let db = &d.db;
     let mut prev_nodes = 0u64;
     let (mut spp_total, mut boost_total) = (0u64, 0u64);
     for maxpat in [2usize, 3] {
         let c = cfg(8, maxpat);
-        let spp = compute_path_spp(&db, &d.y, Task::Regression, &c);
-        let boost = compute_path_boosting(&db, &d.y, Task::Regression, &c);
+        let spp = compute_path_spp(db, &d.y, Task::Regression, &c);
+        let boost = compute_path_boosting(db, &d.y, Task::Regression, &c);
         spp_total += spp.total_nodes();
         boost_total += boost.total_nodes();
         assert!(spp.total_nodes() >= prev_nodes, "node count shrank with maxpat");
@@ -112,9 +111,9 @@ fn warm_screening_prunes_more_than_cold() {
     // the radius shrinks as λ decreases slowly with warm pairs; verify
     // per-λ survivor counts stay well below the full pattern count
     let d = generate(&ItemsetSynthConfig::tiny(46, false));
-    let db = Database::Itemsets(&d.db);
+    let db = &d.db;
     let c = cfg(10, 3);
-    let path = compute_path_spp(&db, &d.y, Task::Regression, &c);
+    let path = compute_path_spp(db, &d.y, Task::Regression, &c);
     let total_patterns = spp::testutil::oracle::all_itemsets(&d.db, 3).len();
     // at the largest few λ the working set must be a small fraction
     for p in &path.points[1..4] {
@@ -131,11 +130,11 @@ fn warm_screening_prunes_more_than_cold() {
 #[test]
 fn boosting_rounds_exceed_one_at_small_lambda() {
     let d = generate(&ItemsetSynthConfig::tiny(47, false));
-    let db = Database::Itemsets(&d.db);
-    let path = compute_path_boosting(&db, &d.y, Task::Regression, &cfg(8, 3));
+    let db = &d.db;
+    let path = compute_path_boosting(db, &d.y, Task::Regression, &cfg(8, 3));
     let max_rounds = path.points.iter().map(|p| p.rounds).max().unwrap();
     assert!(max_rounds > 1, "boosting never generated constraints");
     // SPP always does exactly one search per λ
-    let spp = compute_path_spp(&db, &d.y, Task::Regression, &cfg(8, 3));
+    let spp = compute_path_spp(db, &d.y, Task::Regression, &cfg(8, 3));
     assert!(spp.points.iter().all(|p| p.rounds == 1));
 }

@@ -9,7 +9,7 @@
 use spp::data::synth_itemsets::{generate, ItemsetSynthConfig};
 use spp::path::{compute_path_spp, compute_path_spp_with, PathConfig};
 use spp::runtime::{default_artifact_dir, engine::XlaRestricted, PjrtRuntime, XlaFistaSolver, XlaSppcScorer};
-use spp::screening::{fold_weights, Database};
+use spp::screening::fold_weights;
 use spp::solver::{CdSolver, Task};
 use spp::testutil::SplitMix64;
 
@@ -114,16 +114,16 @@ fn fista_solver_matches_cd_on_both_tasks() {
 fn xla_engine_path_equals_cd_engine_path() {
     let Some(rt) = runtime() else { return };
     let d = generate(&ItemsetSynthConfig::tiny(55, false));
-    let db = Database::Itemsets(&d.db);
+    let db = &d.db;
     let cfg = PathConfig {
         n_lambdas: 6,
         lambda_min_ratio: 0.1,
         maxpat: 2,
         ..PathConfig::default()
     };
-    let rust_path = compute_path_spp(&db, &d.y, Task::Regression, &cfg);
+    let rust_path = compute_path_spp(db, &d.y, Task::Regression, &cfg);
     let solver = XlaRestricted::new(&rt);
-    let xla_path = compute_path_spp_with(&db, &d.y, Task::Regression, &cfg, &solver);
+    let xla_path = compute_path_spp_with(db, &d.y, Task::Regression, &cfg, &solver);
     assert_eq!(rust_path.points.len(), xla_path.points.len());
     for (a, b) in rust_path.points.iter().zip(&xla_path.points) {
         let l1a: f64 = a.active.iter().map(|(_, w)| w.abs()).sum();

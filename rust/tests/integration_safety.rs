@@ -12,10 +12,9 @@
 
 use spp::data::synth_graphs::{self, GraphSynthConfig};
 use spp::data::synth_itemsets::{generate, ItemsetSynthConfig};
-use spp::mining::{PatternNode, Walk};
+use spp::mining::{PatternNode, PatternSubstrate, Walk};
 use spp::screening::lambda_max::lambda_max;
 use spp::screening::sppc::SppScreen;
-use spp::screening::Database;
 use spp::solver::dual::safe_radius;
 use spp::solver::problem::{dual_value, primal_value};
 use spp::solver::{CdSolver, Task};
@@ -50,9 +49,9 @@ fn full_space_solve(
 
 fn safety_case(seed: u64, task: Task) {
     let d = generate(&ItemsetSynthConfig::tiny(seed, task == Task::Classification));
-    let db = Database::Itemsets(&d.db);
+    let db = &d.db;
     let maxpat = 3;
-    let lm = lambda_max(&db, &d.y, task, maxpat, 1);
+    let lm = lambda_max(db, &d.y, task, maxpat, 1);
 
     for frac in [0.7, 0.3, 0.1] {
         let lam = frac * lm.lambda_max;
@@ -140,7 +139,7 @@ fn gspan_matches_bruteforce_enumeration() {
             }
             Walk::Descend
         };
-        Database::Graphs(&d.db).traverse(maxpat, 1, &mut v);
+        d.db.traverse(maxpat, 1, &mut v);
 
         let brute = oracle::all_subgraphs_canonical(&d.db, maxpat);
         let mut seen = std::collections::HashSet::new();
@@ -172,10 +171,10 @@ fn spp_is_safe_on_graphs() {
     cfg.min_atoms = 3;
     cfg.max_atoms = 6;
     let d = synth_graphs::generate(&cfg);
-    let db = Database::Graphs(&d.db);
+    let db = &d.db;
     let maxpat = 3;
     let task = Task::Regression;
-    let lm = lambda_max(&db, &d.db.y, task, maxpat, 1);
+    let lm = lambda_max(db, &d.db.y, task, maxpat, 1);
     let lam = 0.4 * lm.lambda_max;
 
     let brute = oracle::all_subgraphs_canonical(&d.db, maxpat);

@@ -1,0 +1,225 @@
+//! The substrate API, tested end-to-end on all three substrates.
+//!
+//! The paper's Theorem 2 promises that SPP screening is *safe*: the
+//! screened path must reach exactly the optima the exhaustive
+//! constraint-generation baseline reaches.  The property test here
+//! asserts that promise in its strongest checkable form, through the
+//! open `PatternSubstrate` trait only — the same generic code runs the
+//! item-set, graph and sequence instances:
+//!
+//! * both paths are gap-certified at every λ;
+//! * `(‖w‖₁, b)` agree at every λ (unique at the optimum);
+//! * fitted responses agree on every record (unique at the optimum);
+//! * **active sets agree**: merging weights by support column (two
+//!   patterns with the same column are the same feature), every
+//!   column's total weight matches across methods to solver tolerance —
+//!   so neither method reports a substantial pattern the other lacks.
+//!
+//! Support columns are recomputed through `S::matches`, which doubles
+//! as a miner-vs-matcher consistency check on every active pattern.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use spp::data::sequence::{self, SeqSynthConfig};
+use spp::data::synth_graphs::{self, GraphSynthConfig};
+use spp::data::synth_itemsets::{self, ItemsetSynthConfig};
+use spp::mining::{Pattern, PatternNode, PatternSubstrate, Walk};
+use spp::model::SparsePatternModel;
+use spp::path::{compute_path_boosting, compute_path_spp, PathConfig, PathPoint};
+use spp::solver::Task;
+use spp::testutil::oracle;
+
+fn cfg(n_lambdas: usize, maxpat: usize) -> PathConfig {
+    PathConfig {
+        n_lambdas,
+        lambda_min_ratio: 0.05,
+        maxpat,
+        ..PathConfig::default()
+    }
+}
+
+/// Support column of `pat`, recomputed independently of the miners
+/// through the substrate's matcher.
+fn support_by_matcher<S: PatternSubstrate>(db: &S, pat: &Pattern) -> Vec<u32> {
+    (0..db.n_records())
+        .filter(|&i| S::matches(pat, db.record(i)))
+        .map(|i| i as u32)
+        .collect()
+}
+
+/// Active weights merged by support column (identical columns are the
+/// same feature; the restricted solver's weight split among them is
+/// arbitrary, their sum is not).
+fn merged_weights<S: PatternSubstrate>(
+    db: &S,
+    point: &PathPoint,
+) -> BTreeMap<Vec<u32>, f64> {
+    let mut m: BTreeMap<Vec<u32>, f64> = BTreeMap::new();
+    for (pat, w) in &point.active {
+        *m.entry(support_by_matcher(db, pat)).or_insert(0.0) += w;
+    }
+    m
+}
+
+/// The Theorem-2 agreement property for one instance.
+fn assert_spp_and_boosting_active_sets_agree<S: PatternSubstrate>(
+    db: &S,
+    y: &[f64],
+    task: Task,
+    c: &PathConfig,
+) {
+    let spp = compute_path_spp(db, y, task, c);
+    let boost = compute_path_boosting(db, y, task, c);
+    assert_eq!(spp.points.len(), boost.points.len());
+    assert!((spp.lambda_max - boost.lambda_max).abs() < 1e-9);
+
+    for (a, b) in spp.points.iter().zip(&boost.points) {
+        assert!(a.gap <= 2e-6 && b.gap <= 2e-6, "uncertified λ={}", a.lambda);
+        let l1a: f64 = a.active.iter().map(|(_, w)| w.abs()).sum();
+        let l1b: f64 = b.active.iter().map(|(_, w)| w.abs()).sum();
+        let scale = 1.0 + l1a.abs();
+        assert!(
+            (l1a - l1b).abs() < 1e-3 * scale,
+            "‖w‖₁ mismatch at λ={}: {l1a} vs {l1b}",
+            a.lambda
+        );
+        assert!((a.b - b.b).abs() < 2e-3, "b mismatch at λ={}", a.lambda);
+
+        // active sets merged by support column: every column carries
+        // the same total weight in both methods (up to the solvers'
+        // 1e-6 gap tolerance, loosened to a safe margin)
+        let wa = merged_weights(db, a);
+        let wb = merged_weights(db, b);
+        let keys: BTreeSet<&Vec<u32>> = wa.keys().chain(wb.keys()).collect();
+        for k in keys {
+            let va = wa.get(k).copied().unwrap_or(0.0);
+            let vb = wb.get(k).copied().unwrap_or(0.0);
+            assert!(
+                (va - vb).abs() < 2e-2 * scale,
+                "active-set mismatch at λ={}: column {:?} has weight {va} (spp) vs {vb} (boosting)",
+                a.lambda,
+                k
+            );
+        }
+
+        // fitted responses (unique at the optimum) agree record-wise
+        let ma = SparsePatternModel::from_path_point(task, a);
+        let mb = SparsePatternModel::from_path_point(task, b);
+        for i in 0..db.n_records() {
+            let sa = ma.score::<S>(db.record(i));
+            let sb = mb.score::<S>(db.record(i));
+            assert!(
+                (sa - sb).abs() < 1e-2 * scale,
+                "fitted score mismatch at λ={} record {i}: {sa} vs {sb}",
+                a.lambda
+            );
+        }
+    }
+}
+
+#[test]
+fn active_sets_agree_itemsets() {
+    for (seed, classify) in [(21u64, false), (22, true)] {
+        let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(seed, classify));
+        let task = if classify {
+            Task::Classification
+        } else {
+            Task::Regression
+        };
+        assert_spp_and_boosting_active_sets_agree(&d.db, &d.y, task, &cfg(8, 3));
+    }
+}
+
+#[test]
+fn active_sets_agree_sequences() {
+    for (seed, classify) in [(21u64, false), (22, true)] {
+        let d = sequence::generate(&SeqSynthConfig::tiny(seed, classify));
+        let task = if classify {
+            Task::Classification
+        } else {
+            Task::Regression
+        };
+        assert_spp_and_boosting_active_sets_agree(&d.db, &d.y, task, &cfg(8, 3));
+    }
+}
+
+#[test]
+fn active_sets_agree_graphs() {
+    let d = synth_graphs::generate(&GraphSynthConfig::tiny(43, false));
+    assert_spp_and_boosting_active_sets_agree(&d.db, &d.db.y, Task::Regression, &cfg(6, 3));
+}
+
+/// The PrefixSpan miner against the brute-force oracle on seeded
+/// instances: same pattern set, same supports.
+#[test]
+fn prefixspan_matches_oracle_on_seeded_instances() {
+    for seed in [1u64, 2, 3] {
+        let d = sequence::generate(&SeqSynthConfig::tiny(seed, false));
+        for maxpat in [2usize, 3] {
+            let mut mined: BTreeMap<Vec<u32>, Vec<u32>> = BTreeMap::new();
+            let mut v = |n: &PatternNode<'_>| {
+                let Pattern::Sequence(s) = n.to_pattern() else {
+                    unreachable!()
+                };
+                assert!(
+                    mined.insert(s, n.support.to_vec()).is_none(),
+                    "duplicate pattern (seed {seed})"
+                );
+                Walk::Descend
+            };
+            d.db.traverse(maxpat, 1, &mut v);
+            let brute = oracle::all_sequences(&d.db, maxpat);
+            assert_eq!(mined, brute, "seed {seed} maxpat {maxpat}");
+        }
+    }
+}
+
+/// A sequence model mined from a real path round-trips through the
+/// text format and predicts identically after the round trip.
+#[test]
+fn sequence_model_round_trips_through_text_format() {
+    let d = sequence::generate(&SeqSynthConfig::tiny(7, false));
+    let path = compute_path_spp(&d.db, &d.y, Task::Regression, &cfg(6, 2));
+    let point = path.points.last().unwrap();
+    assert!(
+        !point.active.is_empty(),
+        "smallest-λ model should have active sequence patterns"
+    );
+    let model = SparsePatternModel::from_path_point(Task::Regression, point);
+    let back = SparsePatternModel::parse(&model.serialize()).unwrap();
+    assert_eq!(model, back);
+    assert_eq!(model.predict(&d.db), back.predict(&d.db));
+    // and the codec really used the sequence tag
+    assert!(model.serialize().lines().skip(1).all(|l| l.starts_with("S ")));
+}
+
+/// `synth-seq` flows through the registry + coordinator exactly like
+/// the paper's presets (the `spp path --dataset synth-seq` path).
+#[test]
+fn sequence_dataset_runs_through_coordinator() {
+    use spp::coordinator::{run_experiment, ExperimentSpec, Method};
+    let mut results = Vec::new();
+    for method in [Method::Spp, Method::Boosting] {
+        let r = run_experiment(&ExperimentSpec {
+            dataset: "synth-seq".into(),
+            scale: 0.1,
+            maxpat: 2,
+            method,
+            cfg: PathConfig {
+                n_lambdas: 5,
+                lambda_min_ratio: 0.1,
+                ..PathConfig::default()
+            },
+        })
+        .unwrap();
+        assert!(r.max_gap <= 2e-6, "{method:?} gap {}", r.max_gap);
+        assert!(r.traverse_nodes > 0);
+        assert_eq!(r.task, Task::Classification);
+        results.push(r);
+    }
+    for (a, b) in results[0].path.points.iter().zip(&results[1].path.points) {
+        let l1a: f64 = a.active.iter().map(|(_, w)| w.abs()).sum();
+        let l1b: f64 = b.active.iter().map(|(_, w)| w.abs()).sum();
+        assert!((l1a - l1b).abs() < 1e-3 * (1.0 + l1a), "λ={}", a.lambda);
+    }
+}

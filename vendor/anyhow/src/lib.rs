@@ -95,8 +95,7 @@ impl fmt::Debug for Error {
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Self {
         // Preserve the std error's own source chain as context.
-        let mut chain: Vec<String> = Vec::new();
-        chain.push(e.to_string());
+        let mut chain: Vec<String> = vec![e.to_string()];
         let mut src = std::error::Error::source(&e);
         while let Some(s) = src {
             chain.push(s.to_string());

@@ -1,0 +1,98 @@
+//! Ablation A4: what the incremental screening forest buys.
+//!
+//! Same workload, same λ-grid, two engines:
+//!
+//! * `scratch` — the paper-literal Algorithm 1: one full substrate
+//!   traversal per λ (`reuse_forest: false`, the `--no-reuse` path);
+//! * `forest`  — the incremental engine: stored-tree re-evaluation with
+//!   λ-range drift certificates, substrate re-entered only below
+//!   re-opened frontiers.
+//!
+//! Both engines produce bit-identical paths (asserted here on gaps and
+//! active counts; the full property lives in
+//! `tests/integration_forest.rs`), so every ROW pair is a like-for-like
+//! traverse-cost comparison: seconds and substrate node counts, plus
+//! the forest's reuse telemetry (stored-node hits, certificate skips,
+//! re-opened subtrees, solver-frozen columns).  Workload size obeys the
+//! usual `SPP_BENCH_*` env knobs (`benchkit`); the synth presets at
+//! `n_lambdas >= 20` are the acceptance regime: forest nodes must be
+//! strictly fewer than scratch nodes.
+
+use std::time::Instant;
+
+use spp::benchkit::bench_knobs;
+use spp::data::registry::{info, lookup, Dataset};
+use spp::path::{compute_path_spp, PathConfig, PathResult};
+
+fn run(dataset: &str, default_scale: f64, maxpat: usize, default_lambdas: usize) {
+    // the same env knobs as benchkit::run_figure, via the shared resolver
+    let (scale, n_lambdas, ratio) = bench_knobs(default_scale, default_lambdas);
+    let task = info(dataset).unwrap().task;
+    let data = lookup(dataset, scale).unwrap();
+    let mut results: Vec<(&str, PathResult, f64)> = Vec::new();
+    for (variant, reuse) in [("scratch", false), ("forest", true)] {
+        let cfg = PathConfig {
+            n_lambdas,
+            lambda_min_ratio: ratio,
+            maxpat,
+            reuse_forest: reuse,
+            ..PathConfig::default()
+        };
+        let t0 = Instant::now();
+        let path = match &data {
+            Dataset::Graphs(g) => compute_path_spp(g, &g.y, task, &cfg),
+            Dataset::Itemsets(t) => compute_path_spp(&t.db, &t.y, task, &cfg),
+            Dataset::Sequences(s) => compute_path_spp(&s.db, &s.y, task, &cfg),
+        };
+        let wall = t0.elapsed().as_secs_f64();
+        let max_gap = path.points.iter().map(|p| p.gap).fold(0.0f64, f64::max);
+        assert!(max_gap <= 2e-6, "{dataset}/{variant}: uncertified path");
+        println!(
+            "ROW fig=A4 dataset={dataset} maxpat={maxpat} lambdas={n_lambdas} \
+             variant={variant} total={wall:.4} traverse={:.4} nodes={} hits={} \
+             cert_skips={} reopened={} solver_screened={}",
+            path.total_traverse_secs(),
+            path.total_nodes(),
+            path.total_forest_hits(),
+            path.points.iter().map(|p| p.reuse.cert_skips).sum::<u64>(),
+            path.total_reopened(),
+            path.total_solver_screened(),
+        );
+        results.push((variant, path, wall));
+    }
+    let (scratch, forest) = (&results[0].1, &results[1].1);
+    // like-for-like guard: identical optima at every λ
+    for (a, b) in scratch.points.iter().zip(&forest.points) {
+        assert_eq!(
+            a.active.len(),
+            b.active.len(),
+            "{dataset}: engines disagree at λ={}",
+            a.lambda
+        );
+    }
+    assert!(
+        forest.total_nodes() < scratch.total_nodes(),
+        "{dataset}: forest engine did not reduce traversal \
+         ({} vs {} nodes)",
+        forest.total_nodes(),
+        scratch.total_nodes()
+    );
+    println!(
+        "A4 {dataset:<10} maxpat={maxpat} λs={n_lambdas}: traverse x{:.2} faster, \
+         nodes x{:.1} fewer ({} -> {})",
+        scratch.total_traverse_secs() / forest.total_traverse_secs().max(1e-12),
+        scratch.total_nodes() as f64 / forest.total_nodes().max(1) as f64,
+        scratch.total_nodes(),
+        forest.total_nodes(),
+    );
+}
+
+fn main() {
+    println!("# A4 incremental-forest ablation: scratch vs forest engines, 20-λ paths");
+    run("splice", 0.15, 3, 20);
+    run("dna", 0.1, 3, 20);
+    run("cpdb", 0.2, 3, 20);
+    run("synth-seq", 0.25, 3, 20);
+    println!("# expectation: forest nodes ≪ scratch nodes; traverse seconds follow;");
+    println!("# hits ≈ scratch nodes (same decisions, made on stored columns)");
+}

@@ -12,6 +12,8 @@
 //!                 motivation for SPP is exactly that this traversal is
 //!                 intractable at scale.
 //!
+//! All three run the from-scratch traversal per λ (the quantity being
+//! ablated is the rule itself; `ablation_forest` ablates the reuse).
 //! Reported per λ-path: wall time, traversed nodes, Σ|Â|.
 
 use std::time::Instant;
@@ -21,14 +23,15 @@ use spp::mining::{Counting, PatternNode, PatternSubstrate, TreeVisitor, Walk};
 use spp::path::{lambda_grid, working_set::WorkingSet};
 use spp::screening::lambda_max::lambda_max;
 use spp::screening::sppc::SppScreen;
+use spp::screening::SupportPool;
 use spp::solver::dual::safe_radius;
 use spp::solver::problem::{dual_value, primal_value};
 use spp::solver::{CdSolver, Task};
 
 /// SppScreen wrapper that disables subtree pruning (ub-only mode).
-struct NoPrune<'a>(&'a mut SppScreen);
+struct NoPrune<'a, 'p>(&'a mut SppScreen<'p>);
 
-impl TreeVisitor for NoPrune<'_> {
+impl TreeVisitor for NoPrune<'_, '_> {
     fn visit(&mut self, node: &PatternNode<'_>) -> Walk {
         let _ = self.0.visit(node);
         Walk::Descend
@@ -47,6 +50,7 @@ fn run<S: PatternSubstrate>(db: &S, y: &[f64], task: Task, maxpat: usize, mode: 
     let grid = lambda_grid(lm.lambda_max, 15, 0.05);
     let solver = CdSolver::default();
 
+    let mut pool = SupportPool::new();
     let mut ws = WorkingSet::new();
     let mut w: Vec<f64> = Vec::new();
     let mut b = lm.b0;
@@ -61,7 +65,7 @@ fn run<S: PatternSubstrate>(db: &S, y: &[f64], task: Task, maxpat: usize, mode: 
         let primal = primal_value(&slack, l1, lam);
         let dualv = dual_value(task, &theta, y, lam);
         let radius = safe_radius(primal, dualv, lam);
-        let mut screen = SppScreen::new(task, y, &theta, radius);
+        let mut screen = SppScreen::new(task, y, &theta, radius, &mut pool);
         screen.feature_test = mode != Mode::SppcOnly;
         let stats = if mode == Mode::UbOnly {
             let mut np = NoPrune(&mut screen);
@@ -75,26 +79,29 @@ fn run<S: PatternSubstrate>(db: &S, y: &[f64], task: Task, maxpat: usize, mode: 
         };
         nodes += stats.nodes;
         sum_ahat += screen.survivors.len() as u64;
+        let survivors = std::mem::take(&mut screen.survivors);
 
         let mut new_ws = WorkingSet::new();
         let mut seen = std::collections::HashMap::new();
         for (i, p) in ws.patterns.iter().enumerate() {
             if w[i] != 0.0 {
-                let idx = new_ws.insert(p.clone(), ws.supports[i].clone());
-                seen.entry(ws.supports[i].clone()).or_insert(idx);
+                let sid = ws.support_ids[i];
+                let idx = new_ws.insert(p.clone(), sid);
+                seen.entry(sid).or_insert(idx);
             }
         }
-        for s in screen.survivors {
+        for s in survivors {
             if !seen.contains_key(&s.support) {
-                let idx = new_ws.insert(s.pattern, s.support.clone());
+                let idx = new_ws.insert(s.pattern, s.support);
                 seen.insert(s.support, idx);
             }
         }
         let w0 = new_ws.transfer_weights(&ws, &w);
         ws = new_ws;
+        let cols = ws.columns(&pool);
         let sol = solver.solve(
             task,
-            &ws.supports,
+            &cols,
             y,
             lam,
             Some(spp::solver::cd::Warm { w: &w0, b }),

@@ -19,17 +19,25 @@ use spp::mining::{Counting, PatternSubstrate};
 use spp::path::{compute_path_spp, lambda_grid, working_set::WorkingSet, PathConfig};
 use spp::screening::lambda_max::lambda_max;
 use spp::screening::sppc::SppScreen;
+use spp::screening::SupportPool;
 use spp::solver::dual::safe_radius;
 use spp::solver::problem::{dual_value, primal_value};
 use spp::solver::{CdSolver, Task};
 
 /// Cold screening path: the pair is ALWAYS the λmax zero solution.
-fn cold_path<S: PatternSubstrate>(db: &S, y: &[f64], task: Task, maxpat: usize, n_lambdas: usize) -> (f64, u64) {
+fn cold_path<S: PatternSubstrate>(
+    db: &S,
+    y: &[f64],
+    task: Task,
+    maxpat: usize,
+    n_lambdas: usize,
+) -> (f64, u64) {
     let lm = lambda_max(db, y, task, maxpat, 1);
     let grid = lambda_grid(lm.lambda_max, n_lambdas, 0.05);
     let solver = CdSolver::default();
     let theta0: Vec<f64> = lm.slack0.iter().map(|&s| s / lm.lambda_max).collect();
 
+    let mut pool = SupportPool::new();
     let mut ws = WorkingSet::new();
     let mut w: Vec<f64> = Vec::new();
     let mut b = lm.b0;
@@ -39,30 +47,33 @@ fn cold_path<S: PatternSubstrate>(db: &S, y: &[f64], task: Task, maxpat: usize, 
         let primal = primal_value(&lm.slack0, 0.0, lam);
         let dualv = dual_value(task, &theta0, y, lam);
         let radius = safe_radius(primal, dualv, lam);
-        let mut screen = SppScreen::new(task, y, &theta0, radius);
+        let mut screen = SppScreen::new(task, y, &theta0, radius, &mut pool);
         let stats = {
             let mut counting = Counting::new(&mut screen);
             db.traverse(maxpat, 1, &mut counting);
             counting.stats
         };
         nodes += stats.nodes;
+        let survivors = std::mem::take(&mut screen.survivors);
         let mut new_ws = WorkingSet::new();
         let mut seen = std::collections::HashMap::new();
         for (i, p) in ws.patterns.iter().enumerate() {
             if w[i] != 0.0 {
-                let idx = new_ws.insert(p.clone(), ws.supports[i].clone());
-                seen.entry(ws.supports[i].clone()).or_insert(idx);
+                let sid = ws.support_ids[i];
+                let idx = new_ws.insert(p.clone(), sid);
+                seen.entry(sid).or_insert(idx);
             }
         }
-        for s in screen.survivors {
+        for s in survivors {
             if !seen.contains_key(&s.support) {
-                let idx = new_ws.insert(s.pattern, s.support.clone());
+                let idx = new_ws.insert(s.pattern, s.support);
                 seen.insert(s.support, idx);
             }
         }
         let w0 = new_ws.transfer_weights(&ws, &w);
         ws = new_ws;
-        let sol = solver.solve(task, &ws.supports, y, lam, Some(spp::solver::cd::Warm { w: &w0, b }));
+        let cols = ws.columns(&pool);
+        let sol = solver.solve(task, &cols, y, lam, Some(spp::solver::cd::Warm { w: &w0, b }));
         w = sol.w;
         b = sol.b;
     }
@@ -104,7 +115,8 @@ fn main() {
         let t1 = Instant::now();
         let p = compute_path_spp(db, &t.y, task, &cfg);
         println!(
-            "ROW fig=A2 variant=grid lambdas={n_lambdas} total={:.4} nodes={} nodes_per_lambda={:.0}",
+            "ROW fig=A2 variant=grid lambdas={n_lambdas} total={:.4} nodes={} \
+             nodes_per_lambda={:.0}",
             t1.elapsed().as_secs_f64(),
             p.total_nodes(),
             p.total_nodes() as f64 / n_lambdas as f64

@@ -9,8 +9,10 @@ use spp::data::synth_graphs::{self, GraphSynthConfig};
 use spp::data::synth_itemsets::{generate, ItemsetSynthConfig};
 use spp::mining::gspan::GSpanMiner;
 use spp::mining::itemset::{intersect_into, ItemsetMiner};
-use spp::mining::{PatternNode, Walk};
+use spp::mining::{Pattern, PatternNode, Walk};
+use spp::path::working_set::WorkingSet;
 use spp::screening::sppc::SppScreen;
+use spp::screening::SupportPool;
 use spp::solver::{CdSolver, Task};
 use spp::testutil::SplitMix64;
 
@@ -41,7 +43,8 @@ fn main() {
         let n = 4000usize;
         let theta: Vec<f64> = (0..n).map(|_| rng.gauss() * 0.1).collect();
         let y = vec![1.0; n];
-        let screen = SppScreen::new(Task::Regression, &y, &theta, 0.4);
+        let mut pool = SupportPool::new();
+        let screen = SppScreen::new(Task::Regression, &y, &theta, 0.4, &mut pool);
         let supports: Vec<Vec<u32>> = (0..1000)
             .map(|_| { let m = rng.range(4, 200); sorted_sample(&mut rng, n, m) })
             .collect();
@@ -58,8 +61,9 @@ fn main() {
     {
         let d = generate(&ItemsetSynthConfig::preset_splice(5).scaled(0.1));
         let theta: Vec<f64> = (0..d.db.len()).map(|_| rng.gauss() * 0.02).collect();
+        let mut pool = SupportPool::new();
         bench_fn("itemset traversal+screen splice@0.1 maxpat=3", 5, || {
-            let mut screen = SppScreen::new(Task::Regression, &d.y, &theta, 0.2);
+            let mut screen = SppScreen::new(Task::Regression, &d.y, &theta, 0.2, &mut pool);
             ItemsetMiner::new(&d.db, 3).traverse(&mut screen);
             std::hint::black_box(screen.survivors.len());
         });
@@ -109,6 +113,46 @@ fn main() {
                 std::hint::black_box((s.epochs, s.gap));
             });
         }
+    }
+
+    // --- warm-start weight transfer between λ steps ---
+    // two adjacent-λ working sets sharing most columns: the id-indexed
+    // SupportPool transfer vs what a per-pattern hash probe would cost
+    {
+        let n = 5000usize;
+        let k = 4000usize;
+        let base = (k + 512) as u32;
+        let mut pool = SupportPool::new();
+        // a unique leading tid per column keeps all columns (and hence
+        // SupportIds) distinct, matching the path invariant transfer
+        // relies on
+        let cols: Vec<Vec<u32>> = (0..k + 512)
+            .map(|t| {
+                let m = rng.range(2, 40);
+                let mut c: Vec<u32> = sorted_sample(&mut rng, n - base as usize, m)
+                    .into_iter()
+                    .map(|i| i + base)
+                    .collect();
+                c.insert(0, t as u32);
+                c
+            })
+            .collect();
+        let mut prev = WorkingSet::new();
+        for (t, c) in cols.iter().take(k).enumerate() {
+            prev.insert(Pattern::Itemset(vec![t as u32]), pool.intern(c));
+        }
+        let mut next = WorkingSet::new();
+        for (t, c) in cols.iter().skip(256).take(k).enumerate() {
+            next.insert(Pattern::Itemset(vec![(t + 256) as u32]), pool.intern(c));
+        }
+        let w_prev: Vec<f64> = (0..k).map(|t| if t % 3 == 0 { 1.0 } else { 0.0 }).collect();
+        bench_throughput("warm-start transfer_weights (cols/s)", 7, || {
+            let iters = 200u64;
+            for _ in 0..iters {
+                std::hint::black_box(next.transfer_weights(&prev, &w_prev));
+            }
+            iters * k as u64
+        });
     }
 
     // --- end-to-end λ_max search (bounded) ---

@@ -34,6 +34,20 @@ pub fn full_sweep() -> bool {
     std::env::var("SPP_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Resolve the `SPP_BENCH_*` env knobs for one workload:
+/// `(scale, n_lambdas, lambda_min_ratio)`.  `SPP_BENCH_FULL=1` swaps in
+/// the paper's setup (full n, 100 λs, ratio 0.01); `SPP_BENCH_SCALE`
+/// multiplies the scale either way.  Single source of truth for every
+/// bench ([`run_figure`] and the standalone ablations alike).
+pub fn bench_knobs(default_scale: f64, default_lambdas: usize) -> (f64, usize, f64) {
+    let full = full_sweep();
+    let scale = if full { 1.0 } else { default_scale } * env_f64("SPP_BENCH_SCALE").unwrap_or(1.0);
+    let n_lambdas =
+        env_usize("SPP_BENCH_LAMBDAS").unwrap_or(if full { 100 } else { default_lambdas });
+    let ratio = env_f64("SPP_BENCH_RATIO").unwrap_or(if full { 0.01 } else { 0.05 });
+    (scale, n_lambdas, ratio)
+}
+
 /// One workload of a figure sweep.
 #[derive(Clone, Copy)]
 pub struct Workload {
@@ -51,8 +65,7 @@ pub struct Workload {
 pub fn run_figure(fig: &str, workloads: &[Workload]) {
     let full = full_sweep();
     let scale_mult = env_f64("SPP_BENCH_SCALE").unwrap_or(1.0);
-    let n_lambdas = env_usize("SPP_BENCH_LAMBDAS").unwrap_or(if full { 100 } else { 20 });
-    let ratio = env_f64("SPP_BENCH_RATIO").unwrap_or(if full { 0.01 } else { 0.05 });
+    let (_, n_lambdas, ratio) = bench_knobs(1.0, 20);
     println!(
         "# {fig}: lambdas={n_lambdas} ratio={ratio} scale_mult={scale_mult} full={full}"
     );
@@ -61,7 +74,7 @@ pub fn run_figure(fig: &str, workloads: &[Workload]) {
     );
 
     for w in workloads {
-        let scale = if full { 1.0 } else { w.scale } * scale_mult;
+        let (scale, _, _) = bench_knobs(w.scale, 20);
         let maxpats = if full { w.full_maxpats } else { w.maxpats };
         for &maxpat in maxpats {
             let mut pair = Vec::new();
@@ -89,7 +102,8 @@ pub fn run_figure(fig: &str, workloads: &[Workload]) {
                         );
                         println!("{}", report::time_row(&r));
                         println!(
-                            "ROW fig={fig} dataset={} n={} maxpat={} method={} total={:.4} traverse={:.4} solve={:.4} nodes={} active={}",
+                            "ROW fig={fig} dataset={} n={} maxpat={} method={} total={:.4} \
+                             traverse={:.4} solve={:.4} nodes={} active={}",
                             w.dataset,
                             r.n_records,
                             maxpat,
@@ -102,7 +116,9 @@ pub fn run_figure(fig: &str, workloads: &[Workload]) {
                         );
                         pair.push(r);
                     }
-                    Err(e) => println!("ROW fig={fig} dataset={} maxpat={} ERROR {e}", w.dataset, maxpat),
+                    Err(e) => {
+                        println!("ROW fig={fig} dataset={} maxpat={} ERROR {e}", w.dataset, maxpat)
+                    }
                 }
             }
             if pair.len() == 2 {
@@ -114,25 +130,68 @@ pub fn run_figure(fig: &str, workloads: &[Workload]) {
 
 /// The paper's graph workloads (Figures 2 and 4).
 pub const GRAPH_WORKLOADS: &[Workload] = &[
-    Workload { dataset: "cpdb", scale: 0.3, maxpats: &[3, 4, 5], full_maxpats: &[5, 6, 7, 8, 9, 10] },
-    Workload { dataset: "mutagenicity", scale: 0.05, maxpats: &[3, 4, 5], full_maxpats: &[5, 6, 7, 8, 9, 10] },
-    Workload { dataset: "bergstrom", scale: 1.0, maxpats: &[3, 4, 5], full_maxpats: &[5, 6, 7, 8, 9, 10] },
-    Workload { dataset: "karthikeyan", scale: 0.05, maxpats: &[3, 4, 5], full_maxpats: &[5, 6, 7, 8, 9, 10] },
+    Workload {
+        dataset: "cpdb",
+        scale: 0.3,
+        maxpats: &[3, 4, 5],
+        full_maxpats: &[5, 6, 7, 8, 9, 10],
+    },
+    Workload {
+        dataset: "mutagenicity",
+        scale: 0.05,
+        maxpats: &[3, 4, 5],
+        full_maxpats: &[5, 6, 7, 8, 9, 10],
+    },
+    Workload {
+        dataset: "bergstrom",
+        scale: 1.0,
+        maxpats: &[3, 4, 5],
+        full_maxpats: &[5, 6, 7, 8, 9, 10],
+    },
+    Workload {
+        dataset: "karthikeyan",
+        scale: 0.05,
+        maxpats: &[3, 4, 5],
+        full_maxpats: &[5, 6, 7, 8, 9, 10],
+    },
 ];
 
 /// The paper's item-set workloads (Figures 3 and 5).
 pub const ITEMSET_WORKLOADS: &[Workload] = &[
-    Workload { dataset: "splice", scale: 0.2, maxpats: &[2, 3], full_maxpats: &[3, 4, 5, 6] },
-    Workload { dataset: "a9a", scale: 0.03, maxpats: &[2, 3], full_maxpats: &[3, 4, 5, 6] },
-    Workload { dataset: "dna", scale: 0.15, maxpats: &[2, 3], full_maxpats: &[3, 4, 5, 6] },
-    Workload { dataset: "protein", scale: 0.02, maxpats: &[2], full_maxpats: &[3, 4, 5, 6] },
+    Workload {
+        dataset: "splice",
+        scale: 0.2,
+        maxpats: &[2, 3],
+        full_maxpats: &[3, 4, 5, 6],
+    },
+    Workload {
+        dataset: "a9a",
+        scale: 0.03,
+        maxpats: &[2, 3],
+        full_maxpats: &[3, 4, 5, 6],
+    },
+    Workload {
+        dataset: "dna",
+        scale: 0.15,
+        maxpats: &[2, 3],
+        full_maxpats: &[3, 4, 5, 6],
+    },
+    Workload {
+        dataset: "protein",
+        scale: 0.02,
+        maxpats: &[2],
+        full_maxpats: &[3, 4, 5, 6],
+    },
 ];
 
 /// The sequence-substrate workload (beyond the paper; exercises the
 /// PrefixSpan tree through the same SPP-vs-boosting sweep).
-pub const SEQ_WORKLOADS: &[Workload] = &[
-    Workload { dataset: "synth-seq", scale: 0.25, maxpats: &[2, 3], full_maxpats: &[3, 4, 5] },
-];
+pub const SEQ_WORKLOADS: &[Workload] = &[Workload {
+    dataset: "synth-seq",
+    scale: 0.25,
+    maxpats: &[2, 3],
+    full_maxpats: &[3, 4, 5],
+}];
 
 /// Criterion-style micro benchmark: returns (min, median, mean) seconds
 /// per iteration and prints one line.

@@ -17,8 +17,11 @@
 
 use std::time::Instant;
 
-use crate::mining::{Counting, Pattern, PatternNode, PatternSubstrate, TraverseStats, TreeVisitor, Walk};
+use crate::mining::{
+    Counting, Pattern, PatternNode, PatternSubstrate, TraverseStats, TreeVisitor, Walk,
+};
 use crate::path::working_set::WorkingSet;
+use crate::screening::pool::SupportPool;
 use crate::solver::{CdConfig, CdSolver, Solution, Task};
 
 /// Baseline configuration.
@@ -119,9 +122,11 @@ impl TreeVisitor for ViolationSearch<'_> {
     }
 }
 
-/// Solve one λ by constraint generation, growing `ws` in place.
+/// Solve one λ by constraint generation, growing `ws` in place (new
+/// columns are interned into `pool`).
 /// `w` is the warm-start weight vector aligned with `ws` (extended with
 /// zeros as patterns are added); it is updated to the final weights.
+#[allow(clippy::too_many_arguments)]
 pub fn solve_lambda<S: PatternSubstrate>(
     db: &S,
     y: &[f64],
@@ -129,6 +134,7 @@ pub fn solve_lambda<S: PatternSubstrate>(
     lam: f64,
     maxpat: usize,
     minsup: usize,
+    pool: &mut SupportPool,
     ws: &mut WorkingSet,
     w: &mut Vec<f64>,
     b: &mut f64,
@@ -143,13 +149,16 @@ pub fn solve_lambda<S: PatternSubstrate>(
     loop {
         rounds += 1;
         let t0 = Instant::now();
-        let sol = solver.solve(
-            task,
-            &ws.supports,
-            y,
-            lam,
-            Some(crate::solver::cd::Warm { w, b: *b }),
-        );
+        let sol = {
+            let cols = ws.columns(pool);
+            solver.solve(
+                task,
+                &cols,
+                y,
+                lam,
+                Some(crate::solver::cd::Warm { w, b: *b }),
+            )
+        };
         solve_secs += t0.elapsed().as_secs_f64();
         *w = sol.w.clone();
         *b = sol.b;
@@ -181,7 +190,7 @@ pub fn solve_lambda<S: PatternSubstrate>(
             };
         }
         for (_, pat, sup) in search.found.into_iter().rev() {
-            ws.insert(pat, sup);
+            ws.insert(pat, pool.intern(&sup));
             w.push(0.0);
         }
     }
@@ -224,8 +233,9 @@ mod tests {
         d.db.traverse(3, 1, &mut s0);
         let (best_score, best_pat, best_sup) = s0.found.pop().unwrap();
 
+        let mut pool = crate::screening::pool::SupportPool::new();
         let mut ws = WorkingSet::new();
-        ws.insert(best_pat.clone(), best_sup);
+        ws.insert(best_pat.clone(), pool.intern(&best_sup));
         let mut s1 = ViolationSearch::new(&g, &ws, 0.0, 1);
         d.db.traverse(3, 1, &mut s1);
         let (second, pat2, _) = s1.found.pop().unwrap();
@@ -242,6 +252,7 @@ mod tests {
         let lm = lambda_max(db, &d.y, Task::Regression, 2, 1);
         let lam = 0.3 * lm.lambda_max;
 
+        let mut pool = crate::screening::pool::SupportPool::new();
         let mut ws = WorkingSet::new();
         let mut w = Vec::new();
         let mut b = lm.b0;
@@ -252,6 +263,7 @@ mod tests {
             lam,
             2,
             1,
+            &mut pool,
             &mut ws,
             &mut w,
             &mut b,
@@ -278,6 +290,7 @@ mod tests {
         let lm = lambda_max(db, &d.y, Task::Regression, 3, 1);
         let lam = 0.1 * lm.lambda_max;
         let run = |k: usize| {
+            let mut pool = crate::screening::pool::SupportPool::new();
             let mut ws = WorkingSet::new();
             let mut w = Vec::new();
             let mut b = lm.b0;
@@ -286,12 +299,13 @@ mod tests {
                 ..BoostingConfig::default()
             };
             solve_lambda(
-                db, &d.y, Task::Regression, lam, 3, 1, &mut ws, &mut w, &mut b, &cfg,
+                db, &d.y, Task::Regression, lam, 3, 1, &mut pool, &mut ws, &mut w, &mut b, &cfg,
             )
         };
         let r1 = run(1);
         let r5 = run(5);
         assert!(r5.rounds <= r1.rounds);
-        assert!((r1.solution.primal - r5.solution.primal).abs() < 1e-4 * (1.0 + r1.solution.primal.abs()));
+        let rel = 1e-4 * (1.0 + r1.solution.primal.abs());
+        assert!((r1.solution.primal - r5.solution.primal).abs() < rel);
     }
 }

@@ -61,15 +61,60 @@ pub enum Kind {
 /// All eight paper datasets plus the `synth-seq` sequence preset (the
 /// third-substrate workload; `paper_n` is its scale-1.0 record count).
 pub const ALL: [DatasetInfo; 9] = [
-    DatasetInfo { name: "cpdb", kind: Kind::Graph, task: Task::Classification, paper_n: 648 },
-    DatasetInfo { name: "mutagenicity", kind: Kind::Graph, task: Task::Classification, paper_n: 4337 },
-    DatasetInfo { name: "bergstrom", kind: Kind::Graph, task: Task::Regression, paper_n: 185 },
-    DatasetInfo { name: "karthikeyan", kind: Kind::Graph, task: Task::Regression, paper_n: 4173 },
-    DatasetInfo { name: "splice", kind: Kind::Itemset, task: Task::Classification, paper_n: 1000 },
-    DatasetInfo { name: "a9a", kind: Kind::Itemset, task: Task::Classification, paper_n: 32_561 },
-    DatasetInfo { name: "dna", kind: Kind::Itemset, task: Task::Regression, paper_n: 2000 },
-    DatasetInfo { name: "protein", kind: Kind::Itemset, task: Task::Regression, paper_n: 6621 },
-    DatasetInfo { name: "synth-seq", kind: Kind::Sequence, task: Task::Classification, paper_n: 600 },
+    DatasetInfo {
+        name: "cpdb",
+        kind: Kind::Graph,
+        task: Task::Classification,
+        paper_n: 648,
+    },
+    DatasetInfo {
+        name: "mutagenicity",
+        kind: Kind::Graph,
+        task: Task::Classification,
+        paper_n: 4337,
+    },
+    DatasetInfo {
+        name: "bergstrom",
+        kind: Kind::Graph,
+        task: Task::Regression,
+        paper_n: 185,
+    },
+    DatasetInfo {
+        name: "karthikeyan",
+        kind: Kind::Graph,
+        task: Task::Regression,
+        paper_n: 4173,
+    },
+    DatasetInfo {
+        name: "splice",
+        kind: Kind::Itemset,
+        task: Task::Classification,
+        paper_n: 1000,
+    },
+    DatasetInfo {
+        name: "a9a",
+        kind: Kind::Itemset,
+        task: Task::Classification,
+        paper_n: 32_561,
+    },
+    DatasetInfo {
+        name: "dna",
+        kind: Kind::Itemset,
+        task: Task::Regression,
+        paper_n: 2000,
+    },
+    DatasetInfo {
+        name: "protein",
+        kind: Kind::Itemset,
+        task: Task::Regression,
+        paper_n: 6621,
+    },
+    DatasetInfo {
+        name: "synth-seq",
+        kind: Kind::Sequence,
+        task: Task::Classification,
+        paper_n: 600,
+    },
 ];
 
 pub fn info(name: &str) -> Option<DatasetInfo> {
@@ -80,7 +125,9 @@ pub fn info(name: &str) -> Option<DatasetInfo> {
 pub fn lookup(name: &str, scale: f64) -> crate::Result<Dataset> {
     let seed = REGISTRY_SEED;
     let ds = match name {
-        "cpdb" => Dataset::Graphs(synth_graphs::generate(&GraphSynthConfig::preset_cpdb(seed).scaled(scale)).db),
+        "cpdb" => Dataset::Graphs(
+            synth_graphs::generate(&GraphSynthConfig::preset_cpdb(seed).scaled(scale)).db,
+        ),
         "mutagenicity" => Dataset::Graphs(
             synth_graphs::generate(&GraphSynthConfig::preset_mutagenicity(seed).scaled(scale)).db,
         ),
@@ -91,7 +138,8 @@ pub fn lookup(name: &str, scale: f64) -> crate::Result<Dataset> {
             synth_graphs::generate(&GraphSynthConfig::preset_karthikeyan(seed).scaled(scale)).db,
         ),
         "splice" => Dataset::Itemsets(
-            synth_itemsets::generate(&ItemsetSynthConfig::preset_splice(seed).scaled(scale)).labeled(),
+            synth_itemsets::generate(&ItemsetSynthConfig::preset_splice(seed).scaled(scale))
+                .labeled(),
         ),
         "a9a" => Dataset::Itemsets(
             synth_itemsets::generate(&ItemsetSynthConfig::preset_a9a(seed).scaled(scale)).labeled(),
@@ -100,13 +148,16 @@ pub fn lookup(name: &str, scale: f64) -> crate::Result<Dataset> {
             synth_itemsets::generate(&ItemsetSynthConfig::preset_dna(seed).scaled(scale)).labeled(),
         ),
         "protein" => Dataset::Itemsets(
-            synth_itemsets::generate(&ItemsetSynthConfig::preset_protein(seed).scaled(scale)).labeled(),
+            synth_itemsets::generate(&ItemsetSynthConfig::preset_protein(seed).scaled(scale))
+                .labeled(),
         ),
         "synth-seq" => Dataset::Sequences(
             sequence::generate(&SeqSynthConfig::preset_synth_seq(seed).scaled(scale)).labeled(),
         ),
-        other => anyhow::bail!("unknown dataset '{other}' (expected one of {:?})",
-                               ALL.map(|d| d.name)),
+        other => anyhow::bail!(
+            "unknown dataset '{other}' (expected one of {:?})",
+            ALL.map(|d| d.name)
+        ),
     };
     Ok(ds)
 }

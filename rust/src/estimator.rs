@@ -69,6 +69,20 @@ impl SppEstimator {
         self
     }
 
+    /// Reuse the screening forest across λ steps (on by default; off =
+    /// paper-literal from-scratch traversal per λ, for ablation).
+    pub fn reuse_forest(mut self, on: bool) -> Self {
+        self.cfg.reuse_forest = on;
+        self
+    }
+
+    /// Gap-safe dynamic screening inside the restricted solver (on by
+    /// default; see `solver::cd`).
+    pub fn dynamic_screening(mut self, on: bool) -> Self {
+        self.cfg.cd.dynamic_screen = on;
+        self
+    }
+
     /// Restricted-solver settings (tolerance, epoch caps).
     pub fn cd(mut self, cd: CdConfig) -> Self {
         self.cfg.cd = cd;
@@ -145,6 +159,18 @@ mod tests {
     use super::*;
     use crate::data::sequence::{generate as sgen, SeqSynthConfig};
     use crate::data::synth_itemsets::{generate, ItemsetSynthConfig};
+
+    #[test]
+    fn reuse_and_screening_knobs_reach_the_config() {
+        let est = SppEstimator::new(Task::Regression)
+            .reuse_forest(false)
+            .dynamic_screening(false);
+        assert!(!est.config().reuse_forest);
+        assert!(!est.config().cd.dynamic_screen);
+        let est = SppEstimator::new(Task::Regression);
+        assert!(est.config().reuse_forest, "forest reuse must default on");
+        assert!(est.config().cd.dynamic_screen, "dynamic screening must default on");
+    }
 
     #[test]
     fn fit_matches_low_level_path_api() {

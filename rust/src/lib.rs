@@ -28,10 +28,13 @@
 //! * [`solver`] — L1 solvers (coordinate descent, ISTA oracle), the
 //!   paper's unified problem form, duality gaps, dual-feasible points.
 //! * [`screening`] — the SPP rule itself, per-feature gap-safe tests,
-//!   and the `lambda_max` tree search.
+//!   the `lambda_max` tree search, the [`screening::SupportPool`]
+//!   column-interning arena, and the incremental screening forest that
+//!   reuses the pruned tree across the λ path.
 //! * [`boosting`] — the cutting-plane baseline the paper compares with.
-//! * [`path`] — Algorithm 1: the warm-started regularization path, and
-//!   K-fold cross-validation over it.
+//! * [`path`] — Algorithm 1: the warm-started regularization path
+//!   (incremental screening-forest engine by default, from-scratch
+//!   under `--no-reuse`), and K-fold cross-validation over it.
 //! * [`estimator`] — [`SppEstimator`], the sklearn-style builder facade
 //!   over the path machinery.
 //! * [`runtime`] — PJRT execution of the AOT JAX/Pallas artifacts

@@ -3,7 +3,8 @@
 //! ```text
 //! spp path       --dataset cpdb --maxpat 5 [--method spp|boosting|both]
 //!                [--lambdas 100] [--min-ratio 0.01] [--scale 1.0]
-//!                [--certify] [--engine rust|xla] [--json out.json]
+//!                [--certify] [--no-reuse] [--dynamic-screen=false]
+//!                [--engine rust|xla] [--json out.json]
 //! spp fit        --dataset synth-seq --maxpat 3 --model out.spp
 //!                [--lambdas 100] [--min-ratio 0.01] [--scale 1.0]
 //!                [--lambda-index K]     # default: smallest λ
@@ -32,7 +33,7 @@ use spp::solver::Task;
 use spp::SppEstimator;
 
 /// Flags that never consume a following token (see `cli::Args`).
-const SWITCHES: &[&str] = &["certify"];
+const SWITCHES: &[&str] = &["certify", "no-reuse", "dynamic-screen"];
 
 fn main() {
     let args = cli::Args::parse_with_switches(std::env::args().skip(1), SWITCHES);
@@ -77,12 +78,22 @@ commands:
 ";
 
 fn path_config(args: &cli::Args) -> spp::Result<PathConfig> {
+    let mut cd = spp::solver::CdConfig::default();
+    // `--dynamic-screen=false` / `--dynamic-screen false` turns the
+    // in-solve gap-safe screening off; absent or bare means on.
+    if args.flag("dynamic-screen").is_some() {
+        cd.dynamic_screen = args.switch("dynamic-screen");
+    }
     Ok(PathConfig {
         n_lambdas: args.get_usize("lambdas", 100)?,
         lambda_min_ratio: args.get_f64("min-ratio", 0.01)?,
         maxpat: args.get_usize("maxpat", 4)?,
         minsup: args.get_usize("minsup", 1)?,
+        cd,
         certify: args.switch("certify"),
+        // `--no-reuse` falls back to the from-scratch traversal per λ
+        // (ablation of the incremental screening forest)
+        reuse_forest: !args.switch("no-reuse"),
         k_add: args.get_usize("k-add", 1)?,
         ..PathConfig::default()
     })
@@ -145,7 +156,9 @@ fn cmd_fit(args: &cli::Args) -> spp::Result<()> {
         .maxpat(cfg.maxpat)
         .minsup(cfg.minsup)
         .lambda_grid(cfg.n_lambdas, cfg.lambda_min_ratio)
-        .certify(cfg.certify);
+        .certify(cfg.certify)
+        .reuse_forest(cfg.reuse_forest)
+        .cd(cfg.cd);
     let fit = match &data {
         Dataset::Graphs(g) => est.fit(g, &g.y)?,
         Dataset::Itemsets(t) => est.fit(&t.db, &t.y)?,

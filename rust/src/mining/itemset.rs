@@ -317,7 +317,8 @@ mod tests {
             use crate::testutil::SplitMix64;
             let mut rng = SplitMix64::new(42);
             for _ in 0..200 {
-                let mut a: Vec<u32> = (0..rng.range(0, 8)).map(|_| rng.below(1000) as u32).collect();
+                let mut a: Vec<u32> =
+                    (0..rng.range(0, 8)).map(|_| rng.below(1000) as u32).collect();
                 let mut b: Vec<u32> =
                     (0..rng.range(200, 400)).map(|_| rng.below(1000) as u32).collect();
                 a.sort_unstable();

@@ -344,11 +344,16 @@ mod tests {
 
     #[test]
     fn parse_rejects_garbage() {
+        let with_term = |term: &str| {
+            SparsePatternModel::parse(&format!(
+                "spp-model v1 task=regression lambda=1 b=0\n{term}\n"
+            ))
+        };
         assert!(SparsePatternModel::parse("").is_err());
         assert!(SparsePatternModel::parse("not a model\n").is_err());
-        assert!(SparsePatternModel::parse("spp-model v1 task=regression lambda=1 b=0\nX 1 2\n").is_err());
-        assert!(SparsePatternModel::parse("spp-model v1 task=regression lambda=1 b=0\nI nope 2\n").is_err());
-        assert!(SparsePatternModel::parse("spp-model v1 task=regression lambda=1 b=0\nS 1 x\n").is_err());
+        assert!(with_term("X 1 2").is_err());
+        assert!(with_term("I nope 2").is_err());
+        assert!(with_term("S 1 x").is_err());
     }
 
     #[test]

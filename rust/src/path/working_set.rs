@@ -1,16 +1,27 @@
 //! The working set: the finite pattern collection a solver actually
 //! sees — Â for SPP, the cutting-plane set for boosting.
+//!
+//! Support columns are held by [`SupportId`] into a shared
+//! [`SupportPool`], so the set never clones a column: inserting a
+//! survivor is two integer pushes, "same feature" is id equality, and
+//! warm-start weight transfer between λ steps is an id-indexed copy
+//! (no per-pattern hash probes — ids are stable across the whole path
+//! because the pool is append-only).
 
 use std::collections::HashMap;
 
 use crate::mining::Pattern;
+use crate::screening::pool::{SupportId, SupportPool};
 
-/// Patterns with their support columns and an id index.
+/// Patterns with their interned support columns and an id index.
 #[derive(Clone, Debug, Default)]
 pub struct WorkingSet {
     pub patterns: Vec<Pattern>,
-    pub supports: Vec<Vec<u32>>,
+    pub support_ids: Vec<SupportId>,
     index: HashMap<Pattern, usize>,
+    /// `support id -> column + 1` (0 = absent); grown lazily to the
+    /// pool's id space.  First inserter wins on duplicate columns.
+    by_support: Vec<u32>,
 }
 
 impl WorkingSet {
@@ -34,27 +45,70 @@ impl WorkingSet {
         self.index.get(p).copied()
     }
 
+    /// Column holding support `sid` (the first inserted, if several
+    /// patterns share the column).
+    #[inline]
+    pub fn position_by_support(&self, sid: SupportId) -> Option<usize> {
+        match self.by_support.get(sid.index()) {
+            Some(&c) if c != 0 => Some(c as usize - 1),
+            _ => None,
+        }
+    }
+
     /// Insert if absent; returns the pattern's index either way.
-    pub fn insert(&mut self, pattern: Pattern, support: Vec<u32>) -> usize {
+    pub fn insert(&mut self, pattern: Pattern, sid: SupportId) -> usize {
         if let Some(&i) = self.index.get(&pattern) {
             return i;
         }
         let i = self.patterns.len();
         self.index.insert(pattern.clone(), i);
         self.patterns.push(pattern);
-        self.supports.push(support);
+        self.support_ids.push(sid);
+        if self.by_support.len() <= sid.index() {
+            self.by_support.resize(sid.index() + 1, 0);
+        }
+        if self.by_support[sid.index()] == 0 {
+            self.by_support[sid.index()] = (i + 1) as u32;
+        }
         i
     }
 
+    /// Borrowed column views in column order (what the restricted
+    /// solver consumes).
+    pub fn columns<'p>(&self, pool: &'p SupportPool) -> Vec<&'p [u32]> {
+        pool.view(&self.support_ids)
+    }
+
     /// Map a weight vector indexed by *another* working set onto this
-    /// one (warm-start transfer between λ steps).  Missing patterns get
-    /// weight 0; patterns absent here are dropped (they were screened
-    /// as inactive).
+    /// one (warm-start transfer between λ steps): an id-indexed copy —
+    /// columns are matched by [`SupportId`] (identical support columns
+    /// are the same feature), so no hashing happens per pattern.
+    /// Missing columns get weight 0; columns absent here are dropped
+    /// (they were screened as inactive).
+    ///
+    /// **Precondition**: the *nonzero-weight* entries of `other` must
+    /// hold distinct support columns (the SPP path guarantees this —
+    /// `assemble_working_set` dedups Â by id).  Two nonzero weights on
+    /// one column would land in the same destination slot; the debug
+    /// assertion below makes that misuse loud.
     pub fn transfer_weights(&self, other: &WorkingSet, w_other: &[f64]) -> Vec<f64> {
+        #[cfg(debug_assertions)]
+        {
+            let mut seen = std::collections::HashSet::new();
+            for (i, &sid) in other.support_ids.iter().enumerate() {
+                if w_other[i] != 0.0 {
+                    debug_assert!(
+                        seen.insert(sid),
+                        "transfer_weights: duplicate support column among \
+                         nonzero-weight source entries"
+                    );
+                }
+            }
+        }
         let mut w = vec![0.0; self.len()];
-        for (i, p) in other.patterns.iter().enumerate() {
+        for (i, &sid) in other.support_ids.iter().enumerate() {
             if w_other[i] != 0.0 {
-                if let Some(j) = self.position(p) {
+                if let Some(j) = self.position_by_support(sid) {
                     w[j] = w_other[i];
                 }
             }
@@ -73,25 +127,56 @@ mod tests {
 
     #[test]
     fn insert_is_idempotent() {
+        let mut pool = SupportPool::new();
         let mut ws = WorkingSet::new();
-        let i = ws.insert(p(&[1]), vec![0, 1]);
-        let j = ws.insert(p(&[1]), vec![0, 1]);
+        let sid = pool.intern(&[0, 1]);
+        let i = ws.insert(p(&[1]), sid);
+        let j = ws.insert(p(&[1]), sid);
         assert_eq!(i, j);
         assert_eq!(ws.len(), 1);
         assert!(ws.contains(&p(&[1])));
         assert!(!ws.contains(&p(&[2])));
+        assert_eq!(ws.position_by_support(sid), Some(0));
+        assert_eq!(ws.columns(&pool), vec![&[0, 1][..]]);
     }
 
     #[test]
-    fn transfer_maps_by_pattern_identity() {
+    fn transfer_maps_by_support_id() {
+        let mut pool = SupportPool::new();
+        let (s0, s1, s2) = (pool.intern(&[0]), pool.intern(&[1]), pool.intern(&[2]));
         let mut a = WorkingSet::new();
-        a.insert(p(&[1]), vec![0]);
-        a.insert(p(&[2]), vec![1]);
+        a.insert(p(&[1]), s0);
+        a.insert(p(&[2]), s1);
         let mut b = WorkingSet::new();
-        b.insert(p(&[2]), vec![1]);
-        b.insert(p(&[3]), vec![2]);
+        b.insert(p(&[2]), s1);
+        b.insert(p(&[3]), s2);
         let w_a = vec![0.5, -0.7];
         let w_b = b.transfer_weights(&a, &w_a);
         assert_eq!(w_b, vec![-0.7, 0.0]);
+    }
+
+    #[test]
+    fn transfer_matches_identical_columns_across_pattern_renames() {
+        // two DIFFERENT patterns with the same support column are the
+        // same feature: the warm start must carry the weight over even
+        // when the λ step picked a different representative pattern
+        let mut pool = SupportPool::new();
+        let sid = pool.intern(&[3, 5]);
+        let mut a = WorkingSet::new();
+        a.insert(p(&[1]), sid);
+        let mut b = WorkingSet::new();
+        b.insert(p(&[9]), sid);
+        assert_eq!(b.transfer_weights(&a, &[1.25]), vec![1.25]);
+    }
+
+    #[test]
+    fn duplicate_columns_keep_first_position() {
+        let mut pool = SupportPool::new();
+        let sid = pool.intern(&[7]);
+        let mut ws = WorkingSet::new();
+        ws.insert(p(&[1]), sid);
+        ws.insert(p(&[2]), sid);
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws.position_by_support(sid), Some(0));
     }
 }

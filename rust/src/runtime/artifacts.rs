@@ -69,8 +69,9 @@ impl ArtifactSet {
             if f.len() != 6 {
                 anyhow::bail!("manifest line {}: expected 6 fields", lineno + 1);
             }
-            let kind = ArtifactKind::parse(f[1])
-                .ok_or_else(|| anyhow::anyhow!("manifest line {}: unknown kind '{}'", lineno + 1, f[1]))?;
+            let kind = ArtifactKind::parse(f[1]).ok_or_else(|| {
+                anyhow::anyhow!("manifest line {}: unknown kind '{}'", lineno + 1, f[1])
+            })?;
             let info = ArtifactInfo {
                 name: f[0].to_string(),
                 kind,

@@ -26,7 +26,7 @@ pub struct XlaSolution {
 /// σ_max² of the intercept-augmented design `[X 1]` by power iteration
 /// over the sparse support columns.  30 iterations are ample for a
 /// step-size estimate (a 1.05 safety factor absorbs the residual).
-pub fn power_lipschitz(supports: &[Vec<u32>], n: usize) -> f64 {
+pub fn power_lipschitz<S: AsRef<[u32]>>(supports: &[S], n: usize) -> f64 {
     let k = supports.len();
     let mut v = vec![1.0 / ((k + 1) as f64).sqrt(); k + 1];
     let mut sigma2 = n as f64; // the all-ones column alone gives n
@@ -35,7 +35,7 @@ pub fn power_lipschitz(supports: &[Vec<u32>], n: usize) -> f64 {
         let mut u = vec![v[k]; n];
         for (t, sup) in supports.iter().enumerate() {
             if v[t] != 0.0 {
-                for &i in sup {
+                for &i in sup.as_ref() {
                     u[i as usize] += v[t];
                 }
             }
@@ -43,7 +43,7 @@ pub fn power_lipschitz(supports: &[Vec<u32>], n: usize) -> f64 {
         // v' = Aᵀ u
         let mut v2 = vec![0.0; k + 1];
         for (t, sup) in supports.iter().enumerate() {
-            v2[t] = sup.iter().map(|&i| u[i as usize]).sum();
+            v2[t] = sup.as_ref().iter().map(|&i| u[i as usize]).sum();
         }
         v2[k] = u.iter().sum();
         let norm = v2.iter().map(|x| x * x).sum::<f64>().sqrt();
@@ -74,6 +74,7 @@ mod tests {
     #[test]
     fn power_lipschitz_no_columns_gives_n() {
         // only the all-ones intercept column: sigma_max^2 = n
-        assert!((power_lipschitz(&[], 7) - 7.0).abs() < 1e-9);
+        let none: [Vec<u32>; 0] = [];
+        assert!((power_lipschitz(&none, 7) - 7.0).abs() < 1e-9);
     }
 }

@@ -76,9 +76,9 @@ impl<'r> XlaSppcScorer<'r> {
         0
     }
 
-    pub fn score(
+    pub fn score<S: AsRef<[u32]>>(
         &self,
-        _supports: &[Vec<u32>],
+        _supports: &[S],
         _wpos: &[f64],
         _wneg: &[f64],
         _radius: f64,
@@ -105,10 +105,10 @@ impl<'r> XlaFistaSolver<'r> {
         }
     }
 
-    pub fn solve(
+    pub fn solve<S: AsRef<[u32]>>(
         &self,
         _task: Task,
-        _supports: &[Vec<u32>],
+        _supports: &[S],
         _y: &[f64],
         _lam: f64,
     ) -> crate::Result<XlaSolution> {
@@ -144,7 +144,7 @@ impl crate::path::RestrictedSolver for XlaRestricted<'_> {
     fn solve_restricted(
         &self,
         task: Task,
-        supports: &[Vec<u32>],
+        supports: &[&[u32]],
         y: &[f64],
         lam: f64,
         warm_w: &[f64],

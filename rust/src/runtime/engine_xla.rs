@@ -120,9 +120,9 @@ impl<'r> XlaSppcScorer<'r> {
     /// per-sample weights (see `screening::fold_weights`), `radius` the
     /// gap-safe radius.  Any number of supports is accepted; they are
     /// processed in blocks of [`Self::block_width`].
-    pub fn score(
+    pub fn score<S: AsRef<[u32]>>(
         &self,
-        supports: &[Vec<u32>],
+        supports: &[S],
         wpos: &[f64],
         wneg: &[f64],
         radius: f64,
@@ -148,7 +148,7 @@ impl<'r> XlaSppcScorer<'r> {
         for chunk in supports.chunks(b) {
             x.iter_mut().for_each(|v| *v = 0.0);
             for (t, sup) in chunk.iter().enumerate() {
-                for &i in sup {
+                for &i in sup.as_ref() {
                     x[i as usize * b + t] = 1.0;
                 }
             }
@@ -236,10 +236,10 @@ impl<'r> XlaFistaSolver<'r> {
     /// Solve the restricted problem over `supports` via the AOT FISTA
     /// artifact.  Requires an artifact with `n >= y.len()` and
     /// `cols >= supports.len()`.
-    pub fn solve(
+    pub fn solve<S: AsRef<[u32]>>(
         &self,
         task: Task,
-        supports: &[Vec<u32>],
+        supports: &[S],
         y: &[f64],
         lam: f64,
     ) -> crate::Result<XlaSolution> {
@@ -261,7 +261,7 @@ impl<'r> XlaFistaSolver<'r> {
         // dense padded panel + targets + mask
         let mut x = vec![0.0f32; n_pad * d_pad];
         for (t, sup) in supports.iter().enumerate() {
-            for &i in sup {
+            for &i in sup.as_ref() {
                 x[i as usize * d_pad + t] = 1.0;
             }
         }
@@ -372,7 +372,7 @@ impl crate::path::RestrictedSolver for XlaRestricted<'_> {
     fn solve_restricted(
         &self,
         task: Task,
-        supports: &[Vec<u32>],
+        supports: &[&[u32]],
         y: &[f64],
         lam: f64,
         warm_w: &[f64],

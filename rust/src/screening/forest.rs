@@ -1,0 +1,559 @@
+//! The incremental screening forest: reuse one λ's pruned pattern tree
+//! at the next λ instead of re-enumerating the substrate from the root.
+//!
+//! `compute_path_spp` evaluates the SPP rule ~100 times on trees whose
+//! survivor sets shrink slowly between adjacent λs — the redundancy the
+//! multi-λ screening reuse of Yoshida et al. (2023) eliminates.  The
+//! forest materializes every node a traversal has ever visited
+//! (pattern, interned support column, child links, and a *frontier*
+//! flag on nodes whose subtree was pruned before enumeration).  At the
+//! next λ the SPPC is re-evaluated **on the stored forest** — a linear
+//! scan over interned columns, with none of the substrate's
+//! intersection / canonicality / embedding work — and the substrate
+//! [`PatternSubstrate::traverse`] is re-opened only below frontier
+//! nodes whose SPPC climbed back to `>= 1`.
+//!
+//! Two certificates keep the re-evaluation itself cheap and safe:
+//!
+//! * **Anti-monotonicity** (Corollary 3): `SPPC(child) <= SPPC(parent)`
+//!   for the same dual point, so the forest walk prunes whole stored
+//!   subtrees exactly like the live traversal does.
+//! * **A per-node λ-range certificate** (Yoshida et al.'s range idea in
+//!   drift form): for folded weights `g`, `u_t` is 1-Lipschitz per
+//!   sample, so with `D(e, now)` an upper bound on `‖g_now − g_e‖₂`
+//!   (maintained as a prefix sum of consecutive-epoch distances),
+//!
+//!   ```text
+//!   SPPC_now(t) <= u_t(g_e) + √v_t · (D(e, now) + r_now)
+//!   ```
+//!
+//!   — when that bound is already `< 1`, node `t` is certifiably still
+//!   pruned and is skipped without touching its support column at all.
+//!   Nodes whose screening pair has drifted far below the threshold are
+//!   therefore never re-examined for the rest of the grid.
+//!
+//! **Equivalence contract**: for the same per-λ screening pairs, the
+//! forest emits *bit-identical* survivors, in the same canonical DFS
+//! order, as a from-scratch [`SppScreen`] traversal — so the
+//! incremental path produces bit-identical active sets, weights, and
+//! certified gaps (pinned by `tests/integration_forest.rs` on all three
+//! substrates).
+//!
+//! [`SppScreen`]: super::sppc::SppScreen
+
+use std::collections::HashMap;
+
+use super::pool::SupportPool;
+use super::sppc::{feature_ub_from, fold_sums, Survivor};
+use crate::mining::{
+    Counting, Pattern, PatternNode, PatternSubstrate, TraverseStats, TreeVisitor, Walk,
+};
+use crate::solver::Task;
+
+const NO_PARENT: u32 = u32::MAX;
+
+/// One materialized node of the screening forest.
+struct ForestNode {
+    pattern: Pattern,
+    support: super::pool::SupportId,
+    /// `|supp|` cached as f64 (the SPPC weight).
+    v: f64,
+    parent: u32,
+    /// Children in substrate enumeration order (complete once the node
+    /// has been descended; empty while `frontier`).
+    children: Vec<u32>,
+    /// Subtree never enumerated: the node was pruned at every λ that
+    /// reached it and sits below `maxpat` (re-opened when its SPPC
+    /// climbs back to `>= 1`).
+    frontier: bool,
+    /// `u_t` stamped with the fold vector of epoch `epoch`.
+    u: f64,
+    epoch: u32,
+}
+
+/// Per-λ outcome of a forest screening pass.
+pub struct ForestScreenOutcome {
+    /// Â, bit-identical (content and order) to a from-scratch
+    /// [`super::sppc::SppScreen`] traversal with the same pair.
+    pub survivors: Vec<Survivor>,
+    /// Substrate traversal statistics — counts **only** real substrate
+    /// visits (initial build + re-opened subtrees), which is the
+    /// figure-4/5 currency the scratch mode reports.
+    pub stats: TraverseStats,
+    /// Stored nodes decided from interned columns (no substrate work).
+    pub forest_hits: u64,
+    /// Of those, nodes skipped by the λ-range drift certificate alone
+    /// (not even their support column was read).
+    pub cert_skips: u64,
+    /// Frontier subtrees re-opened below (substrate re-entered).
+    pub reopened: u64,
+}
+
+/// The forest itself; one instance spans a whole λ path (fixed
+/// `maxpat`/`minsup`).
+pub struct ScreenForest {
+    maxpat: usize,
+    minsup: usize,
+    nodes: Vec<ForestNode>,
+    roots: Vec<u32>,
+    index: HashMap<Pattern, u32>,
+    /// `drift[k]` = Σ of consecutive `‖g_j − g_{j−1}‖₂` up to epoch `k`
+    /// (prefix sums; the triangle inequality makes `drift[now] −
+    /// drift[e]` an upper bound on `‖g_now − g_e‖₂`).
+    drift: Vec<f64>,
+    g_prev: Vec<f64>,
+    built: bool,
+}
+
+/// Ordered emission events of the stored-forest pass (phase 1).
+enum Ev {
+    Keep { node: u32, sppc: f64, ub: f64 },
+    Open(u32),
+}
+
+impl ScreenForest {
+    pub fn new(maxpat: usize, minsup: usize) -> Self {
+        ScreenForest {
+            maxpat,
+            minsup,
+            nodes: Vec::new(),
+            roots: Vec::new(),
+            index: HashMap::new(),
+            drift: Vec::new(),
+            g_prev: Vec::new(),
+            built: false,
+        }
+    }
+
+    /// Stored nodes (diagnostics).
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// One λ step: evaluate the SPP rule for the pair `(θ, radius)`
+    /// against the stored forest, re-opening the substrate only where
+    /// needed.  Drop-in replacement for one `SppScreen` traversal.
+    #[allow(clippy::too_many_arguments)]
+    pub fn screen<S: PatternSubstrate>(
+        &mut self,
+        db: &S,
+        task: Task,
+        y: &[f64],
+        theta: &[f64],
+        radius: f64,
+        feature_test: bool,
+        pool: &mut SupportPool,
+    ) -> ForestScreenOutcome {
+        let g: Vec<f64> = y
+            .iter()
+            .zip(theta)
+            .map(|(&yi, &ti)| task.a(yi) * ti)
+            .collect();
+        let n = y.len() as f64;
+
+        // epoch advance: extend the drift prefix sums
+        let epoch = self.drift.len() as u32;
+        if self.g_prev.is_empty() {
+            self.drift.push(0.0);
+        } else {
+            let d: f64 = g
+                .iter()
+                .zip(&self.g_prev)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            self.drift.push(self.drift[epoch as usize - 1] + d);
+        }
+        self.g_prev = g.clone();
+
+        if !self.built {
+            // first screening λ: one full substrate traversal records
+            // the whole pruned tree
+            let (blocks, stats) =
+                self.reopen(db, &g, radius, n, feature_test, epoch, &[], &[], pool);
+            self.built = true;
+            let survivors = blocks.into_iter().flat_map(|(_, s)| s).collect();
+            return ForestScreenOutcome {
+                survivors,
+                stats,
+                forest_hits: 0,
+                cert_skips: 0,
+                reopened: 0,
+            };
+        }
+
+        // phase 1: decide every reachable stored node from its interned
+        // column (or the drift certificate), collecting ordered events
+        let mut evs: Vec<Ev> = Vec::new();
+        let mut reopen_ids: Vec<u32> = Vec::new();
+        let mut hits = 0u64;
+        let mut cert_skips = 0u64;
+        let drift_now = self.drift[epoch as usize];
+        let mut stack: Vec<u32> = self.roots.iter().rev().copied().collect();
+        while let Some(t) = stack.pop() {
+            hits += 1;
+            let node = &self.nodes[t as usize];
+            let vsqrt = node.v.sqrt();
+            // λ-range certificate: SPPC_now <= u_e + √v·(drift + r)
+            let drifted = drift_now - self.drift[node.epoch as usize];
+            if node.u + vsqrt * (drifted + radius) < 1.0 {
+                cert_skips += 1;
+                continue; // certifiably pruned, column untouched
+            }
+            let (pos, neg) = fold_sums(&g, pool.get(node.support));
+            let u = pos.max(-neg);
+            let sppc = u + radius * vsqrt;
+            let (v, frontier) = (node.v, node.frontier);
+            {
+                let node = &mut self.nodes[t as usize];
+                node.u = u;
+                node.epoch = epoch;
+            }
+            if sppc < 1.0 {
+                continue; // pruned (Theorem 2); stored subtree skipped
+            }
+            let ub = feature_ub_from(pos, neg, v, n, radius);
+            if !feature_test || ub >= 1.0 {
+                evs.push(Ev::Keep { node: t, sppc, ub });
+            }
+            if frontier {
+                evs.push(Ev::Open(t));
+                reopen_ids.push(t);
+            } else {
+                let node = &self.nodes[t as usize];
+                stack.extend(node.children.iter().rev());
+            }
+        }
+
+        // phase 2: re-enter the substrate below the re-opened frontiers
+        // (one guided traversal; skipped entirely when nothing climbed
+        // back over the threshold)
+        let reopened = reopen_ids.len() as u64;
+        let (mut blocks, stats) = if reopen_ids.is_empty() {
+            (Vec::new(), TraverseStats::default())
+        } else {
+            let mut on_path = vec![false; self.nodes.len()];
+            let mut reopen_flag = vec![false; self.nodes.len()];
+            for &t in &reopen_ids {
+                reopen_flag[t as usize] = true;
+                let mut p = self.nodes[t as usize].parent;
+                while p != NO_PARENT && !on_path[p as usize] {
+                    on_path[p as usize] = true;
+                    p = self.nodes[p as usize].parent;
+                }
+            }
+            self.reopen(db, &g, radius, n, feature_test, epoch, &on_path, &reopen_flag, pool)
+        };
+
+        // phase 3: splice — each re-opened frontier's fresh subtree
+        // lands right after the frontier's own entry, reproducing the
+        // substrate's canonical DFS order exactly
+        let mut survivors: Vec<Survivor> = Vec::new();
+        let mut bi = 0usize;
+        for ev in evs {
+            match ev {
+                Ev::Keep { node, sppc, ub } => {
+                    let nd = &self.nodes[node as usize];
+                    survivors.push(Survivor {
+                        pattern: nd.pattern.clone(),
+                        support: nd.support,
+                        sppc,
+                        ub,
+                    });
+                }
+                Ev::Open(f) => {
+                    debug_assert_eq!(blocks[bi].0, f, "frontier block order mismatch");
+                    survivors.append(&mut blocks[bi].1);
+                    bi += 1;
+                }
+            }
+        }
+        debug_assert_eq!(bi, blocks.len());
+
+        ForestScreenOutcome {
+            survivors,
+            stats,
+            forest_hits: hits,
+            cert_skips,
+            reopened,
+        }
+    }
+
+    /// One guided substrate traversal: descend through on-path
+    /// ancestors, re-open flagged frontiers, record + screen every new
+    /// node, prune everywhere else.  With empty `on_path`/`reopen_flag`
+    /// and an empty forest this IS the initial full build.
+    #[allow(clippy::too_many_arguments)]
+    fn reopen<S: PatternSubstrate>(
+        &mut self,
+        db: &S,
+        g: &[f64],
+        radius: f64,
+        n: f64,
+        feature_test: bool,
+        epoch: u32,
+        on_path: &[bool],
+        reopen_flag: &[bool],
+        pool: &mut SupportPool,
+    ) -> (Vec<(u32, Vec<Survivor>)>, TraverseStats) {
+        let (maxpat, minsup) = (self.maxpat, self.minsup);
+        let mut guide = Guide {
+            forest: self,
+            pool,
+            g,
+            radius,
+            n,
+            feature_test,
+            epoch,
+            on_path,
+            reopen_flag,
+            parents: Vec::new(),
+            open: vec![Block {
+                frontier: NO_PARENT,
+                depth: 0,
+                out: Vec::new(),
+            }],
+            done: Vec::new(),
+        };
+        let stats = {
+            let mut counting = Counting::new(&mut guide);
+            db.traverse(maxpat, minsup, &mut counting);
+            counting.stats
+        };
+        // close any block still open when the traversal ended
+        while let Some(b) = guide.open.pop() {
+            if b.frontier != NO_PARENT {
+                guide.done.push((b.frontier, b.out));
+            } else if guide.done.is_empty() && !b.out.is_empty() {
+                // initial build: everything lives in the sentinel block
+                guide.done.push((NO_PARENT, b.out));
+            }
+        }
+        (guide.done, stats)
+    }
+}
+
+/// Survivors collected under one re-opened frontier (or the sentinel
+/// root block on the initial build).
+struct Block {
+    frontier: u32,
+    depth: usize,
+    out: Vec<Survivor>,
+}
+
+struct Guide<'a, 'p> {
+    forest: &'a mut ScreenForest,
+    pool: &'p mut SupportPool,
+    g: &'a [f64],
+    radius: f64,
+    n: f64,
+    feature_test: bool,
+    epoch: u32,
+    on_path: &'a [bool],
+    reopen_flag: &'a [bool],
+    /// Forest id of the current ancestor at each depth (1-based).
+    parents: Vec<u32>,
+    open: Vec<Block>,
+    done: Vec<(u32, Vec<Survivor>)>,
+}
+
+impl TreeVisitor for Guide<'_, '_> {
+    fn visit(&mut self, node: &PatternNode<'_>) -> Walk {
+        let depth = node.depth;
+        // leaving a re-opened frontier's subtree closes its block
+        while let Some(b) = self.open.last() {
+            if b.frontier == NO_PARENT || depth > b.depth {
+                break;
+            }
+            let b = self.open.pop().unwrap();
+            self.done.push((b.frontier, b.out));
+        }
+        self.parents.truncate(depth - 1);
+
+        let pat = node.to_pattern();
+        if let Some(&id) = self.forest.index.get(&pat) {
+            // known node: pure routing, no screening work
+            self.parents.push(id);
+            if self.reopen_flag.get(id as usize).copied().unwrap_or(false) {
+                self.forest.nodes[id as usize].frontier = false;
+                self.open.push(Block {
+                    frontier: id,
+                    depth,
+                    out: Vec::new(),
+                });
+                return Walk::Descend;
+            }
+            if self.on_path.get(id as usize).copied().unwrap_or(false) {
+                return Walk::Descend;
+            }
+            return Walk::Prune;
+        }
+
+        // new node: screen it exactly like SppScreen::visit and record
+        let (pos, neg) = fold_sums(self.g, node.support);
+        let v = node.support.len() as f64;
+        let u = pos.max(-neg);
+        let sppc = u + self.radius * v.sqrt();
+        let prune = sppc < 1.0;
+        let sid = self.pool.intern(node.support);
+        let id = self.forest.nodes.len() as u32;
+        let parent = if depth == 1 {
+            NO_PARENT
+        } else {
+            self.parents[depth - 2]
+        };
+        self.forest.nodes.push(ForestNode {
+            pattern: pat.clone(),
+            support: sid,
+            v,
+            parent,
+            children: Vec::new(),
+            frontier: prune && depth < self.forest.maxpat,
+            u,
+            epoch: self.epoch,
+        });
+        self.forest.index.insert(pat.clone(), id);
+        if parent == NO_PARENT {
+            self.forest.roots.push(id);
+        } else {
+            self.forest.nodes[parent as usize].children.push(id);
+        }
+        self.parents.push(id);
+        if prune {
+            return Walk::Prune;
+        }
+        let ub = feature_ub_from(pos, neg, v, self.n, self.radius);
+        if !self.feature_test || ub >= 1.0 {
+            let block = self.open.last_mut().expect("a block is always open");
+            block.out.push(Survivor {
+                pattern: pat,
+                support: sid,
+                sppc,
+                ub,
+            });
+        }
+        Walk::Descend
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth_itemsets::{generate, ItemsetSynthConfig};
+    use crate::screening::sppc::SppScreen;
+
+    /// From-scratch survivors for one pair (the reference semantics).
+    fn scratch(
+        d: &crate::data::Transactions,
+        y: &[f64],
+        theta: &[f64],
+        radius: f64,
+        maxpat: usize,
+        pool: &mut SupportPool,
+    ) -> (Vec<Survivor>, TraverseStats) {
+        let mut screen = SppScreen::new(Task::Regression, y, theta, radius, pool);
+        let stats = {
+            let mut counting = Counting::new(&mut screen);
+            crate::mining::PatternSubstrate::traverse(d, maxpat, 1, &mut counting);
+            counting.stats
+        };
+        (std::mem::take(&mut screen.survivors), stats)
+    }
+
+    fn assert_same(a: &[Survivor], b: &[Survivor]) {
+        assert_eq!(a.len(), b.len(), "survivor count mismatch");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.pattern, y.pattern);
+            assert_eq!(x.support, y.support, "{:?}", x.pattern);
+            assert_eq!(x.sppc, y.sppc, "{:?}", x.pattern);
+            assert_eq!(x.ub, y.ub, "{:?}", x.pattern);
+        }
+    }
+
+    #[test]
+    fn forest_matches_scratch_over_shrinking_radii() {
+        // simulate a λ path: the same dual point at shrinking radii
+        // (so frontiers re-open), plus a perturbed pair (so the drift
+        // certificate is exercised)
+        let d = generate(&ItemsetSynthConfig::tiny(9, false));
+        let n = d.y.len();
+        let theta: Vec<f64> = (0..n).map(|i| ((i * 7 % 13) as f64 - 6.0) * 0.02).collect();
+        let theta2: Vec<f64> = theta.iter().map(|t| t * 0.8 + 0.001).collect();
+        let maxpat = 3;
+        let mut forest = ScreenForest::new(maxpat, 1);
+        let mut fpool = SupportPool::new();
+        let mut snodes_total = 0u64;
+        let mut fnodes_total = 0u64;
+        for (th, radius) in [
+            (&theta, 0.05),
+            (&theta, 0.3),
+            (&theta2, 0.2),
+            (&theta, 1.0),
+            (&theta2, 0.01),
+        ] {
+            let mut spool = SupportPool::new();
+            let (want, sstats) = scratch(&d.db, &d.y, th, radius, maxpat, &mut spool);
+            let out = forest.screen(&d.db, Task::Regression, &d.y, th, radius, true, &mut fpool);
+            // compare by resolved columns (pools differ across modes)
+            assert_eq!(out.survivors.len(), want.len(), "radius {radius}");
+            for (f, s) in out.survivors.iter().zip(&want) {
+                assert_eq!(f.pattern, s.pattern);
+                assert_eq!(fpool.get(f.support), spool.get(s.support));
+                assert_eq!(f.sppc, s.sppc);
+                assert_eq!(f.ub, s.ub);
+            }
+            snodes_total += sstats.nodes;
+            fnodes_total += out.stats.nodes;
+        }
+        assert!(
+            fnodes_total < snodes_total,
+            "forest re-traversed as much as scratch: {fnodes_total} vs {snodes_total}"
+        );
+    }
+
+    #[test]
+    fn second_identical_pair_needs_no_substrate_work() {
+        let d = generate(&ItemsetSynthConfig::tiny(10, false));
+        let theta: Vec<f64> = d.y.iter().map(|&v| v * 0.01).collect();
+        let mut forest = ScreenForest::new(3, 1);
+        let mut pool = SupportPool::new();
+        let first = forest.screen(&d.db, Task::Regression, &d.y, &theta, 0.2, true, &mut pool);
+        assert!(first.stats.nodes > 0);
+        let second = forest.screen(&d.db, Task::Regression, &d.y, &theta, 0.2, true, &mut pool);
+        assert_eq!(second.stats.nodes, 0, "no frontier climbed: zero substrate visits");
+        assert_eq!(second.reopened, 0);
+        assert!(second.forest_hits > 0);
+        assert_same(&first.survivors, &second.survivors);
+    }
+
+    #[test]
+    fn drift_certificate_skips_dead_nodes_without_reading_columns() {
+        let d = generate(&ItemsetSynthConfig::tiny(11, false));
+        let theta: Vec<f64> = d.y.iter().map(|&v| v * 0.01).collect();
+        let mut forest = ScreenForest::new(3, 1);
+        let mut pool = SupportPool::new();
+        // big radius first: everything enumerated
+        forest.screen(&d.db, Task::Regression, &d.y, &theta, 10.0, true, &mut pool);
+        // tiny radius, same pair: deep nodes are certifiably dead
+        let out = forest.screen(&d.db, Task::Regression, &d.y, &theta, 1e-6, true, &mut pool);
+        assert!(out.cert_skips > 0, "drift certificate never fired");
+        assert_eq!(out.stats.nodes, 0);
+    }
+
+    #[test]
+    fn growing_radius_reopens_frontiers() {
+        let d = generate(&ItemsetSynthConfig::tiny(12, false));
+        let theta: Vec<f64> = d.y.iter().map(|&v| v * 0.01).collect();
+        let mut forest = ScreenForest::new(3, 1);
+        let mut pool = SupportPool::new();
+        let small = forest.screen(&d.db, Task::Regression, &d.y, &theta, 0.05, true, &mut pool);
+        let big = forest.screen(&d.db, Task::Regression, &d.y, &theta, 5.0, true, &mut pool);
+        assert!(big.reopened > 0, "no frontier re-opened on a radius jump");
+        assert!(big.stats.nodes > 0);
+        assert!(big.survivors.len() > small.survivors.len());
+    }
+}

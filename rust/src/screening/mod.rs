@@ -3,6 +3,12 @@
 //! * [`sppc`] — the **SPP rule** (Theorem 2): a visitor that prunes
 //!   whole subtrees whose patterns are certified inactive, and applies
 //!   the tighter per-feature UB test (Lemma 6) to the nodes it keeps.
+//! * [`pool`] — the [`SupportPool`] interning arena: every support
+//!   column is stored once; survivors, working sets and the restricted
+//!   solver reference columns by [`SupportId`].
+//! * [`forest`] — the incremental screening forest: re-evaluate the SPP
+//!   rule on the stored pruned tree across λ steps, re-entering the
+//!   substrate only below frontier nodes whose SPPC climbed back.
 //! * [`lambda_max`] — the §3.4.1 search for the smallest λ with an
 //!   all-zero solution, using the same anti-monotone envelope bound.
 //! * [`certify`] — an exact feasibility pass: one bounded tree search
@@ -12,8 +18,13 @@
 //!   and exposed as `--certify`).
 
 pub mod certify;
+pub mod forest;
 pub mod lambda_max;
+pub mod pool;
 pub mod sppc;
+
+pub use forest::{ForestScreenOutcome, ScreenForest};
+pub use pool::{SupportId, SupportPool};
 
 use crate::data::graph::GraphDatabase;
 use crate::data::Transactions;

@@ -1,0 +1,143 @@
+//! [`SupportPool`] — the support-column interning arena.
+//!
+//! Every search in the crate produces support columns (sorted record-id
+//! lists), and the same column recurs constantly: across λ steps of a
+//! path, across patterns with identical occurrence sets, and between
+//! the screening survivors and the previously-active working set.  The
+//! pool stores each distinct column **once** and hands out a dense
+//! [`SupportId`]; everything downstream — [`crate::screening::sppc::Survivor`],
+//! [`crate::path::working_set::WorkingSet`], the path's
+//! identical-column dedup, the screening forest — references columns by
+//! id, so "same feature" checks are integer equality instead of
+//! `Vec<u32>` hashing, and warm-start weight transfer between λ steps
+//! is an id-indexed copy.
+//!
+//! Ids are append-only and therefore **stable for the lifetime of the
+//! pool**: a path computation owns one pool for its whole λ grid.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+
+/// Dense handle of one interned support column.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SupportId(u32);
+
+impl SupportId {
+    /// Position of the column in the pool (dense, `0..pool.len()`).
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Interning arena for support columns (see module docs).
+///
+/// Each column is stored exactly once, in `columns`; the dedup index
+/// maps a column's content hash to the candidate ids sharing it (the
+/// arena is the single owner — keying the map by the columns themselves
+/// would double the pool's resident memory, and columns dominate a
+/// path's allocations at paper scale).
+#[derive(Clone, Debug, Default)]
+pub struct SupportPool {
+    columns: Vec<Vec<u32>>,
+    index: HashMap<u64, Vec<SupportId>>,
+}
+
+fn col_hash(col: &[u32]) -> u64 {
+    let mut h = DefaultHasher::new();
+    col.hash(&mut h);
+    h.finish()
+}
+
+impl SupportPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of distinct columns interned so far.
+    pub fn len(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.columns.is_empty()
+    }
+
+    /// Intern `col`, returning the id of the canonical copy.  Two calls
+    /// with equal content always return the same id, so id equality is
+    /// column equality.
+    pub fn intern(&mut self, col: &[u32]) -> SupportId {
+        let hv = col_hash(col);
+        if let Some(ids) = self.index.get(&hv) {
+            for &id in ids {
+                if self.columns[id.index()] == col {
+                    return id;
+                }
+            }
+        }
+        let id = SupportId(self.columns.len() as u32);
+        self.columns.push(col.to_vec());
+        self.index.entry(hv).or_default().push(id);
+        id
+    }
+
+    /// Borrow the canonical column for `id`.
+    #[inline]
+    pub fn get(&self, id: SupportId) -> &[u32] {
+        &self.columns[id.index()]
+    }
+
+    /// Borrowed views of many columns at once (what the restricted
+    /// solver consumes).
+    pub fn view(&self, ids: &[SupportId]) -> Vec<&[u32]> {
+        ids.iter().map(|&id| self.get(id)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_dedups_by_content() {
+        let mut pool = SupportPool::new();
+        let a = pool.intern(&[0, 2, 5]);
+        let b = pool.intern(&[1]);
+        let c = pool.intern(&[0, 2, 5]);
+        assert_eq!(a, c);
+        assert_ne!(a, b);
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool.get(a), &[0, 2, 5]);
+        assert_eq!(pool.get(b), &[1]);
+    }
+
+    #[test]
+    fn ids_are_stable_and_dense() {
+        let mut pool = SupportPool::new();
+        let a = pool.intern(&[7]);
+        let b = pool.intern(&[8]);
+        assert_eq!(a.index(), 0);
+        assert_eq!(b.index(), 1);
+        // later interns never move earlier columns
+        pool.intern(&[9, 10]);
+        assert_eq!(pool.get(a), &[7]);
+    }
+
+    #[test]
+    fn view_resolves_in_order() {
+        let mut pool = SupportPool::new();
+        let a = pool.intern(&[1, 2]);
+        let b = pool.intern(&[3]);
+        let v = pool.view(&[b, a, b]);
+        assert_eq!(v, vec![&[3][..], &[1, 2][..], &[3][..]]);
+    }
+
+    #[test]
+    fn empty_column_interns_fine() {
+        let mut pool = SupportPool::new();
+        let e = pool.intern(&[]);
+        assert_eq!(pool.get(e), &[] as &[u32]);
+        assert_eq!(pool.intern(&[]), e);
+    }
+}

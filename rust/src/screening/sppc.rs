@@ -20,21 +20,54 @@
 //! paper's instantiations) so Â contains only nodes that can actually
 //! be active — the subtree is still descended because *descendants* may
 //! survive their own tests.
+//!
+//! Survivor support columns are interned into a shared
+//! [`SupportPool`], so identical columns collapse to one [`SupportId`]
+//! and the working set / restricted solver never clone them.
 
+use super::pool::{SupportId, SupportPool};
 use crate::mining::{Pattern, PatternNode, TreeVisitor, Walk};
 use crate::solver::Task;
 
-/// One surviving pattern: identity, support column, and its UB value
-/// (kept for diagnostics/ablation).
+/// One surviving pattern: identity, interned support column, and the
+/// two screening values computed at the node — the subtree criterion
+/// `SPPC(t)` (Theorem 2) and the per-feature bound `UB(t)` (Lemma 6).
+/// By Lemma 7, `ub <= sppc` always.
 #[derive(Clone, Debug)]
 pub struct Survivor {
     pub pattern: Pattern,
-    pub support: Vec<u32>,
+    pub support: SupportId,
+    /// `SPPC(t)` — the subtree test value (diagnostics/ablation).
+    pub sppc: f64,
+    /// `UB(t)` — the Lemma-6 per-feature bound that admitted this node
+    /// into Â (`>= 1`, unless the feature test was disabled).
     pub ub: f64,
 }
 
+/// Positive/negative partial sums of `g` over a support column (the
+/// shared kernel of every bound in this module and the forest).
+#[inline]
+pub(crate) fn fold_sums(g: &[f64], support: &[u32]) -> (f64, f64) {
+    let mut pos = 0.0;
+    let mut neg = 0.0;
+    for &i in support {
+        // branchless sign split: one memory stream, no mispredicts
+        let gi = g[i as usize];
+        pos += gi.max(0.0);
+        neg += gi.min(0.0);
+    }
+    (pos, neg)
+}
+
+/// `UB(t)` from the partial sums (Lemma 6; `n` = record count).
+#[inline]
+pub(crate) fn feature_ub_from(pos: f64, neg: f64, v: f64, n: f64, radius: f64) -> f64 {
+    let inner = (v - v * v / n).max(0.0);
+    (pos + neg).abs() + radius * inner.sqrt()
+}
+
 /// The SPP screening visitor.  Collects Â as `survivors`.
-pub struct SppScreen {
+pub struct SppScreen<'p> {
     /// Folded per-sample weights `g_i = a_iθ̃_i` (one array: the sign
     /// split of the paper's u_t happens in the fold loop — one memory
     /// stream instead of two, +10% on the traversal hot path).
@@ -46,14 +79,22 @@ pub struct SppScreen {
     /// ablation A1 switches it off to measure its contribution).
     pub feature_test: bool,
     pub survivors: Vec<Survivor>,
+    pool: &'p mut SupportPool,
 }
 
-impl SppScreen {
+impl<'p> SppScreen<'p> {
     /// Build the rule from a feasible primal/dual pair's folded data.
     ///
     /// `theta` must be dual-feasible; `radius` is
     /// [`crate::solver::dual::safe_radius`] of the pair's gap.
-    pub fn new(task: Task, y: &[f64], theta: &[f64], radius: f64) -> Self {
+    /// Survivor columns are interned into `pool`.
+    pub fn new(
+        task: Task,
+        y: &[f64],
+        theta: &[f64],
+        radius: f64,
+        pool: &'p mut SupportPool,
+    ) -> Self {
         let g: Vec<f64> = y
             .iter()
             .zip(theta)
@@ -65,13 +106,14 @@ impl SppScreen {
             n: y.len() as f64,
             feature_test: true,
             survivors: Vec::new(),
+            pool,
         }
     }
 
     /// The subtree criterion SPPC(t); exposed for tests/diagnostics.
     #[inline]
     pub fn sppc(&self, support: &[u32]) -> f64 {
-        let (pos, neg) = self.sums(support);
+        let (pos, neg) = fold_sums(&self.g, support);
         let u = pos.max(-neg);
         u + self.radius * (support.len() as f64).sqrt()
     }
@@ -79,47 +121,27 @@ impl SppScreen {
     /// The per-feature bound UB(t) (Lemma 6).
     #[inline]
     pub fn feature_ub(&self, support: &[u32]) -> f64 {
-        let (pos, neg) = self.sums(support);
-        let v = support.len() as f64;
-        let inner = (v - v * v / self.n).max(0.0);
-        (pos + neg).abs() + self.radius * inner.sqrt()
-    }
-
-    #[inline]
-    fn sums(&self, support: &[u32]) -> (f64, f64) {
-        let mut pos = 0.0;
-        let mut neg = 0.0;
-        for &i in support {
-            // branchless sign split: one memory stream, no mispredicts
-            let g = self.g[i as usize];
-            pos += g.max(0.0);
-            neg += g.min(0.0);
-        }
-        (pos, neg)
+        let (pos, neg) = fold_sums(&self.g, support);
+        feature_ub_from(pos, neg, support.len() as f64, self.n, self.radius)
     }
 }
 
-impl TreeVisitor for SppScreen {
+impl TreeVisitor for SppScreen<'_> {
     fn visit(&mut self, node: &PatternNode<'_>) -> Walk {
-        let (pos, neg) = self.sums(node.support);
+        let (pos, neg) = fold_sums(&self.g, node.support);
         let v = node.support.len() as f64;
         let u = pos.max(-neg);
         let sppc = u + self.radius * v.sqrt();
         if sppc < 1.0 {
             return Walk::Prune; // Theorem 2: whole subtree inactive
         }
-        let keep = if self.feature_test {
-            let inner = (v - v * v / self.n).max(0.0);
-            let ub = (pos + neg).abs() + self.radius * inner.sqrt();
-            ub >= 1.0
-        } else {
-            true
-        };
-        if keep {
+        let ub = feature_ub_from(pos, neg, v, self.n, self.radius);
+        if !self.feature_test || ub >= 1.0 {
             self.survivors.push(Survivor {
                 pattern: node.to_pattern(),
-                support: node.support.to_vec(),
-                ub: sppc,
+                support: self.pool.intern(node.support),
+                sppc,
+                ub,
             });
         }
         Walk::Descend
@@ -145,7 +167,8 @@ mod tests {
         // theta chosen so only item 0's column has |corr| >= 1
         let y = vec![1.0; 4];
         let theta = vec![0.6, 0.5, -0.05, -0.05];
-        let mut screen = SppScreen::new(Task::Regression, &y, &theta, 0.0);
+        let mut pool = SupportPool::new();
+        let mut screen = SppScreen::new(Task::Regression, &y, &theta, 0.0, &mut pool);
         ItemsetMiner::new(&db(), 2).traverse(&mut screen);
         let names: Vec<String> =
             screen.survivors.iter().map(|s| s.pattern.display()).collect();
@@ -157,7 +180,8 @@ mod tests {
     fn huge_radius_keeps_everything() {
         let y = vec![1.0; 4];
         let theta = vec![0.0; 4];
-        let mut screen = SppScreen::new(Task::Regression, &y, &theta, 100.0);
+        let mut pool = SupportPool::new();
+        let mut screen = SppScreen::new(Task::Regression, &y, &theta, 100.0, &mut pool);
         let stats = {
             let mut counting = Counting::new(&mut screen);
             ItemsetMiner::new(&db(), 3).traverse(&mut counting);
@@ -168,11 +192,60 @@ mod tests {
     }
 
     #[test]
+    fn survivors_record_sppc_and_the_lemma6_ub_distinctly() {
+        // Regression test for the Survivor fields: `sppc` must be the
+        // Theorem-2 subtree value, `ub` the Lemma-6 per-feature bound —
+        // NOT the same number stored twice.
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let theta = vec![0.6, -0.5, 0.4, -0.3];
+        let mut pool = SupportPool::new();
+        let mut screen = SppScreen::new(Task::Regression, &y, &theta, 0.9, &mut pool);
+        ItemsetMiner::new(&db(), 3).traverse(&mut screen);
+        let survivors = std::mem::take(&mut screen.survivors);
+        assert!(!survivors.is_empty());
+        let mut pool2 = SupportPool::new();
+        let check = SppScreen::new(Task::Regression, &y, &theta, 0.9, &mut pool2);
+        let mut distinct = 0;
+        for s in &survivors {
+            let col = pool.get(s.support);
+            assert_eq!(s.sppc, check.sppc(col), "sppc mismatch on {col:?}");
+            assert_eq!(s.ub, check.feature_ub(col), "ub mismatch on {col:?}");
+            assert!(s.ub <= s.sppc + 1e-12, "Lemma 7: UB must not exceed SPPC");
+            assert!(s.ub >= 1.0, "feature test admitted a sub-threshold node");
+            if (s.ub - s.sppc).abs() > 1e-9 {
+                distinct += 1;
+            }
+        }
+        assert!(distinct > 0, "ub never differed from sppc — field is a duplicate");
+    }
+
+    #[test]
+    fn survivors_share_interned_columns() {
+        // items 1 and the pair {1,2} of this db have different columns,
+        // but repeated traversals intern into the same pool slots
+        let y = vec![1.0; 4];
+        let theta = vec![0.0; 4];
+        let mut pool = SupportPool::new();
+        for _ in 0..2 {
+            let mut screen = SppScreen::new(Task::Regression, &y, &theta, 100.0, &mut pool);
+            ItemsetMiner::new(&db(), 3).traverse(&mut screen);
+            assert!(!screen.survivors.is_empty());
+        }
+        // second pass added no new columns
+        let before = pool.len();
+        let mut screen = SppScreen::new(Task::Regression, &y, &theta, 100.0, &mut pool);
+        ItemsetMiner::new(&db(), 3).traverse(&mut screen);
+        drop(screen);
+        assert_eq!(pool.len(), before);
+    }
+
+    #[test]
     fn sppc_dominates_feature_ub() {
         // Theorem 2 / Lemma 7: SPPC(t) >= UB(t) at the same node
         let y = vec![1.0, -1.0, 1.0, -1.0];
         let theta = vec![0.4, -0.3, 0.2, -0.1];
-        let screen = SppScreen::new(Task::Classification, &y, &theta, 0.7);
+        let mut pool = SupportPool::new();
+        let screen = SppScreen::new(Task::Classification, &y, &theta, 0.7, &mut pool);
         for sup in [vec![0u32], vec![0, 1], vec![0, 1, 2, 3], vec![2, 3]] {
             assert!(
                 screen.sppc(&sup) >= screen.feature_ub(&sup) - 1e-12,
@@ -187,7 +260,8 @@ mod tests {
         // => SPPC(child) <= SPPC(parent)
         let y = vec![1.0; 5];
         let theta = vec![0.3, -0.2, 0.5, -0.4, 0.1];
-        let screen = SppScreen::new(Task::Regression, &y, &theta, 0.25);
+        let mut pool = SupportPool::new();
+        let screen = SppScreen::new(Task::Regression, &y, &theta, 0.25, &mut pool);
         let parent = vec![0u32, 1, 2, 3, 4];
         let children = [vec![0u32, 2, 4], vec![1u32, 3], vec![2u32]];
         for c in &children {
@@ -199,7 +273,8 @@ mod tests {
     fn empty_support_always_prunes() {
         let y = vec![1.0; 3];
         let theta = vec![0.5; 3];
-        let mut screen = SppScreen::new(Task::Regression, &y, &theta, 0.5);
+        let mut pool = SupportPool::new();
+        let mut screen = SppScreen::new(Task::Regression, &y, &theta, 0.5, &mut pool);
         let sup: Vec<u32> = vec![];
         let items = vec![1u32];
         let node = PatternNode::itemset(&items, &sup);
@@ -211,7 +286,8 @@ mod tests {
         let y = vec![1.0; 4];
         let theta = vec![0.35, 0.35, 0.2, 0.1];
         let mk = |ft: bool| {
-            let mut s = SppScreen::new(Task::Regression, &y, &theta, 0.2);
+            let mut pool = SupportPool::new();
+            let mut s = SppScreen::new(Task::Regression, &y, &theta, 0.2, &mut pool);
             s.feature_test = ft;
             let mut c = Counting::new(&mut s);
             ItemsetMiner::new(&db(), 3).traverse(&mut c);

@@ -15,11 +15,12 @@
 
 use super::problem::Task;
 
-/// Max over columns of `|Σ_{i∈sup} g_i|` for sparse supports.
-pub fn max_abs_col_sum(supports: &[Vec<u32>], g: &[f64]) -> f64 {
+/// Max over columns of `|Σ_{i∈sup} g_i|` for sparse supports (accepts
+/// owned columns or borrowed `&[u32]` views).
+pub fn max_abs_col_sum<S: AsRef<[u32]>>(supports: &[S], g: &[f64]) -> f64 {
     let mut best = 0.0f64;
     for sup in supports {
-        let s: f64 = sup.iter().map(|&i| g[i as usize]).sum();
+        let s: f64 = sup.as_ref().iter().map(|&i| g[i as usize]).sum();
         best = best.max(s.abs());
     }
     best
@@ -29,7 +30,7 @@ pub fn max_abs_col_sum(supports: &[Vec<u32>], g: &[f64]) -> f64 {
 /// `r_i = y_i − (xᵢᵀw + b)`.
 ///
 /// Returns `θ` with `Σθ = 0` and `|x_tᵀθ| ≤ 1` over `supports`.
-pub fn dual_point_regression(r: &[f64], lam: f64, supports: &[Vec<u32>]) -> Vec<f64> {
+pub fn dual_point_regression<S: AsRef<[u32]>>(r: &[f64], lam: f64, supports: &[S]) -> Vec<f64> {
     let n = r.len();
     let mean = r.iter().sum::<f64>() / n as f64;
     let mut theta: Vec<f64> = r.iter().map(|&ri| (ri - mean) / lam).collect();
@@ -47,11 +48,11 @@ pub fn dual_point_regression(r: &[f64], lam: f64, supports: &[Vec<u32>]) -> Vec<
 /// Returns `θ ≥ 0` with `yᵀθ ≈ 0` (alternating projections + exact
 /// final step, clipping O(eps) negatives) and `|Σ y_i x_it θ_i| ≤ 1`
 /// over `supports`.
-pub fn dual_point_classification(
+pub fn dual_point_classification<S: AsRef<[u32]>>(
     h: &[f64],
     y: &[f64],
     lam: f64,
-    supports: &[Vec<u32>],
+    supports: &[S],
 ) -> Vec<f64> {
     let n = h.len() as f64;
     let mut theta: Vec<f64> = h.iter().map(|&hi| hi.max(0.0) / lam).collect();
@@ -83,12 +84,12 @@ pub fn dual_point_classification(
 
 /// Unified entry: slacks are residuals (regression) or hinge slacks
 /// (classification); see `problem::SampleState`.
-pub fn dual_point(
+pub fn dual_point<S: AsRef<[u32]>>(
     task: Task,
     slack: &[f64],
     y: &[f64],
     lam: f64,
-    supports: &[Vec<u32>],
+    supports: &[S],
 ) -> Vec<f64> {
     match task {
         Task::Regression => dual_point_regression(slack, lam, supports),

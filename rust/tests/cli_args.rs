@@ -137,6 +137,33 @@ fn declared_switches_never_consume_positionals() {
 }
 
 #[test]
+fn reuse_and_dynamic_screen_switches_parse_all_forms() {
+    // the engine toggles added with the incremental forest, in the
+    // declared-switch grammar the spp binary uses
+    let switches = &["certify", "no-reuse", "dynamic-screen"];
+    let sw = |line: &str| {
+        Args::parse_with_switches(line.split_whitespace().map(String::from), switches)
+    };
+    // defaults: reuse on, dynamic screening on
+    let a = sw("path --dataset splice");
+    assert!(!a.switch("no-reuse"));
+    assert!(a.flag("dynamic-screen").is_none());
+    // --no-reuse turns the forest engine off; =false re-enables
+    assert!(sw("path --no-reuse").switch("no-reuse"));
+    assert!(!sw("path --no-reuse=false").switch("no-reuse"));
+    // dynamic-screen: valued forms decide; a declared switch never
+    // swallows a following non-boolean token
+    let a = sw("path --dynamic-screen=false --maxpat 3");
+    assert!(!a.switch("dynamic-screen"));
+    let a = sw("path --dynamic-screen false --maxpat 3");
+    assert!(!a.switch("dynamic-screen"));
+    assert_eq!(a.get_usize("maxpat", 0).unwrap(), 3);
+    let a = sw("path --dynamic-screen out.json");
+    assert!(a.switch("dynamic-screen"));
+    assert_eq!(a.positional, vec!["out.json"]);
+}
+
+#[test]
 fn repeated_flags_keep_the_last_value() {
     let a = parse("path --maxpat 3 --maxpat 9");
     assert_eq!(a.get_usize("maxpat", 0).unwrap(), 9);

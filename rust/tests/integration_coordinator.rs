@@ -84,7 +84,16 @@ fn run_cli(args: &[&str]) -> (String, String, bool) {
 fn cli_datasets_lists_all_presets() {
     let (stdout, _, ok) = run_cli(&["datasets"]);
     assert!(ok);
-    for name in ["cpdb", "mutagenicity", "bergstrom", "karthikeyan", "splice", "a9a", "dna", "protein"] {
+    for name in [
+        "cpdb",
+        "mutagenicity",
+        "bergstrom",
+        "karthikeyan",
+        "splice",
+        "a9a",
+        "dna",
+        "protein",
+    ] {
         assert!(stdout.contains(name), "missing {name} in:\n{stdout}");
     }
 }

@@ -1,0 +1,175 @@
+//! The incremental screening forest's safety contract, end-to-end: the
+//! forest-reuse path must be **equivalent** to the from-scratch path —
+//! identical per-λ active sets (patterns and order), weights to 1e-9,
+//! certified gaps at tolerance — while doing strictly less substrate
+//! work.  Property-tested through the open `PatternSubstrate` trait on
+//! all three shipped substrates (item-sets, graphs, sequences).
+
+use spp::data::sequence::{self, SeqSynthConfig};
+use spp::data::synth_graphs::{self, GraphSynthConfig};
+use spp::data::synth_itemsets::{self, ItemsetSynthConfig};
+use spp::mining::PatternSubstrate;
+use spp::path::{compute_path_spp, PathConfig, PathResult};
+use spp::solver::Task;
+
+fn cfg(n_lambdas: usize, maxpat: usize) -> PathConfig {
+    PathConfig {
+        n_lambdas,
+        lambda_min_ratio: 0.05,
+        maxpat,
+        ..PathConfig::default()
+    }
+}
+
+/// Forest-mode path ≡ scratch-mode path, point by point.
+fn assert_paths_equivalent(forest: &PathResult, scratch: &PathResult) {
+    assert_eq!(forest.points.len(), scratch.points.len());
+    assert_eq!(forest.lambda_max, scratch.lambda_max);
+    for (f, s) in forest.points.iter().zip(&scratch.points) {
+        assert_eq!(f.lambda, s.lambda);
+        assert!(f.gap <= 2e-6 && s.gap <= 2e-6, "uncertified λ={}", f.lambda);
+        assert_eq!(
+            f.active.len(),
+            s.active.len(),
+            "active-set size mismatch at λ={}: {} vs {}",
+            f.lambda,
+            f.active.len(),
+            s.active.len()
+        );
+        for ((pf, wf), (ps, ws)) in f.active.iter().zip(&s.active) {
+            assert_eq!(pf, ps, "active pattern/order mismatch at λ={}", f.lambda);
+            assert!(
+                (wf - ws).abs() <= 1e-9,
+                "weight mismatch at λ={} on {}: {wf} vs {ws}",
+                f.lambda,
+                pf.display()
+            );
+        }
+        assert!((f.b - s.b).abs() <= 1e-9, "intercept mismatch at λ={}", f.lambda);
+        // scratch mode must report zero reuse; forest mode records it
+        assert_eq!(s.reuse.forest_hits, 0);
+        assert_eq!(s.reuse.reopened, 0);
+    }
+}
+
+fn case<S: PatternSubstrate>(db: &S, y: &[f64], task: Task, c: &PathConfig) {
+    let mut forest_cfg = *c;
+    forest_cfg.reuse_forest = true;
+    let mut scratch_cfg = *c;
+    scratch_cfg.reuse_forest = false;
+    let forest = compute_path_spp(db, y, task, &forest_cfg);
+    let scratch = compute_path_spp(db, y, task, &scratch_cfg);
+    assert_paths_equivalent(&forest, &scratch);
+    assert!(
+        forest.total_nodes() <= scratch.total_nodes(),
+        "forest traversed more: {} vs {}",
+        forest.total_nodes(),
+        scratch.total_nodes()
+    );
+    assert!(forest.total_forest_hits() > 0, "forest engine never reused a node");
+}
+
+#[test]
+fn forest_equals_scratch_itemsets_both_tasks() {
+    for (seed, classify) in [(61u64, false), (62, true), (63, false)] {
+        let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(seed, classify));
+        let task = if classify {
+            Task::Classification
+        } else {
+            Task::Regression
+        };
+        case(&d.db, &d.y, task, &cfg(10, 3));
+    }
+}
+
+#[test]
+fn forest_equals_scratch_graphs() {
+    for (seed, classify) in [(64u64, false), (65, true)] {
+        let d = synth_graphs::generate(&GraphSynthConfig::tiny(seed, classify));
+        let task = if classify {
+            Task::Classification
+        } else {
+            Task::Regression
+        };
+        case(&d.db, &d.db.y, task, &cfg(8, 3));
+    }
+}
+
+#[test]
+fn forest_equals_scratch_sequences() {
+    for (seed, classify) in [(66u64, false), (67, true)] {
+        let d = sequence::generate(&SeqSynthConfig::tiny(seed, classify));
+        let task = if classify {
+            Task::Classification
+        } else {
+            Task::Regression
+        };
+        case(&d.db, &d.y, task, &cfg(8, 3));
+    }
+}
+
+#[test]
+fn forest_equals_scratch_with_certify_pass() {
+    // the exact-feasibility rescale changes θ between λs; the forest
+    // must track it identically
+    let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(68, false));
+    let mut c = cfg(8, 3);
+    c.certify = true;
+    case(&d.db, &d.y, Task::Regression, &c);
+}
+
+#[test]
+fn forest_equals_scratch_without_dynamic_screening() {
+    // forest reuse and solver screening are independent toggles
+    let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(69, true));
+    let mut c = cfg(8, 3);
+    c.cd.dynamic_screen = false;
+    case(&d.db, &d.y, Task::Classification, &c);
+}
+
+#[test]
+fn forest_strictly_cheaper_on_preset_at_twenty_lambdas() {
+    // the acceptance-criterion regime: a synth preset, n_lambdas >= 20
+    let data = spp::data::registry::lookup("splice", 0.08).unwrap();
+    let spp::data::registry::Dataset::Itemsets(t) = &data else {
+        unreachable!()
+    };
+    let c = cfg(20, 3);
+    let mut forest_cfg = c;
+    forest_cfg.reuse_forest = true;
+    let mut scratch_cfg = c;
+    scratch_cfg.reuse_forest = false;
+    let forest = compute_path_spp(&t.db, &t.y, Task::Classification, &forest_cfg);
+    let scratch = compute_path_spp(&t.db, &t.y, Task::Classification, &scratch_cfg);
+    assert_paths_equivalent(&forest, &scratch);
+    assert!(
+        forest.total_nodes() < scratch.total_nodes(),
+        "forest must traverse strictly fewer nodes: {} vs {}",
+        forest.total_nodes(),
+        scratch.total_nodes()
+    );
+}
+
+#[test]
+fn dynamic_screening_freezes_columns_somewhere_on_the_path() {
+    let data = spp::data::registry::lookup("splice", 0.08).unwrap();
+    let spp::data::registry::Dataset::Itemsets(t) = &data else {
+        unreachable!()
+    };
+    let path = compute_path_spp(&t.db, &t.y, Task::Classification, &cfg(20, 3));
+    assert!(
+        path.total_solver_screened() > 0,
+        "dynamic screening never froze a column over a 20-λ path"
+    );
+    let mut off = cfg(20, 3);
+    off.cd.dynamic_screen = false;
+    let plain = compute_path_spp(&t.db, &t.y, Task::Classification, &off);
+    assert_eq!(plain.total_solver_screened(), 0);
+    // same certified optima either way
+    for (a, b) in path.points.iter().zip(&plain.points) {
+        let l1a: f64 = a.active.iter().map(|(_, w)| w.abs()).sum();
+        let l1b: f64 = b.active.iter().map(|(_, w)| w.abs()).sum();
+        assert!((l1a - l1b).abs() < 1e-4 * (1.0 + l1a), "λ={}", a.lambda);
+        assert!((a.b - b.b).abs() < 1e-4);
+    }
+}

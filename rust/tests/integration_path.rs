@@ -85,14 +85,17 @@ fn spp_node_counts_beat_boosting_and_grow_with_maxpat() {
     // strict dominance is NOT a theorem — on toy trees with few active
     // patterns boosting's incumbent-driven envelope can out-prune the
     // SPP rule — so this uses the splice preset (dense, paper-shaped)
-    // and asserts the aggregate.
+    // and asserts the aggregate.  Node counts here are the *paper's*
+    // from-scratch currency, so the incremental forest is off (its
+    // accounting is pinned separately in integration_forest.rs).
     let c = ItemsetSynthConfig::preset_splice(45).scaled(0.1);
     let d = generate(&c);
     let db = &d.db;
     let mut prev_nodes = 0u64;
     let (mut spp_total, mut boost_total) = (0u64, 0u64);
     for maxpat in [2usize, 3] {
-        let c = cfg(8, maxpat);
+        let mut c = cfg(8, maxpat);
+        c.reuse_forest = false;
         let spp = compute_path_spp(db, &d.y, Task::Regression, &c);
         let boost = compute_path_boosting(db, &d.y, Task::Regression, &c);
         spp_total += spp.total_nodes();

@@ -8,7 +8,9 @@
 
 use spp::data::synth_itemsets::{generate, ItemsetSynthConfig};
 use spp::path::{compute_path_spp, compute_path_spp_with, PathConfig};
-use spp::runtime::{default_artifact_dir, engine::XlaRestricted, PjrtRuntime, XlaFistaSolver, XlaSppcScorer};
+use spp::runtime::{
+    default_artifact_dir, engine::XlaRestricted, PjrtRuntime, XlaFistaSolver, XlaSppcScorer,
+};
 use spp::screening::fold_weights;
 use spp::solver::{CdSolver, Task};
 use spp::testutil::SplitMix64;
@@ -149,7 +151,8 @@ fn oversized_problems_fall_back_to_cd() {
     let supports = random_supports(&mut rng, n, 5, 50);
     let y: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
     use spp::path::RestrictedSolver;
-    let sol = solver.solve_restricted(Task::Regression, &supports, &y, 5.0, &[0.0; 5], 0.0);
+    let views: Vec<&[u32]> = supports.iter().map(|s| s.as_slice()).collect();
+    let sol = solver.solve_restricted(Task::Regression, &views, &y, 5.0, &[0.0; 5], 0.0);
     assert!(sol.gap <= 1e-6);
     assert!(solver.fallbacks.get() >= 1);
 }

@@ -15,6 +15,7 @@ use spp::data::synth_itemsets::{generate, ItemsetSynthConfig};
 use spp::mining::{PatternNode, PatternSubstrate, Walk};
 use spp::screening::lambda_max::lambda_max;
 use spp::screening::sppc::SppScreen;
+use spp::screening::SupportPool;
 use spp::solver::dual::safe_radius;
 use spp::solver::problem::{dual_value, primal_value};
 use spp::solver::{CdSolver, Task};
@@ -64,11 +65,13 @@ fn safety_case(seed: u64, task: Task) {
         let dualv = dual_value(task, &theta0, &d.y, lam);
         let radius = safe_radius(primal, dualv, lam);
 
-        let mut screen = SppScreen::new(task, &d.y, &theta0, radius);
+        let mut pool = SupportPool::new();
+        let mut screen = SppScreen::new(task, &d.y, &theta0, radius, &mut pool);
         db.traverse(maxpat, 1, &mut screen);
+        let survivors = std::mem::take(&mut screen.survivors);
+        drop(screen);
 
-        let survivor_items: std::collections::HashSet<Vec<u32>> = screen
-            .survivors
+        let survivor_items: std::collections::HashSet<Vec<u32>> = survivors
             .iter()
             .map(|s| match &s.pattern {
                 spp::mining::Pattern::Itemset(v) => v.clone(),
@@ -82,13 +85,13 @@ fn safety_case(seed: u64, task: Task) {
                 pruned_count += 1;
                 assert!(
                     c < 1.0 + 1e-6,
-                    "UNSAFE: pruned pattern {items:?} has |corr| = {c} at λ = {frac}·λmax (seed {seed})"
+                    "UNSAFE: pruned pattern {items:?} has |corr| = {c} \
+                     at λ = {frac}·λmax (seed {seed})"
                 );
             }
         }
         // Lemma 1: solving only Â reproduces the full optimum
-        let supports: Vec<Vec<u32>> =
-            screen.survivors.iter().map(|s| s.support.clone()).collect();
+        let supports: Vec<&[u32]> = survivors.iter().map(|s| pool.get(s.support)).collect();
         let mut solver = CdSolver::default();
         solver.cfg.tol = 1e-10;
         let restricted = solver.solve(task, &supports, &d.y, lam, None);
@@ -192,7 +195,8 @@ fn spp_is_safe_on_graphs() {
     let primal = primal_value(&lm.slack0, 0.0, lam);
     let dualv = dual_value(task, &theta0, &d.db.y, lam);
     let radius = safe_radius(primal, dualv, lam);
-    let mut screen = SppScreen::new(task, &d.db.y, &theta0, radius);
+    let mut pool = SupportPool::new();
+    let mut screen = SppScreen::new(task, &d.db.y, &theta0, radius, &mut pool);
     db.traverse(maxpat, 1, &mut screen);
 
     let surviving: std::collections::HashSet<String> = screen

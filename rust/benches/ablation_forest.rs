@@ -20,7 +20,7 @@
 
 use std::time::Instant;
 
-use spp::benchkit::bench_knobs;
+use spp::benchkit::{bench_knobs, bench_threads};
 use spp::data::registry::{info, lookup, Dataset};
 use spp::path::{compute_path_spp, PathConfig, PathResult};
 
@@ -36,6 +36,9 @@ fn run(dataset: &str, default_scale: f64, maxpat: usize, default_lambdas: usize)
             lambda_min_ratio: ratio,
             maxpat,
             reuse_forest: reuse,
+            // pinned worker count (default 1): timings must not depend
+            // on the CI runner's core count
+            threads: bench_threads(),
             ..PathConfig::default()
         };
         let t0 = Instant::now();

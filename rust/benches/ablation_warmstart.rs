@@ -92,6 +92,7 @@ fn main() {
         n_lambdas: 15,
         lambda_min_ratio: 0.05,
         maxpat: 3,
+        threads: spp::benchkit::bench_threads(),
         ..PathConfig::default()
     };
     let t0 = Instant::now();
@@ -110,6 +111,7 @@ fn main() {
             n_lambdas,
             lambda_min_ratio: 0.05,
             maxpat: 3,
+            threads: spp::benchkit::bench_threads(),
             ..PathConfig::default()
         };
         let t1 = Instant::now();

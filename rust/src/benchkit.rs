@@ -9,13 +9,18 @@
 //!     - `SPP_BENCH_SCALE`   — multiply every dataset's scale,
 //!     - `SPP_BENCH_LAMBDAS` — grid size (default 20; paper: 100),
 //!     - `SPP_BENCH_RATIO`   — λ_min/λ_max (default 0.05; paper: 0.01),
+//!     - `SPP_BENCH_THREADS` — engine workers (default 1 — see below),
 //!     - `SPP_BENCH_FULL=1`  — paper-exact sweep (full n, 100 λs, 0.01,
 //!       full maxpat set).  Budget hours, not minutes.
 //! * [`bench_fn`] — a criterion-style micro-bench: warmup, fixed sample
 //!   count, reports min/median/mean.
 //!
-//! All figure benches pin to a single worker: the paper measures a
-//! single core of a Xeon E5-2643 v2.
+//! All figure benches pin the engine to a single worker
+//! ([`bench_threads`] defaults to 1, NOT the engine's auto setting):
+//! the paper measures a single core of a Xeon E5-2643 v2, and pinned
+//! ROW lines stay comparable across machines.  Set
+//! `SPP_BENCH_THREADS=N` to measure the parallel engine — the computed
+//! paths are bit-identical at any worker count.
 
 use std::time::Instant;
 
@@ -48,6 +53,15 @@ pub fn bench_knobs(default_scale: f64, default_lambdas: usize) -> (f64, usize, f
     (scale, n_lambdas, ratio)
 }
 
+/// Engine worker count for bench path computations: `SPP_BENCH_THREADS`
+/// if set, else 1 (single-worker paper discipline).  Every bench that
+/// builds a `PathConfig` must route it through here — never the
+/// engine's auto default, which would silently time however many cores
+/// the CI runner has.
+pub fn bench_threads() -> usize {
+    env_usize("SPP_BENCH_THREADS").unwrap_or(1).max(1)
+}
+
 /// One workload of a figure sweep.
 #[derive(Clone, Copy)]
 pub struct Workload {
@@ -66,8 +80,10 @@ pub fn run_figure(fig: &str, workloads: &[Workload]) {
     let full = full_sweep();
     let scale_mult = env_f64("SPP_BENCH_SCALE").unwrap_or(1.0);
     let (_, n_lambdas, ratio) = bench_knobs(1.0, 20);
+    let threads = bench_threads();
     println!(
-        "# {fig}: lambdas={n_lambdas} ratio={ratio} scale_mult={scale_mult} full={full}"
+        "# {fig}: lambdas={n_lambdas} ratio={ratio} scale_mult={scale_mult} \
+         threads={threads} full={full}"
     );
     println!(
         "# paper setup: 100 lambdas, ratio 0.01, full n — set SPP_BENCH_FULL=1 to match"
@@ -88,6 +104,7 @@ pub fn run_figure(fig: &str, workloads: &[Workload]) {
                         n_lambdas,
                         lambda_min_ratio: ratio,
                         maxpat,
+                        threads,
                         ..PathConfig::default()
                     },
                 };

@@ -26,12 +26,17 @@
 //!        | anything else       positional
 //! ```
 //!
-//! Flag-value consumption is *explicit* for declared switches
+//! Flag-value consumption is *explicit* for the declared grammar
 //! ([`Args::parse_with_switches`]): a declared switch never swallows a
-//! following non-boolean positional.  The zero-declaration
-//! [`Args::parse`] keeps the historical peek-based behaviour for
-//! undeclared names — that footgun is pinned by tests below so it
-//! stays documented.
+//! following non-boolean positional, a declared value flag must get a
+//! value, and any `--name` outside the declared switch + flag sets is
+//! **rejected** with an error naming the flag (so a typo'd
+//! `--treads 4` fails loudly instead of being silently ignored, and a
+//! flag in the command position no longer falls through to the generic
+//! "unknown command '--…'" message).  The zero-declaration
+//! [`Args::parse`] keeps the historical permissive peek-based
+//! behaviour for undeclared names — that footgun is pinned by tests
+//! below so it stays documented.
 //!
 //! [`Args::switch`] answers truthiness from either form: a bare
 //! `--name` is on; `--name=false`, `--name=0`, `--name=no` and
@@ -50,23 +55,46 @@ pub struct Args {
 
 impl Args {
     /// Parse from an iterator of raw args (without argv[0]), declaring
-    /// no switches (every bare `--name` may consume a value; see
-    /// module docs).
+    /// nothing: every bare `--name` may consume a value and unknown
+    /// names are accepted silently (see module docs).  Library /
+    /// test-harness use; the `spp` binary parses its declared grammar
+    /// via [`Args::parse_with_switches`].
     pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
-        Self::parse_with_switches(raw, &[])
+        Self::parse_inner(raw, &[], None).expect("permissive parse is infallible")
     }
 
-    /// Parse, declaring `known_switches`: names that consume a
-    /// following token only when it is a boolean literal (so they can
-    /// never swallow a positional or a path).  This is the explicit
-    /// grammar the `spp` binary uses (its switch set lives next to
-    /// `main`).
+    /// Parse against a fully declared grammar: `known_switches` are
+    /// names that consume a following token only when it is a boolean
+    /// literal (so they can never swallow a positional or a path);
+    /// `known_flags` are the value-taking names.  Together they are the
+    /// *only* accepted `--name`s — anything else errors with the
+    /// offending flag named, as does a declared value flag with no
+    /// value, or a flag sitting where the command should be.  This is
+    /// the grammar the `spp` binary uses (its switch/flag sets live
+    /// next to `main`).
     pub fn parse_with_switches<I: IntoIterator<Item = String>>(
         raw: I,
         known_switches: &[&str],
-    ) -> Self {
+        known_flags: &[&str],
+    ) -> crate::Result<Self> {
+        Self::parse_inner(raw, known_switches, Some(known_flags))
+    }
+
+    /// Shared parser; `known_flags: None` = permissive (legacy
+    /// behaviour, infallible), `Some(flags)` = strict declared grammar.
+    fn parse_inner<I: IntoIterator<Item = String>>(
+        raw: I,
+        known_switches: &[&str],
+        known_flags: Option<&[&str]>,
+    ) -> crate::Result<Self> {
         let mut it = raw.into_iter().peekable();
         let command = it.next().unwrap_or_default();
+        if known_flags.is_some() && command.starts_with("--") && command != "--help" {
+            anyhow::bail!(
+                "unexpected flag '{command}' where a command was expected \
+                 (flags go after the command; try `spp help`)"
+            );
+        }
         let mut args = Args {
             command,
             ..Args::default()
@@ -78,6 +106,11 @@ impl Args {
                 continue;
             };
             if let Some((k, v)) = name.split_once('=') {
+                if let Some(flags) = known_flags {
+                    if !flags.contains(&k) && !known_switches.contains(&k) {
+                        anyhow::bail!("unknown flag '--{k}' (try `spp help`)");
+                    }
+                }
                 args.flags.insert(k.to_string(), v.to_string());
             } else if known_switches.contains(&name) {
                 // a declared switch takes a value only when the next
@@ -89,6 +122,18 @@ impl Args {
                 } else {
                     args.switches.push(name.to_string());
                 }
+            } else if let Some(flags) = known_flags {
+                // strict grammar: only declared value flags remain, and
+                // they must actually receive a value
+                if !flags.contains(&name) {
+                    anyhow::bail!("unknown flag '--{name}' (try `spp help`)");
+                }
+                let has_value = it.peek().map(|nxt| !nxt.starts_with("--")).unwrap_or(false);
+                if !has_value {
+                    anyhow::bail!("flag '--{name}' needs a value");
+                }
+                let v = it.next().unwrap();
+                args.flags.insert(name.to_string(), v);
             } else if it
                 .peek()
                 .map(|nxt| !nxt.starts_with("--"))
@@ -100,7 +145,7 @@ impl Args {
                 args.switches.push(name.to_string());
             }
         }
-        args
+        Ok(args)
     }
 
     pub fn flag(&self, name: &str) -> Option<&str> {
@@ -157,8 +202,9 @@ mod tests {
         Args::parse(s.split_whitespace().map(String::from))
     }
 
-    fn parse_sw(s: &str, switches: &[&str]) -> Args {
-        Args::parse_with_switches(s.split_whitespace().map(String::from), switches)
+    fn parse_sw(s: &str, switches: &[&str], flags: &[&str]) -> Args {
+        Args::parse_with_switches(s.split_whitespace().map(String::from), switches, flags)
+            .expect("declared grammar accepts this line")
     }
 
     #[test]
@@ -184,7 +230,7 @@ mod tests {
         assert!(a.positional.is_empty());
         // … and the explicit-grammar fix: declared switches only
         // consume boolean literals, never positionals
-        let a = parse_sw("path --certify out.json", &["certify"]);
+        let a = parse_sw("path --certify out.json", &["certify"], &[]);
         assert!(a.switch("certify"));
         assert!(a.flag("certify").is_none());
         assert_eq!(a.positional, vec!["out.json"]);
@@ -193,11 +239,11 @@ mod tests {
     #[test]
     fn declared_switch_space_and_equals_booleans_agree() {
         for off in ["false", "0", "no", "off"] {
-            let a = parse_sw(&format!("path --certify {off}"), &["certify"]);
+            let a = parse_sw(&format!("path --certify {off}"), &["certify"], &[]);
             assert!(!a.switch("certify"), "--certify {off} must be OFF");
             assert!(a.positional.is_empty());
         }
-        let a = parse_sw("path --certify true out.json", &["certify"]);
+        let a = parse_sw("path --certify true out.json", &["certify"], &[]);
         assert!(a.switch("certify"));
         assert_eq!(a.positional, vec!["out.json"]);
     }
@@ -228,11 +274,42 @@ mod tests {
     #[test]
     fn negative_value_then_flag_parses_explicitly() {
         // the satellite case: a negative numeric value followed by
-        // another flag, with the trailing switch declared
-        let a = parse_sw("path --viol-tol -1e-6 --certify", &["certify"]);
+        // another flag, with the whole grammar declared
+        let a = parse_sw("path --viol-tol -1e-6 --certify", &["certify"], &["viol-tol"]);
         assert_eq!(a.get_f64("viol-tol", 0.0).unwrap(), -1e-6);
         assert!(a.switch("certify"));
         assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn declared_grammar_rejects_unknown_flags_by_name() {
+        let err = |line: &str| {
+            Args::parse_with_switches(
+                line.split_whitespace().map(String::from),
+                &["certify"],
+                &["threads", "maxpat"],
+            )
+            .unwrap_err()
+            .to_string()
+        };
+        // a typo'd value flag is rejected with the flag named …
+        let e = err("path --treads 4");
+        assert!(e.contains("--treads"), "{e}");
+        // … in every token form …
+        let e = err("path --treads=4");
+        assert!(e.contains("--treads"), "{e}");
+        // … a declared value flag must actually get a value …
+        let e = err("path --threads");
+        assert!(e.contains("--threads") && e.contains("value"), "{e}");
+        let e = err("path --threads --certify");
+        assert!(e.contains("--threads") && e.contains("value"), "{e}");
+        // … and a flag in the command slot is named, not mistaken for
+        // an unknown command
+        let e = err("--threads 4 path");
+        assert!(e.contains("--threads") && e.contains("command"), "{e}");
+        // the declared spelling parses fine
+        let a = parse_sw("path --threads 4", &["certify"], &["threads", "maxpat"]);
+        assert_eq!(a.get_usize("threads", 0).unwrap(), 4);
     }
 
     #[test]

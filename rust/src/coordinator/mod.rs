@@ -3,14 +3,13 @@
 //! Figure benches and the CLI express work as [`ExperimentSpec`]s
 //! (dataset × maxpat × method); the coordinator materializes the data,
 //! runs the regularization path, and emits [`ExperimentResult`] rows —
-//! the exact currency of the paper's Figures 2–5.  A [`Pool`] of
-//! `std::thread` workers runs independent specs in parallel (benches
-//! pin `workers = 1` to match the paper's single-core discipline).
+//! the exact currency of the paper's Figures 2–5.  A [`Pool`] runs
+//! independent specs in parallel on the shared
+//! [`crate::runtime::parallel`] worker pool (benches pin `workers = 1`
+//! to match the paper's single-core discipline).
 
 pub mod report;
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::data::registry::{self, Dataset};
@@ -129,36 +128,27 @@ impl Pool {
     }
 
     /// Run all specs; results come back in input order.  Worker panics
-    /// surface as errors for their spec, not crashes of the pool.
+    /// surface as errors for their spec, not crashes of the pool
+    /// (caught inside the task, so the shared `map_indexed` scope never
+    /// sees them).
+    ///
+    /// When the pool itself fans out, each experiment's engine is
+    /// pinned to one worker — otherwise every experiment would
+    /// re-resolve `PathConfig::threads` (auto by default) and the two
+    /// parallel levels would multiply into workers×threads live
+    /// threads.  Bit-identity makes this a pure scheduling choice, the
+    /// same pinning `path::cv` applies to its folds.
     pub fn run(&self, specs: Vec<ExperimentSpec>) -> Vec<crate::Result<ExperimentResult>> {
-        let n = specs.len();
-        let queue = Arc::new(Mutex::new(
-            specs.into_iter().enumerate().collect::<Vec<_>>(),
-        ));
-        let (tx, rx) = mpsc::channel::<(usize, crate::Result<ExperimentResult>)>();
-        std::thread::scope(|scope| {
-            for _ in 0..self.workers.min(n.max(1)) {
-                let queue = queue.clone();
-                let tx = tx.clone();
-                scope.spawn(move || loop {
-                    let job = queue.lock().unwrap().pop();
-                    let Some((idx, spec)) = job else { break };
-                    let result = std::panic::catch_unwind(|| run_experiment(&spec))
-                        .unwrap_or_else(|_| Err(anyhow::anyhow!("worker panicked")));
-                    if tx.send((idx, result)).is_err() {
-                        break;
-                    }
-                });
+        let mut specs = specs;
+        if crate::runtime::parallel::effective_workers(self.workers, specs.len()) > 1 {
+            for s in &mut specs {
+                s.cfg.threads = 1;
             }
-            drop(tx);
-            let mut out: Vec<Option<crate::Result<ExperimentResult>>> =
-                (0..n).map(|_| None).collect();
-            for (idx, res) in rx {
-                out[idx] = Some(res);
-            }
-            out.into_iter()
-                .map(|r| r.unwrap_or_else(|| Err(anyhow::anyhow!("missing result"))))
-                .collect()
+        }
+        let specs = &specs;
+        crate::runtime::parallel::map_indexed(self.workers, specs.len(), |i| {
+            std::panic::catch_unwind(|| run_experiment(&specs[i]))
+                .unwrap_or_else(|_| Err(anyhow::anyhow!("worker panicked")))
         })
     }
 }

@@ -28,7 +28,7 @@ pub fn result_json(r: &ExperimentResult) -> String {
             per_lambda.push(',');
         }
         per_lambda.push_str(&format!(
-            "{{\"lambda\":{},\"traverse_secs\":{},\"solve_secs\":{},\"nodes\":{},\"working\":{},\"active\":{},\"rounds\":{},\"gap\":{}}}",
+            "{{\"lambda\":{},\"traverse_secs\":{},\"solve_secs\":{},\"nodes\":{},\"working\":{},\"active\":{},\"rounds\":{},\"gap\":{},\"screen_workers\":{},\"screen_tasks\":{}}}",
             num(p.lambda),
             num(p.traverse_secs),
             num(p.solve_secs),
@@ -36,7 +36,9 @@ pub fn result_json(r: &ExperimentResult) -> String {
             p.working_size,
             p.active.len(),
             p.rounds,
-            num(p.gap)
+            num(p.gap),
+            p.threads.workers,
+            p.threads.tasks
         ));
     }
     per_lambda.push(']');
@@ -125,6 +127,7 @@ mod tests {
             "\"method\":\"spp\"",
             "\"per_lambda\":[",
             "\"nodes\":",
+            "\"screen_workers\":",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }

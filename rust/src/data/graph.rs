@@ -287,6 +287,18 @@ impl PatternSubstrate for GraphDatabase {
         m.traverse(visitor);
     }
 
+    fn traverse_parallel<F: crate::mining::SubtreeVisitors>(
+        &self,
+        maxpat: usize,
+        minsup: usize,
+        threads: usize,
+        factory: &F,
+    ) -> Vec<F::V> {
+        let mut m = GSpanMiner::new(self, maxpat);
+        m.minsup = minsup;
+        m.traverse_par(threads, factory)
+    }
+
     fn matches(pattern: &Pattern, record: &Graph) -> bool {
         match pattern {
             Pattern::Subgraph(code) => contains_subgraph(record, &code_to_labeled_graph(code)),

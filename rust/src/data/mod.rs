@@ -86,6 +86,18 @@ impl PatternSubstrate for Transactions {
         m.traverse(visitor);
     }
 
+    fn traverse_parallel<F: crate::mining::SubtreeVisitors>(
+        &self,
+        maxpat: usize,
+        minsup: usize,
+        threads: usize,
+        factory: &F,
+    ) -> Vec<F::V> {
+        let mut m = ItemsetMiner::new(self, maxpat);
+        m.minsup = minsup;
+        m.traverse_par(threads, factory)
+    }
+
     fn matches(pattern: &Pattern, record: &[u32]) -> bool {
         match pattern {
             Pattern::Itemset(items) => synth_itemsets::contains_all(record, items),

@@ -74,6 +74,18 @@ impl PatternSubstrate for Sequences {
         m.traverse(visitor);
     }
 
+    fn traverse_parallel<F: crate::mining::SubtreeVisitors>(
+        &self,
+        maxpat: usize,
+        minsup: usize,
+        threads: usize,
+        factory: &F,
+    ) -> Vec<F::V> {
+        let mut m = PrefixSpanMiner::new(self, maxpat);
+        m.minsup = minsup;
+        m.traverse_par(threads, factory)
+    }
+
     fn matches(pattern: &Pattern, record: &[u32]) -> bool {
         match pattern {
             Pattern::Sequence(s) => is_subsequence(record, s),

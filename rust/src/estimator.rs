@@ -83,6 +83,15 @@ impl SppEstimator {
         self
     }
 
+    /// Worker count for the deterministic parallel engine: `0` (the
+    /// default) = auto (`SPP_THREADS` env, else available parallelism),
+    /// `1` = the sequential engine, `N` = that many pool workers.  Any
+    /// setting fits the bit-identical model (see `runtime::parallel`).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
     /// Restricted-solver settings (tolerance, epoch caps).
     pub fn cd(mut self, cd: CdConfig) -> Self {
         self.cfg.cd = cd;
@@ -164,12 +173,29 @@ mod tests {
     fn reuse_and_screening_knobs_reach_the_config() {
         let est = SppEstimator::new(Task::Regression)
             .reuse_forest(false)
-            .dynamic_screening(false);
+            .dynamic_screening(false)
+            .threads(3);
         assert!(!est.config().reuse_forest);
         assert!(!est.config().cd.dynamic_screen);
+        assert_eq!(est.config().threads, 3);
         let est = SppEstimator::new(Task::Regression);
         assert!(est.config().reuse_forest, "forest reuse must default on");
         assert!(est.config().cd.dynamic_screen, "dynamic screening must default on");
+        assert_eq!(est.config().threads, 0, "threads must default to auto");
+    }
+
+    #[test]
+    fn fits_are_bit_identical_across_worker_counts() {
+        let d = generate(&ItemsetSynthConfig::tiny(34, false));
+        let base = SppEstimator::new(Task::Regression).maxpat(2).lambda_grid(6, 0.1);
+        let seq = base.threads(1).fit(&d.db, &d.y).unwrap();
+        let par = base.threads(4).fit(&d.db, &d.y).unwrap();
+        assert_eq!(seq.model.terms.len(), par.model.terms.len());
+        for ((pa, wa), (pb, wb)) in seq.model.terms.iter().zip(&par.model.terms) {
+            assert_eq!(pa, pb);
+            assert_eq!(wa.to_bits(), wb.to_bits());
+        }
+        assert_eq!(seq.model.b.to_bits(), par.model.b.to_bits());
     }
 
     #[test]

@@ -38,7 +38,10 @@
 //! * [`estimator`] — [`SppEstimator`], the sklearn-style builder facade
 //!   over the path machinery.
 //! * [`runtime`] — PJRT execution of the AOT JAX/Pallas artifacts
-//!   (`artifacts/*.hlo.txt`) from the Rust hot path.
+//!   (`artifacts/*.hlo.txt`) from the Rust hot path, and
+//!   [`runtime::parallel`] — the deterministic worker pool behind the
+//!   engine's `--threads` knob (parallel runs are bit-identical to
+//!   sequential; DESIGN.md §6).
 //! * [`coordinator`] — experiment orchestration: worker pool, metrics,
 //!   result reporting; drives every figure bench.
 //! * [`testutil`] — SplitMix64 PRNG, property-test harness, brute-force

@@ -4,6 +4,7 @@
 //! spp path       --dataset cpdb --maxpat 5 [--method spp|boosting|both]
 //!                [--lambdas 100] [--min-ratio 0.01] [--scale 1.0]
 //!                [--certify] [--no-reuse] [--dynamic-screen=false]
+//!                [--threads N]          # 0 = auto; 1 = sequential
 //!                [--engine rust|xla] [--json out.json]
 //! spp fit        --dataset synth-seq --maxpat 3 --model out.spp
 //!                [--lambdas 100] [--min-ratio 0.01] [--scale 1.0]
@@ -32,12 +33,35 @@ use spp::screening::lambda_max::lambda_max;
 use spp::solver::Task;
 use spp::SppEstimator;
 
-/// Flags that never consume a following token (see `cli::Args`).
-const SWITCHES: &[&str] = &["certify", "no-reuse", "dynamic-screen"];
+/// Switches: flags that never consume a non-boolean token (see
+/// `cli::Args`).  `help` keeps the universal `spp <command> --help`
+/// habit working under the strict grammar.
+const SWITCHES: &[&str] = &["certify", "dynamic-screen", "help", "no-reuse"];
+
+/// Every value-taking flag any subcommand reads — the complete declared
+/// grammar; anything else is rejected with the flag named.
+const FLAGS: &[&str] = &[
+    "artifacts",
+    "dataset",
+    "engine",
+    "json",
+    "k-add",
+    "lambda-index",
+    "lambdas",
+    "maxpat",
+    "method",
+    "min-ratio",
+    "minsup",
+    "model",
+    "scale",
+    "threads",
+    "top",
+];
 
 fn main() {
-    let args = cli::Args::parse_with_switches(std::env::args().skip(1), SWITCHES);
-    let code = match dispatch(&args) {
+    let code = match cli::Args::parse_with_switches(std::env::args().skip(1), SWITCHES, FLAGS)
+        .and_then(|args| dispatch(&args))
+    {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e:#}");
@@ -48,6 +72,11 @@ fn main() {
 }
 
 fn dispatch(args: &cli::Args) -> spp::Result<()> {
+    // `spp <command> --help` prints help instead of running the command
+    if args.switch("help") {
+        print!("{HELP}");
+        return Ok(());
+    }
     match args.command.as_str() {
         "path" => cmd_path(args),
         "fit" => cmd_fit(args),
@@ -94,6 +123,10 @@ fn path_config(args: &cli::Args) -> spp::Result<PathConfig> {
         // `--no-reuse` falls back to the from-scratch traversal per λ
         // (ablation of the incremental screening forest)
         reuse_forest: !args.switch("no-reuse"),
+        // `--threads N` drives the deterministic parallel engine; 0 =
+        // auto (SPP_THREADS env, else available parallelism), 1 = the
+        // sequential engine — all bit-identical
+        threads: args.get_usize("threads", 0)?,
         k_add: args.get_usize("k-add", 1)?,
         ..PathConfig::default()
     })
@@ -158,6 +191,7 @@ fn cmd_fit(args: &cli::Args) -> spp::Result<()> {
         .lambda_grid(cfg.n_lambdas, cfg.lambda_min_ratio)
         .certify(cfg.certify)
         .reuse_forest(cfg.reuse_forest)
+        .threads(cfg.threads)
         .cd(cfg.cd);
     let fit = match &data {
         Dataset::Graphs(g) => est.fit(g, &g.y)?,

@@ -12,7 +12,7 @@
 //! per-node work `O(Σ |candidate tid-lists|)` with zero allocation in
 //! the intersection inner loop.
 
-use super::{PatternNode, TreeVisitor, Walk};
+use super::{PatternNode, SubtreeVisitors, TreeVisitor, Walk};
 use crate::data::Transactions;
 
 /// Configurable item-set miner.
@@ -34,26 +34,75 @@ impl<'a> ItemsetMiner<'a> {
         }
     }
 
+    /// Depth-1 candidates: the vertical tid-list layout with the minsup
+    /// filter applied, in item order.  The ONE root-frontier definition
+    /// shared by [`Self::traverse`] and [`Self::traverse_par`] — the
+    /// splice guarantee depends on both engines expanding the same
+    /// frontier.
+    fn root_candidates(&self) -> Vec<(u32, Vec<u32>)> {
+        self.db
+            .tidlists()
+            .into_iter()
+            .enumerate()
+            .filter(|(_, t)| t.len() >= self.minsup)
+            .map(|(j, t)| (j as u32, t))
+            .collect()
+    }
+
     /// Depth-first traversal; the visitor sees each item-set exactly
     /// once, in lexicographic order.
     pub fn traverse<V: TreeVisitor + ?Sized>(&self, visitor: &mut V) {
         if self.maxpat == 0 {
             return;
         }
-        let tidlists = self.db.tidlists();
-        // Root candidates: all items with support >= minsup.
-        let root: Vec<(u32, Vec<u32>)> = tidlists
-            .into_iter()
-            .enumerate()
-            .filter(|(_, t)| t.len() >= self.minsup)
-            .map(|(j, t)| (j as u32, t))
-            .collect();
+        let root = self.root_candidates();
         let mut prefix: Vec<u32> = Vec::with_capacity(self.maxpat);
         // Buffer pools: tid-list vectors and per-node candidate lists
         // are recycled across the whole traversal, so the hot loop does
         // no allocation once the pools warm up.
         let mut pool = Pools::default();
         self.recurse(&root, &mut prefix, &mut pool, visitor);
+    }
+
+    /// Subtree-parallel traversal (see
+    /// [`crate::mining::PatternSubstrate::traverse_parallel`]): the
+    /// root candidate list — the vertical tid-list layout — is built
+    /// once and shared read-only; each depth-1 item's subtree is an
+    /// independent task (its children come from the candidates *after*
+    /// it, intersected with its tids, exactly as in [`Self::traverse`]),
+    /// so per-subtree node sequences concatenated in item order equal
+    /// the sequential traversal.
+    pub fn traverse_par<F: SubtreeVisitors>(&self, threads: usize, factory: &F) -> Vec<F::V> {
+        if self.maxpat == 0 {
+            return Vec::new();
+        }
+        let root = self.root_candidates();
+        let root = &root;
+        crate::runtime::parallel::map_indexed(threads, root.len(), move |i| {
+            let mut visitor = factory.visitor(i);
+            let (item, tids) = &root[i];
+            let mut prefix = vec![*item];
+            let node = PatternNode::itemset(&prefix, tids);
+            let walk = visitor.visit(&node);
+            if walk == Walk::Descend && prefix.len() < self.maxpat {
+                let mut pool = Pools::default();
+                let mut children = pool.take_list();
+                for (next, next_tids) in &root[i + 1..] {
+                    let mut buf = pool.take_tids();
+                    intersect_into(tids, next_tids, &mut buf);
+                    if buf.len() >= self.minsup {
+                        children.push((*next, buf));
+                    } else {
+                        pool.put_tids(buf);
+                    }
+                }
+                if !children.is_empty() {
+                    self.recurse(&children, &mut prefix, &mut pool, &mut visitor);
+                }
+                pool.put_list(children);
+            }
+            visitor
+        })
     }
 
     fn recurse<V: TreeVisitor + ?Sized>(
@@ -293,6 +342,34 @@ mod tests {
             Walk::Descend
         };
         ItemsetMiner::new(&db, 4).traverse(&mut v);
+    }
+
+    #[test]
+    fn parallel_traversal_matches_sequential_blocks() {
+        struct Coll(Vec<(Pattern, Vec<u32>)>);
+        impl TreeVisitor for Coll {
+            fn visit(&mut self, n: &PatternNode<'_>) -> Walk {
+                self.0.push((n.to_pattern(), n.support.to_vec()));
+                Walk::Descend
+            }
+        }
+        struct Fac;
+        impl SubtreeVisitors for Fac {
+            type V = Coll;
+
+            fn visitor(&self, _root: usize) -> Coll {
+                Coll(Vec::new())
+            }
+        }
+        let db = db();
+        for (maxpat, minsup, threads) in [(3, 1, 1), (3, 1, 4), (4, 1, 2), (2, 2, 3)] {
+            let want = collect(&db, maxpat, minsup);
+            let mut m = ItemsetMiner::new(&db, maxpat);
+            m.minsup = minsup;
+            let got: Vec<(Pattern, Vec<u32>)> =
+                m.traverse_par(threads, &Fac).into_iter().flat_map(|c| c.0).collect();
+            assert_eq!(got, want, "maxpat={maxpat} minsup={minsup} threads={threads}");
+        }
     }
 
     mod intersect {

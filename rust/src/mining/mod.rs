@@ -22,6 +22,13 @@
 //! implementing the trait — no search code changes.  The crate ships
 //! three substrates: transaction databases (item-sets), graph databases
 //! (connected subgraphs), and sequence databases (subsequences).
+//!
+//! Traversal has a deterministic parallel form as well:
+//! [`PatternSubstrate::traverse_parallel`] farms independent depth-1
+//! subtrees to `runtime::parallel` workers, one [`SubtreeVisitors`]
+//! visitor per subtree, returned in canonical root order — so splicing
+//! the per-subtree results reproduces the sequential traversal exactly
+//! (DESIGN.md §6, "Threading model").
 
 pub mod gspan;
 pub mod itemset;
@@ -155,6 +162,58 @@ pub trait PatternSubstrate {
     /// `>= minsup` exactly once and steers via [`Walk`].
     fn traverse(&self, maxpat: usize, minsup: usize, visitor: &mut dyn TreeVisitor);
 
+    /// Subtree-parallel canonical traversal: expand the depth-1 root
+    /// frontier sequentially (in canonical order), then traverse each
+    /// root's subtree depth-first with its **own** visitor from
+    /// `factory` — possibly on `threads` pool workers — and return the
+    /// visitors in canonical root order.
+    ///
+    /// **Contract**: visitor `i` must see exactly the node sequence
+    /// [`PatternSubstrate::traverse`] delivers between the `i`-th and
+    /// `(i+1)`-th depth-1 nodes, in the same order, with the same
+    /// supports; concatenating the per-subtree sequences in root order
+    /// therefore reproduces the sequential traversal exactly.  This is
+    /// the splice guarantee the deterministic parallel engine
+    /// (`runtime::parallel`, `--threads N`) builds on.
+    ///
+    /// The default implementation runs on the sequential `traverse`
+    /// (handing out one visitor per depth-1 node) and is correct for
+    /// any substrate; the shipped substrates override it to farm
+    /// subtrees to the worker pool.
+    fn traverse_parallel<F: SubtreeVisitors>(
+        &self,
+        maxpat: usize,
+        minsup: usize,
+        threads: usize,
+        factory: &F,
+    ) -> Vec<F::V>
+    where
+        Self: Sized,
+    {
+        let _ = threads;
+        struct Split<'f, F: SubtreeVisitors> {
+            factory: &'f F,
+            out: Vec<F::V>,
+        }
+        impl<F: SubtreeVisitors> TreeVisitor for Split<'_, F> {
+            fn visit(&mut self, node: &PatternNode<'_>) -> Walk {
+                if node.depth == 1 {
+                    self.out.push(self.factory.visitor(self.out.len()));
+                }
+                self.out
+                    .last_mut()
+                    .expect("canonical traversals start every subtree at depth 1")
+                    .visit(node)
+            }
+        }
+        let mut split = Split {
+            factory,
+            out: Vec::new(),
+        };
+        self.traverse(maxpat, minsup, &mut split);
+        split.out
+    }
+
     /// Does `pattern` occur in `record`?  Must return `false` for
     /// foreign pattern kinds (a model mixing substrates scores only its
     /// own terms against each record type).
@@ -242,6 +301,21 @@ pub trait TreeVisitor {
     fn visit(&mut self, node: &PatternNode<'_>) -> Walk;
 }
 
+/// Per-subtree visitor factory for
+/// [`PatternSubstrate::traverse_parallel`]: hands out one fresh visitor
+/// per depth-1 subtree.  The factory is shared across pool workers
+/// (`Sync`); each visitor is owned by exactly one subtree task (`Send`)
+/// and is returned to the caller, carrying whatever it collected, in
+/// canonical root order.
+pub trait SubtreeVisitors: Sync {
+    /// The per-subtree visitor type.
+    type V: TreeVisitor + Send;
+
+    /// A fresh visitor for the subtree rooted at canonical depth-1
+    /// index `root`.
+    fn visitor(&self, root: usize) -> Self::V;
+}
+
 /// Blanket impl so closures can be used as visitors in tests.
 impl<F: FnMut(&PatternNode<'_>) -> Walk> TreeVisitor for F {
     fn visit(&mut self, node: &PatternNode<'_>) -> Walk {
@@ -326,6 +400,91 @@ mod tests {
         assert_eq!(p, Pattern::Sequence(vec![4, 4, 1]));
         assert_eq!(p.size(), 3);
         assert_eq!(p.display(), "<4,4,1>");
+    }
+
+    #[test]
+    fn default_traverse_parallel_splits_by_root() {
+        // A substrate that does NOT override traverse_parallel: the
+        // sequential fallback must hand each depth-1 subtree its own
+        // visitor, in canonical root order.
+        struct Toy;
+        impl PatternSubstrate for Toy {
+            type Record = ();
+
+            fn n_records(&self) -> usize {
+                3
+            }
+
+            fn traverse(&self, maxpat: usize, _minsup: usize, visitor: &mut dyn TreeVisitor) {
+                let sup = [0u32, 1, 2];
+                for root in 0..2u32 {
+                    let items = [root];
+                    let node = PatternNode::itemset(&items, &sup);
+                    if visitor.visit(&node) == Walk::Descend && maxpat >= 2 {
+                        let items = [root, 9];
+                        let child = PatternNode::itemset(&items, &sup[..1]);
+                        visitor.visit(&child);
+                    }
+                }
+            }
+
+            fn matches(_pattern: &Pattern, _record: &()) -> bool {
+                false
+            }
+
+            fn record(&self, _i: usize) -> &() {
+                &()
+            }
+
+            fn select(&self, _indices: &[usize]) -> Self {
+                Toy
+            }
+
+            fn parse_pattern(_body: &str) -> crate::Result<Pattern> {
+                anyhow::bail!("toy substrate has no codec")
+            }
+
+            fn format_pattern(_pattern: &Pattern) -> String {
+                String::new()
+            }
+
+            const KIND_TAG: &'static str = "toy";
+        }
+
+        struct Collect {
+            root: usize,
+            seen: Vec<Pattern>,
+        }
+        impl TreeVisitor for Collect {
+            fn visit(&mut self, node: &PatternNode<'_>) -> Walk {
+                self.seen.push(node.to_pattern());
+                Walk::Descend
+            }
+        }
+        struct Fac;
+        impl SubtreeVisitors for Fac {
+            type V = Collect;
+
+            fn visitor(&self, root: usize) -> Collect {
+                Collect {
+                    root,
+                    seen: Vec::new(),
+                }
+            }
+        }
+
+        let out = Toy.traverse_parallel(2, 1, 4, &Fac);
+        assert_eq!(out.len(), 2);
+        for (i, c) in out.iter().enumerate() {
+            assert_eq!(c.root, i);
+            assert_eq!(
+                c.seen,
+                vec![
+                    Pattern::Itemset(vec![i as u32]),
+                    Pattern::Itemset(vec![i as u32, 9]),
+                ]
+            );
+        }
     }
 
     #[test]

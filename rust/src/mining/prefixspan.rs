@@ -19,7 +19,7 @@
 //! path.  That anti-monotonicity is what the SPP rule and the boosting
 //! envelope bound require of a substrate.
 
-use super::{PatternNode, TreeVisitor, Walk};
+use super::{PatternNode, SubtreeVisitors, TreeVisitor, Walk};
 use crate::data::sequence::Sequences;
 
 /// Configurable PrefixSpan miner.
@@ -48,20 +48,86 @@ impl<'a> PrefixSpanMiner<'a> {
         }
     }
 
+    /// Depth-1 pseudo-projections: per symbol, the position past its
+    /// first occurrence in every containing sequence (ascending sid),
+    /// minsup-filtered, in symbol order.  The ONE root-frontier
+    /// definition shared by [`Self::traverse`] and
+    /// [`Self::traverse_par`] — the splice guarantee depends on both
+    /// engines expanding the same frontier.
+    fn root_projections(&self) -> Vec<(u32, Vec<(u32, u32)>)> {
+        let mut scratch = Scratch {
+            stamp: vec![0; self.db.n_symbols],
+            epoch: 0,
+        };
+        let mut ext: std::collections::BTreeMap<u32, Vec<(u32, u32)>> =
+            std::collections::BTreeMap::new();
+        for sid in 0..self.db.seqs.len() as u32 {
+            let seq = &self.db.seqs[sid as usize];
+            scratch.epoch += 1;
+            for (k, &a) in seq.iter().enumerate() {
+                let slot = &mut scratch.stamp[a as usize];
+                if *slot != scratch.epoch {
+                    *slot = scratch.epoch;
+                    ext.entry(a).or_default().push((sid, k as u32 + 1));
+                }
+            }
+        }
+        ext.into_iter().filter(|(_, c)| c.len() >= self.minsup).collect()
+    }
+
     /// Depth-first traversal; the visitor sees each subsequence pattern
     /// exactly once, in lexicographic order.
     pub fn traverse<V: TreeVisitor + ?Sized>(&self, visitor: &mut V) {
         if self.maxpat == 0 || self.db.seqs.is_empty() {
             return;
         }
-        // Root projection: every sequence from position 0.
-        let root: Vec<(u32, u32)> = (0..self.db.seqs.len() as u32).map(|i| (i, 0)).collect();
+        let roots = self.root_projections();
         let mut prefix: Vec<u32> = Vec::with_capacity(self.maxpat);
         let mut scratch = Scratch {
             stamp: vec![0; self.db.n_symbols],
             epoch: 0,
         };
-        self.recurse(&root, &mut prefix, &mut scratch, visitor);
+        for (a, child) in &roots {
+            prefix.push(*a);
+            let support: Vec<u32> = child.iter().map(|&(sid, _)| sid).collect();
+            let node = PatternNode::sequence(&prefix, &support);
+            let walk = visitor.visit(&node);
+            if walk == Walk::Descend && prefix.len() < self.maxpat {
+                self.recurse(child, &mut prefix, &mut scratch, visitor);
+            }
+            prefix.pop();
+        }
+    }
+
+    /// Subtree-parallel traversal (see
+    /// [`crate::mining::PatternSubstrate::traverse_parallel`]): the
+    /// root projection pass (`root_projections`, shared with the
+    /// sequential engine) runs once; each surviving symbol's
+    /// pseudo-projection is then an independent subtree task with its
+    /// own scratch marks, so per-subtree node sequences concatenated in
+    /// symbol order equal the sequential traversal.
+    pub fn traverse_par<F: SubtreeVisitors>(&self, threads: usize, factory: &F) -> Vec<F::V> {
+        if self.maxpat == 0 || self.db.seqs.is_empty() {
+            return Vec::new();
+        }
+        let roots = self.root_projections();
+        let roots = &roots;
+        crate::runtime::parallel::map_indexed(threads, roots.len(), move |i| {
+            let mut visitor = factory.visitor(i);
+            let (a, child) = &roots[i];
+            let mut prefix = vec![*a];
+            let support: Vec<u32> = child.iter().map(|&(sid, _)| sid).collect();
+            let node = PatternNode::sequence(&prefix, &support);
+            let walk = visitor.visit(&node);
+            if walk == Walk::Descend && prefix.len() < self.maxpat {
+                let mut scratch = Scratch {
+                    stamp: vec![0; self.db.n_symbols],
+                    epoch: 0,
+                };
+                self.recurse(child, &mut prefix, &mut scratch, &mut visitor);
+            }
+            visitor
+        })
     }
 
     /// `proj` holds one `(sid, pos)` entry per supporting sequence:
@@ -201,6 +267,36 @@ mod tests {
         assert!(seen.contains(&vec![0]));
         assert!(!seen.iter().any(|s| s.len() > 1 && s[0] == 0));
         assert!(seen.contains(&vec![1, 2]), "{seen:?}"); // sibling subtree intact
+    }
+
+    #[test]
+    fn parallel_traversal_matches_sequential_blocks() {
+        struct Coll(Vec<(Vec<u32>, Vec<u32>)>);
+        impl TreeVisitor for Coll {
+            fn visit(&mut self, n: &PatternNode<'_>) -> Walk {
+                if let Pattern::Sequence(s) = n.to_pattern() {
+                    self.0.push((s, n.support.to_vec()));
+                }
+                Walk::Descend
+            }
+        }
+        struct Fac;
+        impl SubtreeVisitors for Fac {
+            type V = Coll;
+
+            fn visitor(&self, _root: usize) -> Coll {
+                Coll(Vec::new())
+            }
+        }
+        let db = db();
+        for (maxpat, minsup, threads) in [(3, 1, 1), (3, 1, 4), (2, 2, 2)] {
+            let want = collect(&db, maxpat, minsup);
+            let mut m = PrefixSpanMiner::new(&db, maxpat);
+            m.minsup = minsup;
+            let got: Vec<(Vec<u32>, Vec<u32>)> =
+                m.traverse_par(threads, &Fac).into_iter().flat_map(|c| c.0).collect();
+            assert_eq!(got, want, "maxpat={maxpat} minsup={minsup} threads={threads}");
+        }
     }
 
     #[test]

@@ -9,6 +9,15 @@
 //! evaluated per λ by scoring held-out records through the substrate's
 //! `matches` (via [`crate::model::SparsePatternModel`]).  The λ
 //! minimizing the mean validation loss wins.
+//!
+//! Folds are independent path solves, so they run on the
+//! `runtime::parallel` worker pool (`PathConfig::threads`; the
+//! substrate is shared read-only, hence the `Sync` bound).  Per-fold
+//! results come back in fold order and are reduced in that order, so
+//! the summary is bit-identical at any worker count.  Support pools are
+//! deliberately per-fold: a support column indexes *training-split*
+//! record ids, which differ fold to fold — interning across folds would
+//! alias unrelated columns.
 
 use crate::data::graph::GraphDatabase;
 use crate::data::Transactions;
@@ -73,7 +82,7 @@ fn loss(task: Task, pred: f64, y: f64) -> f64 {
 /// λ values are aligned across folds *by grid position* (each fold has
 /// its own λ_max, so absolute λ differs; the fraction `λ/λ_max` is the
 /// shared coordinate, as is standard for path-based CV).
-pub fn cross_validate<S: PatternSubstrate>(
+pub fn cross_validate<S: PatternSubstrate + Sync>(
     db: &S,
     y: &[f64],
     task: Task,
@@ -84,23 +93,47 @@ pub fn cross_validate<S: PatternSubstrate>(
     let n = db.n_records();
     assert_eq!(n, y.len());
     let folds = fold_assignment(n, k, seed);
+    let threads = crate::runtime::parallel::resolve_threads(cfg.threads);
+    // When the folds themselves fan out they already saturate the
+    // worker budget, so the path solves inside them are pinned to one
+    // worker — otherwise each fold would re-resolve `cfg.threads` and
+    // the two parallel levels would multiply into k×threads live
+    // threads.  Bit-identity makes this a pure scheduling choice.
+    let fold_workers = crate::runtime::parallel::effective_workers(threads, k);
+    let mut fold_cfg = *cfg;
+    fold_cfg.threads = if fold_workers > 1 { 1 } else { threads };
+    let fold_cfg = &fold_cfg;
+
+    // one task per fold: full path on the training split, then per-λ
+    // validation losses + active counts (reduced in fold order below,
+    // so the summary is independent of worker count)
+    let per_fold: Vec<(Vec<f64>, Vec<f64>)> =
+        crate::runtime::parallel::map_indexed(threads, k, |f| {
+            let train_idx: Vec<usize> = (0..n).filter(|&i| folds[i] != f).collect();
+            let val_idx: Vec<usize> = (0..n).filter(|&i| folds[i] == f).collect();
+            let train = db.select(&train_idx);
+            let y_train: Vec<f64> = train_idx.iter().map(|&i| y[i]).collect();
+            let path = compute_path_spp(&train, &y_train, task, fold_cfg);
+            let mut losses = vec![0.0f64; cfg.n_lambdas];
+            let mut active = vec![0.0f64; cfg.n_lambdas];
+            for (li, p) in path.points.iter().enumerate() {
+                let model = SparsePatternModel::from_path_point(task, p);
+                let mut l = 0.0;
+                for &i in &val_idx {
+                    l += loss(task, model.score::<S>(db.record(i)), y[i]);
+                }
+                losses[li] = l / val_idx.len().max(1) as f64;
+                active[li] = p.active.len() as f64;
+            }
+            (losses, active)
+        });
+
     let mut fold_losses = vec![vec![0.0f64; k]; cfg.n_lambdas];
     let mut actives = vec![0.0f64; cfg.n_lambdas];
-
-    for f in 0..k {
-        let train_idx: Vec<usize> = (0..n).filter(|&i| folds[i] != f).collect();
-        let val_idx: Vec<usize> = (0..n).filter(|&i| folds[i] == f).collect();
-        let train = db.select(&train_idx);
-        let y_train: Vec<f64> = train_idx.iter().map(|&i| y[i]).collect();
-        let path = compute_path_spp(&train, &y_train, task, cfg);
-        for (li, p) in path.points.iter().enumerate() {
-            let model = SparsePatternModel::from_path_point(task, p);
-            let mut l = 0.0;
-            for &i in &val_idx {
-                l += loss(task, model.score::<S>(db.record(i)), y[i]);
-            }
-            fold_losses[li][f] = l / val_idx.len().max(1) as f64;
-            actives[li] += p.active.len() as f64 / k as f64;
+    for (f, (losses, active)) in per_fold.into_iter().enumerate() {
+        for li in 0..cfg.n_lambdas {
+            fold_losses[li][f] = losses[li];
+            actives[li] += active[li] / k as f64;
         }
     }
 

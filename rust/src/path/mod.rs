@@ -23,7 +23,17 @@
 //! by [`SupportId`].  Every per-λ record captures the figures' currency
 //! — traverse seconds, solve seconds, traversed node count, |Â|, the
 //! certified duality gap — plus the reuse telemetry in
-//! [`PathPoint::reuse`].
+//! [`PathPoint::reuse`] and the thread utilisation in
+//! [`PathPoint::threads`].
+//!
+//! The SPP engine is **deterministically parallel**
+//! ([`PathConfig::threads`], CLI `--threads N`): scratch-mode screening
+//! farms substrate subtrees to the `runtime::parallel` pool, forest
+//! mode chunks the stored-node re-check across it, and CV runs folds on
+//! it — all with results spliced back in canonical order, so every
+//! worker count produces bit-identical paths (`--threads 1` is
+//! byte-for-byte the sequential engine; pinned by
+//! `tests/integration_parallel.rs` and CI's `test-matrix`).
 
 pub mod cv;
 pub mod working_set;
@@ -32,12 +42,13 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::boosting::{solve_lambda as boosting_solve, BoostingConfig};
-use crate::mining::{Counting, Pattern, PatternSubstrate, TraverseStats};
+use crate::mining::{Pattern, PatternSubstrate, TraverseStats};
+use crate::runtime::parallel::{self, ThreadStats};
 use crate::screening::certify::certify;
 use crate::screening::forest::ScreenForest;
 use crate::screening::lambda_max::lambda_max;
 use crate::screening::pool::{SupportId, SupportPool};
-use crate::screening::sppc::{SppScreen, Survivor};
+use crate::screening::sppc::{screen_pass, Survivor};
 use crate::solver::dual::safe_radius;
 use crate::solver::problem::{dual_value, primal_value};
 use crate::solver::{CdConfig, CdSolver, Task};
@@ -63,6 +74,13 @@ pub struct PathConfig {
     /// Reuse the screening forest across λ steps (the incremental
     /// engine; `false` = paper-literal from-scratch traversal per λ).
     pub reuse_forest: bool,
+    /// Worker count for the deterministic parallel engine (subtree
+    /// traversal, forest re-checks, CV folds): `0` = auto
+    /// (`SPP_THREADS` env, else available parallelism), `1` =
+    /// byte-for-byte the sequential engine, `N` = that many pool
+    /// workers.  Any value produces bit-identical paths
+    /// (`tests/integration_parallel.rs`).
+    pub threads: usize,
     /// Boosting: patterns added per round.
     pub k_add: usize,
     /// Boosting: violation tolerance.
@@ -79,6 +97,7 @@ impl Default for PathConfig {
             cd: CdConfig::default(),
             certify: false,
             reuse_forest: true,
+            threads: 0,
             k_add: 1,
             viol_tol: 1e-6,
         }
@@ -123,6 +142,9 @@ pub struct PathPoint {
     pub cd_epochs: usize,
     /// Incremental-engine telemetry.
     pub reuse: ReuseStats,
+    /// Thread utilisation of this λ's screening phase (workers used,
+    /// tasks farmed; `workers == 1` for a sequential pass).
+    pub threads: ThreadStats,
 }
 
 /// Whole-path result.
@@ -269,8 +291,14 @@ pub fn compute_path_spp_with<S: PatternSubstrate>(
 ) -> PathResult {
     let n = y.len();
     assert_eq!(db.n_records(), n);
+    // One resolution for the whole path: `--threads 1` is the
+    // sequential engine, anything else is bit-identical to it.
+    let threads = parallel::resolve_threads(cfg.threads);
 
-    // λ_0 = λ_max; analytic zero solution + its dual certificate.
+    // λ_0 = λ_max; analytic zero solution + its dual certificate.  The
+    // λ_max search stays sequential: its envelope pruning tightens with
+    // the best value found so far, which is traversal-order-dependent —
+    // sharing it across workers would change node counts run to run.
     let t0 = Instant::now();
     let lm = lambda_max(db, y, task, cfg.maxpat, cfg.minsup);
     let lmax_secs = t0.elapsed().as_secs_f64();
@@ -289,6 +317,7 @@ pub fn compute_path_spp_with<S: PatternSubstrate>(
         rounds: 1,
         cd_epochs: 0,
         reuse: ReuseStats::default(),
+        threads: ThreadStats::sequential(),
     });
 
     // screening state from the previous λ
@@ -311,29 +340,22 @@ pub fn compute_path_spp_with<S: PatternSubstrate>(
         let radius = safe_radius(primal, dualv, lam);
 
         let t1 = Instant::now();
-        let (survivors, stats, mut reuse) = match forest.as_mut() {
+        let (survivors, stats, mut reuse, tstats) = match forest.as_mut() {
             Some(f) => {
-                let out = f.screen(db, task, y, &theta, radius, true, &mut pool);
+                let out = f.screen(db, task, y, &theta, radius, true, threads, &mut pool);
                 let reuse = ReuseStats {
                     forest_hits: out.forest_hits,
                     cert_skips: out.cert_skips,
                     reopened: out.reopened,
                     solver_screened: 0,
                 };
-                (out.survivors, out.stats, reuse)
+                (out.survivors, out.stats, reuse, out.threads)
             }
             None => {
-                let mut screen = SppScreen::new(task, y, &theta, radius, &mut pool);
-                let stats = {
-                    let mut counting = Counting::new(&mut screen);
-                    db.traverse(cfg.maxpat, cfg.minsup, &mut counting);
-                    counting.stats
-                };
-                (
-                    std::mem::take(&mut screen.survivors),
-                    stats,
-                    ReuseStats::default(),
-                )
+                let (survivors, stats, tstats) = screen_pass(
+                    db, task, y, &theta, radius, true, cfg.maxpat, cfg.minsup, threads, &mut pool,
+                );
+                (survivors, stats, ReuseStats::default(), tstats)
             }
         };
         let mut traverse_secs = t1.elapsed().as_secs_f64();
@@ -384,6 +406,7 @@ pub fn compute_path_spp_with<S: PatternSubstrate>(
             rounds: 1,
             cd_epochs: sol.epochs,
             reuse,
+            threads: tstats,
         });
     }
 
@@ -428,6 +451,7 @@ pub fn compute_path_boosting<S: PatternSubstrate>(
         rounds: 1,
         cd_epochs: 0,
         reuse: ReuseStats::default(),
+        threads: ThreadStats::sequential(),
     });
 
     let mut pool = SupportPool::new();
@@ -460,6 +484,9 @@ pub fn compute_path_boosting<S: PatternSubstrate>(
                 solver_screened: out.solution.screened,
                 ..ReuseStats::default()
             },
+            // boosting's most-violating search tracks a global top-k —
+            // order-dependent pruning, kept sequential
+            threads: ThreadStats::sequential(),
         });
     }
 

@@ -9,9 +9,13 @@
 //! * [`engine`] — the two accelerated engines: the batched SPPC
 //!   frontier scorer (L1 Pallas kernel) and the FISTA active-set
 //!   subproblem solver (L2 graph), both pad-to-shape.
+//! * [`parallel`] — the deterministic scoped worker pool behind the
+//!   engine's `--threads` knob (subtree-parallel traversal, forest
+//!   re-screening, CV folds); dependency-free, results in task order.
 
 pub mod artifacts;
 mod engine_common;
+pub mod parallel;
 
 /// The engine backend: real PJRT execution with the `pjrt` feature
 /// (`engine_xla.rs`, needs the external `xla` crate), a graceful

@@ -1,0 +1,202 @@
+//! `runtime::parallel` — the dependency-free deterministic worker pool.
+//!
+//! Every parallel phase of the engine (subtree-parallel substrate
+//! traversal, screening-forest re-evaluation, CV folds) is expressed as
+//! the same primitive: [`map_indexed`] runs `n` independent tasks on a
+//! scoped `std::thread` pool behind a work-sharing index queue and
+//! returns the results **in task order**.  Determinism therefore never
+//! depends on scheduling: a caller that (a) makes task `i` a pure
+//! function of the inputs and (b) combines the returned vector in index
+//! order produces bit-identical output at any worker count — the
+//! contract `tests/integration_parallel.rs` pins end-to-end and the CI
+//! `test-matrix` job enforces at `SPP_THREADS ∈ {1, 4}` on every push.
+//!
+//! The pool is scoped ([`std::thread::scope`]), so tasks may borrow the
+//! caller's data freely (databases, interned column pools, fold
+//! vectors); no `'static` bounds, no channels, no external crates — the
+//! build stays registry-hermetic.
+//!
+//! Thread-count resolution ([`resolve_threads`]): an explicit knob
+//! (`--threads N`, `PathConfig::threads`, `SppEstimator::threads`)
+//! wins; `0` means *auto* — the `SPP_THREADS` environment variable if
+//! set, else [`std::thread::available_parallelism`].  `1` runs every
+//! phase inline on the caller's thread, byte-for-byte the sequential
+//! engine.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Thread-utilisation telemetry of one engine phase (recorded per λ in
+/// `path::PathPoint::threads`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ThreadStats {
+    /// Workers the phase actually ran on (1 = inline on the caller).
+    pub workers: usize,
+    /// Independent tasks farmed to those workers (subtree roots, stored
+    /// forest roots, CV folds).  `0` whenever the phase ran inline, so
+    /// `tasks > 0 ⇔ workers > 1` holds across every engine.
+    pub tasks: usize,
+}
+
+impl ThreadStats {
+    /// The sequential phase marker: one worker, nothing farmed.
+    pub fn sequential() -> Self {
+        ThreadStats {
+            workers: 1,
+            tasks: 0,
+        }
+    }
+
+    /// Telemetry for a phase that offered `tasks` tasks at a `threads`
+    /// knob: records the effective worker count, normalizing inline
+    /// passes to [`ThreadStats::sequential`] — the one place the
+    /// `tasks > 0 ⇔ workers > 1` invariant is encoded.
+    pub fn for_phase(threads: usize, tasks: usize) -> Self {
+        let workers = effective_workers(threads, tasks);
+        if workers > 1 {
+            ThreadStats { workers, tasks }
+        } else {
+            ThreadStats::sequential()
+        }
+    }
+}
+
+/// Resolve a thread-count knob: `requested > 0` is explicit; `0` means
+/// auto — `SPP_THREADS` if set to a positive integer, else the
+/// machine's available parallelism (1 if unknown).
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Ok(v) = std::env::var("SPP_THREADS") {
+        if let Ok(k) = v.trim().parse::<usize>() {
+            if k > 0 {
+                return k;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Workers [`map_indexed`] will use for `n` tasks at a `threads` knob:
+/// never more workers than tasks, and `threads <= 1` or `n <= 1` stays
+/// inline.
+pub fn effective_workers(threads: usize, n: usize) -> usize {
+    if threads <= 1 || n <= 1 {
+        1
+    } else {
+        threads.min(n)
+    }
+}
+
+/// Run `task(i)` for every `i < n` and return the results in index
+/// order.
+///
+/// With more than one effective worker, indices are handed out through
+/// a shared atomic cursor (the work-sharing queue: a fast worker simply
+/// takes more subtree roots) and each result lands in its own slot, so
+/// the output is independent of scheduling.  A panicking task panics
+/// the caller when the scope joins, matching the inline behaviour.
+pub fn map_indexed<T, F>(threads: usize, n: usize, task: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = effective_workers(threads, n);
+    if workers <= 1 {
+        return (0..n).map(task).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = task(i);
+                out.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every index is claimed exactly once"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_index_order() {
+        for threads in [1usize, 2, 4, 16] {
+            let got = map_indexed(threads, 37, |i| i * i);
+            let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tasks_may_borrow_caller_state() {
+        let data: Vec<u64> = (0..100).collect();
+        let sums = map_indexed(4, 10, |i| data[i * 10..(i + 1) * 10].iter().sum::<u64>());
+        assert_eq!(sums.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn empty_and_single_task_run_inline() {
+        assert!(map_indexed::<usize, _>(8, 0, |_| unreachable!()).is_empty());
+        assert_eq!(map_indexed(8, 1, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn effective_workers_never_exceeds_tasks() {
+        assert_eq!(effective_workers(8, 3), 3);
+        assert_eq!(effective_workers(2, 100), 2);
+        assert_eq!(effective_workers(1, 100), 1);
+        assert_eq!(effective_workers(0, 100), 1);
+        assert_eq!(effective_workers(8, 1), 1);
+        assert_eq!(effective_workers(8, 0), 1);
+    }
+
+    #[test]
+    fn resolve_honours_explicit_requests() {
+        assert_eq!(resolve_threads(3), 3);
+        assert_eq!(resolve_threads(1), 1);
+        // auto resolves to something usable regardless of environment
+        assert!(resolve_threads(0) >= 1);
+    }
+
+    #[test]
+    fn every_index_is_computed_exactly_once() {
+        use std::sync::atomic::AtomicU32;
+        let calls: Vec<AtomicU32> = (0..64).map(|_| AtomicU32::new(0)).collect();
+        map_indexed(6, 64, |i| calls[i].fetch_add(1, Ordering::Relaxed));
+        assert!(calls.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn sequential_marker_reads_as_one_worker() {
+        let s = ThreadStats::sequential();
+        assert_eq!(s.workers, 1);
+        assert_eq!(s.tasks, 0);
+    }
+
+    #[test]
+    fn phase_telemetry_normalizes_inline_passes() {
+        // parallel phases record workers + tasks …
+        let p = ThreadStats::for_phase(4, 10);
+        assert_eq!((p.workers, p.tasks), (4, 10));
+        let p = ThreadStats::for_phase(8, 3);
+        assert_eq!((p.workers, p.tasks), (3, 3));
+        // … and every inline pass reads as the sequential marker, so
+        // `tasks > 0 ⇔ workers > 1` regardless of engine
+        for (threads, tasks) in [(1, 10), (4, 1), (4, 0), (0, 10)] {
+            assert_eq!(ThreadStats::for_phase(threads, tasks), ThreadStats::sequential());
+        }
+    }
+}

@@ -44,10 +44,11 @@
 use std::collections::HashMap;
 
 use super::pool::SupportPool;
-use super::sppc::{feature_ub_from, fold_sums, Survivor};
+use super::sppc::{decide, fold_sums, NodeDecision, Survivor};
 use crate::mining::{
     Counting, Pattern, PatternNode, PatternSubstrate, TraverseStats, TreeVisitor, Walk,
 };
+use crate::runtime::parallel::{self, ThreadStats};
 use crate::solver::Task;
 
 const NO_PARENT: u32 = u32::MAX;
@@ -87,6 +88,11 @@ pub struct ForestScreenOutcome {
     pub cert_skips: u64,
     /// Frontier subtrees re-opened below (substrate re-entered).
     pub reopened: u64,
+    /// Worker utilisation of the stored-forest re-check (phase 1): the
+    /// per-root walks are farmed to the pool and spliced back in root
+    /// order.  The initial build and the guided re-open traversal are
+    /// sequential by construction (they *create* canonical order).
+    pub threads: ThreadStats,
 }
 
 /// The forest itself; one instance spans a whole λ path (fixed
@@ -137,6 +143,9 @@ impl ScreenForest {
     /// One λ step: evaluate the SPP rule for the pair `(θ, radius)`
     /// against the stored forest, re-opening the substrate only where
     /// needed.  Drop-in replacement for one `SppScreen` traversal.
+    /// `threads > 1` chunks the stored-node re-check across the worker
+    /// pool (bit-identical output at any worker count — see
+    /// `runtime::parallel`).
     #[allow(clippy::too_many_arguments)]
     pub fn screen<S: PatternSubstrate>(
         &mut self,
@@ -146,6 +155,7 @@ impl ScreenForest {
         theta: &[f64],
         radius: f64,
         feature_test: bool,
+        threads: usize,
         pool: &mut SupportPool,
     ) -> ForestScreenOutcome {
         let g: Vec<f64> = y
@@ -183,50 +193,45 @@ impl ScreenForest {
                 forest_hits: 0,
                 cert_skips: 0,
                 reopened: 0,
+                threads: ThreadStats::sequential(),
             };
         }
 
         // phase 1: decide every reachable stored node from its interned
-        // column (or the drift certificate), collecting ordered events
+        // column (or the drift certificate), collecting ordered events.
+        // Each stored root's walk is independent of its siblings'
+        // (a node reads only its own stamps, and every node is visited
+        // at most once per pass), so the walks are farmed to the worker
+        // pool and their event streams spliced back in root order —
+        // exactly the sequential DFS.  Stamp updates come back as data
+        // and are applied after the join (disjoint per node).
+        let drift_now = self.drift[epoch as usize];
+        let walks: Vec<RootWalk> = {
+            let nodes = &self.nodes;
+            let drift = &self.drift;
+            let roots = &self.roots;
+            let pool_ref: &SupportPool = pool;
+            parallel::map_indexed(threads, roots.len(), |i| {
+                walk_stored(
+                    nodes, drift, roots[i], &g, radius, n, feature_test, drift_now, pool_ref,
+                )
+            })
+        };
+        let tstats = ThreadStats::for_phase(threads, self.roots.len());
         let mut evs: Vec<Ev> = Vec::new();
         let mut reopen_ids: Vec<u32> = Vec::new();
         let mut hits = 0u64;
         let mut cert_skips = 0u64;
-        let drift_now = self.drift[epoch as usize];
-        let mut stack: Vec<u32> = self.roots.iter().rev().copied().collect();
-        while let Some(t) = stack.pop() {
-            hits += 1;
-            let node = &self.nodes[t as usize];
-            let vsqrt = node.v.sqrt();
-            // λ-range certificate: SPPC_now <= u_e + √v·(drift + r)
-            let drifted = drift_now - self.drift[node.epoch as usize];
-            if node.u + vsqrt * (drifted + radius) < 1.0 {
-                cert_skips += 1;
-                continue; // certifiably pruned, column untouched
-            }
-            let (pos, neg) = fold_sums(&g, pool.get(node.support));
-            let u = pos.max(-neg);
-            let sppc = u + radius * vsqrt;
-            let (v, frontier) = (node.v, node.frontier);
-            {
-                let node = &mut self.nodes[t as usize];
+        for mut w in walks {
+            for (id, u) in w.stamps.drain(..) {
+                let node = &mut self.nodes[id as usize];
                 node.u = u;
                 node.epoch = epoch;
             }
-            if sppc < 1.0 {
-                continue; // pruned (Theorem 2); stored subtree skipped
-            }
-            let ub = feature_ub_from(pos, neg, v, n, radius);
-            if !feature_test || ub >= 1.0 {
-                evs.push(Ev::Keep { node: t, sppc, ub });
-            }
-            if frontier {
-                evs.push(Ev::Open(t));
-                reopen_ids.push(t);
-            } else {
-                let node = &self.nodes[t as usize];
-                stack.extend(node.children.iter().rev());
-            }
+            evs.append(&mut w.evs);
+            reopen_ids.append(&mut w.reopen_ids);
+            hits += w.hits;
+            cert_skips += w.cert_skips;
         }
 
         // phase 2: re-enter the substrate below the re-opened frontiers
@@ -280,6 +285,7 @@ impl ScreenForest {
             forest_hits: hits,
             cert_skips,
             reopened,
+            threads: tstats,
         }
     }
 
@@ -335,6 +341,70 @@ impl ScreenForest {
         }
         (guide.done, stats)
     }
+}
+
+/// Outcome of one stored root's re-check walk (phase 1 task).
+#[derive(Default)]
+struct RootWalk {
+    evs: Vec<Ev>,
+    reopen_ids: Vec<u32>,
+    hits: u64,
+    cert_skips: u64,
+    /// `(node, u_t)` stamps for every node whose column was read this
+    /// pass; the caller applies them (with the current epoch) after the
+    /// join — deferral is sound because each node is visited at most
+    /// once per pass and reads only its own previous stamp.
+    stamps: Vec<(u32, f64)>,
+}
+
+/// Walk one stored root's subtree for the pair `(g, radius)`: the
+/// sequential re-check logic, made pure over the shared forest state so
+/// sibling roots can run on pool workers concurrently.  Per-node
+/// verdicts come from the crate's single [`decide`] kernel.
+#[allow(clippy::too_many_arguments)]
+fn walk_stored(
+    nodes: &[ForestNode],
+    drift: &[f64],
+    root: u32,
+    g: &[f64],
+    radius: f64,
+    n: f64,
+    feature_test: bool,
+    drift_now: f64,
+    pool: &SupportPool,
+) -> RootWalk {
+    let mut out = RootWalk::default();
+    let mut stack: Vec<u32> = vec![root];
+    while let Some(t) = stack.pop() {
+        out.hits += 1;
+        let node = &nodes[t as usize];
+        // λ-range certificate: SPPC_now <= u_e + √v·(drift + r)
+        let drifted = drift_now - drift[node.epoch as usize];
+        if node.u + node.v.sqrt() * (drifted + radius) < 1.0 {
+            out.cert_skips += 1;
+            continue; // certifiably pruned, column untouched
+        }
+        let (pos, neg) = fold_sums(g, pool.get(node.support));
+        match decide(pos, neg, node.v, n, radius, feature_test) {
+            NodeDecision::Prune { u } => {
+                // pruned (Theorem 2); stored subtree skipped
+                out.stamps.push((t, u));
+            }
+            NodeDecision::Descend { u, sppc, ub, keep } => {
+                out.stamps.push((t, u));
+                if keep {
+                    out.evs.push(Ev::Keep { node: t, sppc, ub });
+                }
+                if node.frontier {
+                    out.evs.push(Ev::Open(t));
+                    out.reopen_ids.push(t);
+                } else {
+                    stack.extend(node.children.iter().rev());
+                }
+            }
+        }
+    }
+    out
 }
 
 /// Survivors collected under one re-opened frontier (or the sentinel
@@ -393,12 +463,15 @@ impl TreeVisitor for Guide<'_, '_> {
             return Walk::Prune;
         }
 
-        // new node: screen it exactly like SppScreen::visit and record
+        // new node: one verdict from the shared `decide` kernel, then
+        // record it in the forest
         let (pos, neg) = fold_sums(self.g, node.support);
         let v = node.support.len() as f64;
-        let u = pos.max(-neg);
-        let sppc = u + self.radius * v.sqrt();
-        let prune = sppc < 1.0;
+        let dec = decide(pos, neg, v, self.n, self.radius, self.feature_test);
+        let (u, prune) = match dec {
+            NodeDecision::Prune { u } => (u, true),
+            NodeDecision::Descend { u, .. } => (u, false),
+        };
         let sid = self.pool.intern(node.support);
         let id = self.forest.nodes.len() as u32;
         let parent = if depth == 1 {
@@ -423,20 +496,21 @@ impl TreeVisitor for Guide<'_, '_> {
             self.forest.nodes[parent as usize].children.push(id);
         }
         self.parents.push(id);
-        if prune {
-            return Walk::Prune;
+        match dec {
+            NodeDecision::Prune { .. } => Walk::Prune,
+            NodeDecision::Descend { sppc, ub, keep, .. } => {
+                if keep {
+                    let block = self.open.last_mut().expect("a block is always open");
+                    block.out.push(Survivor {
+                        pattern: pat,
+                        support: sid,
+                        sppc,
+                        ub,
+                    });
+                }
+                Walk::Descend
+            }
         }
-        let ub = feature_ub_from(pos, neg, v, self.n, self.radius);
-        if !self.feature_test || ub >= 1.0 {
-            let block = self.open.last_mut().expect("a block is always open");
-            block.out.push(Survivor {
-                pattern: pat,
-                support: sid,
-                sppc,
-                ub,
-            });
-        }
-        Walk::Descend
     }
 }
 
@@ -497,7 +571,7 @@ mod tests {
         ] {
             let mut spool = SupportPool::new();
             let (want, sstats) = scratch(&d.db, &d.y, th, radius, maxpat, &mut spool);
-            let out = forest.screen(&d.db, Task::Regression, &d.y, th, radius, true, &mut fpool);
+            let out = forest.screen(&d.db, Task::Regression, &d.y, th, radius, true, 1, &mut fpool);
             // compare by resolved columns (pools differ across modes)
             assert_eq!(out.survivors.len(), want.len(), "radius {radius}");
             for (f, s) in out.survivors.iter().zip(&want) {
@@ -521,9 +595,9 @@ mod tests {
         let theta: Vec<f64> = d.y.iter().map(|&v| v * 0.01).collect();
         let mut forest = ScreenForest::new(3, 1);
         let mut pool = SupportPool::new();
-        let first = forest.screen(&d.db, Task::Regression, &d.y, &theta, 0.2, true, &mut pool);
+        let first = forest.screen(&d.db, Task::Regression, &d.y, &theta, 0.2, true, 1, &mut pool);
         assert!(first.stats.nodes > 0);
-        let second = forest.screen(&d.db, Task::Regression, &d.y, &theta, 0.2, true, &mut pool);
+        let second = forest.screen(&d.db, Task::Regression, &d.y, &theta, 0.2, true, 1, &mut pool);
         assert_eq!(second.stats.nodes, 0, "no frontier climbed: zero substrate visits");
         assert_eq!(second.reopened, 0);
         assert!(second.forest_hits > 0);
@@ -537,9 +611,9 @@ mod tests {
         let mut forest = ScreenForest::new(3, 1);
         let mut pool = SupportPool::new();
         // big radius first: everything enumerated
-        forest.screen(&d.db, Task::Regression, &d.y, &theta, 10.0, true, &mut pool);
+        forest.screen(&d.db, Task::Regression, &d.y, &theta, 10.0, true, 1, &mut pool);
         // tiny radius, same pair: deep nodes are certifiably dead
-        let out = forest.screen(&d.db, Task::Regression, &d.y, &theta, 1e-6, true, &mut pool);
+        let out = forest.screen(&d.db, Task::Regression, &d.y, &theta, 1e-6, true, 1, &mut pool);
         assert!(out.cert_skips > 0, "drift certificate never fired");
         assert_eq!(out.stats.nodes, 0);
     }
@@ -550,10 +624,41 @@ mod tests {
         let theta: Vec<f64> = d.y.iter().map(|&v| v * 0.01).collect();
         let mut forest = ScreenForest::new(3, 1);
         let mut pool = SupportPool::new();
-        let small = forest.screen(&d.db, Task::Regression, &d.y, &theta, 0.05, true, &mut pool);
-        let big = forest.screen(&d.db, Task::Regression, &d.y, &theta, 5.0, true, &mut pool);
+        let small = forest.screen(&d.db, Task::Regression, &d.y, &theta, 0.05, true, 1, &mut pool);
+        let big = forest.screen(&d.db, Task::Regression, &d.y, &theta, 5.0, true, 1, &mut pool);
         assert!(big.reopened > 0, "no frontier re-opened on a radius jump");
         assert!(big.stats.nodes > 0);
         assert!(big.survivors.len() > small.survivors.len());
+    }
+
+    #[test]
+    fn parallel_recheck_is_bit_identical_to_sequential() {
+        // twin forests fed the same pair sequence, one re-checked
+        // inline and one on 4 workers: every outcome field that is not
+        // wall-clock must match bit-for-bit, including the telemetry
+        let d = generate(&ItemsetSynthConfig::tiny(13, false));
+        let n = d.y.len();
+        let theta: Vec<f64> = (0..n).map(|i| ((i * 5 % 11) as f64 - 5.0) * 0.03).collect();
+        let theta2: Vec<f64> = theta.iter().map(|t| t * 0.7 - 0.002).collect();
+        let task = Task::Regression;
+        let mut sf = ScreenForest::new(3, 1);
+        let mut pf = ScreenForest::new(3, 1);
+        let mut sp = SupportPool::new();
+        let mut pp = SupportPool::new();
+        let mut saw_parallel = false;
+        for (th, radius) in
+            [(&theta, 0.4), (&theta, 0.1), (&theta2, 0.3), (&theta, 2.0), (&theta2, 0.01)]
+        {
+            let a = sf.screen(&d.db, task, &d.y, th, radius, true, 1, &mut sp);
+            let b = pf.screen(&d.db, task, &d.y, th, radius, true, 4, &mut pp);
+            assert_same(&a.survivors, &b.survivors);
+            assert_eq!(a.stats, b.stats, "radius {radius}");
+            assert_eq!(a.forest_hits, b.forest_hits);
+            assert_eq!(a.cert_skips, b.cert_skips);
+            assert_eq!(a.reopened, b.reopened);
+            saw_parallel |= b.threads.workers > 1;
+        }
+        assert!(saw_parallel, "4-worker re-check never actually fanned out");
+        assert_eq!(sp.len(), pp.len());
     }
 }

@@ -69,15 +69,35 @@ impl SupportPool {
     /// column equality.
     pub fn intern(&mut self, col: &[u32]) -> SupportId {
         let hv = col_hash(col);
-        if let Some(ids) = self.index.get(&hv) {
-            for &id in ids {
-                if self.columns[id.index()] == col {
-                    return id;
-                }
-            }
+        match self.find(hv, col) {
+            Some(id) => id,
+            None => self.push_new(hv, col.to_vec()),
         }
+    }
+
+    /// Intern an owned column: identical dedup semantics to
+    /// [`SupportPool::intern`], without re-copying when the column is
+    /// new (the parallel screening splice hands shard buffers straight
+    /// in instead of copying every survivor column a second time).
+    pub fn intern_owned(&mut self, col: Vec<u32>) -> SupportId {
+        let hv = col_hash(&col);
+        match self.find(hv, &col) {
+            Some(id) => id,
+            None => self.push_new(hv, col),
+        }
+    }
+
+    fn find(&self, hv: u64, col: &[u32]) -> Option<SupportId> {
+        self.index
+            .get(&hv)?
+            .iter()
+            .copied()
+            .find(|id| self.columns[id.index()] == col)
+    }
+
+    fn push_new(&mut self, hv: u64, col: Vec<u32>) -> SupportId {
         let id = SupportId(self.columns.len() as u32);
-        self.columns.push(col.to_vec());
+        self.columns.push(col);
         self.index.entry(hv).or_default().push(id);
         id
     }
@@ -110,6 +130,19 @@ mod tests {
         assert_eq!(pool.len(), 2);
         assert_eq!(pool.get(a), &[0, 2, 5]);
         assert_eq!(pool.get(b), &[1]);
+    }
+
+    #[test]
+    fn intern_owned_dedups_against_borrowed_interning() {
+        let mut pool = SupportPool::new();
+        let a = pool.intern(&[0, 2, 5]);
+        // owned interning of equal content returns the same id …
+        assert_eq!(pool.intern_owned(vec![0, 2, 5]), a);
+        // … and a new owned column lands without an extra copy semantic
+        let b = pool.intern_owned(vec![9]);
+        assert_ne!(a, b);
+        assert_eq!(pool.intern(&[9]), b);
+        assert_eq!(pool.len(), 2);
     }
 
     #[test]

@@ -26,7 +26,11 @@
 //! and the working set / restricted solver never clone them.
 
 use super::pool::{SupportId, SupportPool};
-use crate::mining::{Pattern, PatternNode, TreeVisitor, Walk};
+use crate::mining::{
+    Counting, Pattern, PatternNode, PatternSubstrate, SubtreeVisitors, TraverseStats, TreeVisitor,
+    Walk,
+};
+use crate::runtime::parallel::ThreadStats;
 use crate::solver::Task;
 
 /// One surviving pattern: identity, interned support column, and the
@@ -64,6 +68,48 @@ pub(crate) fn fold_sums(g: &[f64], support: &[u32]) -> (f64, f64) {
 pub(crate) fn feature_ub_from(pos: f64, neg: f64, v: f64, n: f64, radius: f64) -> f64 {
     let inner = (v - v * v / n).max(0.0);
     (pos + neg).abs() + radius * inner.sqrt()
+}
+
+/// Outcome of the per-node screening decision (see [`decide`]).  `u_t`
+/// is carried in both arms because the forest stamps it for the λ-range
+/// drift certificate.
+#[derive(Clone, Copy)]
+pub(crate) enum NodeDecision {
+    /// `SPPC(t) < 1`: the whole subtree is certified inactive.
+    Prune { u: f64 },
+    /// Subtree survives; `keep` says whether the node itself enters Â
+    /// (the Lemma-6 test, or the feature test being disabled).
+    Descend { u: f64, sppc: f64, ub: f64, keep: bool },
+}
+
+/// The Theorem-2 / Lemma-6 decision sequence for one node, from its
+/// folded partial sums.  This is the ONE copy of the rule, shared by
+/// the sequential visitor ([`SppScreen`]), the parallel shards, and the
+/// screening forest's builder and re-check walks — so the engines
+/// cannot drift apart: any change here reaches all four, and the
+/// float-op order stays bitwise identical across engines and worker
+/// counts.
+#[inline]
+pub(crate) fn decide(
+    pos: f64,
+    neg: f64,
+    v: f64,
+    n: f64,
+    radius: f64,
+    feature_test: bool,
+) -> NodeDecision {
+    let u = pos.max(-neg);
+    let sppc = u + radius * v.sqrt();
+    if sppc < 1.0 {
+        return NodeDecision::Prune { u };
+    }
+    let ub = feature_ub_from(pos, neg, v, n, radius);
+    NodeDecision::Descend {
+        u,
+        sppc,
+        ub,
+        keep: !feature_test || ub >= 1.0,
+    }
 }
 
 /// The SPP screening visitor.  Collects Â as `survivors`.
@@ -130,22 +176,159 @@ impl TreeVisitor for SppScreen<'_> {
     fn visit(&mut self, node: &PatternNode<'_>) -> Walk {
         let (pos, neg) = fold_sums(&self.g, node.support);
         let v = node.support.len() as f64;
-        let u = pos.max(-neg);
-        let sppc = u + self.radius * v.sqrt();
-        if sppc < 1.0 {
-            return Walk::Prune; // Theorem 2: whole subtree inactive
+        match decide(pos, neg, v, self.n, self.radius, self.feature_test) {
+            // Theorem 2: subtree inactive
+            NodeDecision::Prune { .. } => Walk::Prune,
+            NodeDecision::Descend { sppc, ub, keep, .. } => {
+                if keep {
+                    self.survivors.push(Survivor {
+                        pattern: node.to_pattern(),
+                        support: self.pool.intern(node.support),
+                        sppc,
+                        ub,
+                    });
+                }
+                Walk::Descend
+            }
         }
-        let ub = feature_ub_from(pos, neg, v, self.n, self.radius);
-        if !self.feature_test || ub >= 1.0 {
-            self.survivors.push(Survivor {
-                pattern: node.to_pattern(),
-                support: self.pool.intern(node.support),
-                sppc,
-                ub,
+    }
+}
+
+/// One survivor as collected inside a parallel shard: identity plus the
+/// raw column.  Interning is deferred to the splice, so [`SupportId`]s
+/// are assigned in canonical DFS order regardless of worker count.
+struct RawSurvivor {
+    pattern: Pattern,
+    column: Vec<u32>,
+    sppc: f64,
+    ub: f64,
+}
+
+/// Per-subtree visitor of the parallel screening pass: the same
+/// [`decide`] kernel as [`SppScreen`]'s visitor, with survivors kept as
+/// raw columns and traversal statistics counted locally.
+struct ScreenShard<'a> {
+    g: &'a [f64],
+    radius: f64,
+    n: f64,
+    feature_test: bool,
+    out: Vec<RawSurvivor>,
+    nodes: u64,
+    pruned: u64,
+}
+
+impl TreeVisitor for ScreenShard<'_> {
+    fn visit(&mut self, node: &PatternNode<'_>) -> Walk {
+        self.nodes += 1;
+        let (pos, neg) = fold_sums(self.g, node.support);
+        let v = node.support.len() as f64;
+        match decide(pos, neg, v, self.n, self.radius, self.feature_test) {
+            NodeDecision::Prune { .. } => {
+                self.pruned += 1;
+                Walk::Prune
+            }
+            NodeDecision::Descend { sppc, ub, keep, .. } => {
+                if keep {
+                    self.out.push(RawSurvivor {
+                        pattern: node.to_pattern(),
+                        column: node.support.to_vec(),
+                        sppc,
+                        ub,
+                    });
+                }
+                Walk::Descend
+            }
+        }
+    }
+}
+
+/// Shard factory: the folded weights and the pair's radius, shared
+/// read-only across workers.
+struct ScreenFactory<'a> {
+    g: &'a [f64],
+    radius: f64,
+    n: f64,
+    feature_test: bool,
+}
+
+impl<'a> SubtreeVisitors for ScreenFactory<'a> {
+    type V = ScreenShard<'a>;
+
+    fn visitor(&self, _root: usize) -> ScreenShard<'a> {
+        ScreenShard {
+            g: self.g,
+            radius: self.radius,
+            n: self.n,
+            feature_test: self.feature_test,
+            out: Vec::new(),
+            nodes: 0,
+            pruned: 0,
+        }
+    }
+}
+
+/// One full SPP screening pass over a substrate — the deterministic
+/// parallel engine's scratch-mode entry point.
+///
+/// `threads <= 1` is byte-for-byte the classic sequential [`SppScreen`]
+/// traversal (interning into `pool` as nodes are visited).
+/// `threads > 1` farms depth-1 subtrees to pool workers
+/// ([`PatternSubstrate::traverse_parallel`]) and splices the survivor
+/// blocks back in canonical root order, interning into `pool` in the
+/// same DFS order — so survivors (patterns, [`SupportId`]s, `sppc`/`ub`
+/// values) and traversal statistics are **bit-identical** at any worker
+/// count (pinned by `tests/integration_parallel.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn screen_pass<S: PatternSubstrate>(
+    db: &S,
+    task: Task,
+    y: &[f64],
+    theta: &[f64],
+    radius: f64,
+    feature_test: bool,
+    maxpat: usize,
+    minsup: usize,
+    threads: usize,
+    pool: &mut SupportPool,
+) -> (Vec<Survivor>, TraverseStats, ThreadStats) {
+    if threads <= 1 {
+        let mut screen = SppScreen::new(task, y, theta, radius, pool);
+        screen.feature_test = feature_test;
+        let stats = {
+            let mut counting = Counting::new(&mut screen);
+            db.traverse(maxpat, minsup, &mut counting);
+            counting.stats
+        };
+        return (
+            std::mem::take(&mut screen.survivors),
+            stats,
+            ThreadStats::sequential(),
+        );
+    }
+    let g: Vec<f64> = y.iter().zip(theta).map(|(&yi, &ti)| task.a(yi) * ti).collect();
+    let factory = ScreenFactory {
+        g: &g,
+        radius,
+        n: y.len() as f64,
+        feature_test,
+    };
+    let shards = db.traverse_parallel(maxpat, minsup, threads, &factory);
+    let tstats = ThreadStats::for_phase(threads, shards.len());
+    let mut survivors = Vec::new();
+    let mut stats = TraverseStats::default();
+    for shard in shards {
+        stats.nodes += shard.nodes;
+        stats.pruned += shard.pruned;
+        for raw in shard.out {
+            survivors.push(Survivor {
+                pattern: raw.pattern,
+                support: pool.intern_owned(raw.column),
+                sppc: raw.sppc,
+                ub: raw.ub,
             });
         }
-        Walk::Descend
     }
+    (survivors, stats, tstats)
 }
 
 #[cfg(test)]
@@ -153,7 +336,6 @@ mod tests {
     use super::*;
     use crate::data::Transactions;
     use crate::mining::itemset::ItemsetMiner;
-    use crate::mining::Counting;
 
     fn db() -> Transactions {
         Transactions {
@@ -237,6 +419,58 @@ mod tests {
         ItemsetMiner::new(&db(), 3).traverse(&mut screen);
         drop(screen);
         assert_eq!(pool.len(), before);
+    }
+
+    #[test]
+    fn screen_pass_is_bit_identical_at_any_worker_count() {
+        use crate::data::synth_itemsets::{generate, ItemsetSynthConfig};
+        let d = generate(&ItemsetSynthConfig::tiny(7, false));
+        let theta: Vec<f64> = d.y.iter().map(|&v| v * 0.02).collect();
+        for radius in [0.05, 0.5, 5.0] {
+            let mut pool1 = SupportPool::new();
+            let (s1, st1, t1) = screen_pass(
+                &d.db,
+                Task::Regression,
+                &d.y,
+                &theta,
+                radius,
+                true,
+                3,
+                1,
+                1,
+                &mut pool1,
+            );
+            assert_eq!(t1, ThreadStats::sequential());
+            if radius >= 5.0 {
+                assert!(!s1.is_empty(), "huge radius must keep survivors");
+            }
+            for threads in [2usize, 4, 8] {
+                let mut poolk = SupportPool::new();
+                let (sk, stk, tk) = screen_pass(
+                    &d.db,
+                    Task::Regression,
+                    &d.y,
+                    &theta,
+                    radius,
+                    true,
+                    3,
+                    1,
+                    threads,
+                    &mut poolk,
+                );
+                assert_eq!(st1, stk, "radius={radius} threads={threads}");
+                assert_eq!(s1.len(), sk.len(), "radius={radius} threads={threads}");
+                for (a, b) in s1.iter().zip(&sk) {
+                    assert_eq!(a.pattern, b.pattern);
+                    // same interning order ⇒ the very same dense ids
+                    assert_eq!(a.support, b.support);
+                    assert_eq!(a.sppc.to_bits(), b.sppc.to_bits());
+                    assert_eq!(a.ub.to_bits(), b.ub.to_bits());
+                    assert_eq!(pool1.get(a.support), poolk.get(b.support));
+                }
+                assert_eq!(tk.tasks > 1, tk.workers > 1);
+            }
+        }
     }
 
     #[test]

@@ -122,7 +122,9 @@ fn declared_switches_never_consume_positionals() {
             .split_whitespace()
             .map(String::from),
         &["certify"],
-    );
+        &["viol-tol", "maxpat"],
+    )
+    .unwrap();
     assert!(a.switch("certify"));
     assert!(a.flag("certify").is_none());
     assert_eq!(a.positional, vec!["out.json"]);
@@ -132,7 +134,9 @@ fn declared_switches_never_consume_positionals() {
     let a = Args::parse_with_switches(
         "path --certify false".split_whitespace().map(String::from),
         &["certify"],
-    );
+        &[],
+    )
+    .unwrap();
     assert!(!a.switch("certify"));
 }
 
@@ -141,8 +145,10 @@ fn reuse_and_dynamic_screen_switches_parse_all_forms() {
     // the engine toggles added with the incremental forest, in the
     // declared-switch grammar the spp binary uses
     let switches = &["certify", "no-reuse", "dynamic-screen"];
+    let flags = &["dataset", "maxpat"];
     let sw = |line: &str| {
-        Args::parse_with_switches(line.split_whitespace().map(String::from), switches)
+        Args::parse_with_switches(line.split_whitespace().map(String::from), switches, flags)
+            .unwrap()
     };
     // defaults: reuse on, dynamic screening on
     let a = sw("path --dataset splice");
@@ -161,6 +167,58 @@ fn reuse_and_dynamic_screen_switches_parse_all_forms() {
     let a = sw("path --dynamic-screen out.json");
     assert!(a.switch("dynamic-screen"));
     assert_eq!(a.positional, vec!["out.json"]);
+}
+
+#[test]
+fn unknown_threads_style_flags_error_naming_the_flag() {
+    // regression (PR 4 satellite): a typo'd `--threads`-style flag used
+    // to be silently swallowed by the permissive fallback (or, in the
+    // command slot, to surface as the generic "unknown command '--…'"
+    // message); the declared grammar must reject it and NAME it
+    let switches = &["certify", "no-reuse", "dynamic-screen"];
+    let flags = &["dataset", "maxpat", "threads"];
+    let parse = |line: &str| {
+        Args::parse_with_switches(line.split_whitespace().map(String::from), switches, flags)
+    };
+    let e = parse("path --treads 4").unwrap_err().to_string();
+    assert!(e.contains("--treads"), "error must name the typo'd flag: {e}");
+    let e = parse("path --thread=4").unwrap_err().to_string();
+    assert!(e.contains("--thread"), "{e}");
+    // a declared value flag with no value is also named
+    let e = parse("path --threads").unwrap_err().to_string();
+    assert!(e.contains("--threads") && e.contains("value"), "{e}");
+    // a flag where the command belongs is named, not reported as an
+    // unknown command
+    let e = parse("--threads 4 path").unwrap_err().to_string();
+    assert!(e.contains("--threads") && e.contains("command"), "{e}");
+    // the real spelling round-trips
+    let a = parse("path --threads 4 --dataset splice").unwrap();
+    assert_eq!(a.get_usize("threads", 0).unwrap(), 4);
+    assert_eq!(a.flag("dataset"), Some("splice"));
+}
+
+#[test]
+fn per_command_help_survives_the_strict_grammar() {
+    // regression: `spp path --help` must parse under the declared
+    // grammar (main.rs declares `help` as a switch and dispatches on
+    // it), not die as an unknown flag
+    let switches = &["certify", "dynamic-screen", "help", "no-reuse"];
+    let a = Args::parse_with_switches(
+        "path --help".split_whitespace().map(String::from),
+        switches,
+        &["dataset"],
+    )
+    .unwrap();
+    assert_eq!(a.command, "path");
+    assert!(a.switch("help"));
+    // bare `--help` in the command slot also still works
+    let a = Args::parse_with_switches(
+        std::iter::once("--help".to_string()),
+        switches,
+        &["dataset"],
+    )
+    .unwrap();
+    assert_eq!(a.command, "--help");
 }
 
 #[test]

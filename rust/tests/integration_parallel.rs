@@ -1,0 +1,203 @@
+//! The deterministic parallel engine's equivalence contract, end to
+//! end: a path computed with `--threads 4` must be **bit-identical** to
+//! `--threads 1` — same active sets (patterns and order), same weights
+//! and intercepts to the bit, same certified gaps, same traversed-node
+//! counts and reuse telemetry — on all three shipped substrates, in
+//! both the forest-reuse and from-scratch screening configurations, and
+//! with dynamic screening / certify toggled.  CI's `test-matrix` job
+//! additionally runs the whole suite under `SPP_THREADS ∈ {1, 4}`, so
+//! the auto default is exercised at both worker counts on every push.
+
+use spp::data::sequence::{self, SeqSynthConfig};
+use spp::data::synth_graphs::{self, GraphSynthConfig};
+use spp::data::synth_itemsets::{self, ItemsetSynthConfig};
+use spp::mining::PatternSubstrate;
+use spp::path::cv::cross_validate;
+use spp::path::{compute_path_spp, PathConfig, PathResult};
+use spp::solver::Task;
+
+fn cfg(n_lambdas: usize, maxpat: usize, reuse: bool) -> PathConfig {
+    PathConfig {
+        n_lambdas,
+        lambda_min_ratio: 0.05,
+        maxpat,
+        reuse_forest: reuse,
+        ..PathConfig::default()
+    }
+}
+
+/// Bitwise path equality: everything except wall-clock seconds.
+fn assert_bit_identical(seq: &PathResult, par: &PathResult) {
+    assert_eq!(seq.lambda_max.to_bits(), par.lambda_max.to_bits());
+    assert_eq!(seq.points.len(), par.points.len());
+    for (a, b) in seq.points.iter().zip(&par.points) {
+        assert_eq!(a.lambda.to_bits(), b.lambda.to_bits());
+        assert_eq!(
+            a.active.len(),
+            b.active.len(),
+            "active-set size mismatch at λ={}: {} vs {}",
+            a.lambda,
+            a.active.len(),
+            b.active.len()
+        );
+        for ((pa, wa), (pb, wb)) in a.active.iter().zip(&b.active) {
+            assert_eq!(pa, pb, "active pattern/order mismatch at λ={}", a.lambda);
+            assert_eq!(
+                wa.to_bits(),
+                wb.to_bits(),
+                "weight bits differ at λ={} on {}: {wa} vs {wb}",
+                a.lambda,
+                pa.display()
+            );
+        }
+        assert_eq!(a.b.to_bits(), b.b.to_bits(), "intercept bits at λ={}", a.lambda);
+        assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "gap bits at λ={}", a.lambda);
+        assert!(a.gap <= 2e-6, "uncertified λ={}", a.lambda);
+        // identical tree work and identical engine decisions
+        assert_eq!(a.stats, b.stats, "node counts at λ={}", a.lambda);
+        assert_eq!(a.working_size, b.working_size, "|Â| at λ={}", a.lambda);
+        assert_eq!(a.cd_epochs, b.cd_epochs, "solver epochs at λ={}", a.lambda);
+        assert_eq!(a.reuse, b.reuse, "reuse telemetry at λ={}", a.lambda);
+    }
+}
+
+/// `threads = 1` vs `threads = 4` on one substrate/config; returns the
+/// parallel run for further inspection.
+fn case<S: PatternSubstrate>(db: &S, y: &[f64], task: Task, base: &PathConfig) -> PathResult {
+    let mut seq_cfg = *base;
+    seq_cfg.threads = 1;
+    let mut par_cfg = *base;
+    par_cfg.threads = 4;
+    let seq = compute_path_spp(db, y, task, &seq_cfg);
+    let par = compute_path_spp(db, y, task, &par_cfg);
+    assert_bit_identical(&seq, &par);
+    // the sequential engine must report itself as such
+    assert!(seq.points.iter().all(|p| p.threads.workers == 1));
+    par
+}
+
+#[test]
+fn itemsets_bit_identical_both_tasks_both_engines() {
+    for (seed, classify) in [(71u64, false), (72, true)] {
+        let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(seed, classify));
+        let task = if classify {
+            Task::Classification
+        } else {
+            Task::Regression
+        };
+        for reuse in [true, false] {
+            let par = case(&d.db, &d.y, task, &cfg(10, 3, reuse));
+            // the 4-worker run must actually have fanned out somewhere
+            assert!(
+                par.points.iter().any(|p| p.threads.workers > 1),
+                "reuse={reuse}: no screening phase used more than one worker"
+            );
+        }
+    }
+}
+
+#[test]
+fn graphs_bit_identical_both_engines() {
+    for (seed, classify) in [(73u64, false), (74, true)] {
+        let d = synth_graphs::generate(&GraphSynthConfig::tiny(seed, classify));
+        let task = if classify {
+            Task::Classification
+        } else {
+            Task::Regression
+        };
+        for reuse in [true, false] {
+            case(&d.db, &d.db.y, task, &cfg(10, 3, reuse));
+        }
+    }
+}
+
+#[test]
+fn sequences_bit_identical_both_engines() {
+    for (seed, classify) in [(75u64, false), (76, true)] {
+        let d = sequence::generate(&SeqSynthConfig::tiny(seed, classify));
+        let task = if classify {
+            Task::Classification
+        } else {
+            Task::Regression
+        };
+        for reuse in [true, false] {
+            case(&d.db, &d.y, task, &cfg(10, 3, reuse));
+        }
+    }
+}
+
+#[test]
+fn dynamic_screen_and_certify_configurations_stay_identical() {
+    let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(77, true));
+    // dynamic screening off
+    let mut c = cfg(10, 3, true);
+    c.cd.dynamic_screen = false;
+    case(&d.db, &d.y, Task::Classification, &c);
+    // certify pass on, scratch engine
+    let mut c = cfg(8, 3, false);
+    c.certify = true;
+    case(&d.db, &d.y, Task::Classification, &c);
+    // certify + forest
+    let mut c = cfg(8, 3, true);
+    c.certify = true;
+    case(&d.db, &d.y, Task::Classification, &c);
+}
+
+#[test]
+fn worker_counts_beyond_the_task_count_change_nothing() {
+    let d = sequence::generate(&SeqSynthConfig::tiny(78, false));
+    let base = cfg(8, 2, false);
+    let mut seq_cfg = base;
+    seq_cfg.threads = 1;
+    let seq = compute_path_spp(&d.db, &d.y, Task::Regression, &seq_cfg);
+    for threads in [2usize, 3, 16] {
+        let mut c = base;
+        c.threads = threads;
+        let par = compute_path_spp(&d.db, &d.y, Task::Regression, &c);
+        assert_bit_identical(&seq, &par);
+    }
+}
+
+#[test]
+fn parallel_telemetry_reports_workers_and_tasks() {
+    let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(79, false));
+    let mut c = cfg(8, 3, false);
+    c.threads = 4;
+    let par = compute_path_spp(&d.db, &d.y, Task::Regression, &c);
+    // λ_max point is always sequential
+    assert_eq!(par.points[0].threads.workers, 1);
+    // scratch screening farms one task per root item
+    let busy = par
+        .points
+        .iter()
+        .skip(1)
+        .filter(|p| p.threads.workers > 1)
+        .collect::<Vec<_>>();
+    assert!(!busy.is_empty(), "4-worker scratch path never fanned out");
+    for p in &busy {
+        assert!(p.threads.workers <= 4);
+        assert!(p.threads.tasks >= p.threads.workers);
+    }
+}
+
+#[test]
+fn cross_validation_folds_are_bit_identical_across_worker_counts() {
+    let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(80, false));
+    let mut c1 = cfg(6, 2, true);
+    c1.threads = 1;
+    let mut c4 = c1;
+    c4.threads = 4;
+    let a = cross_validate(&d.db, &d.y, Task::Regression, &c1, 4, 7);
+    let b = cross_validate(&d.db, &d.y, Task::Regression, &c4, 4, 7);
+    assert_eq!(a.best, b.best);
+    assert_eq!(a.points.len(), b.points.len());
+    for (p, q) in a.points.iter().zip(&b.points) {
+        assert_eq!(p.lambda_frac.to_bits(), q.lambda_frac.to_bits());
+        assert_eq!(p.mean_loss.to_bits(), q.mean_loss.to_bits());
+        assert_eq!(p.mean_active.to_bits(), q.mean_active.to_bits());
+        assert_eq!(p.fold_losses.len(), q.fold_losses.len());
+        for (x, y) in p.fold_losses.iter().zip(&q.fold_losses) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

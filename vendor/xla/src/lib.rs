@@ -1,0 +1,205 @@
+//! Vendored **compile-surface stub** of the `xla-rs` PJRT bindings.
+//!
+//! The real backend of `spp::runtime::engine` (feature `pjrt`,
+//! `rust/src/runtime/engine_xla.rs`) is written against the `xla`
+//! bindings crate, which needs a native `xla_extension` install and is
+//! therefore not vendorable.  Without *any* `xla` crate, however, the
+//! real engine cannot even be type-checked, and CI could only compile
+//! the stub twin — the accelerated engine would rot silently.
+//!
+//! This crate is the minimal API subset `engine_xla.rs` uses, with the
+//! same signatures, so `cargo check --features pjrt` type-checks the
+//! real engine offline.  Host-side data plumbing ([`Literal`]
+//! construction, reshape, readback) is implemented for real; everything
+//! that needs the native PJRT runtime fails at the single entry point
+//! ([`PjRtClient::cpu`]) with a descriptive error, preserving the
+//! crate-wide graceful-degradation contract.  To run on the real
+//! backend, point the `xla` dependency in `rust/Cargo.toml` at the
+//! upstream `xla-rs` crate instead of this stub.
+
+use std::fmt;
+
+/// The stub's error type (the real crate's is also opaque + `Debug`).
+pub struct Error(String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+fn need_runtime<T>() -> Result<T, Error> {
+    Err(Error(
+        "vendored xla stub is compile-only: link the real xla-rs crate (and a native \
+         xla_extension) to execute PJRT artifacts — see rust/Cargo.toml"
+            .to_string(),
+    ))
+}
+
+/// An f32 host literal: flat data plus dimensions (scalar = no dims).
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+/// Array shape of a [`Literal`].
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal {
+            data: v.to_vec(),
+            dims: vec![v.len() as i64],
+        }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal {
+            data: vec![v],
+            dims: Vec::new(),
+        }
+    }
+
+    /// Reinterpret the flat data under new dimensions.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let count: i64 = dims.iter().product();
+        if count as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Copy the host data into `dst` (must be large enough).
+    pub fn copy_raw_to(&self, dst: &mut [f32]) -> Result<(), Error> {
+        if dst.len() < self.data.len() {
+            return Err(Error("copy_raw_to: destination too small".to_string()));
+        }
+        dst[..self.data.len()].copy_from_slice(&self.data);
+        Ok(())
+    }
+
+    pub fn to_vec(&self) -> Result<Vec<f32>, Error> {
+        Ok(self.data.clone())
+    }
+
+    /// Unpack a 1-element tuple literal (runtime-produced only).
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        need_runtime()
+    }
+
+    /// Unpack a 3-element tuple literal (runtime-produced only).
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal), Error> {
+        need_runtime()
+    }
+}
+
+/// Parsed HLO module text (runtime-only in the stub).
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<std::path::Path>>(_path: P) -> Result<Self, Error> {
+        need_runtime()
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// A device buffer handle returned by [`PjRtLoadedExecutable::execute`].
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        need_runtime()
+    }
+}
+
+/// A compiled executable (never constructible in the stub).
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed or owned literal arguments; the result is
+    /// indexed `[device][output]`.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        need_runtime()
+    }
+}
+
+/// A PJRT client (the stub's single failure point: [`PjRtClient::cpu`]
+/// always errors, so no downstream runtime call is ever reached).
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        need_runtime()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        need_runtime()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_plumbing_round_trips() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.array_shape().unwrap().dims(), &[2, 2]);
+        let mut buf = vec![0.0f32; 4];
+        m.copy_raw_to(&mut buf).unwrap();
+        assert_eq!(buf, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.to_vec().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        assert!(Literal::scalar(7.0).array_shape().unwrap().dims().is_empty());
+    }
+
+    #[test]
+    fn runtime_entry_points_error_descriptively() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{e:?}").contains("compile-only"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}

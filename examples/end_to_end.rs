@@ -139,10 +139,11 @@ fn main() {
         maxpat: 2,
         ..PathConfig::default()
     };
-    let rust_path = compute_path_spp(&tr.db, &tr.y, Task::Classification, &small_cfg);
+    let rust_path = compute_path_spp(&tr.db, &tr.y, Task::Classification, &small_cfg).unwrap();
     let xla_solver = XlaRestricted::new(&rt);
     let xla_path =
-        compute_path_spp_with(&tr.db, &tr.y, Task::Classification, &small_cfg, &xla_solver);
+        compute_path_spp_with(&tr.db, &tr.y, Task::Classification, &small_cfg, &xla_solver)
+            .unwrap();
     for (a, b) in rust_path.points.iter().zip(&xla_path.points) {
         let l1a: f64 = a.active.iter().map(|(_, w)| w.abs()).sum();
         let l1b: f64 = b.active.iter().map(|(_, w)| w.abs()).sum();

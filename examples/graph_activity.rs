@@ -64,7 +64,7 @@ fn main() {
         maxpat,
         ..PathConfig::default()
     };
-    let path = compute_path_spp(&train, &train.y, Task::Classification, &path_cfg);
+    let path = compute_path_spp(&train, &train.y, Task::Classification, &path_cfg).unwrap();
     println!(
         "SPP path over the gSpan tree: λ_max = {:.3}, {} nodes visited, traverse {:.2}s + solve {:.2}s",
         path.lambda_max,

@@ -39,7 +39,7 @@ fn main() {
         maxpat: 3,
         ..PathConfig::default()
     };
-    let path = compute_path_spp(&train, y_train, Task::Regression, &path_cfg);
+    let path = compute_path_spp(&train, y_train, Task::Regression, &path_cfg).unwrap();
     println!(
         "path computed: λ_max = {:.3}, {} nodes, {:.2}s\n",
         path.lambda_max,

@@ -78,7 +78,7 @@ fn main() {
     );
 
     // 4. Persistence: the substrate codec round-trips sequence terms.
-    let text = chosen.serialize();
+    let text = chosen.serialize().expect("fitted weights are finite");
     let back = SparsePatternModel::parse(&text).expect("parse");
     assert_eq!(back, chosen, "model text format must round-trip");
 

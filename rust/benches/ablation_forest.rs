@@ -39,6 +39,9 @@ fn run(dataset: &str, default_scale: f64, maxpat: usize, default_lambdas: usize)
             // pinned worker count (default 1): timings must not depend
             // on the CI runner's core count
             threads: bench_threads(),
+            // A4 isolates the forest; per-λ screening pinned (the
+            // chunked engine has its own ablation, A5)
+            range_chunk: 1,
             ..PathConfig::default()
         };
         let t0 = Instant::now();
@@ -46,7 +49,8 @@ fn run(dataset: &str, default_scale: f64, maxpat: usize, default_lambdas: usize)
             Dataset::Graphs(g) => compute_path_spp(g, &g.y, task, &cfg),
             Dataset::Itemsets(t) => compute_path_spp(&t.db, &t.y, task, &cfg),
             Dataset::Sequences(s) => compute_path_spp(&s.db, &s.y, task, &cfg),
-        };
+        }
+        .unwrap();
         let wall = t0.elapsed().as_secs_f64();
         let max_gap = path.points.iter().map(|p| p.gap).fold(0.0f64, f64::max);
         assert!(max_gap <= 2e-6, "{dataset}/{variant}: uncertified path");

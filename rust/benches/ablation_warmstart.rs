@@ -93,10 +93,12 @@ fn main() {
         lambda_min_ratio: 0.05,
         maxpat: 3,
         threads: spp::benchkit::bench_threads(),
+        // A2 measures per-λ screening-pair quality; chunking pinned off
+        range_chunk: 1,
         ..PathConfig::default()
     };
     let t0 = Instant::now();
-    let warm = compute_path_spp(db, &t.y, task, &cfg);
+    let warm = compute_path_spp(db, &t.y, task, &cfg).unwrap();
     let warm_secs = t0.elapsed().as_secs_f64();
     println!(
         "ROW fig=A2 variant=warm total={warm_secs:.4} nodes={}",
@@ -112,10 +114,11 @@ fn main() {
             lambda_min_ratio: 0.05,
             maxpat: 3,
             threads: spp::benchkit::bench_threads(),
+            range_chunk: 1,
             ..PathConfig::default()
         };
         let t1 = Instant::now();
-        let p = compute_path_spp(db, &t.y, task, &cfg);
+        let p = compute_path_spp(db, &t.y, task, &cfg).unwrap();
         println!(
             "ROW fig=A2 variant=grid lambdas={n_lambdas} total={:.4} nodes={} \
              nodes_per_lambda={:.0}",
@@ -129,7 +132,7 @@ fn main() {
     let mut ccfg = cfg;
     ccfg.certify = true;
     let t2 = Instant::now();
-    let certified = compute_path_spp(db, &t.y, task, &ccfg);
+    let certified = compute_path_spp(db, &t.y, task, &ccfg).unwrap();
     println!(
         "ROW fig=A2 variant=certify total={:.4} nodes={}",
         t2.elapsed().as_secs_f64(),

@@ -10,6 +10,8 @@
 //!     - `SPP_BENCH_LAMBDAS` — grid size (default 20; paper: 100),
 //!     - `SPP_BENCH_RATIO`   — λ_min/λ_max (default 0.05; paper: 0.01),
 //!     - `SPP_BENCH_THREADS` — engine workers (default 1 — see below),
+//!     - `SPP_BENCH_RANGE_CHUNK` — λs per screening chunk (default 1 =
+//!       per-λ screening; the A5 ablation sweeps this explicitly),
 //!     - `SPP_BENCH_FULL=1`  — paper-exact sweep (full n, 100 λs, 0.01,
 //!       full maxpat set).  Budget hours, not minutes.
 //! * [`bench_fn`] — a criterion-style micro-bench: warmup, fixed sample
@@ -62,6 +64,17 @@ pub fn bench_threads() -> usize {
     env_usize("SPP_BENCH_THREADS").unwrap_or(1).max(1)
 }
 
+/// λs per screening chunk for bench path computations:
+/// `SPP_BENCH_RANGE_CHUNK` if set, else 1 (per-λ screening, the
+/// paper's cadence — keeps ROW lines comparable).  Pinned explicitly
+/// for the same reason as [`bench_threads`]: the engine's auto default
+/// would silently pick up a stray `SPP_RANGE_CHUNK` from the
+/// environment.  Chunked paths are bit-identical either way; only the
+/// traversal accounting moves.
+pub fn bench_range_chunk() -> usize {
+    env_usize("SPP_BENCH_RANGE_CHUNK").unwrap_or(1).max(1)
+}
+
 /// One workload of a figure sweep.
 #[derive(Clone, Copy)]
 pub struct Workload {
@@ -81,9 +94,10 @@ pub fn run_figure(fig: &str, workloads: &[Workload]) {
     let scale_mult = env_f64("SPP_BENCH_SCALE").unwrap_or(1.0);
     let (_, n_lambdas, ratio) = bench_knobs(1.0, 20);
     let threads = bench_threads();
+    let range_chunk = bench_range_chunk();
     println!(
         "# {fig}: lambdas={n_lambdas} ratio={ratio} scale_mult={scale_mult} \
-         threads={threads} full={full}"
+         threads={threads} range_chunk={range_chunk} full={full}"
     );
     println!(
         "# paper setup: 100 lambdas, ratio 0.01, full n — set SPP_BENCH_FULL=1 to match"
@@ -105,6 +119,7 @@ pub fn run_figure(fig: &str, workloads: &[Workload]) {
                         lambda_min_ratio: ratio,
                         maxpat,
                         threads,
+                        range_chunk,
                         ..PathConfig::default()
                     },
                 };

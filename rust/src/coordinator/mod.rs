@@ -71,7 +71,7 @@ fn run_path<S: PatternSubstrate>(
     task: Task,
     method: Method,
     cfg: &PathConfig,
-) -> PathResult {
+) -> crate::Result<PathResult> {
     match method {
         Method::Spp => compute_path_spp(db, y, task, cfg),
         Method::Boosting => compute_path_boosting(db, y, task, cfg),
@@ -91,7 +91,7 @@ pub fn run_experiment(spec: &ExperimentSpec) -> crate::Result<ExperimentResult> 
         Dataset::Graphs(g) => run_path(g, &g.y, info.task, spec.method, &cfg),
         Dataset::Itemsets(t) => run_path(&t.db, &t.y, info.task, spec.method, &cfg),
         Dataset::Sequences(s) => run_path(&s.db, &s.y, info.task, spec.method, &cfg),
-    };
+    }?;
     let wall_secs = wall.elapsed().as_secs_f64();
 
     let max_gap = path

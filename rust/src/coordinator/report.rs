@@ -28,7 +28,7 @@ pub fn result_json(r: &ExperimentResult) -> String {
             per_lambda.push(',');
         }
         per_lambda.push_str(&format!(
-            "{{\"lambda\":{},\"traverse_secs\":{},\"solve_secs\":{},\"nodes\":{},\"working\":{},\"active\":{},\"rounds\":{},\"gap\":{},\"screen_workers\":{},\"screen_tasks\":{}}}",
+            "{{\"lambda\":{},\"traverse_secs\":{},\"solve_secs\":{},\"nodes\":{},\"working\":{},\"active\":{},\"rounds\":{},\"gap\":{},\"screen_workers\":{},\"screen_tasks\":{},\"chunk_mine_nodes\":{},\"chunk_hit\":{}}}",
             num(p.lambda),
             num(p.traverse_secs),
             num(p.solve_secs),
@@ -38,7 +38,9 @@ pub fn result_json(r: &ExperimentResult) -> String {
             p.rounds,
             num(p.gap),
             p.threads.workers,
-            p.threads.tasks
+            p.threads.tasks,
+            p.reuse.chunk_mine_nodes,
+            p.reuse.chunk_hit
         ));
     }
     per_lambda.push(']');
@@ -128,6 +130,8 @@ mod tests {
             "\"per_lambda\":[",
             "\"nodes\":",
             "\"screen_workers\":",
+            "\"chunk_mine_nodes\":",
+            "\"chunk_hit\":",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }

@@ -92,6 +92,16 @@ impl SppEstimator {
         self
     }
 
+    /// λ grid points per screening chunk (range-based SPP, Yoshida et
+    /// al. 2023; see `screening::range`): `1` = one screening pass per
+    /// λ, `C > 1` = one substrate mine per chunk of `C` λs, `0` (the
+    /// default) = auto (`SPP_RANGE_CHUNK` env, else 1).  Any setting
+    /// produces bit-identical fits.
+    pub fn range_chunk(mut self, chunk: usize) -> Self {
+        self.cfg.range_chunk = chunk;
+        self
+    }
+
     /// Restricted-solver settings (tolerance, epoch caps).
     pub fn cd(mut self, cd: CdConfig) -> Self {
         self.cfg.cd = cd;
@@ -126,7 +136,7 @@ impl SppEstimator {
                 "classification targets must be ±1"
             );
         }
-        let path = compute_path_spp(db, y, self.task, &self.cfg);
+        let path = compute_path_spp(db, y, self.task, &self.cfg)?;
         let last = path
             .points
             .last()
@@ -174,14 +184,44 @@ mod tests {
         let est = SppEstimator::new(Task::Regression)
             .reuse_forest(false)
             .dynamic_screening(false)
-            .threads(3);
+            .threads(3)
+            .range_chunk(5);
         assert!(!est.config().reuse_forest);
         assert!(!est.config().cd.dynamic_screen);
         assert_eq!(est.config().threads, 3);
+        assert_eq!(est.config().range_chunk, 5);
         let est = SppEstimator::new(Task::Regression);
         assert!(est.config().reuse_forest, "forest reuse must default on");
         assert!(est.config().cd.dynamic_screen, "dynamic screening must default on");
         assert_eq!(est.config().threads, 0, "threads must default to auto");
+        assert_eq!(est.config().range_chunk, 0, "range chunk must default to auto");
+    }
+
+    #[test]
+    fn chunked_fits_are_bit_identical_to_per_lambda() {
+        let d = generate(&ItemsetSynthConfig::tiny(35, false));
+        let base = SppEstimator::new(Task::Regression).maxpat(2).lambda_grid(8, 0.1);
+        let per_lambda = base.range_chunk(1).fit(&d.db, &d.y).unwrap();
+        let chunked = base.range_chunk(3).fit(&d.db, &d.y).unwrap();
+        assert_eq!(per_lambda.model.terms.len(), chunked.model.terms.len());
+        for ((pa, wa), (pb, wb)) in per_lambda.model.terms.iter().zip(&chunked.model.terms) {
+            assert_eq!(pa, pb);
+            assert_eq!(wa.to_bits(), wb.to_bits());
+        }
+        assert_eq!(per_lambda.model.b.to_bits(), chunked.model.b.to_bits());
+        assert!(chunked.path.total_chunk_mine_nodes() > 0);
+    }
+
+    #[test]
+    fn degenerate_targets_surface_as_fit_errors() {
+        let d = generate(&ItemsetSynthConfig::tiny(36, false));
+        let y = vec![2.0; d.db.len()];
+        let err = SppEstimator::new(Task::Regression)
+            .maxpat(2)
+            .lambda_grid(4, 0.1)
+            .fit(&d.db, &y)
+            .unwrap_err();
+        assert!(err.to_string().contains("λ_max"), "{err}");
     }
 
     #[test]
@@ -205,7 +245,7 @@ mod tests {
             .maxpat(2)
             .lambda_grid(6, 0.1);
         let fit = est.fit(&d.db, &d.y).unwrap();
-        let path = compute_path_spp(&d.db, &d.y, Task::Regression, &est.config());
+        let path = compute_path_spp(&d.db, &d.y, Task::Regression, &est.config()).unwrap();
         assert_eq!(fit.path.points.len(), path.points.len());
         let last = path.points.last().unwrap();
         assert_eq!(fit.model.lambda, last.lambda);

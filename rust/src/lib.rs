@@ -29,12 +29,15 @@
 //!   paper's unified problem form, duality gaps, dual-feasible points.
 //! * [`screening`] — the SPP rule itself, per-feature gap-safe tests,
 //!   the `lambda_max` tree search, the [`screening::SupportPool`]
-//!   column-interning arena, and the incremental screening forest that
-//!   reuses the pruned tree across the λ path.
+//!   column-interning arena, the incremental screening forest that
+//!   reuses the pruned tree across the λ path, and the range-based
+//!   (interval) SPP bound behind the chunked path engine.
 //! * [`boosting`] — the cutting-plane baseline the paper compares with.
 //! * [`path`] — Algorithm 1: the warm-started regularization path
 //!   (incremental screening-forest engine by default, from-scratch
-//!   under `--no-reuse`), and K-fold cross-validation over it.
+//!   under `--no-reuse`; chunked range-based screening under
+//!   `--range-chunk C`), and K-fold cross-validation over it
+//!   (stratified folds for classification).
 //! * [`estimator`] — [`SppEstimator`], the sklearn-style builder facade
 //!   over the path machinery.
 //! * [`runtime`] — PJRT execution of the AOT JAX/Pallas artifacts

@@ -5,7 +5,11 @@
 //!                [--lambdas 100] [--min-ratio 0.01] [--scale 1.0]
 //!                [--certify] [--no-reuse] [--dynamic-screen=false]
 //!                [--threads N]          # 0 = auto; 1 = sequential
+//!                [--range-chunk C]      # 0 = auto; 1 = per-λ screening
 //!                [--engine rust|xla] [--json out.json]
+//! spp cv         --dataset splice --maxpat 3 [--folds 5] [--seed 13]
+//!                [--lambdas 100] [--min-ratio 0.01] [--scale 1.0]
+//!                [--range-chunk C] [--threads N]
 //! spp fit        --dataset synth-seq --maxpat 3 --model out.spp
 //!                [--lambdas 100] [--min-ratio 0.01] [--scale 1.0]
 //!                [--lambda-index K]     # default: smallest λ
@@ -44,6 +48,7 @@ const FLAGS: &[&str] = &[
     "artifacts",
     "dataset",
     "engine",
+    "folds",
     "json",
     "k-add",
     "lambda-index",
@@ -53,7 +58,9 @@ const FLAGS: &[&str] = &[
     "min-ratio",
     "minsup",
     "model",
+    "range-chunk",
     "scale",
+    "seed",
     "threads",
     "top",
 ];
@@ -79,6 +86,7 @@ fn dispatch(args: &cli::Args) -> spp::Result<()> {
     }
     match args.command.as_str() {
         "path" => cmd_path(args),
+        "cv" => cmd_cv(args),
         "fit" => cmd_fit(args),
         "predict" => cmd_predict(args),
         "lambda-max" => cmd_lambda_max(args),
@@ -98,6 +106,7 @@ spp — Safe Pattern Pruning (KDD'16 reproduction)
 
 commands:
   path        compute a regularization path (SPP and/or boosting)
+  cv          k-fold cross-validation over the path (model selection)
   fit         fit a sparse pattern model (SPP path) and save it
   predict     load a saved model and predict a dataset
   lambda-max  compute the paper's §3.4.1 lambda_max by bounded search
@@ -127,6 +136,10 @@ fn path_config(args: &cli::Args) -> spp::Result<PathConfig> {
         // auto (SPP_THREADS env, else available parallelism), 1 = the
         // sequential engine — all bit-identical
         threads: args.get_usize("threads", 0)?,
+        // `--range-chunk C` drives range-based SPP: one screening mine
+        // per chunk of C λs; 0 = auto (SPP_RANGE_CHUNK env, else 1 =
+        // per-λ screening) — all bit-identical
+        range_chunk: args.get_usize("range-chunk", 0)?,
         k_add: args.get_usize("k-add", 1)?,
         ..PathConfig::default()
     })
@@ -174,6 +187,64 @@ fn cmd_path(args: &cli::Args) -> spp::Result<()> {
     Ok(())
 }
 
+/// K-fold cross-validation over the SPP path: the paper's §3.4.1
+/// model-selection workflow, served by the chunked (range-based SPP)
+/// engine — one database search per grid chunk, per fold.
+fn cmd_cv(args: &cli::Args) -> spp::Result<()> {
+    use spp::path::cv::cross_validate;
+
+    let dataset = args.get_or("dataset", "splice").to_string();
+    let scale = args.get_f64("scale", 1.0)?;
+    let folds = args.get_usize("folds", 5)?;
+    let seed = args.get_usize("seed", 13)? as u64;
+    let cfg = path_config(args)?;
+    let info = registry::info(&dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
+    let data = registry::lookup(&dataset, scale)?;
+    anyhow::ensure!(
+        folds >= 2 && folds <= data.n_records(),
+        "--folds must be between 2 and the record count; got {folds} folds for {} records",
+        data.n_records()
+    );
+    let t0 = std::time::Instant::now();
+    let cv = match &data {
+        Dataset::Graphs(g) => cross_validate(g, &g.y, info.task, &cfg, folds, seed)?,
+        Dataset::Itemsets(t) => cross_validate(&t.db, &t.y, info.task, &cfg, folds, seed)?,
+        Dataset::Sequences(s) => cross_validate(&s.db, &s.y, info.task, &cfg, folds, seed)?,
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    let metric = match info.task {
+        Task::Regression => "mse",
+        Task::Classification => "error",
+    };
+    println!(
+        "cv {dataset}: n={} task={:?} folds={folds} lambdas={} chunk={} ({secs:.2}s)",
+        data.n_records(),
+        info.task,
+        cfg.n_lambdas,
+        spp::screening::range::resolve_range_chunk(cfg.range_chunk),
+    );
+    println!("{:<6} {:>12} {:>12} {:>12}", "idx", "lambda/lmax", metric, "mean_active");
+    for (i, p) in cv.points.iter().enumerate() {
+        println!(
+            "{:<6} {:>12.6} {:>12.6} {:>12.1}{}",
+            i,
+            p.lambda_frac,
+            p.mean_loss,
+            p.mean_active,
+            if i == cv.best { "   <- best" } else { "" }
+        );
+    }
+    let best = cv.best_point();
+    println!(
+        "best: index {} (λ/λ_max = {:.6}), mean {metric} {:.6} over {folds} folds",
+        cv.best,
+        best.lambda_frac,
+        best.mean_loss
+    );
+    Ok(())
+}
+
 /// Fit via the `SppEstimator` facade and persist the chosen model.
 fn cmd_fit(args: &cli::Args) -> spp::Result<()> {
     let dataset = args.get_or("dataset", "splice");
@@ -192,6 +263,7 @@ fn cmd_fit(args: &cli::Args) -> spp::Result<()> {
         .certify(cfg.certify)
         .reuse_forest(cfg.reuse_forest)
         .threads(cfg.threads)
+        .range_chunk(cfg.range_chunk)
         .cd(cfg.cd);
     let fit = match &data {
         Dataset::Graphs(g) => est.fit(g, &g.y)?,
@@ -205,7 +277,7 @@ fn cmd_fit(args: &cli::Args) -> spp::Result<()> {
         fit.path.points.len()
     );
     let model = fit.model_at(idx);
-    std::fs::write(out, model.serialize())?;
+    std::fs::write(out, model.serialize()?)?;
     println!(
         "fit {dataset}: n={} task={:?} λ_max={:.6} path={} λs, {} tree nodes",
         data.n_records(),
@@ -309,12 +381,12 @@ fn run_path_xla(spec: &ExperimentSpec) -> spp::Result<spp::coordinator::Experime
     let solver = XlaRestricted::new(&rt);
     let t = std::time::Instant::now();
     let path = match &data {
-        Dataset::Graphs(g) => compute_path_spp_with(g, &g.y, info.task, &spec.cfg, &solver),
+        Dataset::Graphs(g) => compute_path_spp_with(g, &g.y, info.task, &spec.cfg, &solver)?,
         Dataset::Itemsets(tr) => {
-            compute_path_spp_with(&tr.db, &tr.y, info.task, &spec.cfg, &solver)
+            compute_path_spp_with(&tr.db, &tr.y, info.task, &spec.cfg, &solver)?
         }
         Dataset::Sequences(s) => {
-            compute_path_spp_with(&s.db, &s.y, info.task, &spec.cfg, &solver)
+            compute_path_spp_with(&s.db, &s.y, info.task, &spec.cfg, &solver)?
         }
     };
     eprintln!(

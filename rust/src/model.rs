@@ -106,7 +106,21 @@ impl SparsePatternModel {
     }
 
     /// Serialize to the line format parsed by [`SparsePatternModel::parse`].
-    pub fn serialize(&self) -> String {
+    ///
+    /// Errors with a `non-finite model` message if any weight, the
+    /// intercept or λ is NaN/±inf: `{:.17e}` happily emits `NaN`, which
+    /// would persist a model file [`SparsePatternModel::parse`] (and
+    /// any sane consumer) rejects — `spp fit` must not write what
+    /// `spp predict` cannot load.  Non-finite values here always mean
+    /// an upstream numerical failure, so refusing loudly is the only
+    /// safe behaviour.
+    pub fn serialize(&self) -> crate::Result<String> {
+        anyhow::ensure!(
+            self.lambda.is_finite() && self.b.is_finite(),
+            "non-finite model: lambda={} b={} — refusing to serialize",
+            self.lambda,
+            self.b
+        );
         let mut out = String::new();
         out.push_str(&format!(
             "spp-model v1 task={} lambda={:.17e} b={:.17e}\n",
@@ -118,6 +132,11 @@ impl SparsePatternModel {
             self.b
         ));
         for (pat, w) in &self.terms {
+            anyhow::ensure!(
+                w.is_finite(),
+                "non-finite model: weight {w} on pattern {} — refusing to serialize",
+                pat.display()
+            );
             out.push_str(&format!(
                 "{} {:.17e} {}\n",
                 pat.kind_tag(),
@@ -125,7 +144,7 @@ impl SparsePatternModel {
                 pat.encode_body()
             ));
         }
-        out
+        Ok(out)
     }
 
     /// Parse the [`SparsePatternModel::serialize`] format.
@@ -147,8 +166,8 @@ impl SparsePatternModel {
                         other => anyhow::bail!("unknown task '{other}'"),
                     })
                 }
-                "lambda" => lambda = Some(v.parse::<f64>()?),
-                "b" => b = Some(v.parse::<f64>()?),
+                "lambda" => lambda = Some(parse_finite(v, "lambda")?),
+                "b" => b = Some(parse_finite(v, "b")?),
                 other => anyhow::bail!("unknown header key '{other}'"),
             }
         }
@@ -163,10 +182,11 @@ impl SparsePatternModel {
             }
             let mut f = line.splitn(3, ' ');
             let kind = f.next().unwrap();
-            let w: f64 = f
-                .next()
-                .ok_or_else(|| anyhow::anyhow!("line {}: missing weight", lineno + 2))?
-                .parse()?;
+            let w: f64 = match f.next() {
+                Some(v) => parse_finite(v, "weight")
+                    .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 2))?,
+                None => anyhow::bail!("line {}: missing weight", lineno + 2),
+            };
             let body = f
                 .next()
                 .ok_or_else(|| anyhow::anyhow!("line {}: missing pattern", lineno + 2))?;
@@ -181,6 +201,16 @@ impl SparsePatternModel {
             terms,
         })
     }
+}
+
+/// Parse an f64 that must be finite (Rust's `FromStr` happily accepts
+/// `NaN`/`inf`, which are never legitimate in a persisted model).
+fn parse_finite(v: &str, what: &str) -> crate::Result<f64> {
+    let x: f64 = v
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad {what} '{v}': {e}"))?;
+    anyhow::ensure!(x.is_finite(), "non-finite {what} '{v}'");
+    Ok(x)
 }
 
 #[cfg(test)]
@@ -265,7 +295,7 @@ mod tests {
                 (Pattern::Itemset(vec![2]), -0.75),
             ],
         };
-        let back = SparsePatternModel::parse(&m.serialize()).unwrap();
+        let back = SparsePatternModel::parse(&m.serialize().unwrap()).unwrap();
         assert_eq!(m, back);
         // predictions: row {1,4,9} -> b + 1.5 = 1.0 -> +1
         assert_eq!(back.score_itemset(&[1, 4, 9]), 1.0);
@@ -292,7 +322,7 @@ mod tests {
             b: 0.25,
             terms: vec![(Pattern::Subgraph(code), 2.0)],
         };
-        let back = SparsePatternModel::parse(&m.serialize()).unwrap();
+        let back = SparsePatternModel::parse(&m.serialize().unwrap()).unwrap();
         assert_eq!(m, back);
         let has = path(&[0, 1], &[2]);
         let hasnt = path(&[0, 1], &[0]);
@@ -310,7 +340,7 @@ mod tests {
                 (Pattern::Sequence(vec![2]), -0.5),
             ],
         };
-        let text = m.serialize();
+        let text = m.serialize().unwrap();
         assert!(text.contains("\nS "), "sequence terms use the S tag:\n{text}");
         let back = SparsePatternModel::parse(&text).unwrap();
         assert_eq!(m, back);
@@ -336,10 +366,53 @@ mod tests {
                 (Pattern::Sequence(vec![1]), 2.0),
             ],
         };
-        let back = SparsePatternModel::parse(&m.serialize()).unwrap();
+        let back = SparsePatternModel::parse(&m.serialize().unwrap()).unwrap();
         assert_eq!(m, back);
         assert_eq!(back.score_itemset(&[1]), 1.0);
         assert_eq!(back.score_sequence(&[1]), 2.0);
+    }
+
+    #[test]
+    fn non_finite_models_refuse_to_serialize_and_parse_rejects_them() {
+        // the fit→persist→predict round trip must fail CLOSED: a model
+        // with a NaN/inf weight (an upstream numerical failure) is
+        // rejected at serialize time with a named error, and a file
+        // that somehow holds one is rejected at parse time too
+        let finite = SparsePatternModel {
+            task: Task::Regression,
+            lambda: 0.5,
+            b: 0.25,
+            terms: vec![(Pattern::Itemset(vec![1, 2]), -0.75)],
+        };
+        // the finite model round-trips bit-exactly
+        let back = SparsePatternModel::parse(&finite.serialize().unwrap()).unwrap();
+        assert_eq!(finite, back);
+        for bad_w in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let mut m = finite.clone();
+            m.terms[0].1 = bad_w;
+            let err = m.serialize().unwrap_err();
+            assert!(
+                err.to_string().contains("non-finite model"),
+                "weight {bad_w}: {err}"
+            );
+        }
+        let mut m = finite.clone();
+        m.b = f64::NAN;
+        assert!(m.serialize().unwrap_err().to_string().contains("non-finite model"));
+        m.b = 0.25;
+        m.lambda = f64::INFINITY;
+        assert!(m.serialize().is_err());
+        // parse-side rejection of hand-written non-finite values (Rust's
+        // f64 FromStr accepts "NaN" and "inf", so this needs the guard)
+        for text in [
+            "spp-model v1 task=regression lambda=1 b=0\nI NaN 1,2\n",
+            "spp-model v1 task=regression lambda=1 b=0\nI inf 1,2\n",
+            "spp-model v1 task=regression lambda=NaN b=0\n",
+            "spp-model v1 task=regression lambda=1 b=inf\n",
+        ] {
+            let err = SparsePatternModel::parse(text).unwrap_err();
+            assert!(err.to_string().contains("non-finite"), "{text:?}: {err}");
+        }
     }
 
     #[test]

@@ -10,6 +10,27 @@
 //! `matches` (via [`crate::model::SparsePatternModel`]).  The λ
 //! minimizing the mean validation loss wins.
 //!
+//! Each fold runs the **chunked engine** of
+//! [`crate::path::compute_path_spp`]: with `PathConfig::range_chunk = C`
+//! the fold's grid is served by one range-based screening mine per
+//! chunk of `C` λs (Yoshida et al. 2023; see `screening::range`), so a
+//! k-fold CV does `folds × ⌈grid/C⌉` database searches instead of
+//! `folds × grid` — the first workload where a single search serves a
+//! whole stretch of the grid, per fold.  Chunked and per-λ folds are
+//! bit-identical (pinned by `tests/integration_range.rs`), so the best
+//! λ and every fold loss are engine-independent.
+//!
+//! **Fold assignment is stratified for classification**: a plain
+//! shuffle can hand an imbalanced dataset a single-class training split
+//! (the minority class all lands in one validation fold), which makes
+//! that fold's λ_max collapse to 0 — `hinge_intercept` returns ±1 and
+//! every slack is 0.  [`fold_assignment_stratified`] shuffles within
+//! each class and deals members round-robin, so every fold's training
+//! split keeps both classes whenever the minority class has ≥ 2
+//! members.  Degenerate folds that still arise (all-constant regression
+//! targets, a minority class of size 1) surface as an `Err` naming the
+//! fold instead of silently producing an all-zero λ grid.
+//!
 //! Folds are independent path solves, so they run on the
 //! `runtime::parallel` worker pool (`PathConfig::threads`; the
 //! substrate is shared read-only, hence the `Sync` bound).  Per-fold
@@ -18,6 +39,8 @@
 //! deliberately per-fold: a support column indexes *training-split*
 //! record ids, which differ fold to fold — interning across folds would
 //! alias unrelated columns.
+
+use anyhow::Context as _;
 
 use crate::data::graph::GraphDatabase;
 use crate::data::Transactions;
@@ -52,7 +75,9 @@ impl CvResult {
     }
 }
 
-/// Shuffled fold assignment: record i -> fold id in `[0, k)`.
+/// Shuffled fold assignment: record i -> fold id in `[0, k)`.  Used for
+/// regression; classification goes through
+/// [`fold_assignment_stratified`].
 pub fn fold_assignment(n: usize, k: usize, seed: u64) -> Vec<usize> {
     assert!(k >= 2 && n >= k);
     let mut idx: Vec<usize> = (0..n).collect();
@@ -60,6 +85,36 @@ pub fn fold_assignment(n: usize, k: usize, seed: u64) -> Vec<usize> {
     let mut fold = vec![0usize; n];
     for (rank, &i) in idx.iter().enumerate() {
         fold[i] = rank % k;
+    }
+    fold
+}
+
+/// Stratified fold assignment for ±1 labels: shuffle each class
+/// separately (one seeded stream, classes in a fixed order, so the
+/// split is deterministic) and deal its members round-robin across the
+/// k folds.  Every fold then holds `⌊c/k⌋` or `⌈c/k⌉` members of a
+/// class of size `c` — so each *training* split keeps at least
+/// `c − ⌈c/k⌉ ≥ 1` minority members whenever `c ≥ 2`, which is what
+/// keeps a fold's `λ_max` from collapsing to 0 on imbalanced data (see
+/// module docs).
+///
+/// The deal *continues* across classes (cumulative offset instead of
+/// restarting at fold 0), so overall fold sizes stay within ±1 exactly
+/// like [`fold_assignment`]'s — no fold can come out empty even when
+/// every class has fewer than `k` members.
+pub fn fold_assignment_stratified(y: &[f64], k: usize, seed: u64) -> Vec<usize> {
+    let n = y.len();
+    assert!(k >= 2 && n >= k);
+    let mut rng = SplitMix64::new(seed);
+    let mut fold = vec![0usize; n];
+    let mut dealt = 0usize;
+    for class_positive in [true, false] {
+        let mut idx: Vec<usize> = (0..n).filter(|&i| (y[i] > 0.0) == class_positive).collect();
+        rng.shuffle(&mut idx);
+        for (rank, &i) in idx.iter().enumerate() {
+            fold[i] = (dealt + rank) % k;
+        }
+        dealt += idx.len();
     }
     fold
 }
@@ -81,7 +136,9 @@ fn loss(task: Task, pred: f64, y: f64) -> f64 {
 ///
 /// λ values are aligned across folds *by grid position* (each fold has
 /// its own λ_max, so absolute λ differs; the fraction `λ/λ_max` is the
-/// shared coordinate, as is standard for path-based CV).
+/// shared coordinate, as is standard for path-based CV).  Errors when a
+/// fold's training split is degenerate (constant target / single class
+/// — see the module docs), naming the fold.
 pub fn cross_validate<S: PatternSubstrate + Sync>(
     db: &S,
     y: &[f64],
@@ -89,10 +146,13 @@ pub fn cross_validate<S: PatternSubstrate + Sync>(
     cfg: &PathConfig,
     k: usize,
     seed: u64,
-) -> CvResult {
+) -> crate::Result<CvResult> {
     let n = db.n_records();
     assert_eq!(n, y.len());
-    let folds = fold_assignment(n, k, seed);
+    let folds = match task {
+        Task::Classification => fold_assignment_stratified(y, k, seed),
+        Task::Regression => fold_assignment(n, k, seed),
+    };
     let threads = crate::runtime::parallel::resolve_threads(cfg.threads);
     // When the folds themselves fan out they already saturate the
     // worker budget, so the path solves inside them are pinned to one
@@ -104,16 +164,17 @@ pub fn cross_validate<S: PatternSubstrate + Sync>(
     fold_cfg.threads = if fold_workers > 1 { 1 } else { threads };
     let fold_cfg = &fold_cfg;
 
-    // one task per fold: full path on the training split, then per-λ
-    // validation losses + active counts (reduced in fold order below,
-    // so the summary is independent of worker count)
-    let per_fold: Vec<(Vec<f64>, Vec<f64>)> =
+    // one task per fold: full (chunked) path on the training split,
+    // then per-λ validation losses + active counts (reduced in fold
+    // order below, so the summary is independent of worker count)
+    let per_fold: Vec<crate::Result<(Vec<f64>, Vec<f64>)>> =
         crate::runtime::parallel::map_indexed(threads, k, |f| {
             let train_idx: Vec<usize> = (0..n).filter(|&i| folds[i] != f).collect();
             let val_idx: Vec<usize> = (0..n).filter(|&i| folds[i] == f).collect();
             let train = db.select(&train_idx);
             let y_train: Vec<f64> = train_idx.iter().map(|&i| y[i]).collect();
-            let path = compute_path_spp(&train, &y_train, task, fold_cfg);
+            let path = compute_path_spp(&train, &y_train, task, fold_cfg)
+                .with_context(|| format!("CV fold {f} ({} training records)", train_idx.len()))?;
             let mut losses = vec![0.0f64; cfg.n_lambdas];
             let mut active = vec![0.0f64; cfg.n_lambdas];
             for (li, p) in path.points.iter().enumerate() {
@@ -125,19 +186,20 @@ pub fn cross_validate<S: PatternSubstrate + Sync>(
                 losses[li] = l / val_idx.len().max(1) as f64;
                 active[li] = p.active.len() as f64;
             }
-            (losses, active)
+            Ok((losses, active))
         });
 
     let mut fold_losses = vec![vec![0.0f64; k]; cfg.n_lambdas];
     let mut actives = vec![0.0f64; cfg.n_lambdas];
-    for (f, (losses, active)) in per_fold.into_iter().enumerate() {
+    for (f, result) in per_fold.into_iter().enumerate() {
+        let (losses, active) = result?;
         for li in 0..cfg.n_lambdas {
             fold_losses[li][f] = losses[li];
             actives[li] += active[li] / k as f64;
         }
     }
 
-    finish(cfg, fold_losses, actives)
+    Ok(finish(cfg, fold_losses, actives))
 }
 
 /// K-fold CV for item-set databases (thin wrapper over
@@ -149,7 +211,7 @@ pub fn cross_validate_itemsets(
     cfg: &PathConfig,
     k: usize,
     seed: u64,
-) -> CvResult {
+) -> crate::Result<CvResult> {
     cross_validate(db, y, task, cfg, k, seed)
 }
 
@@ -161,7 +223,7 @@ pub fn cross_validate_graphs(
     cfg: &PathConfig,
     k: usize,
     seed: u64,
-) -> CvResult {
+) -> crate::Result<CvResult> {
     cross_validate(db, &db.y, task, cfg, k, seed)
 }
 
@@ -206,6 +268,99 @@ mod tests {
     }
 
     #[test]
+    fn stratified_folds_spread_both_classes() {
+        // 9:1 imbalance, the regression case of the bug report: a plain
+        // shuffle can strand the minority class in one fold; the
+        // stratified split must keep every training split two-class
+        let n = 60;
+        let y: Vec<f64> = (0..n).map(|i| if i % 10 == 0 { -1.0 } else { 1.0 }).collect();
+        let k = 4;
+        for seed in 0..20u64 {
+            let folds = fold_assignment_stratified(&y, k, seed);
+            assert_eq!(folds.len(), n);
+            for f in 0..k {
+                let train_neg = (0..n).filter(|&i| folds[i] != f && y[i] < 0.0).count();
+                let train_pos = (0..n).filter(|&i| folds[i] != f && y[i] > 0.0).count();
+                assert!(
+                    train_neg >= 1 && train_pos >= 1,
+                    "seed {seed} fold {f}: single-class training split \
+                     ({train_pos} pos / {train_neg} neg)"
+                );
+                // per-class round-robin ⇒ per-fold class counts within ±1
+                let fold_neg = (0..n).filter(|&i| folds[i] == f && y[i] < 0.0).count();
+                assert!((1..=2).contains(&fold_neg), "seed {seed} fold {f}: {fold_neg} neg");
+            }
+        }
+        // deterministic in the seed
+        assert_eq!(fold_assignment_stratified(&y, k, 7), fold_assignment_stratified(&y, k, 7));
+        assert_ne!(fold_assignment_stratified(&y, k, 7), fold_assignment_stratified(&y, k, 8));
+    }
+
+    #[test]
+    fn stratified_folds_never_leave_a_fold_empty() {
+        // both classes smaller than k: the continuous (offset) deal
+        // must still populate every fold — a per-class restart at fold
+        // 0 would leave fold 3 empty here, and its "validation loss"
+        // would be a fabricated 0.0
+        let y = vec![1.0, 1.0, 1.0, -1.0, -1.0, -1.0];
+        for seed in 0..10u64 {
+            let folds = fold_assignment_stratified(&y, 4, seed);
+            let mut counts = vec![0usize; 4];
+            for &f in &folds {
+                counts[f] += 1;
+            }
+            assert!(counts.iter().all(|&c| c >= 1), "seed {seed}: empty fold in {counts:?}");
+            // overall balance matches the plain shuffle's ±1 guarantee
+            assert!(counts.iter().all(|&c| c <= 2), "seed {seed}: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn imbalanced_classification_cv_runs_clean() {
+        // the end-to-end regression test for the stratification bugfix:
+        // 9:1 labels, k = 4 — every fold must produce a real path (no
+        // λ_max collapse) and probability-shaped losses
+        let d = generate(&ItemsetSynthConfig::tiny(92, true));
+        let y: Vec<f64> = (0..d.y.len())
+            .map(|i| if i % 10 == 0 { -1.0 } else { 1.0 })
+            .collect();
+        let cfg = PathConfig {
+            n_lambdas: 5,
+            lambda_min_ratio: 0.1,
+            maxpat: 2,
+            ..PathConfig::default()
+        };
+        let cv = cross_validate_itemsets(&d.db, &y, Task::Classification, &cfg, 4, 11).unwrap();
+        for p in &cv.points {
+            assert_eq!(p.fold_losses.len(), 4);
+            for &l in &p.fold_losses {
+                assert!((0.0..=1.0).contains(&l), "loss {l} is not an error rate");
+            }
+        }
+        // the all-positive predictor gets ≤ 10% error, so the winner
+        // must too — a collapsed fold would have dragged the mean past it
+        assert!(cv.best_point().mean_loss <= 0.2, "{}", cv.best_point().mean_loss);
+    }
+
+    #[test]
+    fn degenerate_fold_errors_name_the_fold() {
+        // every target identical: each fold's training split is
+        // constant, λ_max = 0, and CV must surface a clear error
+        let d = generate(&ItemsetSynthConfig::tiny(93, false));
+        let y = vec![1.5; d.y.len()];
+        let cfg = PathConfig {
+            n_lambdas: 4,
+            lambda_min_ratio: 0.2,
+            maxpat: 2,
+            ..PathConfig::default()
+        };
+        let err = cross_validate_itemsets(&d.db, &y, Task::Regression, &cfg, 3, 5).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("CV fold"), "{msg}");
+        assert!(msg.contains("λ_max"), "{msg}");
+    }
+
+    #[test]
     fn cv_selects_an_interior_lambda_on_planted_data() {
         let mut c = ItemsetSynthConfig::tiny(88, false);
         c.n = 160;
@@ -218,7 +373,7 @@ mod tests {
             maxpat: 2,
             ..PathConfig::default()
         };
-        let cv = cross_validate_itemsets(&d.db, &d.y, Task::Regression, &cfg, 4, 1);
+        let cv = cross_validate_itemsets(&d.db, &d.y, Task::Regression, &cfg, 4, 1).unwrap();
         assert_eq!(cv.points.len(), 10);
         // λ_max (index 0) predicts the mean only — it must not win
         assert_ne!(cv.best, 0, "CV picked the intercept-only model");
@@ -240,7 +395,7 @@ mod tests {
             maxpat: 2,
             ..PathConfig::default()
         };
-        let cv = cross_validate_itemsets(&d.db, &d.y, Task::Classification, &cfg, 3, 2);
+        let cv = cross_validate_itemsets(&d.db, &d.y, Task::Classification, &cfg, 3, 2).unwrap();
         for p in &cv.points {
             assert!((0.0..=1.0).contains(&p.mean_loss));
             assert_eq!(p.fold_losses.len(), 3);
@@ -259,7 +414,7 @@ mod tests {
             maxpat: 2,
             ..PathConfig::default()
         };
-        let cv = cross_validate_graphs(&d.db, Task::Classification, &cfg, 4, 3);
+        let cv = cross_validate_graphs(&d.db, Task::Classification, &cfg, 4, 3).unwrap();
         assert_eq!(cv.points.len(), 4);
         assert!(cv.best_point().mean_loss <= cv.points[0].mean_loss + 1e-12);
     }
@@ -274,7 +429,7 @@ mod tests {
             maxpat: 2,
             ..PathConfig::default()
         };
-        let cv = cross_validate(&d.db, &d.y, Task::Regression, &cfg, 4, 5);
+        let cv = cross_validate(&d.db, &d.y, Task::Regression, &cfg, 4, 5).unwrap();
         assert_eq!(cv.points.len(), 4);
         assert!(cv.best_point().mean_loss <= cv.points[0].mean_loss + 1e-12);
     }

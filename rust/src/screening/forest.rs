@@ -37,7 +37,12 @@
 //! order, as a from-scratch [`SppScreen`] traversal — so the
 //! incremental path produces bit-identical active sets, weights, and
 //! certified gaps (pinned by `tests/integration_forest.rs` on all three
-//! substrates).
+//! substrates).  The contract is *state-independent*: survivors for a
+//! pair depend only on the pair, never on how much of the tree is
+//! already materialized — which is what lets the chunked path engine
+//! (range-based SPP, [`super::range`]) pre-mine a whole λ-chunk's
+//! subtrees at an interval radius and still recover every λ's exact
+//! survivor sequence from the stored columns.
 //!
 //! [`SppScreen`]: super::sppc::SppScreen
 

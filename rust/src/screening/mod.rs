@@ -9,6 +9,10 @@
 //! * [`forest`] — the incremental screening forest: re-evaluate the SPP
 //!   rule on the stored pruned tree across λ steps, re-entering the
 //!   substrate only below frontier nodes whose SPPC climbed back.
+//! * [`range`] — range-based (interval) SPP after Yoshida et al.
+//!   (2023): the anchored safe radius valid for a whole λ-interval
+//!   (endpoint rule), behind the chunked path engine's one-mine-per-
+//!   chunk screening (`PathConfig::range_chunk`).
 //! * [`lambda_max`] — the §3.4.1 search for the smallest λ with an
 //!   all-zero solution, using the same anti-monotone envelope bound.
 //! * [`certify`] — an exact feasibility pass: one bounded tree search
@@ -21,6 +25,7 @@ pub mod certify;
 pub mod forest;
 pub mod lambda_max;
 pub mod pool;
+pub mod range;
 pub mod sppc;
 
 pub use forest::{ForestScreenOutcome, ScreenForest};

@@ -1,0 +1,207 @@
+//! Range-based (interval) SPP: one screening pass certified for a whole
+//! λ-interval.
+//!
+//! The paper's Algorithm 1 motivates SPP with model selection — "a
+//! sequence of solutions with various different penalty parameters must
+//! be trained" (§3.4.1) — yet evaluates the rule once per grid point.
+//! Yoshida et al., *Efficient Model Selection for Predictive Pattern
+//! Mining Model by Safe Pattern Pruning* (2023), observe that the
+//! gap-safe ball construction extends from a single λ to a whole
+//! hyperparameter **interval**: a reference primal/dual pair
+//! `(w̃, b̃, θ̃)` stays feasible at every λ (the dual box `|α_tᵀθ| ≤ 1`
+//! does not depend on λ), so evaluating its duality gap *at* each λ
+//! yields a per-λ safe radius
+//!
+//! ```text
+//! r(λ) = √(2·gap_λ(w̃, θ̃)) / λ ,
+//! gap_λ = ½‖s̃‖² + λ‖w̃‖₁  +  ½λ²‖θ̃‖² − λ·δᵀθ̃
+//! ```
+//!
+//! (`s̃` = the pair's slacks; [`crate::solver::problem`]).  Screening
+//! with the interval radius `R = sup_{λ∈[λ_lo, λ_hi]} r(λ)` therefore
+//! produces a **survivor superset valid for every λ in the interval**:
+//! `SPPC_λ(t) = u_t + r(λ)·√v_t ≤ u_t + R·√v_t`, so a node the interval
+//! pass prunes is pruned at every λ in the range (Theorem 2 applied
+//! pointwise).  One tree search per *chunk* of the grid replaces one
+//! per grid *point* — `path::compute_path_spp` mines once per chunk and
+//! re-derives each λ's exact survivor set from the stored columns.
+//!
+//! ## The endpoint rule
+//!
+//! The supremum needs no search.  Substituting `u = 1/λ`:
+//!
+//! ```text
+//! r²(u) = ‖s̃‖²·u² + 2(‖w̃‖₁ − δᵀθ̃)·u + ‖θ̃‖²
+//! ```
+//!
+//! a quadratic in `u` with non-negative leading coefficient, hence
+//! **convex in u** — its maximum over an interval sits at an endpoint,
+//! and `u = 1/λ` maps λ-intervals to u-intervals monotonically.  So
+//!
+//! ```text
+//! sup_{λ∈[λ_lo, λ_hi]} r(λ) = max( r(λ_lo), r(λ_hi) )
+//! ```
+//!
+//! exactly — [`interval_radius`] evaluates the two endpoints and is
+//! valid for the *continuous* interval, not just the grid points inside
+//! it (pinned by the property test below).
+//!
+//! ## Exactness is never at stake
+//!
+//! The interval radius only decides which subtrees get *materialized*
+//! into the screening forest ahead of time.  Each λ still runs its own
+//! stored-tree screen with its own exact pair and radius (and the
+//! forest re-opens a frontier if anything climbs back over the
+//! threshold), so the chunked engine's survivor sequence — and hence
+//! active sets, weights and certified gaps — is bit-identical to the
+//! per-λ engine's (pinned by `tests/integration_range.rs` on all three
+//! substrates).  A too-small interval radius costs a re-open; it cannot
+//! cost correctness.
+
+use crate::solver::dual::safe_radius;
+use crate::solver::problem::{dual_value, primal_value};
+use crate::solver::Task;
+
+/// Resolve the `range_chunk` knob: `requested > 0` is explicit (1 =
+/// per-λ screening, `N` = λs per chunk); `0` means auto — the
+/// `SPP_RANGE_CHUNK` environment variable if set to a positive integer,
+/// else 1 (the per-λ engine).  Mirrors
+/// [`crate::runtime::parallel::resolve_threads`], and CI's test-matrix
+/// uses the env form to run the whole suite under both engines.
+pub fn resolve_range_chunk(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    if let Ok(v) = std::env::var("SPP_RANGE_CHUNK") {
+        if let Ok(k) = v.trim().parse::<usize>() {
+            if k > 0 {
+                return k;
+            }
+        }
+    }
+    1
+}
+
+/// The reference pair's safe radius evaluated at penalty `lam`
+/// (Lemma 5 with the pair's gap re-evaluated at `lam`): `slack`/`l1`
+/// describe the primal side `(w̃, b̃)`, `theta` the dual-feasible point.
+pub fn lambda_radius(
+    task: Task,
+    y: &[f64],
+    theta: &[f64],
+    slack: &[f64],
+    l1: f64,
+    lam: f64,
+) -> f64 {
+    let primal = primal_value(slack, l1, lam);
+    let dualv = dual_value(task, theta, y, lam);
+    safe_radius(primal, dualv, lam)
+}
+
+/// The interval radius `R = sup_{λ∈[λ_lo, λ_hi]} r(λ)` for the
+/// reference pair — exactly `max(r(λ_lo), r(λ_hi))` by the endpoint
+/// rule (module docs).  Screening with `R` is safe for every λ in the
+/// closed interval.
+pub fn interval_radius(
+    task: Task,
+    y: &[f64],
+    theta: &[f64],
+    slack: &[f64],
+    l1: f64,
+    lambda_lo: f64,
+    lambda_hi: f64,
+) -> f64 {
+    debug_assert!(
+        lambda_lo > 0.0 && lambda_lo <= lambda_hi,
+        "interval_radius needs 0 < λ_lo <= λ_hi, got [{lambda_lo}, {lambda_hi}]"
+    );
+    let r_lo = lambda_radius(task, y, theta, slack, l1, lambda_lo);
+    let r_hi = lambda_radius(task, y, theta, slack, l1, lambda_hi);
+    r_lo.max(r_hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::SplitMix64;
+
+    /// A plausible reference pair for either task: slacks from the
+    /// targets, a small feasible-looking θ (feasibility w.r.t. columns
+    /// is irrelevant to the radius algebra).
+    fn pair(seed: u64, n: usize, classify: bool) -> (Vec<f64>, Vec<f64>, Vec<f64>, f64) {
+        let mut rng = SplitMix64::new(seed);
+        let y: Vec<f64> = (0..n)
+            .map(|_| {
+                if classify {
+                    if rng.coin(0.5) {
+                        1.0
+                    } else {
+                        -1.0
+                    }
+                } else {
+                    rng.gauss() * 2.0
+                }
+            })
+            .collect();
+        let slack: Vec<f64> = (0..n)
+            .map(|_| if classify { rng.next_f64() } else { rng.gauss() })
+            .collect();
+        let theta: Vec<f64> = slack.iter().map(|&s| s * 0.3).collect();
+        let l1 = rng.next_f64() * 3.0;
+        (y, theta, slack, l1)
+    }
+
+    #[test]
+    fn endpoint_rule_dominates_every_interior_lambda() {
+        // the whole point of the module: R bounds r(λ) on the interval
+        for (seed, classify) in [(3u64, false), (4, true), (5, false)] {
+            let (y, theta, slack, l1) = pair(seed, 50, classify);
+            let task = if classify {
+                Task::Classification
+            } else {
+                Task::Regression
+            };
+            let (lo, hi) = (0.07, 2.9);
+            let r = interval_radius(task, &y, &theta, &slack, l1, lo, hi);
+            for k in 0..=200 {
+                let lam = lo + (hi - lo) * k as f64 / 200.0;
+                let rl = lambda_radius(task, &y, &theta, &slack, l1, lam);
+                assert!(
+                    rl <= r + 1e-12 * (1.0 + r),
+                    "interior λ={lam} radius {rl} exceeds interval radius {r} \
+                     (seed {seed})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_interval_is_the_pointwise_radius() {
+        let (y, theta, slack, l1) = pair(6, 30, false);
+        let lam = 0.8;
+        let r1 = lambda_radius(Task::Regression, &y, &theta, &slack, l1, lam);
+        let r2 = interval_radius(Task::Regression, &y, &theta, &slack, l1, lam, lam);
+        assert_eq!(r1.to_bits(), r2.to_bits());
+    }
+
+    #[test]
+    fn widening_the_interval_never_shrinks_the_radius() {
+        let (y, theta, slack, l1) = pair(7, 40, true);
+        let task = Task::Classification;
+        let mut prev = 0.0f64;
+        for widen in 1..=10 {
+            let (lo, hi) = (1.0 / widen as f64, widen as f64);
+            let r = interval_radius(task, &y, &theta, &slack, l1, lo, hi);
+            assert!(r >= prev, "radius shrank when widening to [{lo}, {hi}]");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn resolve_honours_explicit_requests() {
+        assert_eq!(resolve_range_chunk(1), 1);
+        assert_eq!(resolve_range_chunk(7), 7);
+        // auto resolves to something usable regardless of environment
+        assert!(resolve_range_chunk(0) >= 1);
+    }
+}

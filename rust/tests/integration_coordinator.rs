@@ -16,6 +16,11 @@ fn spec(dataset: &str, maxpat: usize, method: Method) -> ExperimentSpec {
             n_lambdas: 4,
             lambda_min_ratio: 0.2,
             maxpat,
+            // the grid test below compares SPP vs boosting NODE COUNTS,
+            // which is a per-λ-engine property — chunking moves the
+            // traversal bill (its equivalence lives in
+            // tests/integration_range.rs)
+            range_chunk: 1,
             ..PathConfig::default()
         },
     }
@@ -124,6 +129,18 @@ fn cli_path_json_output() {
         assert!(line.contains("\"per_lambda\""));
     }
     std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn cli_cv_selects_a_lambda() {
+    let (stdout, stderr, ok) = run_cli(&[
+        "cv", "--dataset", "splice", "--scale", "0.05", "--maxpat", "2",
+        "--lambdas", "4", "--min-ratio", "0.2", "--folds", "3", "--range-chunk", "2",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("chunk=2"), "{stdout}");
+    assert!(stdout.contains("<- best"), "{stdout}");
+    assert!(stdout.contains("best: index"), "{stdout}");
 }
 
 #[test]

@@ -17,6 +17,11 @@ fn cfg(n_lambdas: usize, maxpat: usize) -> PathConfig {
         n_lambdas,
         lambda_min_ratio: 0.05,
         maxpat,
+        // this suite pins the per-λ engine: its assertions describe the
+        // exact forest-vs-scratch telemetry shape (zero reuse in
+        // scratch mode, node accounting); the chunked engine's
+        // equivalence has its own suite, tests/integration_range.rs
+        range_chunk: 1,
         ..PathConfig::default()
     }
 }
@@ -57,8 +62,8 @@ fn case<S: PatternSubstrate>(db: &S, y: &[f64], task: Task, c: &PathConfig) {
     forest_cfg.reuse_forest = true;
     let mut scratch_cfg = *c;
     scratch_cfg.reuse_forest = false;
-    let forest = compute_path_spp(db, y, task, &forest_cfg);
-    let scratch = compute_path_spp(db, y, task, &scratch_cfg);
+    let forest = compute_path_spp(db, y, task, &forest_cfg).unwrap();
+    let scratch = compute_path_spp(db, y, task, &scratch_cfg).unwrap();
     assert_paths_equivalent(&forest, &scratch);
     assert!(
         forest.total_nodes() <= scratch.total_nodes(),
@@ -139,8 +144,8 @@ fn forest_strictly_cheaper_on_preset_at_twenty_lambdas() {
     forest_cfg.reuse_forest = true;
     let mut scratch_cfg = c;
     scratch_cfg.reuse_forest = false;
-    let forest = compute_path_spp(&t.db, &t.y, Task::Classification, &forest_cfg);
-    let scratch = compute_path_spp(&t.db, &t.y, Task::Classification, &scratch_cfg);
+    let forest = compute_path_spp(&t.db, &t.y, Task::Classification, &forest_cfg).unwrap();
+    let scratch = compute_path_spp(&t.db, &t.y, Task::Classification, &scratch_cfg).unwrap();
     assert_paths_equivalent(&forest, &scratch);
     assert!(
         forest.total_nodes() < scratch.total_nodes(),
@@ -156,14 +161,14 @@ fn dynamic_screening_freezes_columns_somewhere_on_the_path() {
     let spp::data::registry::Dataset::Itemsets(t) = &data else {
         unreachable!()
     };
-    let path = compute_path_spp(&t.db, &t.y, Task::Classification, &cfg(20, 3));
+    let path = compute_path_spp(&t.db, &t.y, Task::Classification, &cfg(20, 3)).unwrap();
     assert!(
         path.total_solver_screened() > 0,
         "dynamic screening never froze a column over a 20-λ path"
     );
     let mut off = cfg(20, 3);
     off.cd.dynamic_screen = false;
-    let plain = compute_path_spp(&t.db, &t.y, Task::Classification, &off);
+    let plain = compute_path_spp(&t.db, &t.y, Task::Classification, &off).unwrap();
     assert_eq!(plain.total_solver_screened(), 0);
     // same certified optima either way
     for (a, b) in path.points.iter().zip(&plain.points) {

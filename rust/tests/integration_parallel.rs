@@ -68,8 +68,8 @@ fn case<S: PatternSubstrate>(db: &S, y: &[f64], task: Task, base: &PathConfig) -
     seq_cfg.threads = 1;
     let mut par_cfg = *base;
     par_cfg.threads = 4;
-    let seq = compute_path_spp(db, y, task, &seq_cfg);
-    let par = compute_path_spp(db, y, task, &par_cfg);
+    let seq = compute_path_spp(db, y, task, &seq_cfg).unwrap();
+    let par = compute_path_spp(db, y, task, &par_cfg).unwrap();
     assert_bit_identical(&seq, &par);
     // the sequential engine must report itself as such
     assert!(seq.points.iter().all(|p| p.threads.workers == 1));
@@ -149,11 +149,11 @@ fn worker_counts_beyond_the_task_count_change_nothing() {
     let base = cfg(8, 2, false);
     let mut seq_cfg = base;
     seq_cfg.threads = 1;
-    let seq = compute_path_spp(&d.db, &d.y, Task::Regression, &seq_cfg);
+    let seq = compute_path_spp(&d.db, &d.y, Task::Regression, &seq_cfg).unwrap();
     for threads in [2usize, 3, 16] {
         let mut c = base;
         c.threads = threads;
-        let par = compute_path_spp(&d.db, &d.y, Task::Regression, &c);
+        let par = compute_path_spp(&d.db, &d.y, Task::Regression, &c).unwrap();
         assert_bit_identical(&seq, &par);
     }
 }
@@ -163,7 +163,7 @@ fn parallel_telemetry_reports_workers_and_tasks() {
     let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(79, false));
     let mut c = cfg(8, 3, false);
     c.threads = 4;
-    let par = compute_path_spp(&d.db, &d.y, Task::Regression, &c);
+    let par = compute_path_spp(&d.db, &d.y, Task::Regression, &c).unwrap();
     // λ_max point is always sequential
     assert_eq!(par.points[0].threads.workers, 1);
     // scratch screening farms one task per root item
@@ -187,8 +187,8 @@ fn cross_validation_folds_are_bit_identical_across_worker_counts() {
     c1.threads = 1;
     let mut c4 = c1;
     c4.threads = 4;
-    let a = cross_validate(&d.db, &d.y, Task::Regression, &c1, 4, 7);
-    let b = cross_validate(&d.db, &d.y, Task::Regression, &c4, 4, 7);
+    let a = cross_validate(&d.db, &d.y, Task::Regression, &c1, 4, 7).unwrap();
+    let b = cross_validate(&d.db, &d.y, Task::Regression, &c4, 4, 7).unwrap();
     assert_eq!(a.best, b.best);
     assert_eq!(a.points.len(), b.points.len());
     for (p, q) in a.points.iter().zip(&b.points) {

@@ -40,8 +40,8 @@ fn itemset_regression_path_agreement() {
     let db = &d.db;
     let c = cfg(8, 3);
     assert_paths_agree(
-        &compute_path_spp(db, &d.y, Task::Regression, &c),
-        &compute_path_boosting(db, &d.y, Task::Regression, &c),
+        &compute_path_spp(db, &d.y, Task::Regression, &c).unwrap(),
+        &compute_path_boosting(db, &d.y, Task::Regression, &c).unwrap(),
     );
 }
 
@@ -51,8 +51,8 @@ fn itemset_classification_path_agreement() {
     let db = &d.db;
     let c = cfg(8, 3);
     assert_paths_agree(
-        &compute_path_spp(db, &d.y, Task::Classification, &c),
-        &compute_path_boosting(db, &d.y, Task::Classification, &c),
+        &compute_path_spp(db, &d.y, Task::Classification, &c).unwrap(),
+        &compute_path_boosting(db, &d.y, Task::Classification, &c).unwrap(),
     );
 }
 
@@ -62,8 +62,8 @@ fn graph_regression_path_agreement() {
     let db = &d.db;
     let c = cfg(6, 3);
     assert_paths_agree(
-        &compute_path_spp(db, &d.db.y, Task::Regression, &c),
-        &compute_path_boosting(db, &d.db.y, Task::Regression, &c),
+        &compute_path_spp(db, &d.db.y, Task::Regression, &c).unwrap(),
+        &compute_path_boosting(db, &d.db.y, Task::Regression, &c).unwrap(),
     );
 }
 
@@ -73,8 +73,8 @@ fn graph_classification_path_agreement() {
     let db = &d.db;
     let c = cfg(6, 3);
     assert_paths_agree(
-        &compute_path_spp(db, &d.db.y, Task::Classification, &c),
-        &compute_path_boosting(db, &d.db.y, Task::Classification, &c),
+        &compute_path_spp(db, &d.db.y, Task::Classification, &c).unwrap(),
+        &compute_path_boosting(db, &d.db.y, Task::Classification, &c).unwrap(),
     );
 }
 
@@ -96,8 +96,10 @@ fn spp_node_counts_beat_boosting_and_grow_with_maxpat() {
     for maxpat in [2usize, 3] {
         let mut c = cfg(8, maxpat);
         c.reuse_forest = false;
-        let spp = compute_path_spp(db, &d.y, Task::Regression, &c);
-        let boost = compute_path_boosting(db, &d.y, Task::Regression, &c);
+        // paper-currency node counts: per-λ screening pinned too
+        c.range_chunk = 1;
+        let spp = compute_path_spp(db, &d.y, Task::Regression, &c).unwrap();
+        let boost = compute_path_boosting(db, &d.y, Task::Regression, &c).unwrap();
         spp_total += spp.total_nodes();
         boost_total += boost.total_nodes();
         assert!(spp.total_nodes() >= prev_nodes, "node count shrank with maxpat");
@@ -116,7 +118,7 @@ fn warm_screening_prunes_more_than_cold() {
     let d = generate(&ItemsetSynthConfig::tiny(46, false));
     let db = &d.db;
     let c = cfg(10, 3);
-    let path = compute_path_spp(db, &d.y, Task::Regression, &c);
+    let path = compute_path_spp(db, &d.y, Task::Regression, &c).unwrap();
     let total_patterns = spp::testutil::oracle::all_itemsets(&d.db, 3).len();
     // at the largest few λ the working set must be a small fraction
     for p in &path.points[1..4] {
@@ -134,10 +136,10 @@ fn warm_screening_prunes_more_than_cold() {
 fn boosting_rounds_exceed_one_at_small_lambda() {
     let d = generate(&ItemsetSynthConfig::tiny(47, false));
     let db = &d.db;
-    let path = compute_path_boosting(db, &d.y, Task::Regression, &cfg(8, 3));
+    let path = compute_path_boosting(db, &d.y, Task::Regression, &cfg(8, 3)).unwrap();
     let max_rounds = path.points.iter().map(|p| p.rounds).max().unwrap();
     assert!(max_rounds > 1, "boosting never generated constraints");
     // SPP always does exactly one search per λ
-    let spp = compute_path_spp(db, &d.y, Task::Regression, &cfg(8, 3));
+    let spp = compute_path_spp(db, &d.y, Task::Regression, &cfg(8, 3)).unwrap();
     assert!(spp.points.iter().all(|p| p.rounds == 1));
 }

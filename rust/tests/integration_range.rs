@@ -1,0 +1,265 @@
+//! Range-based (interval) SPP, end to end: the chunked engine
+//! (`PathConfig::range_chunk > 1` — one interval-radius mine per chunk
+//! of grid points, per-λ survivor sets re-derived from the stored
+//! columns) must be **bit-identical** to the per-λ engine — same active
+//! sets (patterns and order), same weight/intercept/gap bits, same |Â|
+//! — on all three shipped substrates, in both the forest-reuse and
+//! scratch configurations, at any thread count; and k-fold CV under the
+//! chunked engine must pin the same best-λ index and bit-identical fold
+//! losses.  On the dense splice preset at 20 λs the chunked scratch
+//! engine must also traverse strictly fewer substrate nodes than per-λ
+//! scratch screening (the acceptance regime; `benches/ablation_range.rs`
+//! asserts the same on all three substrates at bench scale).
+
+use spp::data::sequence::{self, SeqSynthConfig};
+use spp::data::synth_graphs::{self, GraphSynthConfig};
+use spp::data::synth_itemsets::{self, ItemsetSynthConfig};
+use spp::mining::PatternSubstrate;
+use spp::path::cv::{cross_validate, CvResult};
+use spp::path::{compute_path_spp, PathConfig, PathResult};
+use spp::solver::Task;
+
+fn cfg(n_lambdas: usize, maxpat: usize, reuse: bool, chunk: usize) -> PathConfig {
+    PathConfig {
+        n_lambdas,
+        lambda_min_ratio: 0.05,
+        maxpat,
+        reuse_forest: reuse,
+        range_chunk: chunk,
+        ..PathConfig::default()
+    }
+}
+
+/// Bitwise equality of everything the solver produced (telemetry and
+/// wall-clock excluded — the two engines deliberately do their
+/// traversal work in different places).
+fn assert_results_bitwise(a: &PathResult, b: &PathResult) {
+    assert_eq!(a.lambda_max.to_bits(), b.lambda_max.to_bits());
+    assert_eq!(a.points.len(), b.points.len());
+    for (p, q) in a.points.iter().zip(&b.points) {
+        assert_eq!(p.lambda.to_bits(), q.lambda.to_bits());
+        assert_eq!(
+            p.active.len(),
+            q.active.len(),
+            "active-set size mismatch at λ={}: {} vs {}",
+            p.lambda,
+            p.active.len(),
+            q.active.len()
+        );
+        for ((pa, wa), (pb, wb)) in p.active.iter().zip(&q.active) {
+            assert_eq!(pa, pb, "active pattern/order mismatch at λ={}", p.lambda);
+            assert_eq!(
+                wa.to_bits(),
+                wb.to_bits(),
+                "weight bits differ at λ={} on {}: {wa} vs {wb}",
+                p.lambda,
+                pa.display()
+            );
+        }
+        assert_eq!(p.b.to_bits(), q.b.to_bits(), "intercept bits at λ={}", p.lambda);
+        assert_eq!(p.gap.to_bits(), q.gap.to_bits(), "gap bits at λ={}", p.lambda);
+        assert!(p.gap <= 2e-6, "uncertified λ={}", p.lambda);
+        // identical Â and identical solver trajectory
+        assert_eq!(p.working_size, q.working_size, "|Â| at λ={}", p.lambda);
+        assert_eq!(p.cd_epochs, q.cd_epochs, "solver epochs at λ={}", p.lambda);
+    }
+}
+
+/// Per-λ vs chunked on one substrate/config; returns the chunked run.
+fn case<S: PatternSubstrate>(
+    db: &S,
+    y: &[f64],
+    task: Task,
+    base: &PathConfig,
+    chunk: usize,
+) -> PathResult {
+    let mut per_lambda = *base;
+    per_lambda.range_chunk = 1;
+    let mut chunked = *base;
+    chunked.range_chunk = chunk;
+    let a = compute_path_spp(db, y, task, &per_lambda).unwrap();
+    let b = compute_path_spp(db, y, task, &chunked).unwrap();
+    assert_results_bitwise(&a, &b);
+    // telemetry shape: only the chunked engine records chunk work
+    assert_eq!(a.total_chunk_mine_nodes(), 0);
+    assert_eq!(a.chunk_hits(), 0);
+    assert!(b.total_chunk_mine_nodes() > 0, "chunk={chunk}: no pre-mine ran");
+    assert!(b.chunk_hits() > 0, "chunk={chunk}: no λ was served from its chunk tree");
+    b
+}
+
+#[test]
+fn itemsets_bit_identical_both_tasks_both_engines() {
+    for (seed, classify) in [(101u64, false), (102, true)] {
+        let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(seed, classify));
+        let task = if classify {
+            Task::Classification
+        } else {
+            Task::Regression
+        };
+        for reuse in [true, false] {
+            for chunk in [3usize, 64] {
+                // chunk 64 > grid: the whole tail is ONE chunk — a
+                // single database search serves every λ
+                let b = case(&d.db, &d.y, task, &cfg(10, 3, reuse, 1), chunk);
+                if chunk == 64 {
+                    let leaders: Vec<_> = b
+                        .points
+                        .iter()
+                        .filter(|p| p.reuse.chunk_mine_nodes > 0)
+                        .collect();
+                    assert_eq!(leaders.len(), 1, "one chunk ⇒ one pre-mine");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn graphs_bit_identical_both_engines() {
+    for (seed, classify) in [(103u64, false), (104, true)] {
+        let d = synth_graphs::generate(&GraphSynthConfig::tiny(seed, classify));
+        let task = if classify {
+            Task::Classification
+        } else {
+            Task::Regression
+        };
+        for reuse in [true, false] {
+            case(&d.db, &d.db.y, task, &cfg(8, 3, reuse, 1), 3);
+        }
+    }
+}
+
+#[test]
+fn sequences_bit_identical_both_engines() {
+    for (seed, classify) in [(105u64, false), (106, true)] {
+        let d = sequence::generate(&SeqSynthConfig::tiny(seed, classify));
+        let task = if classify {
+            Task::Classification
+        } else {
+            Task::Regression
+        };
+        for reuse in [true, false] {
+            case(&d.db, &d.y, task, &cfg(8, 3, reuse, 1), 3);
+        }
+    }
+}
+
+#[test]
+fn chunked_engine_with_certify_and_no_dynamic_screen_stays_identical() {
+    let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(107, true));
+    let mut c = cfg(8, 3, true, 1);
+    c.certify = true;
+    case(&d.db, &d.y, Task::Classification, &c, 4);
+    let mut c = cfg(8, 3, false, 1);
+    c.cd.dynamic_screen = false;
+    case(&d.db, &d.y, Task::Classification, &c, 4);
+}
+
+#[test]
+fn chunked_engine_is_bit_identical_at_any_thread_count() {
+    // full bitwise equality INCLUDING telemetry between worker counts
+    // of the same (chunked) engine — the parallel contract extends to
+    // chunk pre-mines
+    let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(108, false));
+    for reuse in [true, false] {
+        let mut c1 = cfg(10, 3, reuse, 4);
+        c1.threads = 1;
+        let mut c4 = c1;
+        c4.threads = 4;
+        let a = compute_path_spp(&d.db, &d.y, Task::Regression, &c1).unwrap();
+        let b = compute_path_spp(&d.db, &d.y, Task::Regression, &c4).unwrap();
+        assert_results_bitwise(&a, &b);
+        for (p, q) in a.points.iter().zip(&b.points) {
+            assert_eq!(p.stats, q.stats, "node counts at λ={}", p.lambda);
+            assert_eq!(p.reuse, q.reuse, "reuse telemetry at λ={}", p.lambda);
+        }
+    }
+}
+
+#[test]
+fn chunked_scratch_strictly_cheaper_on_preset_at_twenty_lambdas() {
+    // the acceptance-criterion regime: dense paper-shaped preset,
+    // n_lambdas >= 20 — chunked screening must beat per-λ screening on
+    // substrate node counts while staying bit-identical
+    let data = spp::data::registry::lookup("splice", 0.08).unwrap();
+    let spp::data::registry::Dataset::Itemsets(t) = &data else {
+        unreachable!()
+    };
+    let per_lambda =
+        compute_path_spp(&t.db, &t.y, Task::Classification, &cfg(20, 3, false, 1)).unwrap();
+    let chunked =
+        compute_path_spp(&t.db, &t.y, Task::Classification, &cfg(20, 3, false, 5)).unwrap();
+    assert_results_bitwise(&per_lambda, &chunked);
+    assert!(
+        chunked.total_nodes() < per_lambda.total_nodes(),
+        "chunked screening must traverse strictly fewer nodes: {} vs {}",
+        chunked.total_nodes(),
+        per_lambda.total_nodes()
+    );
+}
+
+/// 9:1 imbalanced ±1 labels over `n` records (deterministic).
+fn imbalanced_labels(n: usize) -> Vec<f64> {
+    (0..n).map(|i| if i % 10 == 0 { -1.0 } else { 1.0 }).collect()
+}
+
+fn assert_cv_bitwise(a: &CvResult, b: &CvResult) {
+    assert_eq!(a.best, b.best, "best-λ index differs");
+    assert_eq!(a.points.len(), b.points.len());
+    for (p, q) in a.points.iter().zip(&b.points) {
+        assert_eq!(p.lambda_frac.to_bits(), q.lambda_frac.to_bits());
+        assert_eq!(p.mean_loss.to_bits(), q.mean_loss.to_bits());
+        assert_eq!(p.mean_active.to_bits(), q.mean_active.to_bits());
+        assert_eq!(p.fold_losses.len(), q.fold_losses.len());
+        for (x, y) in p.fold_losses.iter().zip(&q.fold_losses) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}
+
+/// Classification CV with imbalanced labels on one substrate, swept
+/// over engine (per-λ vs chunked) and worker count (1 vs 4): every
+/// combination must pin the same best-λ index and bit-identical fold
+/// losses, and every loss must be a real error rate (no degenerate
+/// fold ever collapses).
+fn cv_case<S: PatternSubstrate + Sync>(db: &S, y: &[f64], n_lambdas: usize, maxpat: usize) {
+    let folds = 4;
+    let seed = 9;
+    let mut runs: Vec<CvResult> = Vec::new();
+    for chunk in [1usize, 3] {
+        for threads in [1usize, 4] {
+            let mut c = cfg(n_lambdas, maxpat, true, chunk);
+            c.threads = threads;
+            let cv = cross_validate(db, y, Task::Classification, &c, folds, seed).unwrap();
+            for p in &cv.points {
+                assert_eq!(p.fold_losses.len(), folds);
+                for &l in &p.fold_losses {
+                    assert!((0.0..=1.0).contains(&l), "loss {l} is not an error rate");
+                }
+            }
+            runs.push(cv);
+        }
+    }
+    for other in &runs[1..] {
+        assert_cv_bitwise(&runs[0], other);
+    }
+}
+
+#[test]
+fn imbalanced_cv_pins_best_lambda_itemsets() {
+    let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(110, true));
+    cv_case(&d.db, &imbalanced_labels(d.y.len()), 6, 2);
+}
+
+#[test]
+fn imbalanced_cv_pins_best_lambda_graphs() {
+    let d = synth_graphs::generate(&GraphSynthConfig::tiny(111, true));
+    cv_case(&d.db, &imbalanced_labels(d.db.y.len()), 4, 2);
+}
+
+#[test]
+fn imbalanced_cv_pins_best_lambda_sequences() {
+    let d = sequence::generate(&SeqSynthConfig::tiny(112, true));
+    cv_case(&d.db, &imbalanced_labels(d.y.len()), 4, 2);
+}

@@ -123,9 +123,9 @@ fn xla_engine_path_equals_cd_engine_path() {
         maxpat: 2,
         ..PathConfig::default()
     };
-    let rust_path = compute_path_spp(db, &d.y, Task::Regression, &cfg);
+    let rust_path = compute_path_spp(db, &d.y, Task::Regression, &cfg).unwrap();
     let solver = XlaRestricted::new(&rt);
-    let xla_path = compute_path_spp_with(db, &d.y, Task::Regression, &cfg, &solver);
+    let xla_path = compute_path_spp_with(db, &d.y, Task::Regression, &cfg, &solver).unwrap();
     assert_eq!(rust_path.points.len(), xla_path.points.len());
     for (a, b) in rust_path.points.iter().zip(&xla_path.points) {
         let l1a: f64 = a.active.iter().map(|(_, w)| w.abs()).sum();

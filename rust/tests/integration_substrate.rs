@@ -68,8 +68,8 @@ fn assert_spp_and_boosting_active_sets_agree<S: PatternSubstrate>(
     task: Task,
     c: &PathConfig,
 ) {
-    let spp = compute_path_spp(db, y, task, c);
-    let boost = compute_path_boosting(db, y, task, c);
+    let spp = compute_path_spp(db, y, task, c).unwrap();
+    let boost = compute_path_boosting(db, y, task, c).unwrap();
     assert_eq!(spp.points.len(), boost.points.len());
     assert!((spp.lambda_max - boost.lambda_max).abs() < 1e-9);
 
@@ -179,18 +179,18 @@ fn prefixspan_matches_oracle_on_seeded_instances() {
 #[test]
 fn sequence_model_round_trips_through_text_format() {
     let d = sequence::generate(&SeqSynthConfig::tiny(7, false));
-    let path = compute_path_spp(&d.db, &d.y, Task::Regression, &cfg(6, 2));
+    let path = compute_path_spp(&d.db, &d.y, Task::Regression, &cfg(6, 2)).unwrap();
     let point = path.points.last().unwrap();
     assert!(
         !point.active.is_empty(),
         "smallest-λ model should have active sequence patterns"
     );
     let model = SparsePatternModel::from_path_point(Task::Regression, point);
-    let back = SparsePatternModel::parse(&model.serialize()).unwrap();
+    let back = SparsePatternModel::parse(&model.serialize().unwrap()).unwrap();
     assert_eq!(model, back);
     assert_eq!(model.predict(&d.db), back.predict(&d.db));
     // and the codec really used the sequence tag
-    assert!(model.serialize().lines().skip(1).all(|l| l.starts_with("S ")));
+    assert!(model.serialize().unwrap().lines().skip(1).all(|l| l.starts_with("S ")));
 }
 
 /// `synth-seq` flows through the registry + coordinator exactly like

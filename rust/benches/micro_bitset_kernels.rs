@@ -1,0 +1,119 @@
+//! MICRO: sparse vs hybrid support-column kernels in isolation.
+//!
+//! The quantities `crate::columns` exists for: inner products
+//! (`dot`, the SPPC/CD gather) and tid-list intersection (the itemset
+//! hot loop), measured on the SAME id sets stored both ways — plain
+//! sorted `Vec<u32>` (the scalar oracle) vs [`HybridColumn`] (dense
+//! 4096-id chunks as 64-bit bitmap words).  One `ROW` line per
+//! (kernel, density) records both rates and the speedup; every
+//! measured pair is also asserted bit-identical inline, so a kernel
+//! regression fails the bench before it skews a number.
+//!
+//! Densities bracket the paper's regimes: splice/dna supports cover
+//! most records (0.5–0.9), a9a/cpdb sit near 0.1, and 0.01 is the
+//! sparse tail where the hybrid layout must fall back gracefully.
+//! `SPP_BENCH_SCALE` scales the record count (CI smoke runs 0.05).
+
+use spp::columns::{ColumnRead, HybridColumn};
+use spp::mining::itemset::intersect_into;
+use spp::testutil::SplitMix64;
+
+fn sorted_sample(rng: &mut SplitMix64, universe: usize, len: usize) -> Vec<u32> {
+    rng.sample_distinct(universe, len).into_iter().map(|i| i as u32).collect()
+}
+
+/// Best ops/s over `samples` runs of `f` (which returns its op count).
+fn best_rate<F: FnMut() -> u64>(samples: usize, mut f: F) -> f64 {
+    let mut best = 0.0f64;
+    for _ in 0..samples {
+        let t = std::time::Instant::now();
+        let ops = f();
+        let dt = t.elapsed().as_secs_f64();
+        best = best.max(ops as f64 / dt);
+    }
+    best
+}
+
+fn main() {
+    let scale: f64 = std::env::var("SPP_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    let n = ((32_768.0 * scale) as usize).max(8_192);
+    let mut rng = SplitMix64::new(3);
+    let g: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+    println!("# micro_bitset_kernels: n={n} (SPP_BENCH_SCALE={scale})");
+
+    // --- dot products (the SPPC fold / CD gather shape) ---
+    for density in [0.9f64, 0.5, 0.1, 0.01] {
+        let m = ((n as f64 * density) as usize).max(1);
+        let ids = sorted_sample(&mut rng, n, m);
+        let col = HybridColumn::from_sorted(ids.clone());
+        // inline oracle: the word kernel must be bit-identical
+        assert_eq!(col.dot_words(&g).to_bits(), ids.as_slice().dot(&g).to_bits());
+        let iters = (40_000_000 / m).clamp(8, 20_000) as u64;
+        let sparse = best_rate(5, || {
+            for _ in 0..iters {
+                std::hint::black_box(ids.as_slice().dot(&g));
+            }
+            iters * m as u64
+        });
+        let hybrid = best_rate(5, || {
+            for _ in 0..iters {
+                std::hint::black_box(col.dot_words(&g));
+            }
+            iters * m as u64
+        });
+        println!(
+            "ROW bench=bitset kernel=dot n={n} density={density} nnz={m} \
+             sparse_mops={:.1} hybrid_mops={:.1} speedup={:.2}",
+            sparse / 1e6,
+            hybrid / 1e6,
+            hybrid / sparse
+        );
+    }
+
+    // --- tid-list intersection (the itemset traversal hot loop) ---
+    for (da, db) in [(0.9f64, 0.9f64), (0.5, 0.5), (0.5, 0.01), (0.1, 0.1)] {
+        let (ma, mb) = (
+            ((n as f64 * da) as usize).max(1),
+            ((n as f64 * db) as usize).max(1),
+        );
+        let a = sorted_sample(&mut rng, n, ma);
+        let b = sorted_sample(&mut rng, n, mb);
+        let (ha, hb) = (
+            HybridColumn::from_sorted(a.clone()),
+            HybridColumn::from_sorted(b.clone()),
+        );
+        let mut out_v: Vec<u32> = Vec::with_capacity(ma.min(mb));
+        let mut out_h = HybridColumn::default();
+        // inline oracle: identical id sets out of both kernels
+        intersect_into(&a, &b, &mut out_v);
+        HybridColumn::intersect_into(&ha, &hb, &mut out_h);
+        assert_eq!(out_h.ids(), &out_v[..]);
+        let iters = (20_000_000 / (ma + mb)).clamp(4, 10_000) as u64;
+        let ops = (ma + mb) as u64;
+        let sparse = best_rate(5, || {
+            for _ in 0..iters {
+                intersect_into(&a, &b, &mut out_v);
+                std::hint::black_box(out_v.len());
+            }
+            iters * ops
+        });
+        let hybrid = best_rate(5, || {
+            for _ in 0..iters {
+                HybridColumn::intersect_into(&ha, &hb, &mut out_h);
+                std::hint::black_box(out_h.len());
+            }
+            iters * ops
+        });
+        println!(
+            "ROW bench=bitset kernel=intersect n={n} density_a={da} density_b={db} \
+             out={} sparse_mops={:.1} hybrid_mops={:.1} speedup={:.2}",
+            out_v.len(),
+            sparse / 1e6,
+            hybrid / 1e6,
+            hybrid / sparse
+        );
+    }
+}

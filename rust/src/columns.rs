@@ -1,0 +1,725 @@
+//! Hybrid sparse/bitset support columns.
+//!
+//! Every hot kernel in the crate folds a vector over a support column —
+//! a sorted, duplicate-free list of `u32` record ids: the SPPC /
+//! Lemma-6 bounds ([`crate::screening::sppc`]), the per-check dynamic
+//! screening and CD epochs ([`crate::solver::cd`]), the dual box
+//! ([`crate::solver::dual`]), and the child-support intersections of
+//! the itemset miner ([`crate::mining::itemset`]).  A flat `Vec<u32>`
+//! walk is optimal for *rare* patterns but wasteful for *dense* ones
+//! (a pattern supported by half the records touches `n/2` ids, 4 bytes
+//! each, with a data-dependent gather per id).
+//!
+//! [`HybridColumn`] stores a column in roaring-style fixed-width
+//! chunks: each chunk covers [`CHUNK_SPAN`] = 4096 consecutive record
+//! ids, and a chunk holding at least [`DENSE_CUTOFF`] = 256 of them
+//! additionally materializes a 64-word bitmap (64 × 64 = 4096 bits).
+//! The sorted id list is **always kept** alongside the bitmap — it is
+//! the canonical view (`ids()`), so every consumer that wants a
+//! `&[u32]` (pattern nodes, matchers, codecs, scatter loops) keeps
+//! working unchanged; the words are an acceleration index for the fold
+//! and intersection kernels.  A dense chunk costs 512 extra bytes per
+//! 4096-id span — at the ≥ 256-id cutoff that is ≤ 0.5 bytes per id of
+//! overhead against the 4-byte id it accelerates.
+//!
+//! ## Bit-identity
+//!
+//! The kernels here are drop-in replacements for the scalar loops, not
+//! approximations: iterating a word's set bits LSB-first
+//! (`trailing_zeros`, then `bits &= bits - 1`) over ascending words and
+//! chunks visits record ids in exactly the ascending order the scalar
+//! `for &i in ids` loop uses, so every floating-point accumulation
+//! performs the *same additions in the same order* and the results are
+//! bit-identical, layout notwithstanding.  Set intersections are exact
+//! integer operations.  The scalar layout therefore stays alive as the
+//! test oracle behind the [`ColumnLayout`] knob (`SPP_COLUMNS`), and
+//! `tests/integration_columns.rs` pins sparse-vs-hybrid bit-identity
+//! end to end on all three substrates.
+
+/// Record ids covered by one chunk (4096 = 64 words × 64 bits).
+pub const CHUNK_SPAN: u32 = 4096;
+/// Bitmap words per dense chunk.
+pub const WORDS_PER_CHUNK: usize = 64;
+/// A chunk with at least this many ids gets a bitmap (≥ 1/16 density).
+pub const DENSE_CUTOFF: usize = 256;
+
+/// Storage layout for interned support columns (the `SPP_COLUMNS`
+/// knob): `Sparse` keeps plain sorted id lists — the scalar reference
+/// the differential tests treat as the oracle — while `Hybrid` (the
+/// default) adds bitmap words to dense chunks so the fold and
+/// intersection kernels run over 64-bit words.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ColumnLayout {
+    /// Plain sorted `Vec<u32>` columns (the scalar oracle).
+    Sparse,
+    /// Chunked sparse/bitset columns (vectorized kernels).
+    #[default]
+    Hybrid,
+}
+
+/// Resolve the column-layout knob: an explicit request wins; `None`
+/// means auto — the `SPP_COLUMNS` environment variable if set to
+/// `sparse` or `hybrid`, else [`ColumnLayout::Hybrid`].  Mirrors
+/// [`crate::screening::range::resolve_range_chunk`], and CI's
+/// test-matrix uses the env form to run the whole suite under both
+/// layouts.
+pub fn resolve_columns(requested: Option<ColumnLayout>) -> ColumnLayout {
+    if let Some(layout) = requested {
+        return layout;
+    }
+    if let Ok(v) = std::env::var("SPP_COLUMNS") {
+        match v.trim() {
+            "sparse" => return ColumnLayout::Sparse,
+            "hybrid" => return ColumnLayout::Hybrid,
+            _ => {}
+        }
+    }
+    ColumnLayout::Hybrid
+}
+
+/// One span of 4096 record ids: `ids[start..end]` of the owning column,
+/// plus the bitmap words when the span is dense enough.
+#[derive(Clone, Debug)]
+struct Chunk {
+    /// `id >> 12` shared by every id in the chunk.
+    base: u32,
+    /// Start of the chunk's ids in the column's id list.
+    start: u32,
+    /// End (exclusive) of the chunk's ids in the column's id list.
+    end: u32,
+    /// Bitmap of the chunk's ids, present iff `end - start >=
+    /// DENSE_CUTOFF` (bit `b` of word `w` ⇔ id `base·4096 + w·64 + b`).
+    words: Option<Box<[u64; WORDS_PER_CHUNK]>>,
+}
+
+/// A support column in the hybrid layout (module docs): the canonical
+/// sorted id list plus a chunk index with bitmap words on dense spans.
+#[derive(Clone, Debug, Default)]
+pub struct HybridColumn {
+    ids: Vec<u32>,
+    chunks: Vec<Chunk>,
+}
+
+impl PartialEq for HybridColumn {
+    /// Column equality is id-set equality; the chunk index is derived
+    /// deterministically from the ids.
+    fn eq(&self, other: &Self) -> bool {
+        self.ids == other.ids
+    }
+}
+
+impl Eq for HybridColumn {}
+
+fn build_chunks(ids: &[u32]) -> Vec<Chunk> {
+    let mut chunks = Vec::new();
+    let mut i = 0usize;
+    while i < ids.len() {
+        let base = ids[i] >> 12;
+        let mut j = i + 1;
+        while j < ids.len() && ids[j] >> 12 == base {
+            j += 1;
+        }
+        let words = if j - i >= DENSE_CUTOFF {
+            let mut w = Box::new([0u64; WORDS_PER_CHUNK]);
+            for &id in &ids[i..j] {
+                let off = (id & (CHUNK_SPAN - 1)) as usize;
+                w[off >> 6] |= 1u64 << (off & 63);
+            }
+            Some(w)
+        } else {
+            None
+        };
+        chunks.push(Chunk { base, start: i as u32, end: j as u32, words });
+        i = j;
+    }
+    chunks
+}
+
+impl HybridColumn {
+    /// Build from a strictly increasing id list (every support column
+    /// in the crate is one; checked in debug builds).
+    pub fn from_sorted(ids: Vec<u32>) -> Self {
+        debug_assert!(ids.windows(2).all(|w| w[0] < w[1]), "ids must be strictly increasing");
+        let chunks = build_chunks(&ids);
+        Self { ids, chunks }
+    }
+
+    /// The canonical sorted id list.
+    #[inline]
+    pub fn ids(&self) -> &[u32] {
+        &self.ids
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Membership test: bitmap word probe on dense chunks, binary
+    /// search on sparse ones.
+    pub fn contains(&self, id: u32) -> bool {
+        let base = id >> 12;
+        let Ok(c) = self.chunks.binary_search_by_key(&base, |c| c.base) else {
+            return false;
+        };
+        let c = &self.chunks[c];
+        match &c.words {
+            Some(words) => {
+                let off = (id & (CHUNK_SPAN - 1)) as usize;
+                words[off >> 6] & (1u64 << (off & 63)) != 0
+            }
+            None => self.ids[c.start as usize..c.end as usize].binary_search(&id).is_ok(),
+        }
+    }
+
+    /// `Σ_{i∈col} g_i`, bit-identical to the scalar ascending-id sum
+    /// (module docs): dense chunks walk bitmap words LSB-first, with a
+    /// contiguous-slice sum on full words.
+    pub fn dot_words(&self, g: &[f64]) -> f64 {
+        let mut acc = 0.0f64;
+        for c in &self.chunks {
+            match &c.words {
+                Some(words) => {
+                    let lo = (c.base as usize) << 12;
+                    for (w, &word) in words.iter().enumerate() {
+                        if word == 0 {
+                            continue;
+                        }
+                        let row = lo + (w << 6);
+                        if word == u64::MAX {
+                            for &gi in &g[row..row + 64] {
+                                acc += gi;
+                            }
+                        } else {
+                            let mut bits = word;
+                            while bits != 0 {
+                                acc += g[row + bits.trailing_zeros() as usize];
+                                bits &= bits - 1;
+                            }
+                        }
+                    }
+                }
+                None => {
+                    for &i in &self.ids[c.start as usize..c.end as usize] {
+                        acc += g[i as usize];
+                    }
+                }
+            }
+        }
+        acc
+    }
+
+    /// `(Σ max(g_i,0), Σ min(g_i,0))` over the column, bit-identical to
+    /// the scalar ascending-id fold used by the SPPC bounds
+    /// ([`crate::screening::sppc`]).
+    pub fn fold_signed_words(&self, g: &[f64]) -> (f64, f64) {
+        let mut pos = 0.0f64;
+        let mut neg = 0.0f64;
+        for c in &self.chunks {
+            match &c.words {
+                Some(words) => {
+                    let lo = (c.base as usize) << 12;
+                    for (w, &word) in words.iter().enumerate() {
+                        if word == 0 {
+                            continue;
+                        }
+                        let row = lo + (w << 6);
+                        if word == u64::MAX {
+                            for &gi in &g[row..row + 64] {
+                                pos += gi.max(0.0);
+                                neg += gi.min(0.0);
+                            }
+                        } else {
+                            let mut bits = word;
+                            while bits != 0 {
+                                let gi = g[row + bits.trailing_zeros() as usize];
+                                pos += gi.max(0.0);
+                                neg += gi.min(0.0);
+                                bits &= bits - 1;
+                            }
+                        }
+                    }
+                }
+                None => {
+                    for &i in &self.ids[c.start as usize..c.end as usize] {
+                        let gi = g[i as usize];
+                        pos += gi.max(0.0);
+                        neg += gi.min(0.0);
+                    }
+                }
+            }
+        }
+        (pos, neg)
+    }
+
+    /// Intersect `a ∩ b` into `out` (reusing its buffers).  Chunk pairs
+    /// dispatch on density: dense×dense is a 64-word AND with LSB-first
+    /// id emission, dense×sparse probes the bitmap per id, and
+    /// sparse×sparse is a linear merge.  The output is a well-formed
+    /// hybrid column (sorted ids, dense chunks re-detected from the
+    /// intersection's own counts).
+    pub fn intersect_into(a: &Self, b: &Self, out: &mut Self) {
+        out.ids.clear();
+        out.chunks.clear();
+        let (mut ia, mut ib) = (0usize, 0usize);
+        while ia < a.chunks.len() && ib < b.chunks.len() {
+            let ca = &a.chunks[ia];
+            let cb = &b.chunks[ib];
+            if ca.base < cb.base {
+                ia += 1;
+                continue;
+            }
+            if cb.base < ca.base {
+                ib += 1;
+                continue;
+            }
+            let start = out.ids.len();
+            let mut dense_words: Option<[u64; WORDS_PER_CHUNK]> = None;
+            match (&ca.words, &cb.words) {
+                (Some(wa), Some(wb)) => {
+                    let lo = (ca.base << 12) as usize;
+                    let mut words = [0u64; WORDS_PER_CHUNK];
+                    for (w, (slot, (&ba, &bb))) in
+                        words.iter_mut().zip(wa.iter().zip(wb.iter())).enumerate()
+                    {
+                        let mut bits = ba & bb;
+                        *slot = bits;
+                        let row = (lo + (w << 6)) as u32;
+                        while bits != 0 {
+                            out.ids.push(row + bits.trailing_zeros());
+                            bits &= bits - 1;
+                        }
+                    }
+                    dense_words = Some(words);
+                }
+                (Some(wa), None) => {
+                    for &id in &b.ids[cb.start as usize..cb.end as usize] {
+                        let off = (id & (CHUNK_SPAN - 1)) as usize;
+                        if wa[off >> 6] & (1u64 << (off & 63)) != 0 {
+                            out.ids.push(id);
+                        }
+                    }
+                }
+                (None, Some(wb)) => {
+                    for &id in &a.ids[ca.start as usize..ca.end as usize] {
+                        let off = (id & (CHUNK_SPAN - 1)) as usize;
+                        if wb[off >> 6] & (1u64 << (off & 63)) != 0 {
+                            out.ids.push(id);
+                        }
+                    }
+                }
+                (None, None) => {
+                    let sa = &a.ids[ca.start as usize..ca.end as usize];
+                    let sb = &b.ids[cb.start as usize..cb.end as usize];
+                    let (mut x, mut y) = (0usize, 0usize);
+                    while x < sa.len() && y < sb.len() {
+                        match sa[x].cmp(&sb[y]) {
+                            std::cmp::Ordering::Less => x += 1,
+                            std::cmp::Ordering::Greater => y += 1,
+                            std::cmp::Ordering::Equal => {
+                                out.ids.push(sa[x]);
+                                x += 1;
+                                y += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            let count = out.ids.len() - start;
+            if count > 0 {
+                let words = match dense_words {
+                    Some(words) if count >= DENSE_CUTOFF => Some(Box::new(words)),
+                    _ => None,
+                };
+                out.chunks.push(Chunk {
+                    base: ca.base,
+                    start: start as u32,
+                    end: out.ids.len() as u32,
+                    words,
+                });
+            }
+            ia += 1;
+            ib += 1;
+        }
+    }
+}
+
+/// Read-only access to a support column, however it is stored.
+///
+/// The one required method is [`ColumnRead::ids`] — the sorted record
+/// ids — and every default is the scalar reference loop over it, in
+/// ascending-id order.  [`HybridColumn`] (and hybrid
+/// [`ColumnView`]s) override the folds with the word kernels, which
+/// visit ids in the *same* order, so generic consumers — the CD
+/// solver, the dual box, the engines' densify loops — are bit-identical
+/// across layouts by construction.
+///
+/// Implemented explicitly (not via a blanket `AsRef<[u32]>` impl, which
+/// would conflict with the view types under coherence) for exactly the
+/// column carriers the crate uses — `[u32]`, `Vec<u32>`,
+/// [`HybridColumn`], [`ColumnView`] — plus a delegating impl for
+/// references, so `&[u32]` / `&HybridColumn` element types work in
+/// generic `&[S]` positions.
+pub trait ColumnRead {
+    /// The column's sorted record ids.
+    fn ids(&self) -> &[u32];
+
+    /// Number of supporting records (`v_t` in the paper's bounds).
+    #[inline]
+    fn len(&self) -> usize {
+        self.ids().len()
+    }
+
+    #[inline]
+    fn is_empty(&self) -> bool {
+        self.ids().is_empty()
+    }
+
+    /// Visit each record id (as `usize`) in ascending order — the
+    /// scatter side of the CD update and the engines' densify loops.
+    #[inline]
+    fn for_each_id<F: FnMut(usize)>(&self, mut f: F) {
+        for &i in self.ids() {
+            f(i as usize);
+        }
+    }
+
+    /// `Σ_{i∈col} g_i` (ascending-id accumulation).
+    #[inline]
+    fn dot(&self, g: &[f64]) -> f64 {
+        let mut acc = 0.0f64;
+        for &i in self.ids() {
+            acc += g[i as usize];
+        }
+        acc
+    }
+
+    /// `(Σ max(g_i,0), Σ min(g_i,0))` — the SPPC sign-split fold.
+    #[inline]
+    fn fold_signed(&self, g: &[f64]) -> (f64, f64) {
+        let mut pos = 0.0f64;
+        let mut neg = 0.0f64;
+        for &i in self.ids() {
+            let gi = g[i as usize];
+            pos += gi.max(0.0);
+            neg += gi.min(0.0);
+        }
+        (pos, neg)
+    }
+}
+
+impl ColumnRead for [u32] {
+    #[inline]
+    fn ids(&self) -> &[u32] {
+        self
+    }
+}
+
+impl ColumnRead for Vec<u32> {
+    #[inline]
+    fn ids(&self) -> &[u32] {
+        self
+    }
+}
+
+/// References delegate every method (including the overridden word
+/// kernels) to the referent.
+impl<C: ColumnRead + ?Sized> ColumnRead for &C {
+    #[inline]
+    fn ids(&self) -> &[u32] {
+        (**self).ids()
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        (**self).len()
+    }
+
+    #[inline]
+    fn is_empty(&self) -> bool {
+        (**self).is_empty()
+    }
+
+    #[inline]
+    fn for_each_id<F: FnMut(usize)>(&self, f: F) {
+        (**self).for_each_id(f)
+    }
+
+    #[inline]
+    fn dot(&self, g: &[f64]) -> f64 {
+        (**self).dot(g)
+    }
+
+    #[inline]
+    fn fold_signed(&self, g: &[f64]) -> (f64, f64) {
+        (**self).fold_signed(g)
+    }
+}
+
+impl ColumnRead for HybridColumn {
+    #[inline]
+    fn ids(&self) -> &[u32] {
+        self.ids()
+    }
+
+    #[inline]
+    fn dot(&self, g: &[f64]) -> f64 {
+        self.dot_words(g)
+    }
+
+    #[inline]
+    fn fold_signed(&self, g: &[f64]) -> (f64, f64) {
+        self.fold_signed_words(g)
+    }
+}
+
+/// Borrowed view of one interned column, whatever the pool's layout —
+/// what [`crate::screening::pool::SupportPool::view`] hands the
+/// restricted solvers.  Equality is id-set equality across variants.
+#[derive(Clone, Copy, Debug)]
+pub enum ColumnView<'a> {
+    /// A plain sorted id slice.
+    Sparse(&'a [u32]),
+    /// A chunked sparse/bitset column.
+    Hybrid(&'a HybridColumn),
+}
+
+impl ColumnRead for ColumnView<'_> {
+    #[inline]
+    fn ids(&self) -> &[u32] {
+        match self {
+            ColumnView::Sparse(ids) => ids,
+            ColumnView::Hybrid(col) => col.ids(),
+        }
+    }
+
+    #[inline]
+    fn dot(&self, g: &[f64]) -> f64 {
+        match self {
+            ColumnView::Sparse(ids) => ids.dot(g),
+            ColumnView::Hybrid(col) => col.dot_words(g),
+        }
+    }
+
+    #[inline]
+    fn fold_signed(&self, g: &[f64]) -> (f64, f64) {
+        match self {
+            ColumnView::Sparse(ids) => ids.fold_signed(g),
+            ColumnView::Hybrid(col) => col.fold_signed_words(g),
+        }
+    }
+}
+
+impl PartialEq for ColumnView<'_> {
+    fn eq(&self, other: &Self) -> bool {
+        self.ids() == other.ids()
+    }
+}
+
+impl Eq for ColumnView<'_> {}
+
+/// A transaction-id set the itemset miner can build, grow and
+/// intersect — `Vec<u32>` (the scalar oracle, via the galloping merge
+/// in [`crate::mining::itemset::intersect_into`]) or [`HybridColumn`]
+/// (chunked word kernels).  `ids()` keeps the miner's pattern nodes on
+/// plain sorted slices either way.
+pub trait TidSet: Default {
+    /// Build from a strictly increasing id list.
+    fn from_sorted(ids: Vec<u32>) -> Self;
+
+    /// The sorted record ids.
+    fn ids(&self) -> &[u32];
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.ids().len()
+    }
+
+    #[inline]
+    fn is_empty(&self) -> bool {
+        self.ids().is_empty()
+    }
+
+    /// Reset to the empty set, keeping buffers for reuse.
+    fn clear(&mut self);
+
+    /// Intersect `a ∩ b` into `out` (clears `out` first).
+    fn intersect(a: &Self, b: &Self, out: &mut Self);
+}
+
+impl TidSet for HybridColumn {
+    #[inline]
+    fn from_sorted(ids: Vec<u32>) -> Self {
+        HybridColumn::from_sorted(ids)
+    }
+
+    #[inline]
+    fn ids(&self) -> &[u32] {
+        HybridColumn::ids(self)
+    }
+
+    #[inline]
+    fn clear(&mut self) {
+        self.ids.clear();
+        self.chunks.clear();
+    }
+
+    #[inline]
+    fn intersect(a: &Self, b: &Self, out: &mut Self) {
+        HybridColumn::intersect_into(a, b, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::SplitMix64;
+
+    /// Scalar references the kernels must match bit-for-bit.
+    fn scalar_dot(ids: &[u32], g: &[f64]) -> f64 {
+        let mut acc = 0.0f64;
+        for &i in ids {
+            acc += g[i as usize];
+        }
+        acc
+    }
+
+    fn scalar_fold(ids: &[u32], g: &[f64]) -> (f64, f64) {
+        let mut pos = 0.0f64;
+        let mut neg = 0.0f64;
+        for &i in ids {
+            let gi = g[i as usize];
+            pos += gi.max(0.0);
+            neg += gi.min(0.0);
+        }
+        (pos, neg)
+    }
+
+    fn scalar_intersect(a: &[u32], b: &[u32]) -> Vec<u32> {
+        a.iter().filter(|i| b.binary_search(i).is_ok()).copied().collect()
+    }
+
+    fn random_ids(rng: &mut SplitMix64, n: usize, m: usize) -> Vec<u32> {
+        let mut ids: Vec<u32> = rng.sample_distinct(n, m).into_iter().map(|i| i as u32).collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    #[test]
+    fn explicit_layout_request_wins() {
+        assert_eq!(resolve_columns(Some(ColumnLayout::Sparse)), ColumnLayout::Sparse);
+        assert_eq!(resolve_columns(Some(ColumnLayout::Hybrid)), ColumnLayout::Hybrid);
+        // the None arm resolves through SPP_COLUMNS (exercised by CI's
+        // test-matrix); its default is pinned by the type default
+        assert_eq!(ColumnLayout::default(), ColumnLayout::Hybrid);
+    }
+
+    #[test]
+    fn boundary_sizes_round_trip() {
+        // sizes straddling word and chunk boundaries, incl. the dense
+        // cutoff and the one-past-a-chunk cases
+        for m in [0usize, 1, 63, 64, 65, 255, 256, 257, 4095, 4096, 4097] {
+            let ids: Vec<u32> = (0..m as u32).collect();
+            let col = HybridColumn::from_sorted(ids.clone());
+            assert_eq!(col.ids(), &ids[..], "m={m}");
+            assert_eq!(col.len(), m);
+            assert_eq!(col.is_empty(), m == 0);
+            for &i in &ids {
+                assert!(col.contains(i), "m={m} missing {i}");
+            }
+            assert!(!col.contains(m as u32 + CHUNK_SPAN));
+        }
+    }
+
+    #[test]
+    fn one_id_per_chunk_stays_sparse_and_sorted() {
+        let ids: Vec<u32> = (0..10u32).map(|c| c * CHUNK_SPAN + 7).collect();
+        let col = HybridColumn::from_sorted(ids.clone());
+        assert_eq!(col.ids(), &ids[..]);
+        for &i in &ids {
+            assert!(col.contains(i));
+            assert!(!col.contains(i + 1));
+        }
+    }
+
+    #[test]
+    fn folds_are_bit_identical_to_scalar() {
+        let mut rng = SplitMix64::new(41);
+        let n = 3 * CHUNK_SPAN as usize + 137; // straddles chunk edges
+        let g: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        for m in [0usize, 1, 63, 64, 65, 300, 1000, n / 2, n - 1, n] {
+            let ids = random_ids(&mut rng, n, m);
+            let col = HybridColumn::from_sorted(ids.clone());
+            assert_eq!(col.dot_words(&g).to_bits(), scalar_dot(&ids, &g).to_bits(), "dot m={m}");
+            let (p, q) = col.fold_signed_words(&g);
+            let (sp, sq) = scalar_fold(&ids, &g);
+            assert_eq!((p.to_bits(), q.to_bits()), (sp.to_bits(), sq.to_bits()), "fold m={m}");
+            // trait dispatch hits the word kernels too
+            assert_eq!(ColumnRead::dot(&col, &g).to_bits(), scalar_dot(&ids, &g).to_bits());
+            assert_eq!(ColumnRead::fold_signed(&col, &g), (sp, sq));
+        }
+    }
+
+    #[test]
+    fn full_word_fast_path_is_bit_identical() {
+        // an all-records column exercises the word == u64::MAX slice sum
+        let mut rng = SplitMix64::new(43);
+        let n = CHUNK_SPAN as usize + 64;
+        let g: Vec<f64> = (0..n).map(|_| rng.gauss() * 3.0).collect();
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let col = HybridColumn::from_sorted(ids.clone());
+        assert_eq!(col.dot_words(&g).to_bits(), scalar_dot(&ids, &g).to_bits());
+        let (p, q) = col.fold_signed_words(&g);
+        let (sp, sq) = scalar_fold(&ids, &g);
+        assert_eq!((p.to_bits(), q.to_bits()), (sp.to_bits(), sq.to_bits()));
+    }
+
+    #[test]
+    fn intersections_match_scalar_across_density_mix() {
+        let mut rng = SplitMix64::new(47);
+        let n = 2 * CHUNK_SPAN as usize + 511;
+        // densities chosen to produce dense×dense, dense×sparse and
+        // sparse×sparse chunk pairs
+        let sizes = [3usize, 100, 700, n / 2, n];
+        let mut out = HybridColumn::default();
+        for &ma in &sizes {
+            for &mb in &sizes {
+                let a = random_ids(&mut rng, n, ma);
+                let b = random_ids(&mut rng, n, mb);
+                let want = scalar_intersect(&a, &b);
+                let ca = HybridColumn::from_sorted(a);
+                let cb = HybridColumn::from_sorted(b);
+                HybridColumn::intersect_into(&ca, &cb, &mut out);
+                assert_eq!(out.ids(), &want[..], "ma={ma} mb={mb}");
+                // the output is a well-formed column: membership agrees
+                for &i in &want {
+                    assert!(out.contains(i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn column_view_equality_is_id_equality() {
+        let col = HybridColumn::from_sorted(vec![1, 2, 3]);
+        let ids = [1u32, 2, 3];
+        assert_eq!(ColumnView::Hybrid(&col), ColumnView::Sparse(&ids[..]));
+        assert_ne!(ColumnView::Sparse(&ids[..1]), ColumnView::Sparse(&ids[..]));
+    }
+
+    #[test]
+    fn tidset_hybrid_intersects_and_clears() {
+        let a = HybridColumn::from_sorted(vec![0, 5, 9, 4096]);
+        let b = HybridColumn::from_sorted(vec![5, 9, 4095, 4096]);
+        let mut out = HybridColumn::default();
+        TidSet::intersect(&a, &b, &mut out);
+        assert_eq!(TidSet::ids(&out), &[5, 9, 4096]);
+        out.clear();
+        assert!(TidSet::is_empty(&out));
+    }
+}

@@ -102,6 +102,17 @@ impl SppEstimator {
         self
     }
 
+    /// Support-column layout of the interned pool (see
+    /// `crate::columns`): `Hybrid` (the resolved default) stores dense
+    /// supports as 64-bit bitmap chunks and runs the word kernels,
+    /// `Sparse` keeps plain sorted id lists (the scalar oracle).  Both
+    /// produce bit-identical fits.  Unset = auto (`SPP_COLUMNS` env,
+    /// else hybrid).
+    pub fn columns(mut self, layout: crate::columns::ColumnLayout) -> Self {
+        self.cfg.columns = Some(layout);
+        self
+    }
+
     /// Restricted-solver settings (tolerance, epoch caps).
     pub fn cd(mut self, cd: CdConfig) -> Self {
         self.cfg.cd = cd;
@@ -181,20 +192,24 @@ mod tests {
 
     #[test]
     fn reuse_and_screening_knobs_reach_the_config() {
+        use crate::columns::ColumnLayout;
         let est = SppEstimator::new(Task::Regression)
             .reuse_forest(false)
             .dynamic_screening(false)
             .threads(3)
-            .range_chunk(5);
+            .range_chunk(5)
+            .columns(ColumnLayout::Sparse);
         assert!(!est.config().reuse_forest);
         assert!(!est.config().cd.dynamic_screen);
         assert_eq!(est.config().threads, 3);
         assert_eq!(est.config().range_chunk, 5);
+        assert_eq!(est.config().columns, Some(ColumnLayout::Sparse));
         let est = SppEstimator::new(Task::Regression);
         assert!(est.config().reuse_forest, "forest reuse must default on");
         assert!(est.config().cd.dynamic_screen, "dynamic screening must default on");
         assert_eq!(est.config().threads, 0, "threads must default to auto");
         assert_eq!(est.config().range_chunk, 0, "range chunk must default to auto");
+        assert_eq!(est.config().columns, None, "column layout must default to auto");
     }
 
     #[test]

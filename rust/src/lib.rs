@@ -25,6 +25,11 @@
 //!   PrefixSpan subsequence miner, all driven through the same
 //!   [`mining::TreeVisitor`] API, plus the open
 //!   [`mining::PatternSubstrate`] trait every search is generic over.
+//! * [`columns`] — hybrid sparse/bitset support columns: the
+//!   [`columns::ColumnRead`] fold/dot kernels every layer shares, the
+//!   chunked [`columns::HybridColumn`] layout, and the
+//!   `SPP_COLUMNS` knob keeping the scalar layout alive as the test
+//!   oracle.
 //! * [`solver`] — L1 solvers (coordinate descent, ISTA oracle), the
 //!   paper's unified problem form, duality gaps, dual-feasible points.
 //! * [`screening`] — the SPP rule itself, per-feature gap-safe tests,
@@ -76,6 +81,7 @@
 pub mod benchkit;
 pub mod boosting;
 pub mod cli;
+pub mod columns;
 pub mod coordinator;
 pub mod data;
 pub mod estimator;

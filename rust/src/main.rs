@@ -6,6 +6,7 @@
 //!                [--certify] [--no-reuse] [--dynamic-screen=false]
 //!                [--threads N]          # 0 = auto; 1 = sequential
 //!                [--range-chunk C]      # 0 = auto; 1 = per-λ screening
+//!                [--columns sparse|hybrid]  # support-column layout
 //!                [--engine rust|xla] [--json out.json]
 //! spp cv         --dataset splice --maxpat 3 [--folds 5] [--seed 13]
 //!                [--lambdas 100] [--min-ratio 0.01] [--scale 1.0]
@@ -46,6 +47,7 @@ const SWITCHES: &[&str] = &["certify", "dynamic-screen", "help", "no-reuse"];
 /// grammar; anything else is rejected with the flag named.
 const FLAGS: &[&str] = &[
     "artifacts",
+    "columns",
     "dataset",
     "engine",
     "folds",
@@ -140,6 +142,14 @@ fn path_config(args: &cli::Args) -> spp::Result<PathConfig> {
         // per chunk of C λs; 0 = auto (SPP_RANGE_CHUNK env, else 1 =
         // per-λ screening) — all bit-identical
         range_chunk: args.get_usize("range-chunk", 0)?,
+        // `--columns sparse|hybrid` picks the support-column layout;
+        // absent = auto (SPP_COLUMNS env, else hybrid) — bit-identical
+        columns: match args.flag("columns") {
+            None => None,
+            Some("sparse") => Some(spp::columns::ColumnLayout::Sparse),
+            Some("hybrid") => Some(spp::columns::ColumnLayout::Hybrid),
+            Some(other) => anyhow::bail!("--columns must be sparse|hybrid, got '{other}'"),
+        },
         k_add: args.get_usize("k-add", 1)?,
         ..PathConfig::default()
     })
@@ -265,6 +275,10 @@ fn cmd_fit(args: &cli::Args) -> spp::Result<()> {
         .threads(cfg.threads)
         .range_chunk(cfg.range_chunk)
         .cd(cfg.cd);
+    let est = match cfg.columns {
+        Some(layout) => est.columns(layout),
+        None => est,
+    };
     let fit = match &data {
         Dataset::Graphs(g) => est.fit(g, &g.y)?,
         Dataset::Itemsets(t) => est.fit(&t.db, &t.y)?,

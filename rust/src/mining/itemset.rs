@@ -11,8 +11,14 @@
 //! items that still have non-empty intersection at the parent), keeping
 //! per-node work `O(Σ |candidate tid-lists|)` with zero allocation in
 //! the intersection inner loop.
+//!
+//! Tid-lists are carried as any [`TidSet`]: plain sorted `Vec<u32>`
+//! (the scalar oracle) or [`HybridColumn`], whose dense chunks
+//! intersect by 64-bit word ANDs.  Both produce identical id lists, so
+//! the visitor always sees the same sorted `&[u32]` support.
 
 use super::{PatternNode, SubtreeVisitors, TreeVisitor, Walk};
+use crate::columns::{resolve_columns, ColumnLayout, HybridColumn, TidSet};
 use crate::data::Transactions;
 
 /// Configurable item-set miner.
@@ -23,6 +29,11 @@ pub struct ItemsetMiner<'a> {
     /// Minimum support; patterns below it are not visited (and their
     /// subtrees are skipped — safe, supports are anti-monotone).
     pub minsup: usize,
+    /// Tid-list carrier: `Sparse` walks sorted `Vec<u32>` lists,
+    /// `Hybrid` intersects dense chunks by word ANDs.  Defaults to the
+    /// `SPP_COLUMNS` resolution; the enumerated patterns and supports
+    /// are identical either way.
+    pub layout: ColumnLayout,
 }
 
 impl<'a> ItemsetMiner<'a> {
@@ -31,6 +42,7 @@ impl<'a> ItemsetMiner<'a> {
             db,
             maxpat,
             minsup: 1,
+            layout: resolve_columns(None),
         }
     }
 
@@ -52,12 +64,23 @@ impl<'a> ItemsetMiner<'a> {
     /// Depth-first traversal; the visitor sees each item-set exactly
     /// once, in lexicographic order.
     pub fn traverse<V: TreeVisitor + ?Sized>(&self, visitor: &mut V) {
+        match self.layout {
+            ColumnLayout::Sparse => self.traverse_with::<Vec<u32>, V>(visitor),
+            ColumnLayout::Hybrid => self.traverse_with::<HybridColumn, V>(visitor),
+        }
+    }
+
+    fn traverse_with<T: TidSet, V: TreeVisitor + ?Sized>(&self, visitor: &mut V) {
         if self.maxpat == 0 {
             return;
         }
-        let root = self.root_candidates();
+        let root: Vec<(u32, T)> = self
+            .root_candidates()
+            .into_iter()
+            .map(|(j, t)| (j, T::from_sorted(t)))
+            .collect();
         let mut prefix: Vec<u32> = Vec::with_capacity(self.maxpat);
-        // Buffer pools: tid-list vectors and per-node candidate lists
+        // Buffer pools: tid-list carriers and per-node candidate lists
         // are recycled across the whole traversal, so the hot loop does
         // no allocation once the pools warm up.
         let mut pool = Pools::default();
@@ -73,23 +96,38 @@ impl<'a> ItemsetMiner<'a> {
     /// so per-subtree node sequences concatenated in item order equal
     /// the sequential traversal.
     pub fn traverse_par<F: SubtreeVisitors>(&self, threads: usize, factory: &F) -> Vec<F::V> {
+        match self.layout {
+            ColumnLayout::Sparse => self.traverse_par_with::<Vec<u32>, F>(threads, factory),
+            ColumnLayout::Hybrid => self.traverse_par_with::<HybridColumn, F>(threads, factory),
+        }
+    }
+
+    fn traverse_par_with<T: TidSet + Sync, F: SubtreeVisitors>(
+        &self,
+        threads: usize,
+        factory: &F,
+    ) -> Vec<F::V> {
         if self.maxpat == 0 {
             return Vec::new();
         }
-        let root = self.root_candidates();
+        let root: Vec<(u32, T)> = self
+            .root_candidates()
+            .into_iter()
+            .map(|(j, t)| (j, T::from_sorted(t)))
+            .collect();
         let root = &root;
         crate::runtime::parallel::map_indexed(threads, root.len(), move |i| {
             let mut visitor = factory.visitor(i);
             let (item, tids) = &root[i];
             let mut prefix = vec![*item];
-            let node = PatternNode::itemset(&prefix, tids);
+            let node = PatternNode::itemset(&prefix, tids.ids());
             let walk = visitor.visit(&node);
             if walk == Walk::Descend && prefix.len() < self.maxpat {
                 let mut pool = Pools::default();
                 let mut children = pool.take_list();
                 for (next, next_tids) in &root[i + 1..] {
                     let mut buf = pool.take_tids();
-                    intersect_into(tids, next_tids, &mut buf);
+                    T::intersect(tids, next_tids, &mut buf);
                     if buf.len() >= self.minsup {
                         children.push((*next, buf));
                     } else {
@@ -105,16 +143,16 @@ impl<'a> ItemsetMiner<'a> {
         })
     }
 
-    fn recurse<V: TreeVisitor + ?Sized>(
+    fn recurse<T: TidSet, V: TreeVisitor + ?Sized>(
         &self,
-        candidates: &[(u32, Vec<u32>)],
+        candidates: &[(u32, T)],
         prefix: &mut Vec<u32>,
-        pool: &mut Pools,
+        pool: &mut Pools<T>,
         visitor: &mut V,
     ) {
         for (ci, (item, tids)) in candidates.iter().enumerate() {
             prefix.push(*item);
-            let node = PatternNode::itemset(prefix, tids);
+            let node = PatternNode::itemset(prefix, tids.ids());
             let walk = visitor.visit(&node);
             if walk == Walk::Descend && prefix.len() < self.maxpat {
                 // Children: items after `item` in the candidate list,
@@ -122,7 +160,7 @@ impl<'a> ItemsetMiner<'a> {
                 let mut children = pool.take_list();
                 for (next, next_tids) in &candidates[ci + 1..] {
                     let mut buf = pool.take_tids();
-                    intersect_into(tids, next_tids, &mut buf);
+                    T::intersect(tids, next_tids, &mut buf);
                     if buf.len() >= self.minsup {
                         children.push((*next, buf));
                     } else {
@@ -139,36 +177,68 @@ impl<'a> ItemsetMiner<'a> {
     }
 }
 
-/// Recycled buffers for the traversal (tid vectors + candidate lists).
-#[derive(Default)]
-struct Pools {
-    tids: Vec<Vec<u32>>,
-    lists: Vec<Vec<(u32, Vec<u32>)>>,
+/// Recycled buffers for the traversal (tid carriers + candidate lists).
+struct Pools<T> {
+    tids: Vec<T>,
+    lists: Vec<Vec<(u32, T)>>,
 }
 
-impl Pools {
+impl<T> Default for Pools<T> {
+    fn default() -> Self {
+        Pools {
+            tids: Vec::new(),
+            lists: Vec::new(),
+        }
+    }
+}
+
+impl<T: TidSet> Pools<T> {
     #[inline]
-    fn take_tids(&mut self) -> Vec<u32> {
+    fn take_tids(&mut self) -> T {
         self.tids.pop().unwrap_or_default()
     }
 
     #[inline]
-    fn put_tids(&mut self, mut v: Vec<u32>) {
+    fn put_tids(&mut self, mut v: T) {
         v.clear();
         self.tids.push(v);
     }
 
     #[inline]
-    fn take_list(&mut self) -> Vec<(u32, Vec<u32>)> {
+    fn take_list(&mut self) -> Vec<(u32, T)> {
         self.lists.pop().unwrap_or_default()
     }
 
     #[inline]
-    fn put_list(&mut self, mut l: Vec<(u32, Vec<u32>)>) {
+    fn put_list(&mut self, mut l: Vec<(u32, T)>) {
         for (_, v) in l.drain(..) {
             self.put_tids(v);
         }
         self.lists.push(l);
+    }
+}
+
+/// `Vec<u32>` is the reference [`TidSet`]: a plain sorted id list with
+/// the galloping/merge [`intersect_into`] kernel.
+impl TidSet for Vec<u32> {
+    #[inline]
+    fn from_sorted(ids: Vec<u32>) -> Self {
+        ids
+    }
+
+    #[inline]
+    fn ids(&self) -> &[u32] {
+        self
+    }
+
+    #[inline]
+    fn clear(&mut self) {
+        Vec::clear(self);
+    }
+
+    #[inline]
+    fn intersect(a: &Self, b: &Self, out: &mut Self) {
+        intersect_into(a, b, out);
     }
 }
 
@@ -370,6 +440,64 @@ mod tests {
                 m.traverse_par(threads, &Fac).into_iter().flat_map(|c| c.0).collect();
             assert_eq!(got, want, "maxpat={maxpat} minsup={minsup} threads={threads}");
         }
+    }
+
+    #[test]
+    fn hybrid_layout_enumerates_identically() {
+        // Large enough that several tid-lists cross the dense-chunk
+        // cutoff, so the word-AND intersection path actually runs.
+        let n = 6000usize;
+        let items: Vec<Vec<u32>> = (0..n)
+            .map(|t| {
+                let mut row = Vec::new();
+                if t % 2 == 0 {
+                    row.push(0); // dense: 3000 tids
+                }
+                if t % 3 == 0 {
+                    row.push(1); // dense: 2000 tids
+                }
+                if t % 97 == 0 {
+                    row.push(2); // sparse: 62 tids
+                }
+                row
+            })
+            .collect();
+        let big = Transactions { n_items: 3, items };
+        let run = |layout: ColumnLayout, threads: usize| {
+            let mut m = ItemsetMiner::new(&big, 3);
+            m.minsup = 2;
+            m.layout = layout;
+            if threads == 0 {
+                let mut out = Vec::new();
+                let mut v = |n: &PatternNode<'_>| {
+                    out.push((n.to_pattern(), n.support.to_vec()));
+                    Walk::Descend
+                };
+                m.traverse(&mut v);
+                out
+            } else {
+                struct Coll(Vec<(Pattern, Vec<u32>)>);
+                impl TreeVisitor for Coll {
+                    fn visit(&mut self, n: &PatternNode<'_>) -> Walk {
+                        self.0.push((n.to_pattern(), n.support.to_vec()));
+                        Walk::Descend
+                    }
+                }
+                struct Fac;
+                impl SubtreeVisitors for Fac {
+                    type V = Coll;
+
+                    fn visitor(&self, _root: usize) -> Coll {
+                        Coll(Vec::new())
+                    }
+                }
+                m.traverse_par(threads, &Fac).into_iter().flat_map(|c| c.0).collect()
+            }
+        };
+        let want = run(ColumnLayout::Sparse, 0);
+        assert!(!want.is_empty());
+        assert_eq!(run(ColumnLayout::Hybrid, 0), want, "sequential");
+        assert_eq!(run(ColumnLayout::Hybrid, 3), want, "parallel");
     }
 
     mod intersect {

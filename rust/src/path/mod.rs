@@ -58,6 +58,7 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::boosting::{solve_lambda as boosting_solve, BoostingConfig};
+use crate::columns::{resolve_columns, ColumnLayout, ColumnView};
 use crate::mining::{Pattern, PatternSubstrate, TraverseStats};
 use crate::runtime::parallel::{self, ThreadStats};
 use crate::screening::certify::certify;
@@ -104,6 +105,14 @@ pub struct PathConfig {
     /// env, else 1).  Every value produces bit-identical paths
     /// (`tests/integration_range.rs`).
     pub range_chunk: usize,
+    /// Support-column layout of the path's [`SupportPool`] (CLI
+    /// `--columns sparse|hybrid`): `Hybrid` interns columns with dense
+    /// 64-bit bitmap chunks so the screening folds and the CD solver
+    /// run word kernels, `Sparse` keeps plain sorted id lists (the
+    /// scalar oracle).  `None` = auto (`SPP_COLUMNS` env, else hybrid).
+    /// Both layouts produce bit-identical paths
+    /// (`tests/integration_columns.rs`).
+    pub columns: Option<ColumnLayout>,
     /// Boosting: patterns added per round.
     pub k_add: usize,
     /// Boosting: violation tolerance.
@@ -122,6 +131,7 @@ impl Default for PathConfig {
             reuse_forest: true,
             threads: 0,
             range_chunk: 0,
+            columns: None,
             k_add: 1,
             viol_tol: 1e-6,
         }
@@ -258,7 +268,7 @@ pub trait RestrictedSolver {
     fn solve_restricted(
         &self,
         task: Task,
-        supports: &[&[u32]],
+        supports: &[ColumnView<'_>],
         y: &[f64],
         lam: f64,
         warm_w: &[f64],
@@ -273,7 +283,7 @@ impl RestrictedSolver for CdRestricted {
     fn solve_restricted(
         &self,
         task: Task,
-        supports: &[&[u32]],
+        supports: &[ColumnView<'_>],
         y: &[f64],
         lam: f64,
         warm_w: &[f64],
@@ -458,7 +468,7 @@ pub fn compute_path_spp_with<S: PatternSubstrate>(
     });
 
     // screening state from the previous λ
-    let mut pool = SupportPool::new();
+    let mut pool = SupportPool::with_layout(resolve_columns(cfg.columns));
     let mut forest = cfg
         .reuse_forest
         .then(|| ScreenForest::new(cfg.maxpat, cfg.minsup));
@@ -648,7 +658,7 @@ pub fn compute_path_boosting<S: PatternSubstrate>(
         threads: ThreadStats::sequential(),
     });
 
-    let mut pool = SupportPool::new();
+    let mut pool = SupportPool::with_layout(resolve_columns(cfg.columns));
     let mut ws = WorkingSet::new();
     let mut w: Vec<f64> = Vec::new();
     let mut b = lm.b0;

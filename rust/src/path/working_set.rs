@@ -10,6 +10,7 @@
 
 use std::collections::HashMap;
 
+use crate::columns::ColumnView;
 use crate::mining::Pattern;
 use crate::screening::pool::{SupportId, SupportPool};
 
@@ -73,9 +74,9 @@ impl WorkingSet {
         i
     }
 
-    /// Borrowed column views in column order (what the restricted
-    /// solver consumes).
-    pub fn columns<'p>(&self, pool: &'p SupportPool) -> Vec<&'p [u32]> {
+    /// Borrowed layout-aware column views in column order (what the
+    /// restricted solver consumes; sparse or hybrid per the pool).
+    pub fn columns<'p>(&self, pool: &'p SupportPool) -> Vec<ColumnView<'p>> {
         pool.view(&self.support_ids)
     }
 
@@ -120,6 +121,7 @@ impl WorkingSet {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::columns::ColumnRead;
 
     fn p(items: &[u32]) -> Pattern {
         Pattern::Itemset(items.to_vec())
@@ -137,7 +139,9 @@ mod tests {
         assert!(ws.contains(&p(&[1])));
         assert!(!ws.contains(&p(&[2])));
         assert_eq!(ws.position_by_support(sid), Some(0));
-        assert_eq!(ws.columns(&pool), vec![&[0, 1][..]]);
+        let cols = ws.columns(&pool);
+        assert_eq!(cols.len(), 1);
+        assert_eq!(cols[0].ids(), &[0, 1]);
     }
 
     #[test]

@@ -3,6 +3,10 @@
 //! (`engine_stub.rs`, the default).  Both are mounted as
 //! [`super::engine`], so downstream code is feature-agnostic.
 
+use crate::columns::{ColumnRead, ColumnView};
+use crate::solver::cd::Warm;
+use crate::solver::{CdSolver, Solution, Task};
+
 /// Scores for one pattern: the SPP criterion and its ingredients.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SppcScore {
@@ -23,10 +27,30 @@ pub struct XlaSolution {
     pub execs: usize,
 }
 
+/// Warm-started coordinate-descent solve over layout-aware column
+/// views — the shared restricted-solve kernel behind both engine
+/// builds' fallback/polish/certify arms.  With a hybrid pool the CD
+/// update's gathers and the dynamic-screening folds run over 64-bit
+/// bitmap words ([`crate::columns`]); with a sparse pool the same call
+/// is the scalar oracle.  Either way the result is bit-identical to
+/// `cd.solve` on plain `&[u32]` views of the same columns.
+pub fn cd_solve_views(
+    cd: &CdSolver,
+    task: Task,
+    supports: &[ColumnView<'_>],
+    y: &[f64],
+    lam: f64,
+    warm_w: &[f64],
+    warm_b: f64,
+) -> Solution {
+    cd.solve(task, supports, y, lam, Some(Warm { w: warm_w, b: warm_b }))
+}
+
 /// σ_max² of the intercept-augmented design `[X 1]` by power iteration
-/// over the sparse support columns.  30 iterations are ample for a
+/// over the support columns (any [`ColumnRead`] carrier; hybrid
+/// columns gather over bitmap words).  30 iterations are ample for a
 /// step-size estimate (a 1.05 safety factor absorbs the residual).
-pub fn power_lipschitz<S: AsRef<[u32]>>(supports: &[S], n: usize) -> f64 {
+pub fn power_lipschitz<S: ColumnRead>(supports: &[S], n: usize) -> f64 {
     let k = supports.len();
     let mut v = vec![1.0 / ((k + 1) as f64).sqrt(); k + 1];
     let mut sigma2 = n as f64; // the all-ones column alone gives n
@@ -35,15 +59,13 @@ pub fn power_lipschitz<S: AsRef<[u32]>>(supports: &[S], n: usize) -> f64 {
         let mut u = vec![v[k]; n];
         for (t, sup) in supports.iter().enumerate() {
             if v[t] != 0.0 {
-                for &i in sup.as_ref() {
-                    u[i as usize] += v[t];
-                }
+                sup.for_each_id(|i| u[i] += v[t]);
             }
         }
         // v' = Aᵀ u
         let mut v2 = vec![0.0; k + 1];
         for (t, sup) in supports.iter().enumerate() {
-            v2[t] = sup.as_ref().iter().map(|&i| u[i as usize]).sum();
+            v2[t] = sup.dot(&u);
         }
         v2[k] = u.iter().sum();
         let norm = v2.iter().map(|x| x * x).sum::<f64>().sqrt();

@@ -28,9 +28,10 @@
 use std::path::Path;
 
 use super::artifacts::ArtifactSet;
+use crate::columns::{ColumnRead, ColumnView};
 use crate::solver::Task;
 
-pub use super::engine_common::{power_lipschitz, SppcScore, XlaSolution};
+pub use super::engine_common::{cd_solve_views, power_lipschitz, SppcScore, XlaSolution};
 
 /// Error message shared by every stubbed entry point.
 const UNAVAILABLE: &str =
@@ -76,7 +77,7 @@ impl<'r> XlaSppcScorer<'r> {
         0
     }
 
-    pub fn score<S: AsRef<[u32]>>(
+    pub fn score<S: ColumnRead>(
         &self,
         _supports: &[S],
         _wpos: &[f64],
@@ -105,7 +106,7 @@ impl<'r> XlaFistaSolver<'r> {
         }
     }
 
-    pub fn solve<S: AsRef<[u32]>>(
+    pub fn solve<S: ColumnRead>(
         &self,
         _task: Task,
         _supports: &[S],
@@ -144,23 +145,16 @@ impl crate::path::RestrictedSolver for XlaRestricted<'_> {
     fn solve_restricted(
         &self,
         task: Task,
-        supports: &[&[u32]],
+        supports: &[ColumnView<'_>],
         y: &[f64],
         lam: f64,
         warm_w: &[f64],
         warm_b: f64,
     ) -> crate::solver::Solution {
         self.fallbacks.set(self.fallbacks.get() + 1);
-        self.cd.solve(
-            task,
-            supports,
-            y,
-            lam,
-            Some(crate::solver::cd::Warm {
-                w: warm_w,
-                b: warm_b,
-            }),
-        )
+        // the shared vectorized-CD entry: hybrid views run the word
+        // kernels instead of degrading to the scalar walk
+        cd_solve_views(&self.cd, task, supports, y, lam, warm_w, warm_b)
     }
 }
 

@@ -17,9 +17,10 @@ use std::path::PathBuf;
 use std::rc::Rc;
 
 use super::artifacts::{ArtifactInfo, ArtifactKind, ArtifactSet};
+use crate::columns::{ColumnRead, ColumnView};
 use crate::solver::Task;
 
-pub use super::engine_common::{power_lipschitz, SppcScore, XlaSolution};
+pub use super::engine_common::{cd_solve_views, power_lipschitz, SppcScore, XlaSolution};
 
 /// A PJRT CPU client plus a compile cache over the artifact set.
 pub struct PjrtRuntime {
@@ -120,7 +121,7 @@ impl<'r> XlaSppcScorer<'r> {
     /// per-sample weights (see `screening::fold_weights`), `radius` the
     /// gap-safe radius.  Any number of supports is accepted; they are
     /// processed in blocks of [`Self::block_width`].
-    pub fn score<S: AsRef<[u32]>>(
+    pub fn score<S: ColumnRead>(
         &self,
         supports: &[S],
         wpos: &[f64],
@@ -148,9 +149,7 @@ impl<'r> XlaSppcScorer<'r> {
         for chunk in supports.chunks(b) {
             x.iter_mut().for_each(|v| *v = 0.0);
             for (t, sup) in chunk.iter().enumerate() {
-                for &i in sup.as_ref() {
-                    x[i as usize * b + t] = 1.0;
-                }
+                sup.for_each_id(|i| x[i * b + t] = 1.0);
             }
             let x_lit = lit_f32_mat(&x, n_pad, b)?;
             let result = self
@@ -236,7 +235,7 @@ impl<'r> XlaFistaSolver<'r> {
     /// Solve the restricted problem over `supports` via the AOT FISTA
     /// artifact.  Requires an artifact with `n >= y.len()` and
     /// `cols >= supports.len()`.
-    pub fn solve<S: AsRef<[u32]>>(
+    pub fn solve<S: ColumnRead>(
         &self,
         task: Task,
         supports: &[S],
@@ -261,9 +260,7 @@ impl<'r> XlaFistaSolver<'r> {
         // dense padded panel + targets + mask
         let mut x = vec![0.0f32; n_pad * d_pad];
         for (t, sup) in supports.iter().enumerate() {
-            for &i in sup.as_ref() {
-                x[i as usize * d_pad + t] = 1.0;
-            }
+            sup.for_each_id(|i| x[i * d_pad + t] = 1.0);
         }
         let mut y_f = vec![0.0f32; n_pad];
         let mut mask = vec![0.0f32; n_pad];
@@ -372,7 +369,7 @@ impl crate::path::RestrictedSolver for XlaRestricted<'_> {
     fn solve_restricted(
         &self,
         task: Task,
-        supports: &[&[u32]],
+        supports: &[ColumnView<'_>],
         y: &[f64],
         lam: f64,
         warm_w: &[f64],
@@ -390,52 +387,22 @@ impl crate::path::RestrictedSolver for XlaRestricted<'_> {
             .is_some();
         if !fits || supports.is_empty() {
             self.fallbacks.set(self.fallbacks.get() + 1);
-            return self.cd.solve(
-                task,
-                supports,
-                y,
-                lam,
-                Some(crate::solver::cd::Warm {
-                    w: warm_w,
-                    b: warm_b,
-                }),
-            );
+            return cd_solve_views(&self.cd, task, supports, y, lam, warm_w, warm_b);
         }
         match self.fista.solve(task, supports, y, lam) {
             Ok(xs) => {
                 if self.polish {
-                    self.cd.solve(
-                        task,
-                        supports,
-                        y,
-                        lam,
-                        Some(crate::solver::cd::Warm { w: &xs.w, b: xs.b }),
-                    )
+                    cd_solve_views(&self.cd, task, supports, y, lam, &xs.w, xs.b)
                 } else {
                     // certificate in f64 at the f32 iterate
                     let mut quick = crate::solver::CdSolver::default();
                     quick.cfg.max_epochs = 0;
-                    quick.solve(
-                        task,
-                        supports,
-                        y,
-                        lam,
-                        Some(crate::solver::cd::Warm { w: &xs.w, b: xs.b }),
-                    )
+                    cd_solve_views(&quick, task, supports, y, lam, &xs.w, xs.b)
                 }
             }
             Err(_) => {
                 self.fallbacks.set(self.fallbacks.get() + 1);
-                self.cd.solve(
-                    task,
-                    supports,
-                    y,
-                    lam,
-                    Some(crate::solver::cd::Warm {
-                        w: warm_w,
-                        b: warm_b,
-                    }),
-                )
+                cd_solve_views(&self.cd, task, supports, y, lam, warm_w, warm_b)
             }
         }
     }

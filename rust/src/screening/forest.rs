@@ -50,6 +50,7 @@ use std::collections::HashMap;
 
 use super::pool::SupportPool;
 use super::sppc::{decide, fold_sums, NodeDecision, Survivor};
+use crate::columns::ColumnRead;
 use crate::mining::{
     Counting, Pattern, PatternNode, PatternSubstrate, TraverseStats, TreeVisitor, Walk,
 };
@@ -389,7 +390,9 @@ fn walk_stored(
             out.cert_skips += 1;
             continue; // certifiably pruned, column untouched
         }
-        let (pos, neg) = fold_sums(g, pool.get(node.support));
+        // layout-aware fold: hybrid pools run the 64-bit word kernel
+        // (bit-identical to the scalar `fold_sums`; `crate::columns`)
+        let (pos, neg) = pool.col(node.support).fold_signed(g);
         match decide(pos, neg, node.v, n, radius, feature_test) {
             NodeDecision::Prune { u } => {
                 // pruned (Theorem 2); stored subtree skipped

@@ -31,6 +31,8 @@ pub mod sppc;
 pub use forest::{ForestScreenOutcome, ScreenForest};
 pub use pool::{SupportId, SupportPool};
 
+pub use crate::columns::{ColumnLayout, ColumnRead, ColumnView, HybridColumn};
+
 use crate::data::graph::GraphDatabase;
 use crate::data::Transactions;
 use crate::mining::{Pattern, PatternSubstrate, TreeVisitor};

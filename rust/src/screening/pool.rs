@@ -14,10 +14,25 @@
 //!
 //! Ids are append-only and therefore **stable for the lifetime of the
 //! pool**: a path computation owns one pool for its whole λ grid.
+//!
+//! ## Column layout
+//!
+//! The pool interns into one of two layouts ([`ColumnLayout`], module
+//! docs of [`crate::columns`]): plain sorted `Vec<u32>` lists (the
+//! scalar oracle) or [`HybridColumn`]s whose dense 4096-id chunks carry
+//! bitmap words for the vectorized fold/intersection kernels.  Both
+//! layouts expose the same sorted ids — [`SupportPool::get`] still
+//! borrows a `&[u32]` — and the fold kernels visit ids in the same
+//! ascending order, so results are bit-identical across layouts
+//! (pinned by `tests/integration_columns.rs`).  Consumers that can
+//! exploit the words take a [`ColumnView`] via [`SupportPool::col`] /
+//! [`SupportPool::view`].
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+
+use crate::columns::{resolve_columns, ColumnLayout, ColumnView, HybridColumn};
 
 /// Dense handle of one interned support column.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -31,6 +46,31 @@ impl SupportId {
     }
 }
 
+/// One interned column in the pool's layout.
+#[derive(Clone, Debug)]
+enum Stored {
+    Sparse(Vec<u32>),
+    Hybrid(HybridColumn),
+}
+
+impl Stored {
+    #[inline]
+    fn ids(&self) -> &[u32] {
+        match self {
+            Stored::Sparse(ids) => ids,
+            Stored::Hybrid(col) => col.ids(),
+        }
+    }
+
+    #[inline]
+    fn view(&self) -> ColumnView<'_> {
+        match self {
+            Stored::Sparse(ids) => ColumnView::Sparse(ids),
+            Stored::Hybrid(col) => ColumnView::Hybrid(col),
+        }
+    }
+}
+
 /// Interning arena for support columns (see module docs).
 ///
 /// Each column is stored exactly once, in `columns`; the dedup index
@@ -38,10 +78,20 @@ impl SupportId {
 /// arena is the single owner — keying the map by the columns themselves
 /// would double the pool's resident memory, and columns dominate a
 /// path's allocations at paper scale).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct SupportPool {
-    columns: Vec<Vec<u32>>,
+    layout: ColumnLayout,
+    columns: Vec<Stored>,
     index: HashMap<u64, Vec<SupportId>>,
+}
+
+impl Default for SupportPool {
+    /// Same as [`SupportPool::new`]: layout resolved through the
+    /// `SPP_COLUMNS` knob so the whole test suite follows CI's
+    /// layout-matrix cell.
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 fn col_hash(col: &[u32]) -> u64 {
@@ -51,8 +101,28 @@ fn col_hash(col: &[u32]) -> u64 {
 }
 
 impl SupportPool {
+    /// A pool in the auto-resolved layout (`SPP_COLUMNS`, default
+    /// hybrid — [`crate::columns::resolve_columns`]).
     pub fn new() -> Self {
-        Self::default()
+        Self::with_layout(resolve_columns(None))
+    }
+
+    /// A pool interning columns in an explicit layout (what the path
+    /// engines use to honor `PathConfig::columns`, and what the
+    /// differential tests use to pin sparse-vs-hybrid bit-identity
+    /// without racing on the process environment).
+    pub fn with_layout(layout: ColumnLayout) -> Self {
+        Self {
+            layout,
+            columns: Vec::new(),
+            index: HashMap::new(),
+        }
+    }
+
+    /// The layout this pool interns into.
+    #[inline]
+    pub fn layout(&self) -> ColumnLayout {
+        self.layout
     }
 
     /// Number of distinct columns interned so far.
@@ -92,32 +162,45 @@ impl SupportPool {
             .get(&hv)?
             .iter()
             .copied()
-            .find(|id| self.columns[id.index()] == col)
+            .find(|id| self.columns[id.index()].ids() == col)
     }
 
     fn push_new(&mut self, hv: u64, col: Vec<u32>) -> SupportId {
         let id = SupportId(self.columns.len() as u32);
-        self.columns.push(col);
+        self.columns.push(match self.layout {
+            ColumnLayout::Sparse => Stored::Sparse(col),
+            ColumnLayout::Hybrid => Stored::Hybrid(HybridColumn::from_sorted(col)),
+        });
         self.index.entry(hv).or_default().push(id);
         id
     }
 
-    /// Borrow the canonical column for `id`.
+    /// Borrow the canonical column for `id` as its sorted record ids
+    /// (both layouts keep the full id list; module docs).
     #[inline]
     pub fn get(&self, id: SupportId) -> &[u32] {
-        &self.columns[id.index()]
+        self.columns[id.index()].ids()
     }
 
-    /// Borrowed views of many columns at once (what the restricted
+    /// Borrow the canonical column for `id` as a layout-aware view —
+    /// what the fold kernels consume so hybrid columns run over words.
+    #[inline]
+    pub fn col(&self, id: SupportId) -> ColumnView<'_> {
+        self.columns[id.index()].view()
+    }
+
+    /// Layout-aware views of many columns at once (what the restricted
     /// solver consumes).
-    pub fn view(&self, ids: &[SupportId]) -> Vec<&[u32]> {
-        ids.iter().map(|&id| self.get(id)).collect()
+    pub fn view(&self, ids: &[SupportId]) -> Vec<ColumnView<'_>> {
+        ids.iter().map(|&id| self.col(id)).collect()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::columns::ColumnRead;
+    use crate::testutil::SplitMix64;
 
     #[test]
     fn intern_dedups_by_content() {
@@ -163,7 +246,8 @@ mod tests {
         let a = pool.intern(&[1, 2]);
         let b = pool.intern(&[3]);
         let v = pool.view(&[b, a, b]);
-        assert_eq!(v, vec![&[3][..], &[1, 2][..], &[3][..]]);
+        let ids: Vec<&[u32]> = v.iter().map(|c| c.ids()).collect();
+        assert_eq!(ids, vec![&[3][..], &[1, 2][..], &[3][..]]);
     }
 
     #[test]
@@ -172,5 +256,65 @@ mod tests {
         let e = pool.intern(&[]);
         assert_eq!(pool.get(e), &[] as &[u32]);
         assert_eq!(pool.intern(&[]), e);
+    }
+
+    #[test]
+    fn both_layouts_round_trip_identical_ids() {
+        let mut rng = SplitMix64::new(31);
+        let n = 9000usize; // straddles two 4096-id chunks
+        let cols: Vec<Vec<u32>> = [0usize, 1, 63, 64, 65, 300, 4096, 4097, n]
+            .iter()
+            .map(|&m| rng.sample_distinct(n, m).into_iter().map(|i| i as u32).collect())
+            .collect();
+        let mut sparse = SupportPool::with_layout(ColumnLayout::Sparse);
+        let mut hybrid = SupportPool::with_layout(ColumnLayout::Hybrid);
+        for col in &cols {
+            let a = sparse.intern(col);
+            let b = hybrid.intern(col);
+            assert_eq!(a, b, "both layouts assign the same dense ids");
+            assert_eq!(sparse.get(a), &col[..]);
+            assert_eq!(hybrid.get(b), &col[..], "hybrid keeps the canonical sorted ids");
+            assert_eq!(hybrid.col(b).ids(), sparse.col(a).ids());
+        }
+        // dedup semantics are layout-independent
+        assert_eq!(sparse.len(), hybrid.len());
+    }
+
+    #[test]
+    fn hybrid_views_fold_bit_identically_to_sparse() {
+        let mut rng = SplitMix64::new(37);
+        let n = 5000usize;
+        let g: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let col: Vec<u32> = rng.sample_distinct(n, n / 2).into_iter().map(|i| i as u32).collect();
+        let mut sparse = SupportPool::with_layout(ColumnLayout::Sparse);
+        let mut hybrid = SupportPool::with_layout(ColumnLayout::Hybrid);
+        let a = sparse.intern(&col);
+        let b = hybrid.intern(&col);
+        assert_eq!(sparse.col(a).dot(&g).to_bits(), hybrid.col(b).dot(&g).to_bits());
+        let (sp, sn) = sparse.col(a).fold_signed(&g);
+        let (hp, hn) = hybrid.col(b).fold_signed(&g);
+        assert_eq!((sp.to_bits(), sn.to_bits()), (hp.to_bits(), hn.to_bits()));
+    }
+
+    #[test]
+    fn hash_collisions_keep_columns_distinct() {
+        // Two distinct columns forced into one `index` bucket: the
+        // `find` path must fall through on content inequality, and
+        // `push_new` must append to the shared bucket — regression
+        // cover for the collision arm, which real DefaultHasher inputs
+        // essentially never hit.
+        let mut pool = SupportPool::new();
+        let fake_hash = 0xDEAD_BEEFu64;
+        let a = pool.push_new(fake_hash, vec![1, 2, 3]);
+        assert_eq!(pool.find(fake_hash, &[4, 5]), None, "collision probe misses on content");
+        let b = pool.push_new(fake_hash, vec![4, 5]);
+        assert_ne!(a, b);
+        assert_eq!(pool.len(), 2);
+        // both columns stay findable through the shared bucket …
+        assert_eq!(pool.find(fake_hash, &[1, 2, 3]), Some(a));
+        assert_eq!(pool.find(fake_hash, &[4, 5]), Some(b));
+        // … and resolve to their own content
+        assert_eq!(pool.get(a), &[1, 2, 3]);
+        assert_eq!(pool.get(b), &[4, 5]);
     }
 }

@@ -26,6 +26,7 @@
 //! and the working set / restricted solver never clone them.
 
 use super::pool::{SupportId, SupportPool};
+use crate::columns::ColumnRead;
 use crate::mining::{
     Counting, Pattern, PatternNode, PatternSubstrate, SubtreeVisitors, TraverseStats, TreeVisitor,
     Walk,
@@ -50,17 +51,15 @@ pub struct Survivor {
 
 /// Positive/negative partial sums of `g` over a support column (the
 /// shared kernel of every bound in this module and the forest).
+///
+/// Delegates to [`ColumnRead::fold_signed`]: on plain id slices that is
+/// the branchless scalar sign-split loop (one memory stream, no
+/// mispredicts); on hybrid columns it is the 64-bit word kernel, which
+/// visits the same ids in the same ascending order and is therefore
+/// bit-identical ([`crate::columns`] module docs).
 #[inline]
 pub(crate) fn fold_sums(g: &[f64], support: &[u32]) -> (f64, f64) {
-    let mut pos = 0.0;
-    let mut neg = 0.0;
-    for &i in support {
-        // branchless sign split: one memory stream, no mispredicts
-        let gi = g[i as usize];
-        pos += gi.max(0.0);
-        neg += gi.min(0.0);
-    }
-    (pos, neg)
+    support.fold_signed(g)
 }
 
 /// `UB(t)` from the partial sums (Lemma 6; `n` = record count).
@@ -157,17 +156,20 @@ impl<'p> SppScreen<'p> {
     }
 
     /// The subtree criterion SPPC(t); exposed for tests/diagnostics.
+    /// Generic over the column layout: hybrid columns fold over bitmap
+    /// words, id slices over the scalar loop — bit-identically.
     #[inline]
-    pub fn sppc(&self, support: &[u32]) -> f64 {
-        let (pos, neg) = fold_sums(&self.g, support);
+    pub fn sppc<S: ColumnRead + ?Sized>(&self, support: &S) -> f64 {
+        let (pos, neg) = support.fold_signed(&self.g);
         let u = pos.max(-neg);
         u + self.radius * (support.len() as f64).sqrt()
     }
 
-    /// The per-feature bound UB(t) (Lemma 6).
+    /// The per-feature bound UB(t) (Lemma 6); layout-generic like
+    /// [`SppScreen::sppc`].
     #[inline]
-    pub fn feature_ub(&self, support: &[u32]) -> f64 {
-        let (pos, neg) = fold_sums(&self.g, support);
+    pub fn feature_ub<S: ColumnRead + ?Sized>(&self, support: &S) -> f64 {
+        let (pos, neg) = support.fold_signed(&self.g);
         feature_ub_from(pos, neg, support.len() as f64, self.n, self.radius)
     }
 }

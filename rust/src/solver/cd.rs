@@ -10,8 +10,11 @@
 //!
 //! Columns are the sparse pattern supports (sorted tid lists) — exactly
 //! what the miners emit; `solve` accepts anything column-shaped
-//! (`&[Vec<u32>]`, `&[&[u32]]` views borrowed from a
-//! [`crate::screening::SupportPool`], …).  Stopping follows the paper:
+//! through [`crate::columns::ColumnRead`] (`&[Vec<u32>]`, `&[&[u32]]`,
+//! and the layout-aware [`crate::columns::ColumnView`]s borrowed from a
+//! [`crate::screening::SupportPool`] — hybrid views run the gather and
+//! dynamic-screening folds over 64-bit bitmap words, bit-identically to
+//! the scalar walk).  Stopping follows the paper:
 //! duality gap below `tol` (1e-6 default), checked every few epochs
 //! against the gap-safe dual point from [`super::dual`].
 //!
@@ -27,6 +30,7 @@
 
 use super::dual;
 use super::problem::{dual_value, primal_value, Task};
+use crate::columns::ColumnRead;
 
 /// Solver configuration.
 #[derive(Clone, Copy, Debug)]
@@ -90,8 +94,9 @@ impl CdSolver {
     /// Solve eq. (6) over the given support columns.
     ///
     /// `supports[t]` is the sorted tid list of pattern `t` (binary
-    /// features).  `warm` seeds `(w, b)`; pass `None` for a cold start.
-    pub fn solve<S: AsRef<[u32]>>(
+    /// features), in any [`ColumnRead`] carrier.  `warm` seeds `(w, b)`;
+    /// pass `None` for a cold start.
+    pub fn solve<S: ColumnRead>(
         &self,
         task: Task,
         supports: &[S],
@@ -99,18 +104,7 @@ impl CdSolver {
         lam: f64,
         warm: Option<Warm<'_>>,
     ) -> Solution {
-        let cols: Vec<&[u32]> = supports.iter().map(|s| s.as_ref()).collect();
-        self.solve_cols(task, &cols, y, lam, warm)
-    }
-
-    fn solve_cols(
-        &self,
-        task: Task,
-        cols: &[&[u32]],
-        y: &[f64],
-        lam: f64,
-        warm: Option<Warm<'_>>,
-    ) -> Solution {
+        let cols = supports;
         assert!(lam > 0.0, "lambda must be positive");
         let n = y.len();
         let k = cols.len();
@@ -125,9 +119,7 @@ impl CdSolver {
         let mut m = vec![b; n];
         for (t, sup) in cols.iter().enumerate() {
             if w[t] != 0.0 {
-                for &i in *sup {
-                    m[i as usize] += w[t];
-                }
+                sup.for_each_id(|i| m[i] += w[t]);
             }
         }
         let v: Vec<f64> = cols.iter().map(|s| s.len() as f64).collect();
@@ -187,10 +179,10 @@ impl CdSolver {
 
     /// Build the dual certificate and objective values at `(w, b)`.
     #[allow(clippy::too_many_arguments)]
-    fn certify(
+    fn certify<S: ColumnRead>(
         &self,
         task: Task,
-        cols: &[&[u32]],
+        cols: &[S],
         y: &[f64],
         w: &[f64],
         b: f64,
@@ -230,9 +222,9 @@ impl CdSolver {
 /// the optimum of *this* restricted problem, so the final solution is
 /// unchanged.
 #[allow(clippy::too_many_arguments)]
-fn freeze_screened(
+fn freeze_screened<S: ColumnRead>(
     task: Task,
-    cols: &[&[u32]],
+    cols: &[S],
     y: &[f64],
     lam: f64,
     sol: &Solution,
@@ -250,14 +242,13 @@ fn freeze_screened(
         .collect();
     let before = unfrozen.len();
     unfrozen.retain(|&t| {
-        let s: f64 = cols[t].iter().map(|&i| g[i as usize]).sum();
+        // layout-aware gather: hybrid columns sum over bitmap words
+        let s = cols[t].dot(&g);
         let inner = (v[t] - v[t] * v[t] / n).max(0.0);
         let ub = s.abs() + radius * inner.sqrt();
         if ub < 1.0 {
             if w[t] != 0.0 {
-                for &i in cols[t] {
-                    m[i as usize] -= w[t];
-                }
+                cols[t].for_each_id(|i| m[i] -= w[t]);
                 w[t] = 0.0;
             }
             false
@@ -283,9 +274,9 @@ pub fn soft_threshold(z: f64, tau: f64) -> f64 {
 /// One cyclic pass for L1 least squares over the coordinates in
 /// `idxs`.  Returns max |Δ| seen.
 #[allow(clippy::too_many_arguments)]
-fn epoch_regression(
+fn epoch_regression<S: ColumnRead>(
     idxs: &[usize],
-    cols: &[&[u32]],
+    cols: &[S],
     y: &[f64],
     v: &[f64],
     w: &mut [f64],
@@ -296,22 +287,17 @@ fn epoch_regression(
     let n = y.len() as f64;
     let mut max_delta = 0.0f64;
     for &t in idxs {
-        let sup = cols[t];
+        let sup = &cols[t];
         if v[t] == 0.0 {
             continue;
         }
         // g = x_t^T r + v_t w_t  with r = y - m
         let mut g = v[t] * w[t];
-        for &i in sup {
-            let i = i as usize;
-            g += y[i] - m[i];
-        }
+        sup.for_each_id(|i| g += y[i] - m[i]);
         let w_new = soft_threshold(g, lam) / v[t];
         let delta = w_new - w[t];
         if delta != 0.0 {
-            for &i in sup {
-                m[i as usize] += delta;
-            }
+            sup.for_each_id(|i| m[i] += delta);
             w[t] = w_new;
             max_delta = max_delta.max(delta.abs());
         }
@@ -329,9 +315,9 @@ fn epoch_regression(
 /// One cyclic pass for L1 squared hinge over the coordinates in
 /// `idxs`.  Majorized prox steps with curvature `v_t`; returns max |Δ|.
 #[allow(clippy::too_many_arguments)]
-fn epoch_classification(
+fn epoch_classification<S: ColumnRead>(
     idxs: &[usize],
-    cols: &[&[u32]],
+    cols: &[S],
     y: &[f64],
     v: &[f64],
     w: &mut [f64],
@@ -342,25 +328,22 @@ fn epoch_classification(
     let n = y.len() as f64;
     let mut max_delta = 0.0f64;
     for &t in idxs {
-        let sup = cols[t];
+        let sup = &cols[t];
         if v[t] == 0.0 {
             continue;
         }
         // grad_t = -sum_{i in sup} y_i h_i
         let mut grad = 0.0;
-        for &i in sup {
-            let i = i as usize;
+        sup.for_each_id(|i| {
             let h = 1.0 - y[i] * m[i];
             if h > 0.0 {
                 grad -= y[i] * h;
             }
-        }
+        });
         let w_new = soft_threshold(v[t] * w[t] - grad, lam) / v[t];
         let delta = w_new - w[t];
         if delta != 0.0 {
-            for &i in sup {
-                m[i as usize] += delta;
-            }
+            sup.for_each_id(|i| m[i] += delta);
             w[t] = w_new;
             max_delta = max_delta.max(delta.abs());
         }
@@ -553,6 +536,31 @@ mod tests {
         assert_eq!(a.w, b.w);
         assert_eq!(a.b, b.b);
         assert_eq!(a.gap, b.gap);
+    }
+
+    #[test]
+    fn hybrid_columns_solve_bit_identically() {
+        use crate::columns::HybridColumn;
+        // n past one chunk and columns dense enough to build bitmap
+        // words: the whole solve — epochs, dynamic screening, dual
+        // certificates — must be bit-identical across layouts
+        for (seed, classify, lam) in [(35u64, false, 0.7), (36, true, 0.4)] {
+            let task = if classify {
+                Task::Classification
+            } else {
+                Task::Regression
+            };
+            let (sup, y) = random_problem(seed, 6000, 10, classify);
+            let hybrids: Vec<HybridColumn> =
+                sup.iter().map(|s| HybridColumn::from_sorted(s.clone())).collect();
+            let a = CdSolver::default().solve(task, &sup, &y, lam, None);
+            let b = CdSolver::default().solve(task, &hybrids, &y, lam, None);
+            assert_eq!(a.w, b.w, "weights drifted across layouts");
+            assert_eq!(a.b.to_bits(), b.b.to_bits());
+            assert_eq!(a.gap.to_bits(), b.gap.to_bits());
+            assert_eq!(a.epochs, b.epochs);
+            assert_eq!(a.screened, b.screened);
+        }
     }
 
     #[test]

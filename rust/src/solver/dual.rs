@@ -14,13 +14,16 @@
 //!   it exact via one bounded tree search).
 
 use super::problem::Task;
+use crate::columns::ColumnRead;
 
 /// Max over columns of `|Σ_{i∈sup} g_i|` for sparse supports (accepts
-/// owned columns or borrowed `&[u32]` views).
-pub fn max_abs_col_sum<S: AsRef<[u32]>>(supports: &[S], g: &[f64]) -> f64 {
+/// any [`ColumnRead`] carrier — owned columns, borrowed `&[u32]` views,
+/// or the pool's layout-aware views, whose hybrid columns sum over
+/// bitmap words bit-identically to the scalar walk).
+pub fn max_abs_col_sum<S: ColumnRead>(supports: &[S], g: &[f64]) -> f64 {
     let mut best = 0.0f64;
     for sup in supports {
-        let s: f64 = sup.as_ref().iter().map(|&i| g[i as usize]).sum();
+        let s = sup.dot(g);
         best = best.max(s.abs());
     }
     best
@@ -30,7 +33,7 @@ pub fn max_abs_col_sum<S: AsRef<[u32]>>(supports: &[S], g: &[f64]) -> f64 {
 /// `r_i = y_i − (xᵢᵀw + b)`.
 ///
 /// Returns `θ` with `Σθ = 0` and `|x_tᵀθ| ≤ 1` over `supports`.
-pub fn dual_point_regression<S: AsRef<[u32]>>(r: &[f64], lam: f64, supports: &[S]) -> Vec<f64> {
+pub fn dual_point_regression<S: ColumnRead>(r: &[f64], lam: f64, supports: &[S]) -> Vec<f64> {
     let n = r.len();
     let mean = r.iter().sum::<f64>() / n as f64;
     let mut theta: Vec<f64> = r.iter().map(|&ri| (ri - mean) / lam).collect();
@@ -48,7 +51,7 @@ pub fn dual_point_regression<S: AsRef<[u32]>>(r: &[f64], lam: f64, supports: &[S
 /// Returns `θ ≥ 0` with `yᵀθ ≈ 0` (alternating projections + exact
 /// final step, clipping O(eps) negatives) and `|Σ y_i x_it θ_i| ≤ 1`
 /// over `supports`.
-pub fn dual_point_classification<S: AsRef<[u32]>>(
+pub fn dual_point_classification<S: ColumnRead>(
     h: &[f64],
     y: &[f64],
     lam: f64,
@@ -84,7 +87,7 @@ pub fn dual_point_classification<S: AsRef<[u32]>>(
 
 /// Unified entry: slacks are residuals (regression) or hinge slacks
 /// (classification); see `problem::SampleState`.
-pub fn dual_point<S: AsRef<[u32]>>(
+pub fn dual_point<S: ColumnRead>(
     task: Task,
     slack: &[f64],
     y: &[f64],

@@ -1,0 +1,261 @@
+//! Hybrid sparse/bitset support columns, end to end — two layers:
+//!
+//! 1. **Property round-trips**: [`HybridColumn`] against the
+//!    sorted-`Vec<u32>` oracle at every boundary size (0, 1, 63, 64,
+//!    65, the dense cutoff ±1, chunk-span ±1, one id per chunk, every
+//!    record) — intern → iterate → intersect → dot, with the float
+//!    kernels compared **bitwise** (the word kernels must reproduce the
+//!    scalar accumulation order exactly, not merely approximately).
+//! 2. **Differential kernel-oracle**: full SPP paths with a sparse pool
+//!    vs a hybrid pool must be bit-identical — active sets,
+//!    weight/intercept/gap bits, |Â|, solver epochs, node counts, reuse
+//!    telemetry — on all three shipped substrates, crossed with
+//!    forest/scratch screening and per-λ/chunked grids.  The layouts
+//!    are requested through `PathConfig::columns` (never the
+//!    environment, which tests must not race on).
+
+use spp::columns::{ColumnLayout, ColumnRead, HybridColumn, CHUNK_SPAN, DENSE_CUTOFF};
+use spp::data::sequence::{self, SeqSynthConfig};
+use spp::data::synth_graphs::{self, GraphSynthConfig};
+use spp::data::synth_itemsets::{self, ItemsetSynthConfig};
+use spp::mining::PatternSubstrate;
+use spp::path::{compute_path_spp, PathConfig, PathResult};
+use spp::solver::Task;
+use spp::testutil::SplitMix64;
+
+// ---------------------------------------------------------------------------
+// layer 1: property round-trips vs the sorted-Vec<u32> oracle
+// ---------------------------------------------------------------------------
+
+fn scalar_dot(ids: &[u32], g: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for &i in ids {
+        acc += g[i as usize];
+    }
+    acc
+}
+
+fn scalar_fold(ids: &[u32], g: &[f64]) -> (f64, f64) {
+    let (mut pos, mut neg) = (0.0f64, 0.0f64);
+    for &i in ids {
+        let gi = g[i as usize];
+        pos += gi.max(0.0);
+        neg += gi.min(0.0);
+    }
+    (pos, neg)
+}
+
+fn scalar_intersect(a: &[u32], b: &[u32]) -> Vec<u32> {
+    a.iter().filter(|x| b.binary_search(x).is_ok()).copied().collect()
+}
+
+/// Every boundary size the chunk/word geometry exposes, plus the two
+/// degenerate shapes: one id per chunk and all records present.
+fn boundary_columns(rng: &mut SplitMix64, n: usize) -> Vec<Vec<u32>> {
+    let span = CHUNK_SPAN as usize;
+    let sizes = [
+        0,
+        1,
+        63,
+        64,
+        65,
+        DENSE_CUTOFF - 1,
+        DENSE_CUTOFF,
+        DENSE_CUTOFF + 1,
+        span - 1,
+        span,
+        span + 1,
+        n / 2,
+        n - 1,
+        n,
+    ];
+    let mut cols: Vec<Vec<u32>> = sizes
+        .iter()
+        .map(|&m| rng.sample_distinct(n, m).into_iter().map(|i| i as u32).collect())
+        .collect();
+    cols.push((0..n as u32).step_by(span).collect()); // one id per chunk
+    cols.push((0..n as u32).collect()); // every record, again, contiguous
+    cols
+}
+
+#[test]
+fn boundary_columns_round_trip_and_dot_bitwise() {
+    let mut rng = SplitMix64::new(61);
+    let n = 3 * CHUNK_SPAN as usize + 137;
+    let g: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+    for ids in boundary_columns(&mut rng, n) {
+        let col = HybridColumn::from_sorted(ids.clone());
+        // intern → iterate: the canonical sorted ids survive
+        assert_eq!(col.ids(), &ids[..]);
+        assert_eq!(col.len(), ids.len());
+        let mut walked = Vec::with_capacity(ids.len());
+        col.for_each_id(|i| walked.push(i as u32));
+        assert_eq!(walked, ids, "for_each_id must yield ascending ids");
+        // dot / fold: bitwise against the scalar oracle
+        assert_eq!(col.dot_words(&g).to_bits(), scalar_dot(&ids, &g).to_bits());
+        let (hp, hn) = col.fold_signed_words(&g);
+        let (sp, sn) = scalar_fold(&ids, &g);
+        assert_eq!((hp.to_bits(), hn.to_bits()), (sp.to_bits(), sn.to_bits()));
+        // membership probes agree with binary search on the boundary
+        for probe in [0u32, 63, 64, CHUNK_SPAN - 1, CHUNK_SPAN, n as u32 - 1] {
+            assert_eq!(col.contains(probe), ids.binary_search(&probe).is_ok(), "probe {probe}");
+        }
+    }
+}
+
+#[test]
+fn boundary_columns_intersect_like_the_oracle() {
+    let mut rng = SplitMix64::new(67);
+    let n = 2 * CHUNK_SPAN as usize + 513;
+    let cols = boundary_columns(&mut rng, n);
+    let hybrids: Vec<HybridColumn> =
+        cols.iter().map(|c| HybridColumn::from_sorted(c.clone())).collect();
+    let mut out = HybridColumn::default();
+    for (a, ha) in cols.iter().zip(&hybrids) {
+        for (b, hb) in cols.iter().zip(&hybrids) {
+            HybridColumn::intersect_into(ha, hb, &mut out);
+            let want = scalar_intersect(a, b);
+            assert_eq!(out.ids(), &want[..], "|a|={} |b|={}", a.len(), b.len());
+            // the result is itself a well-formed column: re-intersecting
+            // with a full set round-trips it
+            let full = HybridColumn::from_sorted((0..n as u32).collect());
+            let mut again = HybridColumn::default();
+            HybridColumn::intersect_into(&out, &full, &mut again);
+            assert_eq!(again.ids(), &want[..]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// layer 2: differential kernel-oracle — sparse vs hybrid full paths
+// ---------------------------------------------------------------------------
+
+fn cfg(n_lambdas: usize, maxpat: usize, reuse: bool, chunk: usize) -> PathConfig {
+    PathConfig {
+        n_lambdas,
+        lambda_min_ratio: 0.05,
+        maxpat,
+        reuse_forest: reuse,
+        range_chunk: chunk,
+        ..PathConfig::default()
+    }
+}
+
+/// Bitwise equality of everything the two layouts produced, telemetry
+/// included: the hybrid kernels must not change what work happens, only
+/// how each fold/intersection is computed.
+fn assert_results_bitwise(a: &PathResult, b: &PathResult) {
+    assert_eq!(a.lambda_max.to_bits(), b.lambda_max.to_bits());
+    assert_eq!(a.points.len(), b.points.len());
+    for (p, q) in a.points.iter().zip(&b.points) {
+        assert_eq!(p.lambda.to_bits(), q.lambda.to_bits());
+        assert_eq!(p.active.len(), q.active.len(), "active-set size at λ={}", p.lambda);
+        for ((pa, wa), (pb, wb)) in p.active.iter().zip(&q.active) {
+            assert_eq!(pa, pb, "active pattern/order mismatch at λ={}", p.lambda);
+            assert_eq!(
+                wa.to_bits(),
+                wb.to_bits(),
+                "weight bits differ at λ={} on {}: {wa} vs {wb}",
+                p.lambda,
+                pa.display()
+            );
+        }
+        assert_eq!(p.b.to_bits(), q.b.to_bits(), "intercept bits at λ={}", p.lambda);
+        assert_eq!(p.gap.to_bits(), q.gap.to_bits(), "gap bits at λ={}", p.lambda);
+        assert!(p.gap <= 2e-6, "uncertified λ={}", p.lambda);
+        assert_eq!(p.working_size, q.working_size, "|Â| at λ={}", p.lambda);
+        assert_eq!(p.cd_epochs, q.cd_epochs, "solver epochs at λ={}", p.lambda);
+        assert_eq!(p.stats, q.stats, "node counts at λ={}", p.lambda);
+        assert_eq!(p.reuse, q.reuse, "reuse telemetry at λ={}", p.lambda);
+    }
+}
+
+/// Sparse vs hybrid on one substrate/config (layouts via the config,
+/// never the environment).
+fn case<S: PatternSubstrate>(db: &S, y: &[f64], task: Task, base: &PathConfig) {
+    let mut sparse = *base;
+    sparse.columns = Some(ColumnLayout::Sparse);
+    let mut hybrid = *base;
+    hybrid.columns = Some(ColumnLayout::Hybrid);
+    let a = compute_path_spp(db, y, task, &sparse).unwrap();
+    let b = compute_path_spp(db, y, task, &hybrid).unwrap();
+    assert_results_bitwise(&a, &b);
+}
+
+#[test]
+fn itemsets_sparse_vs_hybrid_bit_identical() {
+    for (seed, classify) in [(111u64, false), (112, true)] {
+        let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(seed, classify));
+        let task = if classify {
+            Task::Classification
+        } else {
+            Task::Regression
+        };
+        for reuse in [true, false] {
+            for chunk in [1usize, 4] {
+                case(&d.db, &d.y, task, &cfg(10, 3, reuse, chunk));
+            }
+        }
+    }
+}
+
+#[test]
+fn graphs_sparse_vs_hybrid_bit_identical() {
+    for (seed, classify) in [(113u64, false), (114, true)] {
+        let d = synth_graphs::generate(&GraphSynthConfig::tiny(seed, classify));
+        let task = if classify {
+            Task::Classification
+        } else {
+            Task::Regression
+        };
+        for reuse in [true, false] {
+            for chunk in [1usize, 4] {
+                case(&d.db, &d.db.y, task, &cfg(8, 3, reuse, chunk));
+            }
+        }
+    }
+}
+
+#[test]
+fn sequences_sparse_vs_hybrid_bit_identical() {
+    for (seed, classify) in [(115u64, false), (116, true)] {
+        let d = sequence::generate(&SeqSynthConfig::tiny(seed, classify));
+        let task = if classify {
+            Task::Classification
+        } else {
+            Task::Regression
+        };
+        for reuse in [true, false] {
+            for chunk in [1usize, 4] {
+                case(&d.db, &d.y, task, &cfg(8, 3, reuse, chunk));
+            }
+        }
+    }
+}
+
+#[test]
+fn hybrid_layout_is_bit_identical_across_worker_counts() {
+    // the parallel contract holds under the hybrid kernels too: threads
+    // 1 vs N with hybrid columns, full bitwise equality incl. telemetry
+    let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(117, false));
+    let mut c1 = cfg(10, 3, true, 4);
+    c1.columns = Some(ColumnLayout::Hybrid);
+    c1.threads = 1;
+    let mut c4 = c1;
+    c4.threads = 4;
+    let a = compute_path_spp(&d.db, &d.y, Task::Regression, &c1).unwrap();
+    let b = compute_path_spp(&d.db, &d.y, Task::Regression, &c4).unwrap();
+    assert_results_bitwise(&a, &b);
+}
+
+#[test]
+fn dense_preset_runs_the_word_kernels_and_stays_identical() {
+    // splice is the dense regime (supports cover most records): the
+    // hybrid pool actually builds bitmap chunks here, so this pins the
+    // word kernels — not just the sparse fallback — against the oracle
+    let data = spp::data::registry::lookup("splice", 0.08).unwrap();
+    let spp::data::registry::Dataset::Itemsets(t) = &data else {
+        unreachable!()
+    };
+    case(&t.db, &t.y, Task::Classification, &cfg(8, 3, true, 1));
+}

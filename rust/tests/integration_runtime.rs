@@ -150,8 +150,10 @@ fn oversized_problems_fall_back_to_cd() {
     let n = 40_000;
     let supports = random_supports(&mut rng, n, 5, 50);
     let y: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+    use spp::columns::ColumnView;
     use spp::path::RestrictedSolver;
-    let views: Vec<&[u32]> = supports.iter().map(|s| s.as_slice()).collect();
+    let views: Vec<ColumnView> =
+        supports.iter().map(|s| ColumnView::Sparse(s.as_slice())).collect();
     let sol = solver.solve_restricted(Task::Regression, &views, &y, 5.0, &[0.0; 5], 0.0);
     assert!(sol.gap <= 1e-6);
     assert!(solver.fallbacks.get() >= 1);

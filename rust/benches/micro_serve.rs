@@ -1,0 +1,126 @@
+//! MICRO: naive vs compiled batch matchers, per substrate.
+//!
+//! The serve layer's claim is one pass per record: the naive scorer
+//! makes `records × patterns` matcher calls, the compiled matcher
+//! walks each record once through a specialized index.  One `ROW` per
+//! substrate records both rates (records/s), the work metric on each
+//! side (`naive_calls` = records × patterns vs `compiled_ops` =
+//! posting visits / trie activations / containment calls), and the
+//! speedup.  Every measured pair is asserted score-bit-identical
+//! inline first, so a matcher regression fails the bench before it
+//! skews a number.  `SPP_BENCH_SCALE` scales the dataset (CI smoke
+//! runs 0.05).
+
+use spp::data::registry::{self, Dataset};
+use spp::mining::{Pattern, PatternNode, PatternSubstrate, Walk};
+use spp::model::SparsePatternModel;
+use spp::serve::compiled::CompiledModel;
+
+/// Best records/s over `samples` runs of `f` (returns records done).
+fn best_rate<F: FnMut() -> u64>(samples: usize, mut f: F) -> f64 {
+    let mut best = 0.0f64;
+    for _ in 0..samples {
+        let t = std::time::Instant::now();
+        let recs = f();
+        let dt = t.elapsed().as_secs_f64();
+        best = best.max(recs as f64 / dt);
+    }
+    best
+}
+
+/// Mine up to `cap` patterns and attach deterministic weights.
+fn mined_model(data: &Dataset, maxpat: usize, minsup: usize, cap: usize) -> SparsePatternModel {
+    let mut pats: Vec<Pattern> = Vec::new();
+    {
+        let mut v = |n: &PatternNode<'_>| {
+            pats.push(n.to_pattern());
+            Walk::Descend
+        };
+        match data {
+            Dataset::Graphs(g) => g.traverse(maxpat, minsup, &mut v),
+            Dataset::Itemsets(t) => t.db.traverse(maxpat, minsup, &mut v),
+            Dataset::Sequences(s) => s.db.traverse(maxpat, minsup, &mut v),
+        }
+    }
+    pats.truncate(cap);
+    let terms = pats
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| (p, ((i % 7) as f64 - 3.0) * 0.25 + 0.125))
+        .collect();
+    SparsePatternModel { task: spp::solver::Task::Classification, lambda: 0.25, b: 0.375, terms }
+}
+
+fn naive_scores(model: &SparsePatternModel, data: &Dataset) -> Vec<f64> {
+    match data {
+        Dataset::Graphs(g) => g.graphs.iter().map(|r| model.score_graph(r)).collect(),
+        Dataset::Itemsets(t) => t.db.items.iter().map(|r| model.score_itemset(r)).collect(),
+        Dataset::Sequences(s) => s.db.seqs.iter().map(|r| model.score_sequence(r)).collect(),
+    }
+}
+
+fn main() {
+    let scale: f64 = std::env::var("SPP_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    println!("# micro_serve: naive vs compiled matchers (SPP_BENCH_SCALE={scale})");
+
+    // (dataset, base scale, maxpat, minsup, pattern cap) per substrate.
+    let cases = [
+        ("splice", 0.5, 3, 5, 400),
+        ("synth-seq", 0.5, 3, 2, 400),
+        ("cpdb", 0.3, 3, 2, 200),
+    ];
+    for (name, base, maxpat, minsup, cap) in cases {
+        let data = match registry::lookup(name, (base * scale).clamp(0.01, 1.0)) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("skip {name}: {e}");
+                continue;
+            }
+        };
+        let model = mined_model(&data, maxpat, minsup, cap);
+        if model.terms.is_empty() {
+            eprintln!("skip {name}: no patterns mined");
+            continue;
+        }
+        let kind = model.terms[0].0.kind_tag();
+        let compiled = CompiledModel::compile_for(&model, kind).expect("compile");
+        let n = match &data {
+            Dataset::Graphs(g) => g.graphs.len(),
+            Dataset::Itemsets(t) => t.db.items.len(),
+            Dataset::Sequences(s) => s.db.seqs.len(),
+        } as u64;
+
+        // Inline oracle: the compiled matcher must be score-bit-exact
+        // against the naive scorer before any rate is reported.
+        let oracle = naive_scores(&model, &data);
+        let out = compiled.score_dataset(&data, 1).expect("score");
+        assert_eq!(out.scores.len(), oracle.len());
+        for (a, b) in out.scores.iter().zip(&oracle) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{name}: compiled != naive");
+        }
+        let compiled_ops = out.ops;
+        let naive_calls = n * model.terms.len() as u64;
+
+        let naive_rate = best_rate(3, || {
+            std::hint::black_box(naive_scores(&model, &data));
+            n
+        });
+        let compiled_rate = best_rate(3, || {
+            let out = compiled.score_dataset(&data, 1).expect("score");
+            std::hint::black_box(out.scores.len());
+            n
+        });
+        println!(
+            "ROW bench=serve kind={kind} dataset={name} n={n} patterns={} \
+             naive_calls={naive_calls} compiled_ops={compiled_ops} \
+             naive_rps={:.1} compiled_rps={:.1} speedup={:.2}",
+            model.terms.len(),
+            naive_rate,
+            compiled_rate,
+            compiled_rate / naive_rate
+        );
+    }
+}

@@ -170,6 +170,12 @@ impl Args {
         self.flag(name).unwrap_or(default)
     }
 
+    /// The value of a mandatory flag, or an error naming it.
+    pub fn require(&self, name: &str) -> crate::Result<&str> {
+        self.flag(name)
+            .ok_or_else(|| anyhow::anyhow!("--{name} <value> is required"))
+    }
+
     pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.flag(name) {
             None => Ok(default),
@@ -316,6 +322,14 @@ mod tests {
     fn bad_numbers_error() {
         let a = parse("x --n abc");
         assert!(a.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn require_names_the_missing_flag() {
+        let a = parse("predict --model m.txt");
+        assert_eq!(a.require("model").unwrap(), "m.txt");
+        let e = a.require("dataset").unwrap_err().to_string();
+        assert!(e.contains("--dataset"), "{e}");
     }
 
     #[test]

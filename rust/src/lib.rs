@@ -50,6 +50,10 @@
 //!   [`runtime::parallel`] — the deterministic worker pool behind the
 //!   engine's `--threads` knob (parallel runs are bit-identical to
 //!   sequential; DESIGN.md §6).
+//! * [`serve`] — the persistent prediction service behind `spp serve`:
+//!   a line-delimited JSON protocol, a hot-reloadable model registry,
+//!   and compiled per-substrate matchers that score a batch in one
+//!   pass per record while staying bit-identical to the naive scorer.
 //! * [`coordinator`] — experiment orchestration: worker pool, metrics,
 //!   result reporting; drives every figure bench.
 //! * [`testutil`] — SplitMix64 PRNG, property-test harness, brute-force
@@ -90,6 +94,7 @@ pub mod model;
 pub mod path;
 pub mod runtime;
 pub mod screening;
+pub mod serve;
 pub mod solver;
 pub mod testutil;
 

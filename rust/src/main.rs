@@ -15,7 +15,10 @@
 //!                [--lambdas 100] [--min-ratio 0.01] [--scale 1.0]
 //!                [--lambda-index K]     # default: smallest λ
 //! spp predict    --dataset synth-seq --model out.spp [--scale 1.0]
-//!                [--top 10]
+//!                [--top 10] [--matcher compiled|naive] [--threads N]
+//! spp serve      --stdio | --socket /path/to.sock [--threads N]
+//!                # persistent JSON-lines prediction service (see
+//!                # DESIGN.md: compiled matcher, hot reload)
 //! spp lambda-max --dataset splice --maxpat 4 [--scale 1.0]
 //! spp mine       --dataset cpdb --maxpat 3 [--top 20] [--minsup 2]
 //! spp selftest   [--artifacts DIR]     # PJRT round-trip vs Rust engine
@@ -41,7 +44,7 @@ use spp::SppEstimator;
 /// Switches: flags that never consume a non-boolean token (see
 /// `cli::Args`).  `help` keeps the universal `spp <command> --help`
 /// habit working under the strict grammar.
-const SWITCHES: &[&str] = &["certify", "dynamic-screen", "help", "no-reuse"];
+const SWITCHES: &[&str] = &["certify", "dynamic-screen", "help", "no-reuse", "stdio"];
 
 /// Every value-taking flag any subcommand reads — the complete declared
 /// grammar; anything else is rejected with the flag named.
@@ -55,6 +58,7 @@ const FLAGS: &[&str] = &[
     "k-add",
     "lambda-index",
     "lambdas",
+    "matcher",
     "maxpat",
     "method",
     "min-ratio",
@@ -63,6 +67,7 @@ const FLAGS: &[&str] = &[
     "range-chunk",
     "scale",
     "seed",
+    "socket",
     "threads",
     "top",
 ];
@@ -91,6 +96,7 @@ fn dispatch(args: &cli::Args) -> spp::Result<()> {
         "cv" => cmd_cv(args),
         "fit" => cmd_fit(args),
         "predict" => cmd_predict(args),
+        "serve" => cmd_serve(args),
         "lambda-max" => cmd_lambda_max(args),
         "mine" => cmd_mine(args),
         "selftest" => cmd_selftest(args),
@@ -111,6 +117,7 @@ commands:
   cv          k-fold cross-validation over the path (model selection)
   fit         fit a sparse pattern model (SPP path) and save it
   predict     load a saved model and predict a dataset
+  serve       persistent prediction service (JSON lines over stdio/socket)
   lambda-max  compute the paper's §3.4.1 lambda_max by bounded search
   mine        enumerate frequent patterns (substrate smoke test)
   selftest    verify the PJRT/XLA engines against the Rust engines
@@ -259,9 +266,7 @@ fn cmd_cv(args: &cli::Args) -> spp::Result<()> {
 fn cmd_fit(args: &cli::Args) -> spp::Result<()> {
     let dataset = args.get_or("dataset", "splice");
     let scale = args.get_f64("scale", 1.0)?;
-    let out = args
-        .flag("model")
-        .ok_or_else(|| anyhow::anyhow!("--model <file> is required"))?;
+    let out = args.require("model")?;
     let info = registry::info(dataset)
         .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
     let data = registry::lookup(dataset, scale)?;
@@ -310,13 +315,19 @@ fn cmd_fit(args: &cli::Args) -> spp::Result<()> {
 }
 
 /// Load a persisted model and predict a registry dataset.
+///
+/// `--matcher compiled` (the default) routes scoring through the serve
+/// layer's compiled matcher — one pass per record instead of one per
+/// (record, pattern) pair — and reports its telemetry on the summary
+/// line; `--matcher naive` keeps the historical per-pattern scorer as
+/// a differential oracle.  Predictions are bit-identical either way
+/// (pinned by `tests/integration_serve.rs`).
 fn cmd_predict(args: &cli::Args) -> spp::Result<()> {
     let dataset = args.get_or("dataset", "splice");
     let scale = args.get_f64("scale", 1.0)?;
     let top = args.get_usize("top", 10)?;
-    let file = args
-        .flag("model")
-        .ok_or_else(|| anyhow::anyhow!("--model <file> is required"))?;
+    let threads = args.get_usize("threads", 0)?;
+    let file = args.require("model")?;
     let model = SparsePatternModel::parse(&std::fs::read_to_string(file)?)?;
     let info = registry::info(dataset)
         .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
@@ -342,10 +353,31 @@ fn cmd_predict(args: &cli::Args) -> spp::Result<()> {
          substrate than dataset '{dataset}'"
     );
     let data = registry::lookup(dataset, scale)?;
-    let preds = match &data {
-        Dataset::Graphs(g) => model.predict(g),
-        Dataset::Itemsets(t) => model.predict(&t.db),
-        Dataset::Sequences(s) => model.predict(&s.db),
+    let (preds, telemetry) = match args.get_or("matcher", "compiled") {
+        "naive" => {
+            let preds = match &data {
+                Dataset::Graphs(g) => model.predict(g),
+                Dataset::Itemsets(t) => model.predict(&t.db),
+                Dataset::Sequences(s) => model.predict(&s.db),
+            };
+            let calls = (model.terms.len() as u64) * (data.n_records() as u64);
+            (preds, format!("matcher=naive match_calls={calls}"))
+        }
+        "compiled" => {
+            let compiled =
+                spp::serve::compiled::CompiledModel::compile_for(&model, expected_tag)?;
+            let out = compiled.score_dataset(&data, threads)?;
+            let preds: Vec<f64> = out.scores.iter().map(|&s| compiled.output(s)).collect();
+            let telemetry = format!(
+                "matcher=compiled compiled_patterns={} index_nodes={} records_per_pass={} ops={}",
+                compiled.stats.compiled_terms,
+                compiled.stats.index_nodes,
+                preds.len(),
+                out.ops
+            );
+            (preds, telemetry)
+        }
+        other => anyhow::bail!("--matcher must be compiled|naive, got '{other}'"),
     };
     let y = data.targets();
     match model.task {
@@ -356,7 +388,7 @@ fn cmd_predict(args: &cli::Args) -> spp::Result<()> {
                 .filter(|(&p, &yi)| (p >= 0.0) == (yi > 0.0))
                 .count();
             println!(
-                "predict {dataset}: n={} accuracy={:.1}% ({} patterns in model)",
+                "predict {dataset}: n={} accuracy={:.1}% ({} patterns in model) {telemetry}",
                 preds.len(),
                 100.0 * correct as f64 / preds.len().max(1) as f64,
                 model.terms.len()
@@ -370,7 +402,7 @@ fn cmd_predict(args: &cli::Args) -> spp::Result<()> {
                 .sum::<f64>()
                 / preds.len().max(1) as f64;
             println!(
-                "predict {dataset}: n={} mse={:.4} ({} patterns in model)",
+                "predict {dataset}: n={} mse={:.4} ({} patterns in model) {telemetry}",
                 preds.len(),
                 mse,
                 model.terms.len()
@@ -381,6 +413,26 @@ fn cmd_predict(args: &cli::Args) -> spp::Result<()> {
         println!("  record {i:<5} pred={p:+.4} y={yi:+.4}");
     }
     Ok(())
+}
+
+/// Persistent prediction service: line-delimited JSON requests over
+/// stdin/stdout (`--stdio`) or a Unix domain socket (`--socket PATH`),
+/// with hot-reloadable models and the compiled batch matcher.  Stdio
+/// mode writes nothing but response lines to stdout, so canned
+/// sessions pipe and diff cleanly (the CI `serve-smoke` job does
+/// exactly that against a golden transcript).
+fn cmd_serve(args: &cli::Args) -> spp::Result<()> {
+    let threads = args.get_usize("threads", 0)?;
+    let stdio = args.switch("stdio");
+    let socket = args.flag("socket");
+    match (stdio, socket) {
+        (true, Some(_)) => anyhow::bail!("--stdio and --socket are mutually exclusive"),
+        (false, Some(path)) => spp::serve::run_unix_socket(path, threads),
+        (true, None) => spp::serve::run_stdio(threads),
+        (false, None) => {
+            anyhow::bail!("serve needs a transport: --stdio or --socket /path/to.sock")
+        }
+    }
 }
 
 /// SPP path with the XLA FISTA engine for the restricted solves.

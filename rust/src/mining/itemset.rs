@@ -291,10 +291,46 @@ pub fn intersect_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
     }
 }
 
+/// Is `items` in transaction normal form — strictly increasing ids?
+///
+/// Every row the miners and generators produce satisfies this, and it
+/// is exactly the precondition under which the merge-based matcher
+/// (`synth_itemsets::contains_all`) reduces to a plain subset test —
+/// the reduction the serve-time compiled matcher
+/// (`serve::compiled`) builds its postings on.
+#[inline]
+pub fn is_strictly_increasing(items: &[u32]) -> bool {
+    items.windows(2).all(|w| w[0] < w[1])
+}
+
+/// Bring an arbitrary item list into transaction normal form: sort
+/// ascending and drop duplicates.  Used by the serve protocol to
+/// normalize item-set records arriving over the wire before they meet
+/// kernels that assume the [`is_strictly_increasing`] invariant.
+pub fn normalize_items(mut items: Vec<u32>) -> Vec<u32> {
+    if !is_strictly_increasing(&items) {
+        items.sort_unstable();
+        items.dedup();
+    }
+    items
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::mining::Pattern;
+
+    #[test]
+    fn normal_form_checks_and_normalization() {
+        assert!(is_strictly_increasing(&[]));
+        assert!(is_strictly_increasing(&[3]));
+        assert!(is_strictly_increasing(&[1, 2, 9]));
+        assert!(!is_strictly_increasing(&[1, 1]));
+        assert!(!is_strictly_increasing(&[2, 1]));
+        assert_eq!(normalize_items(vec![]), Vec::<u32>::new());
+        assert_eq!(normalize_items(vec![1, 2, 9]), vec![1, 2, 9]);
+        assert_eq!(normalize_items(vec![9, 1, 2, 1, 9]), vec![1, 2, 9]);
+    }
 
     fn db() -> Transactions {
         // 4 items, 5 transactions

@@ -70,6 +70,32 @@ impl Pattern {
         }
     }
 
+    /// The item list of an [`Pattern::Itemset`], else `None` — the
+    /// introspection hook the serve-time compiled matcher
+    /// (`serve::compiled`) specializes postings from.
+    pub fn as_itemset(&self) -> Option<&[u32]> {
+        match self {
+            Pattern::Itemset(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// The DFS code of a [`Pattern::Subgraph`], else `None`.
+    pub fn as_subgraph(&self) -> Option<&[gspan::DfsEdge]> {
+        match self {
+            Pattern::Subgraph(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// The symbol list of a [`Pattern::Sequence`], else `None`.
+    pub fn as_sequence(&self) -> Option<&[u32]> {
+        match self {
+            Pattern::Sequence(s) => Some(s),
+            _ => None,
+        }
+    }
+
     /// Human-readable form used in model dumps.
     pub fn display(&self) -> String {
         match self {
@@ -367,6 +393,25 @@ mod tests {
         let p = Pattern::Itemset(vec![1, 4, 9]);
         assert_eq!(p.size(), 3);
         assert_eq!(p.display(), "{1,4,9}");
+    }
+
+    #[test]
+    fn introspection_accessors_return_own_kind_only() {
+        let i = Pattern::Itemset(vec![1, 4]);
+        let g = Pattern::Subgraph(vec![gspan::DfsEdge {
+            from: 0,
+            to: 1,
+            from_label: 2,
+            elabel: 0,
+            to_label: 3,
+        }]);
+        let s = Pattern::Sequence(vec![7, 7]);
+        assert_eq!(i.as_itemset(), Some(&[1u32, 4][..]));
+        assert!(i.as_subgraph().is_none() && i.as_sequence().is_none());
+        assert_eq!(g.as_subgraph().map(|c| c.len()), Some(1));
+        assert!(g.as_itemset().is_none() && g.as_sequence().is_none());
+        assert_eq!(s.as_sequence(), Some(&[7u32, 7][..]));
+        assert!(s.as_itemset().is_none() && s.as_subgraph().is_none());
     }
 
     #[test]

@@ -172,12 +172,32 @@ impl<'a> PrefixSpanMiner<'a> {
     }
 }
 
+/// Length of the longest common prefix of two symbol lists.
+///
+/// The enumeration tree's parent relation *is* "longest proper prefix"
+/// (module docs), so this is the amount of tree path two patterns
+/// share.  The serve-time compiled matcher (`serve::compiled`) uses it
+/// to fold a model's sequence patterns, sorted lexicographically, into
+/// a shared-prefix discrimination trie with a stack walk.
+#[inline]
+pub fn common_prefix_len(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::sequence::is_subsequence;
     use crate::mining::Pattern;
     use crate::testutil::oracle;
+
+    #[test]
+    fn common_prefix_len_basics() {
+        assert_eq!(common_prefix_len(&[], &[1, 2]), 0);
+        assert_eq!(common_prefix_len(&[1, 2, 3], &[1, 2, 9]), 2);
+        assert_eq!(common_prefix_len(&[1, 2], &[1, 2, 9]), 2);
+        assert_eq!(common_prefix_len(&[4], &[5]), 0);
+    }
 
     fn db() -> Sequences {
         Sequences {

@@ -93,16 +93,7 @@ impl SparsePatternModel {
     }
 
     fn output(&self, score: f64) -> f64 {
-        match self.task {
-            Task::Regression => score,
-            Task::Classification => {
-                if score >= 0.0 {
-                    1.0
-                } else {
-                    -1.0
-                }
-            }
-        }
+        task_output(self.task, score)
     }
 
     /// Serialize to the line format parsed by [`SparsePatternModel::parse`].
@@ -200,6 +191,25 @@ impl SparsePatternModel {
             b: b.ok_or_else(|| anyhow::anyhow!("header missing b"))?,
             terms,
         })
+    }
+}
+
+/// The task's output transform on a raw score: identity for
+/// regression, `sign` (with `0 ↦ +1`) for classification.
+///
+/// Public so every scorer — [`SparsePatternModel::predict`] and the
+/// serve-time compiled matcher (`serve::compiled`) — applies the *same*
+/// transform; the differential tests pin them bit-identical.
+pub fn task_output(task: Task, score: f64) -> f64 {
+    match task {
+        Task::Regression => score,
+        Task::Classification => {
+            if score >= 0.0 {
+                1.0
+            } else {
+                -1.0
+            }
+        }
     }
 }
 

@@ -1,0 +1,810 @@
+//! Compiled pattern matchers: batch scoring in one pass per record.
+//!
+//! The naive scorer ([`crate::model::SparsePatternModel::score`]) walks
+//! every pattern for every record — `O(records × patterns)` matcher
+//! calls. [`CompiledModel`] instead specializes the model's patterns
+//! into a per-substrate index at load time, so a batch walks each
+//! record once:
+//!
+//! - **Item sets** — an inverted index from single items to the
+//!   pattern terms containing them. Scanning a (strictly sorted) row
+//!   bumps a counter per posted term; a term fires when its counter
+//!   saturates at the pattern length. Patterns that are not in
+//!   transaction normal form (strictly increasing) can never match a
+//!   normal-form row under the merge semantics of
+//!   [`crate::data::synth_itemsets::contains_all`], so they compile to
+//!   a never-match sentinel.
+//! - **Sequences** — a shared-prefix discrimination trie simulated as
+//!   an NFA over the record. A trie node is activated the first time
+//!   its prefix embeds as a subsequence; activation order makes this
+//!   the leftmost embedding, which is exactly what the greedy
+//!   [`crate::data::sequence::is_subsequence`] oracle computes.
+//! - **Graphs** — a DFS-code prefix tree. Each node holds the labeled
+//!   graph of its code prefix (when
+//!   [`crate::mining::gspan::checked_prefix_graph`] validates it) plus
+//!   a cheap label/degree signature. Because a validated prefix graph
+//!   is a subgraph of every extension, a failed prefix check prunes
+//!   the whole subtree before any full subgraph-isomorphism test runs.
+//!
+//! Scores are **bit-identical** to the naive scorer: matching only
+//! produces per-record boolean flags, and the final accumulation adds
+//! the intercept and then the flagged weights *in model term order* —
+//! the same float additions, in the same order, as `score`.
+//! Batches fan out over [`crate::runtime::parallel::map_indexed`] in
+//! fixed chunks; each record is pure, so results are deterministic at
+//! any worker count.
+
+use std::collections::BTreeMap;
+
+use crate::data::graph::{contains_subgraph, Graph, GraphDatabase};
+use crate::data::registry::Dataset;
+use crate::data::sequence::Sequences;
+use crate::data::Transactions;
+use crate::mining::gspan::{checked_prefix_graph, code_to_labeled_graph, DfsEdge};
+use crate::mining::itemset::is_strictly_increasing;
+use crate::mining::PatternSubstrate;
+use crate::model::{task_output, SparsePatternModel};
+use crate::runtime::parallel::map_indexed;
+use crate::solver::Task;
+
+/// Records scored per parallel work unit.
+const CHUNK: usize = 64;
+
+/// Sizes reported by [`CompiledModel::compile_for`].
+#[derive(Clone, Copy, Debug)]
+pub struct CompileStats {
+    /// Terms in the source model (all substrate kinds).
+    pub model_terms: usize,
+    /// Terms of the compiled kind — the weights actually indexed.
+    pub compiled_terms: usize,
+    /// Index nodes: posting lists, trie nodes, or DFS-tree nodes.
+    pub index_nodes: usize,
+}
+
+/// One scored batch: spliced scores plus a matcher-work metric.
+///
+/// `ops` counts item-posting visits (item sets), trie-node
+/// activations (sequences), or `contains_subgraph` calls (graphs) —
+/// the quantity the compiled index exists to shrink relative to the
+/// naive `records × patterns` bound. Summed in chunk order, so it is
+/// deterministic at any thread count.
+pub struct ScoreBatch {
+    pub scores: Vec<f64>,
+    pub ops: u64,
+}
+
+/// A [`SparsePatternModel`] specialized for batch scoring on one
+/// substrate kind. Terms of other kinds are dropped at compile time;
+/// they would contribute nothing to `score` on this substrate anyway,
+/// so the remaining weights still accumulate in naive order.
+pub struct CompiledModel {
+    pub task: Task,
+    pub lambda: f64,
+    pub b: f64,
+    /// The substrate `KIND_TAG` this matcher is specialized for.
+    pub kind: &'static str,
+    pub stats: CompileStats,
+    weights: Vec<f64>,
+    kernel: Kernel,
+}
+
+enum Kernel {
+    Itemset(ItemsetIndex),
+    Sequence(SequenceTrie),
+    Graph(CodePrefixTree),
+}
+
+impl Kernel {
+    fn index_nodes(&self) -> usize {
+        match self {
+            Kernel::Itemset(idx) => idx.postings.len(),
+            Kernel::Sequence(trie) => trie.len(),
+            Kernel::Graph(tree) => tree.nodes.len(),
+        }
+    }
+}
+
+impl CompiledModel {
+    /// Compile the model's `kind`-tagged terms into a batch matcher.
+    ///
+    /// `kind` is one of the substrate `KIND_TAG`s (`"I"`, `"G"`,
+    /// `"S"`). A model may legitimately compile to zero terms (the
+    /// batch then scores every record as the intercept, like `score`
+    /// would).
+    pub fn compile_for(model: &SparsePatternModel, kind: &str) -> crate::Result<CompiledModel> {
+        let mut weights = Vec::new();
+        let (kind, kernel) = if kind == Transactions::KIND_TAG {
+            let mut pats: Vec<&[u32]> = Vec::new();
+            for (p, w) in &model.terms {
+                if let Some(items) = p.as_itemset() {
+                    pats.push(items);
+                    weights.push(*w);
+                }
+            }
+            (Transactions::KIND_TAG, Kernel::Itemset(ItemsetIndex::build(&pats)))
+        } else if kind == GraphDatabase::KIND_TAG {
+            let mut pats: Vec<&[DfsEdge]> = Vec::new();
+            for (p, w) in &model.terms {
+                if let Some(code) = p.as_subgraph() {
+                    pats.push(code);
+                    weights.push(*w);
+                }
+            }
+            (GraphDatabase::KIND_TAG, Kernel::Graph(CodePrefixTree::build(&pats)))
+        } else if kind == Sequences::KIND_TAG {
+            let mut pats: Vec<&[u32]> = Vec::new();
+            for (p, w) in &model.terms {
+                if let Some(syms) = p.as_sequence() {
+                    pats.push(syms);
+                    weights.push(*w);
+                }
+            }
+            (Sequences::KIND_TAG, Kernel::Sequence(SequenceTrie::build(&pats)))
+        } else {
+            anyhow::bail!("unknown substrate kind '{kind}' (the shipped tags are I, G, S)");
+        };
+        let index_nodes = kernel.index_nodes();
+        Ok(CompiledModel {
+            task: model.task,
+            lambda: model.lambda,
+            b: model.b,
+            kind,
+            stats: CompileStats {
+                model_terms: model.terms.len(),
+                compiled_terms: weights.len(),
+                index_nodes,
+            },
+            weights,
+            kernel,
+        })
+    }
+
+    /// Map a raw score to the task output (sign for classification,
+    /// identity for regression) — same rule as
+    /// [`SparsePatternModel::predict`].
+    pub fn output(&self, score: f64) -> f64 {
+        task_output(self.task, score)
+    }
+
+    /// Score a batch of transaction rows. Rows must be in transaction
+    /// normal form (strictly increasing), the invariant every
+    /// [`Transactions`] loader maintains.
+    pub fn score_itemsets(&self, rows: &[Vec<u32>], threads: usize) -> crate::Result<ScoreBatch> {
+        let Kernel::Itemset(idx) = &self.kernel else {
+            anyhow::bail!("model compiled for kind '{}' cannot score item-set records", self.kind);
+        };
+        Ok(self.batch(
+            rows,
+            threads,
+            || vec![0u32; self.weights.len()],
+            |row, counters, flags| idx.matches_into(row, counters, flags),
+        ))
+    }
+
+    /// Score a batch of symbol sequences.
+    pub fn score_sequences(&self, seqs: &[Vec<u32>], threads: usize) -> crate::Result<ScoreBatch> {
+        let Kernel::Sequence(trie) = &self.kernel else {
+            anyhow::bail!("model compiled for kind '{}' cannot score sequence records", self.kind);
+        };
+        Ok(self.batch(
+            seqs,
+            threads,
+            || TrieScratch::new(trie.len()),
+            |seq, scratch, flags| trie.matches_into(seq, scratch, flags),
+        ))
+    }
+
+    /// Score a batch of labeled graphs.
+    pub fn score_graphs(&self, graphs: &[Graph], threads: usize) -> crate::Result<ScoreBatch> {
+        let Kernel::Graph(tree) = &self.kernel else {
+            anyhow::bail!("model compiled for kind '{}' cannot score graph records", self.kind);
+        };
+        Ok(self.batch(graphs, threads, || (), |g, _scratch, flags| tree.matches_into(g, flags)))
+    }
+
+    /// Score a whole registry dataset; the dataset kind must match the
+    /// compiled kind.
+    pub fn score_dataset(&self, data: &Dataset, threads: usize) -> crate::Result<ScoreBatch> {
+        match data {
+            Dataset::Itemsets(t) => self.score_itemsets(&t.db.items, threads),
+            Dataset::Graphs(g) => self.score_graphs(&g.graphs, threads),
+            Dataset::Sequences(s) => self.score_sequences(&s.db.seqs, threads),
+        }
+    }
+
+    /// Chunked batch driver. Each chunk gets private scratch and a
+    /// private flag vector; per-record work is pure, and both scores
+    /// and the ops metric are recombined in chunk (= record) order, so
+    /// the result is identical at any thread count.
+    fn batch<R, S, MS, M>(
+        &self,
+        records: &[R],
+        threads: usize,
+        scratch: MS,
+        matches: M,
+    ) -> ScoreBatch
+    where
+        R: Sync,
+        MS: Fn() -> S + Sync,
+        M: Fn(&R, &mut S, &mut [bool]) -> u64 + Sync,
+    {
+        let starts: Vec<usize> = (0..records.len()).step_by(CHUNK).collect();
+        let parts = map_indexed(threads, starts.len(), |c| {
+            let lo = starts[c];
+            let hi = (lo + CHUNK).min(records.len());
+            let mut scratch = scratch();
+            let mut flags = vec![false; self.weights.len()];
+            let mut ops = 0u64;
+            let mut scores = Vec::with_capacity(hi - lo);
+            for r in &records[lo..hi] {
+                flags.fill(false);
+                ops += matches(r, &mut scratch, &mut flags);
+                // Same additions in the same order as the naive
+                // scorer: intercept first, then flagged weights in
+                // model term order.
+                let mut s = self.b;
+                for (w, &hit) in self.weights.iter().zip(flags.iter()) {
+                    if hit {
+                        s += w;
+                    }
+                }
+                scores.push(s);
+            }
+            (scores, ops)
+        });
+        let mut scores = Vec::with_capacity(records.len());
+        let mut ops = 0u64;
+        for (s, o) in parts {
+            scores.extend(s);
+            ops += o;
+        }
+        ScoreBatch { scores, ops }
+    }
+}
+
+/// Inverted single-item index over item-set patterns.
+struct ItemsetIndex {
+    /// `(item, ids of terms whose pattern contains it)`, sorted by
+    /// item for binary search.
+    postings: Vec<(u32, Vec<u32>)>,
+    /// Distinct items each term needs before it fires; `u32::MAX`
+    /// marks a term that can never match a normal-form row.
+    needed: Vec<u32>,
+    /// Terms with empty patterns — they match every record.
+    always: Vec<u32>,
+}
+
+impl ItemsetIndex {
+    fn build(patterns: &[&[u32]]) -> ItemsetIndex {
+        let mut map: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+        let mut needed = vec![0u32; patterns.len()];
+        let mut always = Vec::new();
+        for (t, items) in patterns.iter().enumerate() {
+            if items.is_empty() {
+                always.push(t as u32);
+                continue;
+            }
+            if !is_strictly_increasing(items) {
+                // contains_all's merge scan never matches these
+                // against a strictly sorted row; don't post them.
+                needed[t] = u32::MAX;
+                continue;
+            }
+            needed[t] = items.len() as u32;
+            for &j in *items {
+                map.entry(j).or_default().push(t as u32);
+            }
+        }
+        ItemsetIndex { postings: map.into_iter().collect(), needed, always }
+    }
+
+    /// One pass over a sorted row; returns the posting visits made.
+    /// Consecutive duplicate items are skipped so a malformed row
+    /// cannot double-count toward saturation.
+    fn matches_into(&self, row: &[u32], counters: &mut [u32], flags: &mut [bool]) -> u64 {
+        for c in counters.iter_mut() {
+            *c = 0;
+        }
+        for &t in &self.always {
+            flags[t as usize] = true;
+        }
+        let mut ops = 0u64;
+        let mut prev: Option<u32> = None;
+        for &j in row {
+            if prev == Some(j) {
+                continue;
+            }
+            prev = Some(j);
+            if let Ok(k) = self.postings.binary_search_by_key(&j, |p| p.0) {
+                for &t in &self.postings[k].1 {
+                    ops += 1;
+                    let c = &mut counters[t as usize];
+                    *c += 1;
+                    if *c == self.needed[t as usize] {
+                        flags[t as usize] = true;
+                    }
+                }
+            }
+        }
+        ops
+    }
+}
+
+/// Shared-prefix trie over sequence patterns, matched by NFA subset
+/// simulation.
+struct SequenceTrie {
+    /// `children[n]` = `(symbol, child node)`, sorted by symbol.
+    children: Vec<Vec<(u32, u32)>>,
+    /// Term ids whose pattern ends at each node (root = empty
+    /// patterns, which match everything).
+    terms: Vec<Vec<u32>>,
+}
+
+/// Reusable per-worker state for [`SequenceTrie::matches_into`].
+struct TrieScratch {
+    /// Activated nodes, in activation order; the root is re-seeded per
+    /// record.
+    active: Vec<u32>,
+    /// `stamped[n]` — node already in `active` (cleared per record by
+    /// walking `active`, not the whole vector).
+    stamped: Vec<bool>,
+}
+
+impl TrieScratch {
+    fn new(nodes: usize) -> TrieScratch {
+        TrieScratch { active: Vec::with_capacity(nodes), stamped: vec![false; nodes] }
+    }
+}
+
+impl SequenceTrie {
+    /// Build from lex-sorted patterns with a prefix stack; siblings
+    /// come out sorted by symbol, which `matches_into` binary-searches.
+    fn build(patterns: &[&[u32]]) -> SequenceTrie {
+        let mut order: Vec<u32> = (0..patterns.len() as u32).collect();
+        order.sort_by(|&a, &b| patterns[a as usize].cmp(patterns[b as usize]).then(a.cmp(&b)));
+        let mut trie = SequenceTrie { children: vec![Vec::new()], terms: vec![Vec::new()] };
+        // stack[d] = node for the previous pattern's length-d prefix.
+        let mut stack: Vec<u32> = vec![0];
+        let mut prev: &[u32] = &[];
+        for &t in &order {
+            let pat = patterns[t as usize];
+            let keep = crate::mining::prefixspan::common_prefix_len(prev, pat);
+            stack.truncate(keep + 1);
+            for &sym in &pat[keep..] {
+                let parent = *stack.last().expect("stack holds at least the root") as usize;
+                let id = trie.children.len() as u32;
+                trie.children.push(Vec::new());
+                trie.terms.push(Vec::new());
+                trie.children[parent].push((sym, id));
+                stack.push(id);
+            }
+            let end = *stack.last().expect("stack holds at least the root") as usize;
+            trie.terms[end].push(t);
+            prev = pat;
+        }
+        trie
+    }
+
+    fn len(&self) -> usize {
+        self.children.len()
+    }
+
+    /// One pass over the record; returns the node activations made.
+    ///
+    /// A node is activated the first time its prefix embeds as a
+    /// subsequence of the record seen so far — the leftmost embedding,
+    /// which dominates every other embedding for extending further.
+    /// The frontier length is snapshotted per symbol so a node
+    /// activated *by* a position never consumes that same position.
+    fn matches_into(&self, seq: &[u32], scratch: &mut TrieScratch, flags: &mut [bool]) -> u64 {
+        for &t in &self.terms[0] {
+            flags[t as usize] = true;
+        }
+        scratch.active.clear();
+        scratch.active.push(0);
+        scratch.stamped[0] = true;
+        let mut ops = 0u64;
+        for &a in seq {
+            let frontier = scratch.active.len();
+            let mut idx = 0;
+            while idx < frontier {
+                let node = scratch.active[idx] as usize;
+                idx += 1;
+                let kids = &self.children[node];
+                if let Ok(k) = kids.binary_search_by_key(&a, |c| c.0) {
+                    let child = kids[k].1;
+                    if !scratch.stamped[child as usize] {
+                        scratch.stamped[child as usize] = true;
+                        scratch.active.push(child);
+                        ops += 1;
+                        for &t in &self.terms[child as usize] {
+                            flags[t as usize] = true;
+                        }
+                    }
+                }
+            }
+        }
+        for &n in &scratch.active {
+            scratch.stamped[n as usize] = false;
+        }
+        ops
+    }
+}
+
+/// Cheap necessary-condition signature for subgraph containment:
+/// if any count in the pattern exceeds the record's, the pattern
+/// cannot embed and the full isomorphism search is skipped.
+struct GraphSig {
+    n_vertices: u32,
+    n_edges: u32,
+    max_degree: u32,
+    /// `(label, count)` sorted by label.
+    vlabels: Vec<(u32, u32)>,
+    elabels: Vec<(u32, u32)>,
+}
+
+impl GraphSig {
+    fn of(g: &Graph) -> GraphSig {
+        let mut vl: BTreeMap<u32, u32> = BTreeMap::new();
+        for &l in &g.vlabels {
+            *vl.entry(l).or_default() += 1;
+        }
+        let mut el: BTreeMap<u32, u32> = BTreeMap::new();
+        let mut deg = vec![0u32; g.n_vertices()];
+        for &(u, v, l) in &g.edges {
+            *el.entry(l).or_default() += 1;
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        GraphSig {
+            n_vertices: g.n_vertices() as u32,
+            n_edges: g.n_edges() as u32,
+            max_degree: deg.iter().copied().max().unwrap_or(0),
+            vlabels: vl.into_iter().collect(),
+            elabels: el.into_iter().collect(),
+        }
+    }
+
+    /// Can a graph with this signature possibly embed into one with
+    /// `rec`? (Embedding maps vertices injectively, preserves labels,
+    /// and maps edges to edges — so every per-label count and the
+    /// maximum degree are monotone under it.)
+    fn may_embed_in(&self, rec: &GraphSig) -> bool {
+        self.n_vertices <= rec.n_vertices
+            && self.n_edges <= rec.n_edges
+            && self.max_degree <= rec.max_degree
+            && counts_subsumed(&self.vlabels, &rec.vlabels)
+            && counts_subsumed(&self.elabels, &rec.elabels)
+    }
+}
+
+/// Is every `(label, count)` in `need` covered by `have`? Both sorted
+/// by label.
+fn counts_subsumed(need: &[(u32, u32)], have: &[(u32, u32)]) -> bool {
+    let mut j = 0;
+    for &(l, c) in need {
+        while j < have.len() && have[j].0 < l {
+            j += 1;
+        }
+        if j >= have.len() || have[j].0 != l || have[j].1 < c {
+            return false;
+        }
+    }
+    true
+}
+
+struct CodeNode {
+    children: Vec<u32>,
+    /// Term ids whose full code ends at this node.
+    terms: Vec<u32>,
+    /// Validated prefix graph + signature. On a hit the subtree is
+    /// explored and any terms here are matched; on a miss the whole
+    /// subtree prunes (a validated prefix graph is a connected
+    /// subgraph of every extension's graph, so prefix ⊄ record ⟹
+    /// extension ⊄ record — the same anti-monotonicity SPP exploits).
+    gate: Option<(Graph, GraphSig)>,
+    /// For terms ending at a node whose prefix failed validation: the
+    /// unvalidated full-pattern graph, matched exactly the way the
+    /// naive scorer would (`code_to_labeled_graph` + containment).
+    raw: Option<(Graph, GraphSig)>,
+}
+
+/// DFS-code prefix tree over subgraph patterns.
+struct CodePrefixTree {
+    nodes: Vec<CodeNode>,
+    roots: Vec<u32>,
+    /// Terms with empty codes — `contains_subgraph` treats the empty
+    /// pattern as matching everything.
+    always: Vec<u32>,
+}
+
+impl CodePrefixTree {
+    fn build(patterns: &[&[DfsEdge]]) -> CodePrefixTree {
+        let mut order: Vec<u32> = (0..patterns.len() as u32).collect();
+        order.sort_by(|&a, &b| patterns[a as usize].cmp(patterns[b as usize]).then(a.cmp(&b)));
+        let mut tree = CodePrefixTree { nodes: Vec::new(), roots: Vec::new(), always: Vec::new() };
+        // stack[d] = node for the previous code's length-(d+1) prefix.
+        let mut stack: Vec<u32> = Vec::new();
+        let mut prev: &[DfsEdge] = &[];
+        for &t in &order {
+            let code = patterns[t as usize];
+            if code.is_empty() {
+                tree.always.push(t);
+                continue;
+            }
+            let mut keep = 0;
+            while keep < stack.len() && keep < code.len() && prev[keep] == code[keep] {
+                keep += 1;
+            }
+            stack.truncate(keep);
+            for depth in keep..code.len() {
+                let id = tree.nodes.len() as u32;
+                let gate = checked_prefix_graph(&code[..depth + 1]).map(|g| {
+                    let sig = GraphSig::of(&g);
+                    (g, sig)
+                });
+                tree.nodes.push(CodeNode {
+                    children: Vec::new(),
+                    terms: Vec::new(),
+                    gate,
+                    raw: None,
+                });
+                match stack.last() {
+                    Some(&p) => tree.nodes[p as usize].children.push(id),
+                    None => tree.roots.push(id),
+                }
+                stack.push(id);
+            }
+            let end = *stack.last().expect("non-empty code pushed at least one node") as usize;
+            let node = &mut tree.nodes[end];
+            node.terms.push(t);
+            if node.gate.is_none() && node.raw.is_none() {
+                let g = code_to_labeled_graph(code);
+                let sig = GraphSig::of(&g);
+                node.raw = Some((g, sig));
+            }
+            prev = code;
+        }
+        tree
+    }
+
+    /// One prefix-tree walk per record; returns the
+    /// `contains_subgraph` calls made. Unvalidated interior nodes are
+    /// walked through unchecked (no false pruning); their terms, if
+    /// any, are tested against the exact naive pattern graph.
+    fn matches_into(&self, g: &Graph, flags: &mut [bool]) -> u64 {
+        for &t in &self.always {
+            flags[t as usize] = true;
+        }
+        if self.nodes.is_empty() {
+            return 0;
+        }
+        let rsig = GraphSig::of(g);
+        let mut ops = 0u64;
+        let mut stack: Vec<u32> = self.roots.clone();
+        while let Some(id) = stack.pop() {
+            let node = &self.nodes[id as usize];
+            match &node.gate {
+                Some((pg, psig)) => {
+                    if !psig.may_embed_in(&rsig) {
+                        continue;
+                    }
+                    ops += 1;
+                    if !contains_subgraph(g, pg) {
+                        continue;
+                    }
+                    for &t in &node.terms {
+                        flags[t as usize] = true;
+                    }
+                    stack.extend_from_slice(&node.children);
+                }
+                None => {
+                    if let Some((pg, psig)) = &node.raw {
+                        if psig.may_embed_in(&rsig) {
+                            ops += 1;
+                            if contains_subgraph(g, pg) {
+                                for &t in &node.terms {
+                                    flags[t as usize] = true;
+                                }
+                            }
+                        }
+                    }
+                    stack.extend_from_slice(&node.children);
+                }
+            }
+        }
+        ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mining::Pattern;
+
+    fn model_of(task: Task, b: f64, terms: Vec<(Pattern, f64)>) -> SparsePatternModel {
+        SparsePatternModel { task, lambda: 0.5, b, terms }
+    }
+
+    fn assert_bits_eq(a: f64, b: f64) {
+        assert_eq!(a.to_bits(), b.to_bits(), "scores differ: {a} vs {b}");
+    }
+
+    #[test]
+    fn itemset_kernel_matches_naive_bitwise() {
+        // Deliberately includes an empty pattern (always matches), a
+        // duplicate-item pattern and an unsorted pattern (never match
+        // a normal-form row), and shared items across patterns.
+        let model = model_of(
+            Task::Classification,
+            0.25,
+            vec![
+                (Pattern::Itemset(vec![1, 2]), 0.7),
+                (Pattern::Itemset(vec![2]), -0.3),
+                (Pattern::Itemset(vec![1, 1]), 10.0),
+                (Pattern::Itemset(vec![]), 0.1),
+                (Pattern::Itemset(vec![3, 1]), -10.0),
+                (Pattern::Itemset(vec![1, 2, 4]), 0.11),
+            ],
+        );
+        let compiled = CompiledModel::compile_for(&model, "I").unwrap();
+        assert_eq!(compiled.stats.compiled_terms, 6);
+        let rows: Vec<Vec<u32>> = vec![
+            vec![1, 2],
+            vec![2],
+            vec![],
+            vec![1, 2, 3, 4],
+            vec![1, 3],
+            vec![4],
+        ];
+        for threads in [1, 4] {
+            let out = compiled.score_itemsets(&rows, threads).unwrap();
+            assert_eq!(out.scores.len(), rows.len());
+            for (row, &s) in rows.iter().zip(&out.scores) {
+                assert_bits_eq(s, model.score_itemset(row));
+            }
+        }
+    }
+
+    #[test]
+    fn sequence_kernel_matches_naive_bitwise() {
+        // Repeated symbols and shared prefixes exercise the
+        // one-occurrence-per-position rule.
+        let model = model_of(
+            Task::Regression,
+            -0.5,
+            vec![
+                (Pattern::Sequence(vec![1]), 0.2),
+                (Pattern::Sequence(vec![1, 2]), 0.4),
+                (Pattern::Sequence(vec![1, 1]), 0.8),
+                (Pattern::Sequence(vec![2]), 1.6),
+                (Pattern::Sequence(vec![]), 3.2),
+                (Pattern::Sequence(vec![2, 1]), 6.4),
+                (Pattern::Sequence(vec![1, 2]), 12.8),
+            ],
+        );
+        let compiled = CompiledModel::compile_for(&model, "S").unwrap();
+        let seqs: Vec<Vec<u32>> = vec![
+            vec![1, 2, 1],
+            vec![2, 2],
+            vec![],
+            vec![1, 1],
+            vec![1],
+            vec![2, 1, 2],
+        ];
+        for threads in [1, 4] {
+            let out = compiled.score_sequences(&seqs, threads).unwrap();
+            for (seq, &s) in seqs.iter().zip(&out.scores) {
+                assert_bits_eq(s, model.score_sequence(seq));
+            }
+        }
+    }
+
+    fn path_graph(labels: &[u32]) -> Graph {
+        let mut g = Graph::new();
+        for &l in labels {
+            g.add_vertex(l);
+        }
+        for v in 1..labels.len() as u32 {
+            g.add_edge(v - 1, v, 0);
+        }
+        g
+    }
+
+    fn edge(from: u32, to: u32, fl: i32, el: u32, tl: i32) -> DfsEdge {
+        DfsEdge { from, to, from_label: fl, elabel: el, to_label: tl }
+    }
+
+    #[test]
+    fn graph_kernel_matches_naive_bitwise() {
+        // Two chains sharing a one-edge prefix, plus a single edge and
+        // an empty code.
+        let model = model_of(
+            Task::Classification,
+            0.0,
+            vec![
+                (Pattern::Subgraph(vec![edge(0, 1, 5, 0, 6)]), 0.5),
+                (Pattern::Subgraph(vec![edge(0, 1, 5, 0, 6), edge(1, 2, 6, 0, 7)]), 0.25),
+                (Pattern::Subgraph(vec![edge(0, 1, 5, 0, 6), edge(1, 2, 6, 0, 9)]), 0.125),
+                (Pattern::Subgraph(vec![edge(0, 1, 7, 0, 7)]), 0.0625),
+                (Pattern::Subgraph(vec![]), 0.03125),
+            ],
+        );
+        let compiled = CompiledModel::compile_for(&model, "G").unwrap();
+        let graphs = vec![
+            path_graph(&[5, 6, 7]),
+            path_graph(&[5, 6, 9]),
+            path_graph(&[7, 7]),
+            path_graph(&[8]),
+        ];
+        for threads in [1, 4] {
+            let out = compiled.score_graphs(&graphs, threads).unwrap();
+            for (g, &s) in graphs.iter().zip(&out.scores) {
+                assert_bits_eq(s, model.score_graph(g));
+            }
+        }
+    }
+
+    #[test]
+    fn graph_prefix_gate_prunes_but_terminal_still_fires() {
+        // A chain whose 2-edge prefix cannot embed in a short record:
+        // the gate must prune without suppressing the shorter sibling.
+        let model = model_of(
+            Task::Regression,
+            0.0,
+            vec![
+                (Pattern::Subgraph(vec![edge(0, 1, 5, 0, 5)]), 1.0),
+                (
+                    Pattern::Subgraph(vec![
+                        edge(0, 1, 5, 0, 5),
+                        edge(1, 2, 5, 0, 5),
+                        edge(2, 3, 5, 0, 5),
+                    ]),
+                    2.0,
+                ),
+            ],
+        );
+        let compiled = CompiledModel::compile_for(&model, "G").unwrap();
+        let graphs = vec![path_graph(&[5, 5]), path_graph(&[5, 5, 5, 5])];
+        let out = compiled.score_graphs(&graphs, 1).unwrap();
+        assert_bits_eq(out.scores[0], model.score_graph(&graphs[0]));
+        assert_bits_eq(out.scores[1], model.score_graph(&graphs[1]));
+        // The long record pays at most one containment call per tree
+        // node; the short record prunes the chain after its prefix.
+        assert!(out.ops <= 2 * compiled.stats.index_nodes as u64);
+    }
+
+    #[test]
+    fn mixed_model_compiles_per_kind_and_stays_naive_identical() {
+        let model = model_of(
+            Task::Classification,
+            0.5,
+            vec![
+                (Pattern::Itemset(vec![1]), 0.3),
+                (Pattern::Sequence(vec![1]), 0.9),
+                (Pattern::Itemset(vec![2]), -0.2),
+            ],
+        );
+        let compiled = CompiledModel::compile_for(&model, "I").unwrap();
+        assert_eq!(compiled.stats.model_terms, 3);
+        assert_eq!(compiled.stats.compiled_terms, 2);
+        let rows: Vec<Vec<u32>> = vec![vec![1], vec![2], vec![1, 2]];
+        let out = compiled.score_itemsets(&rows, 1).unwrap();
+        for (row, &s) in rows.iter().zip(&out.scores) {
+            assert_bits_eq(s, model.score_itemset(row));
+        }
+        // Wrong record kind for the compiled kernel is an error, not a
+        // silent zero.
+        assert!(compiled.score_sequences(&rows, 1).is_err());
+    }
+
+    #[test]
+    fn unknown_kind_is_rejected() {
+        let model = model_of(Task::Regression, 0.0, vec![]);
+        assert!(CompiledModel::compile_for(&model, "X").is_err());
+        let compiled = CompiledModel::compile_for(&model, "I").unwrap();
+        assert_eq!(compiled.stats.compiled_terms, 0);
+        let out = compiled.score_itemsets(&[vec![1, 2]], 1).unwrap();
+        assert_bits_eq(out.scores[0], 0.0);
+    }
+}

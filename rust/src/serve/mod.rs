@@ -1,0 +1,413 @@
+//! `spp serve` — a persistent prediction service.
+//!
+//! The serve layer keeps fitted [`crate::model::SparsePatternModel`]s
+//! resident and answers scoring requests over a line-delimited JSON
+//! protocol ([`protocol`]), on stdin/stdout ([`run_stdio`]) or a Unix
+//! domain socket ([`run_unix_socket`]). The payoff over `spp predict`
+//! is the compiled matcher ([`compiled`]): patterns are specialized
+//! into a per-substrate index at load time, so a score batch walks
+//! each record once instead of once per pattern, while staying
+//! bit-identical to the naive per-pattern scorer.
+//!
+//! Design invariants:
+//!
+//! - **Errors never kill the process.** A malformed line, an unknown
+//!   op, a bad model, an oversized or non-UTF-8 line — each produces
+//!   one `"ok":false` response and the loop keeps reading.
+//! - **Responses are deterministic.** One response per request, in
+//!   request order; object fields emit in fixed order; batch scoring
+//!   splices chunk results in record order, so output bytes are
+//!   identical at any `--threads` value. Stats report counters only
+//!   (no wall-clock), so whole sessions replay byte-for-byte — CI
+//!   pipes a canned session through the binary and diffs a golden
+//!   transcript.
+//! - **Hot reload.** `load` for an already-served kind swaps the
+//!   model between requests; the next `score` sees the new weights.
+
+pub mod compiled;
+pub mod protocol;
+pub mod registry;
+
+use std::io::{BufRead, Read, Write};
+
+use crate::runtime::parallel::resolve_threads;
+use crate::solver::Task;
+
+use protocol::{
+    decode_records, err_line, obj, ok_line, Json, Matcher, ModelSource, RecordBatch, Request,
+};
+use registry::ModelRegistry;
+
+/// Upper bound on one request line (inline models included); longer
+/// lines are drained and answered with an error instead of buffering
+/// without bound.
+const MAX_LINE_BYTES: u64 = 64 * 1024 * 1024;
+
+/// The serving engine: registry, thread budget, and session counters.
+/// Transport-agnostic — [`run_session`] drives it over any
+/// `BufRead`/`Write` pair, which is also how the integration tests
+/// exercise full sessions in memory.
+pub struct ServeEngine {
+    registry: ModelRegistry,
+    threads: usize,
+    requests: u64,
+    errors: u64,
+    loads: u64,
+    unloads: u64,
+    score_batches: u64,
+    records_scored: u64,
+}
+
+/// One handled request: the response line (no newline) and whether
+/// the session should stop.
+pub struct Reply {
+    pub line: String,
+    pub shutdown: bool,
+}
+
+impl ServeEngine {
+    /// `threads = 0` resolves through `SPP_THREADS` / available
+    /// parallelism, like every other engine knob in the crate.
+    pub fn new(threads: usize) -> ServeEngine {
+        ServeEngine {
+            registry: ModelRegistry::new(),
+            threads: resolve_threads(threads),
+            requests: 0,
+            errors: 0,
+            loads: 0,
+            unloads: 0,
+            score_batches: 0,
+            records_scored: 0,
+        }
+    }
+
+    /// Handle one request line and produce exactly one response line.
+    pub fn handle_line(&mut self, line: &str) -> Reply {
+        self.requests += 1;
+        let (id, req) = protocol::parse_request(line);
+        let outcome = req.and_then(|r| self.apply(r));
+        match outcome {
+            Ok((result, shutdown)) => Reply { line: ok_line(id.as_ref(), result), shutdown },
+            Err(e) => {
+                self.errors += 1;
+                Reply { line: err_line(id.as_ref(), &format!("{e:#}")), shutdown: false }
+            }
+        }
+    }
+
+    fn apply(&mut self, req: Request) -> crate::Result<(Json, bool)> {
+        match req {
+            Request::Load { kind, source } => {
+                self.do_load(kind.as_deref(), source).map(|r| (r, false))
+            }
+            Request::Unload { kind } => {
+                let kind = self.registry.unload(&kind)?;
+                self.unloads += 1;
+                let result = obj(vec![
+                    ("kind", Json::Str(kind.to_string())),
+                    ("unloaded", Json::Bool(true)),
+                ]);
+                Ok((result, false))
+            }
+            Request::List => Ok((self.do_list(), false)),
+            Request::Score { kind, records, matcher } => {
+                self.do_score(&kind, &records, matcher).map(|r| (r, false))
+            }
+            Request::Stats => Ok((self.do_stats(), false)),
+            Request::Shutdown => Ok((obj(vec![("shutting_down", Json::Bool(true))]), true)),
+        }
+    }
+
+    fn do_load(&mut self, kind: Option<&str>, source: ModelSource) -> crate::Result<Json> {
+        let text = match source {
+            ModelSource::Inline(t) => t,
+            ModelSource::File(path) => std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("cannot read model file '{path}': {e}"))?,
+        };
+        let report = self.registry.load(&text, kind)?;
+        self.loads += 1;
+        let entry = self.registry.get_mut(report.kind)?;
+        Ok(obj(vec![
+            ("kind", Json::Str(report.kind.to_string())),
+            ("task", Json::Str(task_name(entry.model.task).to_string())),
+            ("lambda", Json::Num(entry.model.lambda)),
+            ("patterns", Json::Num(entry.model.terms.len() as f64)),
+            ("compiled_terms", Json::Num(entry.compiled.stats.compiled_terms as f64)),
+            ("index_nodes", Json::Num(entry.compiled.stats.index_nodes as f64)),
+            ("reloaded", Json::Bool(report.reloaded)),
+        ]))
+    }
+
+    fn do_list(&self) -> Json {
+        let models = self
+            .registry
+            .iter()
+            .map(|(kind, e)| {
+                obj(vec![
+                    ("kind", Json::Str(kind.to_string())),
+                    ("task", Json::Str(task_name(e.model.task).to_string())),
+                    ("lambda", Json::Num(e.model.lambda)),
+                    ("patterns", Json::Num(e.model.terms.len() as f64)),
+                    ("compiled_terms", Json::Num(e.compiled.stats.compiled_terms as f64)),
+                    ("index_nodes", Json::Num(e.compiled.stats.index_nodes as f64)),
+                    ("loads", Json::Num(e.loads as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![("models", Json::Arr(models))])
+    }
+
+    fn do_score(&mut self, kind: &str, records: &Json, matcher: Matcher) -> crate::Result<Json> {
+        let entry = self.registry.get_mut(kind)?;
+        let batch = decode_records(entry.compiled.kind, records)?;
+        let n = batch.len();
+        let (scores, ops, matcher_name) = match matcher {
+            Matcher::Compiled => {
+                let threads = self.threads;
+                let out = match &batch {
+                    RecordBatch::Itemsets(rows) => entry.compiled.score_itemsets(rows, threads)?,
+                    RecordBatch::Graphs(gs) => entry.compiled.score_graphs(gs, threads)?,
+                    RecordBatch::Sequences(s) => entry.compiled.score_sequences(s, threads)?,
+                };
+                (out.scores, out.ops, "compiled")
+            }
+            Matcher::Naive => {
+                // Differential oracle: one matcher call per
+                // (record, pattern) pair, exactly `spp predict`'s path.
+                let model = &entry.model;
+                let scores: Vec<f64> = match &batch {
+                    RecordBatch::Itemsets(rows) => {
+                        rows.iter().map(|r| model.score_itemset(r)).collect()
+                    }
+                    RecordBatch::Graphs(gs) => gs.iter().map(|g| model.score_graph(g)).collect(),
+                    RecordBatch::Sequences(seqs) => {
+                        seqs.iter().map(|s| model.score_sequence(s)).collect()
+                    }
+                };
+                let ops = (model.terms.len() as u64) * (n as u64);
+                (scores, ops, "naive")
+            }
+        };
+        entry.score_batches += 1;
+        entry.records_scored += n as u64;
+        self.score_batches += 1;
+        self.records_scored += n as u64;
+        let preds: Vec<Json> =
+            scores.iter().map(|&s| Json::Num(entry.compiled.output(s))).collect();
+        Ok(obj(vec![
+            ("kind", Json::Str(entry.compiled.kind.to_string())),
+            ("matcher", Json::Str(matcher_name.to_string())),
+            ("n", Json::Num(n as f64)),
+            ("ops", Json::Num(ops as f64)),
+            ("scores", Json::Arr(scores.into_iter().map(Json::Num).collect())),
+            ("preds", Json::Arr(preds)),
+        ]))
+    }
+
+    /// Counters only — no wall-clock, no memory figures — so a
+    /// replayed session produces byte-identical stats. The `requests`
+    /// counter includes the stats request itself, and transport-level
+    /// rejections (oversized or non-UTF-8 lines) count as requests
+    /// and errors.
+    fn do_stats(&self) -> Json {
+        let models = self
+            .registry
+            .iter()
+            .map(|(kind, e)| {
+                obj(vec![
+                    ("kind", Json::Str(kind.to_string())),
+                    ("patterns", Json::Num(e.model.terms.len() as f64)),
+                    ("loads", Json::Num(e.loads as f64)),
+                    ("score_batches", Json::Num(e.score_batches as f64)),
+                    ("records_scored", Json::Num(e.records_scored as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("loads", Json::Num(self.loads as f64)),
+            ("unloads", Json::Num(self.unloads as f64)),
+            ("score_batches", Json::Num(self.score_batches as f64)),
+            ("records_scored", Json::Num(self.records_scored as f64)),
+            ("models", Json::Arr(models)),
+        ])
+    }
+}
+
+fn task_name(task: Task) -> &'static str {
+    match task {
+        Task::Regression => "regression",
+        Task::Classification => "classification",
+    }
+}
+
+/// Drive one session: read request lines, write response lines, one
+/// per request in order, flushing after each. Returns `Ok(true)` on
+/// an explicit `shutdown`, `Ok(false)` on EOF. Only genuine transport
+/// failures (broken pipe, read errors other than invalid UTF-8)
+/// propagate as `Err`.
+pub fn run_session<R: BufRead, W: Write>(
+    engine: &mut ServeEngine,
+    mut reader: R,
+    mut writer: W,
+) -> std::io::Result<bool> {
+    let mut buf = String::new();
+    loop {
+        buf.clear();
+        let n = match reader.by_ref().take(MAX_LINE_BYTES).read_line(&mut buf) {
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                // Non-UTF-8 bytes: the offending line is consumed;
+                // answer an error and keep serving.
+                engine.requests += 1;
+                engine.errors += 1;
+                writeln!(writer, "{}", err_line(None, "request line is not valid UTF-8"))?;
+                writer.flush()?;
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        if n == 0 {
+            return Ok(false);
+        }
+        if n as u64 >= MAX_LINE_BYTES && !buf.ends_with('\n') {
+            drain_line(&mut reader)?;
+            engine.requests += 1;
+            engine.errors += 1;
+            writeln!(writer, "{}", err_line(None, "request line too long"))?;
+            writer.flush()?;
+            continue;
+        }
+        let line = buf.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let reply = engine.handle_line(line);
+        writeln!(writer, "{}", reply.line)?;
+        writer.flush()?;
+        if reply.shutdown {
+            return Ok(true);
+        }
+    }
+}
+
+/// Discard the remainder of an over-long line, up to and including
+/// its newline (or EOF).
+fn drain_line<R: BufRead>(reader: &mut R) -> std::io::Result<()> {
+    let mut chunk = Vec::new();
+    loop {
+        chunk.clear();
+        let n = reader.by_ref().take(MAX_LINE_BYTES).read_until(b'\n', &mut chunk)?;
+        if n == 0 || chunk.last() == Some(&b'\n') {
+            return Ok(());
+        }
+    }
+}
+
+/// Serve on stdin/stdout until EOF or `shutdown`. Nothing but
+/// response lines is written to stdout, so sessions pipe cleanly.
+pub fn run_stdio(threads: usize) -> crate::Result<()> {
+    let mut engine = ServeEngine::new(threads);
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    run_session(&mut engine, stdin.lock(), stdout.lock())?;
+    Ok(())
+}
+
+/// Serve on a Unix domain socket, one connection at a time, until a
+/// client sends `shutdown`. Models persist across connections —
+/// that is the point of a resident service. A stale socket file from
+/// a previous run is removed before binding.
+#[cfg(unix)]
+pub fn run_unix_socket(path: &str, threads: usize) -> crate::Result<()> {
+    use std::os::unix::net::UnixListener;
+
+    let _ = std::fs::remove_file(path);
+    let listener = UnixListener::bind(path)
+        .map_err(|e| anyhow::anyhow!("cannot bind socket '{path}': {e}"))?;
+    eprintln!("spp serve: listening on {path}");
+    let mut engine = ServeEngine::new(threads);
+    let mut shutdown = false;
+    while !shutdown {
+        let (stream, _) = match listener.accept() {
+            Ok(conn) => conn,
+            Err(e) => {
+                eprintln!("spp serve: accept failed: {e}");
+                continue;
+            }
+        };
+        let reader = std::io::BufReader::new(&stream);
+        match run_session(&mut engine, reader, &stream) {
+            Ok(stop) => shutdown = stop,
+            // A dropped client must not take the server down.
+            Err(e) => eprintln!("spp serve: connection error: {e}"),
+        }
+    }
+    let _ = std::fs::remove_file(path);
+    Ok(())
+}
+
+/// Socket serving is Unix-only; elsewhere the request is an error.
+#[cfg(not(unix))]
+pub fn run_unix_socket(_path: &str, _threads: usize) -> crate::Result<()> {
+    anyhow::bail!("--socket requires a Unix platform; use --stdio")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn session(threads: usize, input: &str) -> String {
+        let mut engine = ServeEngine::new(threads);
+        let mut out = Vec::new();
+        run_session(&mut engine, input.as_bytes(), &mut out).unwrap();
+        String::from_utf8(out).unwrap()
+    }
+
+    #[test]
+    fn errors_do_not_end_the_session() {
+        let input = "garbage\n{\"op\":\"list\"}\n";
+        let out = session(1, input);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with(r#"{"spp":1,"ok":false,"error":"#));
+        assert_eq!(lines[1], r#"{"spp":1,"ok":true,"result":{"models":[]}}"#);
+    }
+
+    #[test]
+    fn blank_lines_are_skipped_and_eof_ends() {
+        let out = session(1, "\n   \n");
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn shutdown_stops_reading() {
+        let input = "{\"op\":\"shutdown\"}\n{\"op\":\"list\"}\n";
+        let out = session(1, input);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 1, "nothing is read past shutdown");
+        assert_eq!(lines[0], r#"{"spp":1,"ok":true,"result":{"shutting_down":true}}"#);
+    }
+
+    #[test]
+    fn invalid_utf8_line_gets_an_error_response() {
+        let mut engine = ServeEngine::new(1);
+        let input: &[u8] = b"\xff\xfe garbage\n{\"op\":\"list\"}\n";
+        let mut out = Vec::new();
+        run_session(&mut engine, input, &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("not valid UTF-8"));
+        assert!(lines[1].ends_with(r#""result":{"models":[]}}"#));
+    }
+
+    #[test]
+    fn stats_count_transport_rejections() {
+        let input = "garbage\n{\"op\":\"stats\"}\n";
+        let out = session(1, input);
+        let stats = out.lines().nth(1).unwrap();
+        assert!(stats.contains(r#""requests":2,"errors":1"#), "got {stats}");
+    }
+}

@@ -1,0 +1,727 @@
+//! Line-delimited JSON wire protocol for `spp serve`.
+//!
+//! One request per line, one response per line, in request order. The
+//! vendored crate set has no serde, so the JSON layer is hand-rolled:
+//! a small [`Json`] value type, a strict recursive-descent parser with
+//! a nesting cap, and a deterministic writer (object fields emit in
+//! insertion order; numbers format canonically via [`fmt_f64`]), so a
+//! given request stream always produces byte-identical responses.
+//!
+//! Request grammar (all requests are objects with a string `"op"`; an
+//! optional `"id"` is echoed back verbatim):
+//!
+//! ```text
+//! {"op":"load", "model":<text>|"file":<path>, "kind":<tag>?, "id":...?}
+//! {"op":"unload", "kind":<tag>}
+//! {"op":"list"}
+//! {"op":"score", "kind":<tag>, "records":[...], "matcher":"compiled"|"naive"?}
+//! {"op":"stats"}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! `<tag>` is a substrate `KIND_TAG`: `"I"` (item sets), `"G"`
+//! (graphs), `"S"` (sequences). Records are arrays of non-negative
+//! integers for `I`/`S`, and `{"v":[labels],"e":[[u,v,elabel],...]}`
+//! objects for `G`.
+//!
+//! Responses are enveloped as
+//! `{"spp":1,"ok":true,"id":...,"result":{...}}` or
+//! `{"spp":1,"ok":false,"id":...,"error":"..."}`.
+
+use std::fmt::{self, Write as _};
+
+use crate::data::graph::{Graph, GraphDatabase};
+use crate::data::sequence::Sequences;
+use crate::data::Transactions;
+use crate::mining::itemset::normalize_items;
+use crate::mining::PatternSubstrate;
+
+/// Protocol version stamped on every response line.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Maximum JSON nesting depth accepted by the parser. Deeper input is
+/// a protocol error, not a stack overflow.
+const MAX_DEPTH: usize = 64;
+
+/// A JSON value. Objects keep their fields in insertion order (a
+/// `Vec`, not a map) so emission is deterministic and ids echo back
+/// exactly as structured.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse one complete JSON value; trailing non-whitespace is an
+    /// error (a request line is exactly one value).
+    pub fn parse(text: &str) -> crate::Result<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let v = p.value(0)?;
+        p.skip_ws();
+        anyhow::ensure!(p.pos == p.bytes.len(), "trailing garbage after JSON value");
+        Ok(v)
+    }
+
+    /// Object field lookup (first occurrence); `None` on non-objects.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// The value as an exact non-negative integer, if it is one.
+    pub fn as_u32(&self) -> Option<u32> {
+        let v = self.as_f64()?;
+        (v >= 0.0 && v <= u32::MAX as f64 && v.trunc() == v).then_some(v as u32)
+    }
+}
+
+/// Canonical JSON number formatting: integral values print as
+/// integers (covering every count and every score the golden fixtures
+/// pin), anything else as Rust's shortest round-trip `{:e}` form, and
+/// non-finite values (unrepresentable in JSON) degrade to `null`.
+pub fn fmt_f64(v: f64) -> String {
+    if !v.is_finite() {
+        return "null".to_string();
+    }
+    if v == v.trunc() && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:e}")
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => f.write_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => f.write_str(&fmt_f64(*v)),
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(items) => {
+                f.write_str("[")?;
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(fields) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    f.write_str(":")?;
+                    write!(f, "{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for ch in s.chars() {
+        match ch {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => f.write_char(c)?,
+        }
+    }
+    f.write_str("\"")
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while matches!(self.bytes.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn value(&mut self, depth: usize) -> crate::Result<Json> {
+        anyhow::ensure!(depth < MAX_DEPTH, "JSON nested deeper than {MAX_DEPTH} levels");
+        self.skip_ws();
+        match self.peek() {
+            None => anyhow::bail!("unexpected end of input"),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true").map(|_| Json::Bool(true)),
+            Some(b'f') => self.literal("false").map(|_| Json::Bool(false)),
+            Some(b'n') => self.literal("null").map(|_| Json::Null),
+            Some(_) => self.number(),
+        }
+    }
+
+    fn literal(&mut self, lit: &str) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.bytes[self.pos..].starts_with(lit.as_bytes()),
+            "invalid JSON at byte {}",
+            self.pos
+        );
+        self.pos += lit.len();
+        Ok(())
+    }
+
+    fn number(&mut self) -> crate::Result<Json> {
+        let start = self.pos;
+        while matches!(self.peek(), Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii number span");
+        anyhow::ensure!(!s.is_empty(), "unexpected character at byte {start}");
+        let v: f64 = s.parse().map_err(|_| anyhow::anyhow!("bad JSON number '{s}'"))?;
+        anyhow::ensure!(v.is_finite(), "JSON number '{s}' out of range");
+        Ok(Json::Num(v))
+    }
+
+    fn hex4(&mut self) -> crate::Result<u32> {
+        anyhow::ensure!(self.pos + 4 <= self.bytes.len(), "truncated \\u escape");
+        let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| anyhow::anyhow!("bad \\u escape"))?;
+        let v = u32::from_str_radix(s, 16).map_err(|_| anyhow::anyhow!("bad \\u escape '{s}'"))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn string(&mut self) -> crate::Result<String> {
+        self.pos += 1; // opening quote
+        let mut out = String::new();
+        loop {
+            let Some(c) = self.peek() else {
+                anyhow::bail!("unterminated JSON string");
+            };
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        anyhow::bail!("unterminated escape");
+                    };
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                anyhow::ensure!(
+                                    self.peek() == Some(b'\\'),
+                                    "lone high surrogate in \\u escape"
+                                );
+                                self.pos += 1;
+                                anyhow::ensure!(
+                                    self.peek() == Some(b'u'),
+                                    "lone high surrogate in \\u escape"
+                                );
+                                self.pos += 1;
+                                let lo = self.hex4()?;
+                                anyhow::ensure!(
+                                    (0xDC00..0xE000).contains(&lo),
+                                    "invalid low surrogate in \\u escape"
+                                );
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                hi
+                            };
+                            let ch = char::from_u32(cp)
+                                .ok_or_else(|| anyhow::anyhow!("invalid \\u escape"))?;
+                            out.push(ch);
+                        }
+                        other => anyhow::bail!("invalid escape '\\{}'", other as char),
+                    }
+                }
+                _ if c < 0x20 => anyhow::bail!("unescaped control character in string"),
+                _ if c < 0x80 => out.push(c as char),
+                _ => {
+                    // The input is a &str, so multi-byte sequences are
+                    // well-formed; absorb the continuation bytes.
+                    let start = self.pos - 1;
+                    while self.peek().map(|b| b & 0xC0 == 0x80).unwrap_or(false) {
+                        self.pos += 1;
+                    }
+                    let span = std::str::from_utf8(&self.bytes[start..self.pos])
+                        .expect("source text is valid UTF-8");
+                    out.push_str(span);
+                }
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> crate::Result<Json> {
+        self.pos += 1; // '['
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => anyhow::bail!("expected ',' or ']' in array at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> crate::Result<Json> {
+        self.pos += 1; // '{'
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            anyhow::ensure!(
+                self.peek() == Some(b'"'),
+                "expected string key in object at byte {}",
+                self.pos
+            );
+            let key = self.string()?;
+            self.skip_ws();
+            anyhow::ensure!(
+                self.peek() == Some(b':'),
+                "expected ':' after object key at byte {}",
+                self.pos
+            );
+            self.pos += 1;
+            let value = self.value(depth + 1)?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => anyhow::bail!("expected ',' or '}}' in object at byte {}", self.pos),
+            }
+        }
+    }
+}
+
+/// Which matcher a `score` request runs; `compiled` is the default,
+/// `naive` keeps the per-pattern oracle reachable over the wire for
+/// differential checks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Matcher {
+    Compiled,
+    Naive,
+}
+
+/// Where `load` finds the model text.
+#[derive(Clone, Debug)]
+pub enum ModelSource {
+    /// The `spp-model v1` text itself, inline in the request.
+    Inline(String),
+    /// A path the server reads at load time.
+    File(String),
+}
+
+/// A decoded request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Load { kind: Option<String>, source: ModelSource },
+    Unload { kind: String },
+    List,
+    Score { kind: String, records: Json, matcher: Matcher },
+    Stats,
+    Shutdown,
+}
+
+/// Parse one request line into its echoable `"id"` (when present) and
+/// the decoded request. The id is extracted before request validation
+/// so error responses can still correlate.
+pub fn parse_request(line: &str) -> (Option<Json>, crate::Result<Request>) {
+    let v = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return (None, Err(e)),
+    };
+    let id = v.get("id").cloned();
+    (id, decode_request(&v))
+}
+
+fn decode_request(v: &Json) -> crate::Result<Request> {
+    anyhow::ensure!(matches!(v, Json::Obj(_)), "request must be a JSON object");
+    let op = v
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("request needs a string \"op\" field"))?;
+    match op {
+        "load" => {
+            let kind = match v.get("kind") {
+                None => None,
+                Some(k) => Some(
+                    k.as_str()
+                        .ok_or_else(|| anyhow::anyhow!("\"kind\" must be a string tag"))?
+                        .to_string(),
+                ),
+            };
+            let source = match (v.get("model"), v.get("file")) {
+                (Some(m), None) => ModelSource::Inline(
+                    m.as_str()
+                        .ok_or_else(|| anyhow::anyhow!("\"model\" must be the model text"))?
+                        .to_string(),
+                ),
+                (None, Some(f)) => ModelSource::File(
+                    f.as_str()
+                        .ok_or_else(|| anyhow::anyhow!("\"file\" must be a path string"))?
+                        .to_string(),
+                ),
+                (Some(_), Some(_)) => {
+                    anyhow::bail!("load takes \"model\" or \"file\", not both")
+                }
+                (None, None) => {
+                    anyhow::bail!("load needs \"model\" (inline text) or \"file\" (path)")
+                }
+            };
+            Ok(Request::Load { kind, source })
+        }
+        "unload" => Ok(Request::Unload { kind: req_kind(v)? }),
+        "list" => Ok(Request::List),
+        "score" => {
+            let matcher = match v.get("matcher") {
+                None => Matcher::Compiled,
+                Some(m) => match m.as_str() {
+                    Some("compiled") => Matcher::Compiled,
+                    Some("naive") => Matcher::Naive,
+                    _ => anyhow::bail!("\"matcher\" must be \"compiled\" or \"naive\""),
+                },
+            };
+            let records = v
+                .get("records")
+                .ok_or_else(|| anyhow::anyhow!("score needs a \"records\" array"))?
+                .clone();
+            Ok(Request::Score { kind: req_kind(v)?, records, matcher })
+        }
+        "stats" => Ok(Request::Stats),
+        "shutdown" => Ok(Request::Shutdown),
+        other => anyhow::bail!(
+            "unknown op '{other}' (expected load, unload, list, score, stats or shutdown)"
+        ),
+    }
+}
+
+fn req_kind(v: &Json) -> crate::Result<String> {
+    v.get("kind")
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow::anyhow!("request needs a string \"kind\" field (I, G or S)"))
+}
+
+/// A decoded `records` payload, already normalized for its substrate.
+pub enum RecordBatch {
+    Itemsets(Vec<Vec<u32>>),
+    Graphs(Vec<Graph>),
+    Sequences(Vec<Vec<u32>>),
+}
+
+impl RecordBatch {
+    pub fn len(&self) -> usize {
+        match self {
+            RecordBatch::Itemsets(rows) => rows.len(),
+            RecordBatch::Graphs(gs) => gs.len(),
+            RecordBatch::Sequences(seqs) => seqs.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Decode a `records` array for a substrate kind. Item-set rows are
+/// normalized to transaction normal form (the loader invariant the
+/// matchers rely on); sequences keep their order; graphs are validated
+/// structurally (edge endpoints in range) before construction, since
+/// [`Graph::add_edge`] itself does not bounds-check.
+pub fn decode_records(kind: &str, v: &Json) -> crate::Result<RecordBatch> {
+    let arr = v.as_arr().ok_or_else(|| anyhow::anyhow!("\"records\" must be an array"))?;
+    if kind == Transactions::KIND_TAG {
+        let mut rows = Vec::with_capacity(arr.len());
+        for (i, r) in arr.iter().enumerate() {
+            let row = u32_list(r).map_err(|e| anyhow::anyhow!("record {i}: {e}"))?;
+            rows.push(normalize_items(row));
+        }
+        Ok(RecordBatch::Itemsets(rows))
+    } else if kind == Sequences::KIND_TAG {
+        let mut seqs = Vec::with_capacity(arr.len());
+        for (i, r) in arr.iter().enumerate() {
+            seqs.push(u32_list(r).map_err(|e| anyhow::anyhow!("record {i}: {e}"))?);
+        }
+        Ok(RecordBatch::Sequences(seqs))
+    } else if kind == GraphDatabase::KIND_TAG {
+        let mut graphs = Vec::with_capacity(arr.len());
+        for (i, r) in arr.iter().enumerate() {
+            graphs.push(decode_graph(r).map_err(|e| anyhow::anyhow!("record {i}: {e}"))?);
+        }
+        Ok(RecordBatch::Graphs(graphs))
+    } else {
+        anyhow::bail!("unknown substrate kind '{kind}' (the shipped tags are I, G, S)")
+    }
+}
+
+fn u32_list(v: &Json) -> crate::Result<Vec<u32>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected an array of non-negative integers"))?;
+    arr.iter()
+        .map(|x| x.as_u32().ok_or_else(|| anyhow::anyhow!("expected a non-negative integer")))
+        .collect()
+}
+
+fn decode_graph(v: &Json) -> crate::Result<Graph> {
+    let vl = v
+        .get("v")
+        .ok_or_else(|| anyhow::anyhow!("graph record needs \"v\" (vertex labels)"))?;
+    let labels = u32_list(vl)?;
+    let edges = v
+        .get("e")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("graph record needs an \"e\" edge array"))?;
+    let mut g = Graph::new();
+    for &l in &labels {
+        g.add_vertex(l);
+    }
+    for e in edges {
+        let t = u32_list(e)?;
+        anyhow::ensure!(t.len() == 3, "graph edge must be [u, v, elabel]");
+        anyhow::ensure!(
+            (t[0] as usize) < labels.len() && (t[1] as usize) < labels.len(),
+            "edge endpoint out of range"
+        );
+        // Self-loops and duplicate edges are ignored by add_edge, the
+        // same policy as the .gsp file parser.
+        g.add_edge(t[0], t[1], t[2]);
+    }
+    Ok(g)
+}
+
+/// Build a JSON object from `(&str, Json)` pairs, preserving order.
+pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// A success response line (no trailing newline).
+pub fn ok_line(id: Option<&Json>, result: Json) -> String {
+    envelope(id, true, ("result", result))
+}
+
+/// An error response line (no trailing newline).
+pub fn err_line(id: Option<&Json>, message: &str) -> String {
+    envelope(id, false, ("error", Json::Str(message.to_string())))
+}
+
+fn envelope(id: Option<&Json>, ok: bool, payload: (&str, Json)) -> String {
+    let mut fields = vec![
+        ("spp".to_string(), Json::Num(PROTOCOL_VERSION as f64)),
+        ("ok".to_string(), Json::Bool(ok)),
+    ];
+    if let Some(id) = id {
+        fields.push(("id".to_string(), id.clone()));
+    }
+    fields.push((payload.0.to_string(), payload.1));
+    Json::Obj(fields).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trips_deterministically() {
+        let cases = [
+            r#"{"op":"list"}"#,
+            r#"{"a":[1,2,3],"b":{"c":null,"d":true,"e":false}}"#,
+            r#"{"s":"line\nbreak \"quoted\" \\slash","n":-4}"#,
+            r#"[[],{},"",0]"#,
+        ];
+        for text in cases {
+            let v = Json::parse(text).unwrap();
+            assert_eq!(v.to_string(), text, "canonical form should round-trip");
+            let again = Json::parse(&v.to_string()).unwrap();
+            assert_eq!(v, again);
+        }
+    }
+
+    #[test]
+    fn unicode_escapes_parse() {
+        let v = Json::parse(r#""aéb😀c""#).unwrap();
+        assert_eq!(v.as_str(), Some("a\u{e9}b\u{1f600}c"));
+        // Raw multi-byte UTF-8 passes through untouched.
+        let v = Json::parse("\"héllo — ok\"").unwrap();
+        assert_eq!(v.as_str(), Some("héllo — ok"));
+        assert!(Json::parse(r#""\ud83d""#).is_err(), "lone surrogate");
+    }
+
+    #[test]
+    fn malformed_json_is_an_error_not_a_panic() {
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "{\"a\":}",
+            "{\"a\" 1}",
+            "tru",
+            "1e999",
+            "\"unterminated",
+            "{} {}",
+            "nul",
+            "[1] 2",
+            "{\"a\":1,}",
+        ] {
+            assert!(Json::parse(bad).is_err(), "should reject {bad:?}");
+        }
+        // Nesting past the cap is rejected, not overflowed.
+        let deep = "[".repeat(200) + &"]".repeat(200);
+        assert!(Json::parse(&deep).is_err());
+    }
+
+    #[test]
+    fn number_formatting_is_canonical() {
+        assert_eq!(fmt_f64(0.0), "0");
+        assert_eq!(fmt_f64(-0.0), "0");
+        assert_eq!(fmt_f64(3.0), "3");
+        assert_eq!(fmt_f64(-17.0), "-17");
+        assert_eq!(fmt_f64(f64::NAN), "null");
+        assert_eq!(fmt_f64(f64::INFINITY), "null");
+        // Non-integral values round-trip through the shortest {:e}.
+        let v: f64 = fmt_f64(0.1).parse().unwrap();
+        assert_eq!(v, 0.1);
+    }
+
+    #[test]
+    fn requests_decode() {
+        let (id, req) = parse_request(r#"{"op":"load","model":"spp-model ...","id":7}"#);
+        assert_eq!(id, Some(Json::Num(7.0)));
+        assert!(matches!(
+            req.unwrap(),
+            Request::Load { kind: None, source: ModelSource::Inline(_) }
+        ));
+
+        let (_, req) = parse_request(r#"{"op":"score","kind":"I","records":[[1,2]]}"#);
+        let Request::Score { kind, matcher, .. } = req.unwrap() else {
+            panic!("expected score");
+        };
+        assert_eq!(kind, "I");
+        assert_eq!(matcher, Matcher::Compiled);
+
+        let (_, req) =
+            parse_request(r#"{"op":"score","kind":"S","records":[],"matcher":"naive"}"#);
+        assert!(matches!(req.unwrap(), Request::Score { matcher: Matcher::Naive, .. }));
+
+        for bad in [
+            "garbage",
+            "[1,2]",
+            r#"{"op":"frobnicate"}"#,
+            r#"{"op":"score","records":[]}"#,
+            r#"{"op":"load"}"#,
+            r#"{"op":"load","model":"x","file":"y"}"#,
+            r#"{"op":"score","kind":"I","records":[],"matcher":"quantum"}"#,
+        ] {
+            let (_, req) = parse_request(bad);
+            assert!(req.is_err(), "should reject {bad:?}");
+        }
+        // The id is still recovered from a well-formed line whose
+        // request is invalid.
+        let (id, req) = parse_request(r#"{"op":"frobnicate","id":"x9"}"#);
+        assert_eq!(id, Some(Json::Str("x9".to_string())));
+        assert!(req.is_err());
+    }
+
+    #[test]
+    fn records_decode_per_substrate() {
+        let v = Json::parse("[[3,1,2,2],[]]").unwrap();
+        let RecordBatch::Itemsets(rows) = decode_records("I", &v).unwrap() else {
+            panic!("expected itemsets");
+        };
+        assert_eq!(rows, vec![vec![1, 2, 3], vec![]], "rows normalize to sorted-unique");
+
+        let RecordBatch::Sequences(seqs) = decode_records("S", &v).unwrap() else {
+            panic!("expected sequences");
+        };
+        assert_eq!(seqs, vec![vec![3, 1, 2, 2], vec![]], "sequence order is preserved");
+
+        let g = Json::parse(r#"[{"v":[5,6],"e":[[0,1,2]]}]"#).unwrap();
+        let RecordBatch::Graphs(gs) = decode_records("G", &g).unwrap() else {
+            panic!("expected graphs");
+        };
+        assert_eq!(gs[0].n_vertices(), 2);
+        assert_eq!(gs[0].n_edges(), 1);
+
+        let bad = Json::parse(r#"[{"v":[5],"e":[[0,1,2]]}]"#).unwrap();
+        assert!(decode_records("G", &bad).is_err(), "endpoint out of range");
+        assert!(decode_records("X", &v).is_err(), "unknown kind");
+        assert!(decode_records("I", &Json::parse("[[1.5]]").unwrap()).is_err());
+        assert!(decode_records("I", &Json::parse("[[-1]]").unwrap()).is_err());
+    }
+
+    #[test]
+    fn envelopes_echo_ids_first_fields_fixed() {
+        let id = Json::Num(3.0);
+        assert_eq!(
+            ok_line(Some(&id), obj(vec![("n", Json::Num(1.0))])),
+            r#"{"spp":1,"ok":true,"id":3,"result":{"n":1}}"#
+        );
+        assert_eq!(err_line(None, "boom"), r#"{"spp":1,"ok":false,"error":"boom"}"#);
+    }
+}

@@ -1,0 +1,186 @@
+//! Model registry: one served model per substrate kind, hot-reloadable.
+//!
+//! The registry is keyed by the canonical (`'static`) substrate
+//! `KIND_TAG`, so `score` requests route by the same tag the model
+//! format and the miners use. Loading a model for a kind that already
+//! has one replaces it atomically between requests — in-flight
+//! batches always see exactly one model. A `BTreeMap` keeps listing
+//! order deterministic (`G` < `I` < `S`).
+
+use std::collections::BTreeMap;
+
+use crate::data::graph::GraphDatabase;
+use crate::data::sequence::Sequences;
+use crate::data::Transactions;
+use crate::mining::PatternSubstrate;
+use crate::model::SparsePatternModel;
+
+use super::compiled::CompiledModel;
+
+/// Resolve a wire-supplied substrate tag to its canonical `'static`
+/// form, rejecting unknown tags.
+pub fn canonical_tag(kind: &str) -> crate::Result<&'static str> {
+    if kind == Transactions::KIND_TAG {
+        Ok(Transactions::KIND_TAG)
+    } else if kind == GraphDatabase::KIND_TAG {
+        Ok(GraphDatabase::KIND_TAG)
+    } else if kind == Sequences::KIND_TAG {
+        Ok(Sequences::KIND_TAG)
+    } else {
+        anyhow::bail!("unknown substrate kind '{kind}' (the shipped tags are I, G, S)")
+    }
+}
+
+/// The single substrate tag of a model's terms: `None` for an empty
+/// model, an error for a mixed-kind model — the registry key and the
+/// record decoder are both per-substrate, so a mixed model is not
+/// servable as one entry.
+fn unique_kind(model: &SparsePatternModel) -> crate::Result<Option<&'static str>> {
+    let mut found: Option<&'static str> = None;
+    for (p, _) in &model.terms {
+        let tag = p.kind_tag();
+        match found {
+            None => found = Some(tag),
+            Some(t) if t == tag => {}
+            Some(t) => anyhow::bail!(
+                "mixed-substrate model ({t} and {tag} terms) cannot be served; split it per kind"
+            ),
+        }
+    }
+    Ok(found)
+}
+
+/// A served model: the parsed source (kept for the naive matcher),
+/// its compiled form, and per-entry counters.
+pub struct ModelEntry {
+    pub model: SparsePatternModel,
+    pub compiled: CompiledModel,
+    /// Times a model was loaded under this kind, hot reloads included.
+    pub loads: u64,
+    pub score_batches: u64,
+    pub records_scored: u64,
+}
+
+/// What a successful `load` reports back.
+pub struct LoadReport {
+    pub kind: &'static str,
+    /// `true` when an existing model for this kind was replaced.
+    pub reloaded: bool,
+}
+
+#[derive(Default)]
+pub struct ModelRegistry {
+    entries: BTreeMap<&'static str, ModelEntry>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse, compile and install a model. The kind is inferred from
+    /// the model's terms; an explicit `kind_hint` is validated against
+    /// the inference and is required for empty models (which carry no
+    /// terms to infer from).
+    pub fn load(&mut self, text: &str, kind_hint: Option<&str>) -> crate::Result<LoadReport> {
+        let model = SparsePatternModel::parse(text)?;
+        let inferred = unique_kind(&model)?;
+        let kind = match (kind_hint, inferred) {
+            (Some(h), Some(i)) => {
+                let h = canonical_tag(h)?;
+                anyhow::ensure!(
+                    h == i,
+                    "model holds {i}-kind patterns but the request says kind '{h}'"
+                );
+                i
+            }
+            (Some(h), None) => canonical_tag(h)?,
+            (None, Some(i)) => i,
+            (None, None) => anyhow::bail!("an empty model needs an explicit \"kind\" (I, G or S)"),
+        };
+        let compiled = CompiledModel::compile_for(&model, kind)?;
+        let loads = self.entries.get(kind).map(|e| e.loads).unwrap_or(0) + 1;
+        let entry = ModelEntry { model, compiled, loads, score_batches: 0, records_scored: 0 };
+        let reloaded = self.entries.insert(kind, entry).is_some();
+        Ok(LoadReport { kind, reloaded })
+    }
+
+    /// Remove the model for a kind; an error if none is loaded.
+    pub fn unload(&mut self, kind: &str) -> crate::Result<&'static str> {
+        let kind = canonical_tag(kind)?;
+        anyhow::ensure!(self.entries.remove(kind).is_some(), "no model loaded for kind '{kind}'");
+        Ok(kind)
+    }
+
+    /// The entry for a kind, mutably (scoring updates its counters).
+    pub fn get_mut(&mut self, kind: &str) -> crate::Result<&mut ModelEntry> {
+        let kind = canonical_tag(kind)?;
+        self.entries
+            .get_mut(kind)
+            .ok_or_else(|| anyhow::anyhow!("no model loaded for kind '{kind}'"))
+    }
+
+    /// Entries in deterministic tag-sorted order.
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, &ModelEntry)> {
+        self.entries.iter().map(|(k, v)| (*k, v))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ITEMSET_MODEL: &str = "spp-model v1 task=classification lambda=1 b=0\nI 1 1,2\n";
+    const SEQ_MODEL: &str = "spp-model v1 task=classification lambda=1 b=0\nS 1 3,4\n";
+    const EMPTY_MODEL: &str = "spp-model v1 task=regression lambda=1 b=0.5\n";
+
+    #[test]
+    fn load_infers_kind_and_hot_reloads() {
+        let mut reg = ModelRegistry::new();
+        let r = reg.load(ITEMSET_MODEL, None).unwrap();
+        assert_eq!(r.kind, "I");
+        assert!(!r.reloaded);
+        assert_eq!(reg.get_mut("I").unwrap().loads, 1);
+
+        // Same kind again: replaced, load counter carried forward.
+        let r = reg.load(ITEMSET_MODEL, Some("I")).unwrap();
+        assert!(r.reloaded);
+        assert_eq!(reg.get_mut("I").unwrap().loads, 2);
+
+        // A different kind coexists; listing order is tag-sorted.
+        reg.load(SEQ_MODEL, None).unwrap();
+        let kinds: Vec<&str> = reg.iter().map(|(k, _)| k).collect();
+        assert_eq!(kinds, vec!["I", "S"]);
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn kind_validation() {
+        let mut reg = ModelRegistry::new();
+        assert!(reg.load(ITEMSET_MODEL, Some("S")).is_err(), "hint contradicts terms");
+        assert!(reg.load(ITEMSET_MODEL, Some("Z")).is_err(), "unknown hint");
+        assert!(reg.load(EMPTY_MODEL, None).is_err(), "empty model needs a kind");
+        let r = reg.load(EMPTY_MODEL, Some("G")).unwrap();
+        assert_eq!(r.kind, "G");
+        assert!(reg.load("not a model", None).is_err(), "parse errors propagate");
+    }
+
+    #[test]
+    fn unload_and_lookup_errors() {
+        let mut reg = ModelRegistry::new();
+        assert!(reg.get_mut("I").is_err());
+        assert!(reg.unload("I").is_err());
+        assert!(reg.unload("Q").is_err());
+        reg.load(ITEMSET_MODEL, None).unwrap();
+        assert_eq!(reg.unload("I").unwrap(), "I");
+        assert!(reg.is_empty());
+    }
+}

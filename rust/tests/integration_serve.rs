@@ -1,0 +1,234 @@
+//! The serve subsystem, end to end: compiled-matcher bit-identity
+//! against the naive scorer on all three substrates, protocol
+//! round-trips over in-memory sessions, error paths that must not end
+//! a session, hot reload, thread-count byte-identity, and a golden
+//! replay of the exact canned session CI pipes through the binary.
+
+use spp::data::registry::{self, Dataset};
+use spp::mining::{Pattern, PatternNode, PatternSubstrate, Walk};
+use spp::model::SparsePatternModel;
+use spp::serve::compiled::CompiledModel;
+use spp::serve::{run_session, ServeEngine};
+use spp::solver::Task;
+
+/// Mine every pattern of a registry dataset (bounded) and attach
+/// deterministic nonzero weights — a "fitted" model with full
+/// coverage of the substrate's pattern shapes, without a solver run.
+fn mined_model(data: &Dataset, task: Task, maxpat: usize, minsup: usize) -> SparsePatternModel {
+    let mut pats: Vec<Pattern> = Vec::new();
+    {
+        let mut v = |n: &PatternNode<'_>| {
+            pats.push(n.to_pattern());
+            Walk::Descend
+        };
+        match data {
+            Dataset::Graphs(g) => g.traverse(maxpat, minsup, &mut v),
+            Dataset::Itemsets(t) => t.db.traverse(maxpat, minsup, &mut v),
+            Dataset::Sequences(s) => s.db.traverse(maxpat, minsup, &mut v),
+        }
+    }
+    assert!(!pats.is_empty(), "mining produced no patterns");
+    pats.truncate(300);
+    let terms = pats
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| (p, ((i % 7) as f64 - 3.0) * 0.25 + 0.125))
+        .collect();
+    SparsePatternModel { task, lambda: 0.25, b: 0.375, terms }
+}
+
+/// Naive per-record scores through the substrate matcher (the oracle).
+fn naive_scores(model: &SparsePatternModel, data: &Dataset) -> Vec<f64> {
+    match data {
+        Dataset::Graphs(g) => g.graphs.iter().map(|r| model.score_graph(r)).collect(),
+        Dataset::Itemsets(t) => t.db.items.iter().map(|r| model.score_itemset(r)).collect(),
+        Dataset::Sequences(s) => s.db.seqs.iter().map(|r| model.score_sequence(r)).collect(),
+    }
+}
+
+fn assert_compiled_bit_identical(dataset: &str, scale: f64, maxpat: usize, minsup: usize) {
+    let info = registry::info(dataset).unwrap();
+    let data = registry::lookup(dataset, scale).unwrap();
+    let model = mined_model(&data, info.task, maxpat, minsup);
+    let kind = model.terms[0].0.kind_tag();
+    let compiled = CompiledModel::compile_for(&model, kind).unwrap();
+    assert_eq!(compiled.stats.compiled_terms, model.terms.len());
+    let oracle = naive_scores(&model, &data);
+    let mut per_thread_ops = Vec::new();
+    for threads in [1usize, 4] {
+        let out = compiled.score_dataset(&data, threads).unwrap();
+        assert_eq!(out.scores.len(), oracle.len());
+        for (i, (&a, &b)) in out.scores.iter().zip(&oracle).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{dataset}: compiled score differs from naive at record {i}: {a} vs {b}"
+            );
+        }
+        per_thread_ops.push(out.ops);
+    }
+    assert_eq!(per_thread_ops[0], per_thread_ops[1], "{dataset}: ops depend on thread count");
+}
+
+#[test]
+fn compiled_matcher_bit_identical_itemsets() {
+    assert_compiled_bit_identical("splice", 0.2, 3, 5);
+}
+
+#[test]
+fn compiled_matcher_bit_identical_graphs() {
+    assert_compiled_bit_identical("cpdb", 0.1, 3, 2);
+}
+
+#[test]
+fn compiled_matcher_bit_identical_sequences() {
+    assert_compiled_bit_identical("synth-seq", 0.2, 3, 2);
+}
+
+/// Run a whole session through the in-memory transport and return the
+/// response lines.
+fn session(threads: usize, input: &str) -> Vec<String> {
+    let mut engine = ServeEngine::new(threads);
+    let mut out = Vec::new();
+    run_session(&mut engine, input.as_bytes(), &mut out).unwrap();
+    String::from_utf8(out).unwrap().lines().map(str::to_string).collect()
+}
+
+const SMOKE_MODEL_LINE: &str =
+    r#"{"op":"load","id":1,"model":"spp-model v1 task=classification lambda=1 b=0\nI 2 1,2\nI -1 3\n"}"#;
+
+#[test]
+fn protocol_round_trip_load_score_stats_unload() {
+    let input = format!(
+        "{SMOKE_MODEL_LINE}\n{}\n{}\n{}\n{}\n",
+        r#"{"op":"score","id":2,"kind":"I","records":[[1,2],[3],[2,1,1]]}"#,
+        r#"{"op":"stats","id":3}"#,
+        r#"{"op":"unload","id":4,"kind":"I"}"#,
+        r#"{"op":"list","id":5}"#,
+    );
+    let lines = session(1, &input);
+    assert_eq!(lines.len(), 5);
+    assert!(
+        lines[0].contains(r#""kind":"I","task":"classification""#)
+            && lines[0].contains(r#""patterns":2"#),
+        "load reply: {}",
+        lines[0]
+    );
+    // [2,1,1] normalizes to {1,2} and scores like it.
+    assert!(
+        lines[1].contains(r#""scores":[2,-1,2],"preds":[1,-1,1]"#),
+        "score reply: {}",
+        lines[1]
+    );
+    assert!(
+        lines[2].contains(r#""requests":3,"errors":0,"loads":1"#)
+            && lines[2].contains(r#""records_scored":3"#),
+        "stats reply: {}",
+        lines[2]
+    );
+    assert!(lines[3].contains(r#""unloaded":true"#), "unload reply: {}", lines[3]);
+    assert!(lines[4].ends_with(r#""result":{"models":[]}}"#), "list reply: {}", lines[4]);
+}
+
+#[test]
+fn hot_reload_swaps_the_model_mid_stream() {
+    let reload =
+        r#"{"op":"load","id":2,"model":"spp-model v1 task=classification lambda=1 b=0\nI 5 1\n"}"#;
+    let score = r#"{"op":"score","kind":"I","records":[[1]]}"#;
+    let input = format!("{SMOKE_MODEL_LINE}\n{score}\n{reload}\n{score}\n");
+    let lines = session(1, &input);
+    assert_eq!(lines.len(), 4);
+    assert!(lines[1].contains(r#""scores":[0]"#), "before reload: {}", lines[1]);
+    assert!(lines[2].contains(r#""reloaded":true"#), "reload reply: {}", lines[2]);
+    assert!(lines[3].contains(r#""scores":[5]"#), "after reload: {}", lines[3]);
+}
+
+#[test]
+fn errors_never_end_the_session() {
+    // Eight distinct failure shapes, then a healthy request: the
+    // session must answer all nine and end only at EOF.
+    let deep = format!("{}{}", "[".repeat(100), "]".repeat(100));
+    let bad: Vec<String> = vec![
+        "garbage".to_string(),
+        "[1,2,3]".to_string(),
+        r#"{"op":"frobnicate"}"#.to_string(),
+        r#"{"op":"score","kind":"S","records":[[1]]}"#.to_string(),
+        r#"{"op":"load","model":"not a model"}"#.to_string(),
+        r#"{"op":"load","kind":"Q","model":"spp-model v1 task=regression lambda=1 b=0\n"}"#
+            .to_string(),
+        r#"{"op":"score","kind":"I","records":"nope"}"#.to_string(),
+        deep,
+    ];
+    let input = bad.join("\n") + "\n" + r#"{"op":"list"}"# + "\n";
+    let lines = session(1, &input);
+    assert_eq!(lines.len(), 9);
+    for (i, l) in lines.iter().take(8).enumerate() {
+        assert!(l.starts_with(r#"{"spp":1,"ok":false"#), "line {i} should be an error: {l}");
+    }
+    assert!(lines[8].starts_with(r#"{"spp":1,"ok":true"#), "survivor: {}", lines[8]);
+}
+
+#[test]
+fn ids_echo_on_success_and_error() {
+    let input = r#"{"op":"list","id":"alpha"}
+{"op":"frobnicate","id":[1,{"k":2}]}
+"#;
+    let lines = session(1, input);
+    assert!(lines[0].starts_with(r#"{"spp":1,"ok":true,"id":"alpha""#), "{}", lines[0]);
+    assert!(lines[1].starts_with(r#"{"spp":1,"ok":false,"id":[1,{"k":2}]"#), "{}", lines[1]);
+}
+
+/// The full canned session CI pipes through `spp serve --stdio`,
+/// replayed in-process: output must equal the checked-in golden
+/// byte for byte, at one worker and at four.
+#[test]
+fn golden_smoke_session_replays_byte_identically() {
+    let input = include_str!("data/serve_smoke.jsonl");
+    let golden = include_str!("data/serve_smoke.golden.jsonl");
+    for threads in [1usize, 4] {
+        let lines = session(threads, input);
+        let got = lines.join("\n") + "\n";
+        assert_eq!(got, golden, "golden mismatch at threads={threads}");
+    }
+}
+
+/// Scoring a mined model over the wire: compiled and naive matchers
+/// must produce byte-identical score lines, and the whole session must
+/// be byte-identical across thread counts.
+#[test]
+fn wire_scores_agree_between_matchers_and_thread_counts() {
+    let info = registry::info("synth-seq").unwrap();
+    let data = registry::lookup("synth-seq", 0.1).unwrap();
+    let model = mined_model(&data, info.task, 2, 2);
+    let text = model.serialize().unwrap();
+    let Dataset::Sequences(s) = &data else { panic!("synth-seq is a sequence dataset") };
+    let records: Vec<String> = s.db.seqs[..20.min(s.db.seqs.len())]
+        .iter()
+        .map(|seq| {
+            let inner: Vec<String> = seq.iter().map(|x| x.to_string()).collect();
+            format!("[{}]", inner.join(","))
+        })
+        .collect();
+    let records = format!("[{}]", records.join(","));
+    let load = format!(
+        r#"{{"op":"load","model":"{}"}}"#,
+        text.replace('\\', "\\\\").replace('\n', "\\n")
+    );
+    let score_compiled = format!(r#"{{"op":"score","kind":"S","records":{records}}}"#);
+    let score_naive =
+        format!(r#"{{"op":"score","kind":"S","records":{records},"matcher":"naive"}}"#);
+    let input = format!("{load}\n{score_compiled}\n{score_naive}\n");
+    let base = session(1, &input);
+    assert!(base[0].contains(r#""ok":true"#), "load failed: {}", base[0]);
+    // compiled vs naive: the emitted scores and preds (everything
+    // after the "scores" key) must be byte-identical
+    let scores_of = |l: &str| l.split(r#""scores":"#).nth(1).unwrap().to_string();
+    assert_eq!(
+        scores_of(&base[1]),
+        scores_of(&base[2]),
+        "compiled and naive disagree over the wire"
+    );
+    for threads in [2usize, 4] {
+        assert_eq!(session(threads, &input), base, "session bytes differ at threads={threads}");
+    }
+}

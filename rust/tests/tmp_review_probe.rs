@@ -1,0 +1,31 @@
+//! Review probe: graph prefix-gate soundness for relabeling DFS codes.
+
+use spp::model::SparsePatternModel;
+use spp::serve::compiled::CompiledModel;
+use spp::data::graph::Graph;
+
+#[test]
+fn relabeling_code_gate_vs_naive() {
+    // Edge 1 relabels vertex 1 from 6 to 7. parse_pattern accepts this
+    // (all labels determined, connected), the miner would never emit it.
+    let text = "spp-model v1 task=regression lambda=1 b=0\nG 1 0:1:5:0:6,1:2:7:0:8\n";
+    let model = SparsePatternModel::parse(text).expect("model should parse");
+    let compiled = CompiledModel::compile_for(&model, "G").expect("compile");
+    // Record = the pattern graph itself per code_to_labeled_graph:
+    // labels [5,7,8], path edges.
+    let mut g = Graph::new();
+    g.add_vertex(5);
+    g.add_vertex(7);
+    g.add_vertex(8);
+    g.add_edge(0, 1, 0);
+    g.add_edge(1, 2, 0);
+    let naive = model.score_graph(&g);
+    let out = compiled.score_graphs(&[g], 1).expect("score");
+    assert_eq!(
+        out.scores[0].to_bits(),
+        naive.to_bits(),
+        "compiled={} naive={}",
+        out.scores[0],
+        naive
+    );
+}

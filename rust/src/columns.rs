@@ -160,6 +160,16 @@ impl HybridColumn {
         self.ids.is_empty()
     }
 
+    /// Accounted heap bytes of this column: the id list, the chunk
+    /// index, and one bitmap block per dense chunk.  What the pool's
+    /// spill tier charges against `--memory-budget`.
+    pub fn heap_bytes(&self) -> usize {
+        let dense = self.chunks.iter().filter(|c| c.words.is_some()).count();
+        self.ids.len() * std::mem::size_of::<u32>()
+            + self.chunks.len() * std::mem::size_of::<Chunk>()
+            + dense * WORDS_PER_CHUNK * std::mem::size_of::<u64>()
+    }
+
     /// Membership test: bitmap word probe on dense chunks, binary
     /// search on sparse ones.
     pub fn contains(&self, id: u32) -> bool {

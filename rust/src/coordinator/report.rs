@@ -28,7 +28,7 @@ pub fn result_json(r: &ExperimentResult) -> String {
             per_lambda.push(',');
         }
         per_lambda.push_str(&format!(
-            "{{\"lambda\":{},\"traverse_secs\":{},\"solve_secs\":{},\"nodes\":{},\"working\":{},\"active\":{},\"rounds\":{},\"gap\":{},\"screen_workers\":{},\"screen_tasks\":{},\"chunk_mine_nodes\":{},\"chunk_hit\":{}}}",
+            "{{\"lambda\":{},\"traverse_secs\":{},\"solve_secs\":{},\"nodes\":{},\"working\":{},\"active\":{},\"rounds\":{},\"gap\":{},\"screen_workers\":{},\"screen_tasks\":{},\"chunk_mine_nodes\":{},\"chunk_hit\":{},\"resident_cols\":{},\"resident_bytes\":{},\"spilled_cols\":{},\"reloaded\":{},\"evicted\":{}}}",
             num(p.lambda),
             num(p.traverse_secs),
             num(p.solve_secs),
@@ -40,7 +40,12 @@ pub fn result_json(r: &ExperimentResult) -> String {
             p.threads.workers,
             p.threads.tasks,
             p.reuse.chunk_mine_nodes,
-            p.reuse.chunk_hit
+            p.reuse.chunk_hit,
+            p.spill.resident_cols,
+            p.spill.resident_bytes,
+            p.spill.spilled_cols,
+            p.spill.reloaded,
+            p.spill.evicted
         ));
     }
     per_lambda.push(']');
@@ -132,6 +137,8 @@ mod tests {
             "\"screen_workers\":",
             "\"chunk_mine_nodes\":",
             "\"chunk_hit\":",
+            "\"resident_bytes\":",
+            "\"reloaded\":",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }

@@ -407,6 +407,33 @@ pub fn to_gsp(db: &GraphDatabase) -> String {
     out
 }
 
+impl crate::storage::ShardCodec for GraphDatabase {
+    // gSpan grows DFS codes against the graphs themselves, so a
+    // sharded graph database materializes its union for traversal
+    // (`STREAMS` stays false).  The shard blob is the `.gsp` text
+    // format — the same codec `parse_gsp`/`to_gsp` round-trip, targets
+    // included (graph databases carry `y` inline).
+
+    fn encode_shard(&self) -> Vec<u8> {
+        to_gsp(self).into_bytes()
+    }
+
+    fn decode_shard(bytes: &[u8]) -> crate::Result<Self> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|e| anyhow::anyhow!("graph shard is not UTF-8: {e}"))?;
+        parse_gsp(text)
+    }
+
+    fn concat(parts: Vec<Self>) -> crate::Result<Self> {
+        let mut db = GraphDatabase::default();
+        for mut p in parts {
+            db.graphs.append(&mut p.graphs);
+            db.y.append(&mut p.y);
+        }
+        Ok(db)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -138,6 +138,167 @@ impl PatternSubstrate for Transactions {
     const KIND_TAG: &'static str = "I";
 }
 
+impl crate::storage::ShardCodec for Transactions {
+    /// Eclat never touches records directly — only the depth-1
+    /// vertical layout — so the sharded traversal below streams shards
+    /// instead of materializing the record union.
+    const STREAMS: bool = true;
+
+    /// Text shard blob: `items <n_items>` header, then one
+    /// space-separated row of ascending item ids per record (an empty
+    /// line is an empty transaction).
+    fn encode_shard(&self) -> Vec<u8> {
+        let mut out = format!("items {}\n", self.n_items);
+        for row in &self.items {
+            let mut first = true;
+            for &j in row {
+                if !first {
+                    out.push(' ');
+                }
+                out.push_str(&j.to_string());
+                first = false;
+            }
+            out.push('\n');
+        }
+        out.into_bytes()
+    }
+
+    fn decode_shard(bytes: &[u8]) -> crate::Result<Self> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|e| anyhow::anyhow!("itemset shard is not UTF-8: {e}"))?;
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or_default();
+        let n_items = header
+            .strip_prefix("items ")
+            .and_then(|v| v.parse::<usize>().ok())
+            .ok_or_else(|| anyhow::anyhow!("itemset shard header '{header}' malformed"))?;
+        let items = lines
+            .map(|line| {
+                line.split_whitespace()
+                    .map(|t| t.parse::<u32>())
+                    .collect::<Result<Vec<u32>, _>>()
+            })
+            .collect::<Result<Vec<Vec<u32>>, _>>()?;
+        let db = Transactions { n_items, items };
+        db.validate()?;
+        Ok(db)
+    }
+
+    fn concat(parts: Vec<Self>) -> crate::Result<Self> {
+        let n_items = parts.iter().map(|p| p.n_items).max().unwrap_or(0);
+        let items = parts.into_iter().flat_map(|p| p.items).collect();
+        Ok(Transactions { n_items, items })
+    }
+
+    fn traverse_sharded(
+        db: &crate::storage::ShardedDb<Self>,
+        maxpat: usize,
+        minsup: usize,
+        visitor: &mut dyn TreeVisitor,
+    ) {
+        let mut m = ItemsetMiner::from_tidlists(sharded_tidlists(db, minsup, 1), maxpat);
+        m.minsup = minsup;
+        m.traverse(visitor);
+    }
+
+    fn traverse_sharded_parallel<F: crate::mining::SubtreeVisitors>(
+        db: &crate::storage::ShardedDb<Self>,
+        maxpat: usize,
+        minsup: usize,
+        threads: usize,
+        factory: &F,
+    ) -> Vec<F::V> {
+        let mut m = ItemsetMiner::from_tidlists(sharded_tidlists(db, minsup, threads), maxpat);
+        m.minsup = minsup;
+        m.traverse_par(threads, factory)
+    }
+}
+
+/// The streamed vertical build: two passes over the shards, each
+/// decoding one shard per pool task, reduced **in shard order**.
+///
+/// * pass 1 — per-shard item counts, summed in shard order, keep items
+///   with global support `>= minsup`;
+/// * pass 2 — per-shard tid-lists for the kept items only, with global
+///   ids (`shard_base + local`), concatenated in shard order.
+///
+/// Shard bases ascend, so the concatenation of ascending local lists is
+/// the ascending global tid-list — exactly what
+/// [`Transactions::tidlists`] followed by the minsup filter produces on
+/// the union (`root_candidates` applies that same filter), hence the
+/// sharded traversal is bit-identical to the in-memory one at any
+/// thread count.  Peak residency: one decoded shard per worker plus the
+/// minsup-filtered vertical layout (never the full record set).
+fn sharded_tidlists(
+    db: &crate::storage::ShardedDb<Transactions>,
+    minsup: usize,
+    threads: usize,
+) -> Vec<(u32, Vec<u32>)> {
+    if let Some(mem) = db.as_mem() {
+        return mem
+            .tidlists()
+            .into_iter()
+            .enumerate()
+            .filter(|(_, t)| t.len() >= minsup)
+            .map(|(j, t)| (j as u32, t))
+            .collect();
+    }
+    let k = db.n_shards();
+    let decode = |s: usize| {
+        db.shard(s)
+            .unwrap_or_else(|e| panic!("decoding itemset shard {s}: {e}"))
+    };
+    let per_shard: Vec<Vec<u32>> = crate::runtime::parallel::map_indexed(threads, k, |s| {
+        let sh = decode(s);
+        let mut counts = vec![0u32; sh.n_items];
+        for row in &sh.items {
+            for &j in row {
+                counts[j as usize] += 1;
+            }
+        }
+        counts
+    });
+    let n_items = per_shard.iter().map(|c| c.len()).max().unwrap_or(0);
+    let mut counts = vec![0u64; n_items];
+    for c in &per_shard {
+        for (j, &v) in c.iter().enumerate() {
+            counts[j] += v as u64;
+        }
+    }
+    let kept: Vec<u32> = (0..n_items)
+        .filter(|&j| counts[j] as usize >= minsup)
+        .map(|j| j as u32)
+        .collect();
+    let mut slot = vec![usize::MAX; n_items];
+    for (sl, &j) in kept.iter().enumerate() {
+        slot[j as usize] = sl;
+    }
+    let locals: Vec<Vec<Vec<u32>>> = crate::runtime::parallel::map_indexed(threads, k, |s| {
+        let sh = decode(s);
+        let base = db.shard_base(s) as u32;
+        let mut lists = vec![Vec::new(); kept.len()];
+        for (li, row) in sh.items.iter().enumerate() {
+            for &j in row {
+                let sl = slot[j as usize];
+                if sl != usize::MAX {
+                    lists[sl].push(base + li as u32);
+                }
+            }
+        }
+        lists
+    });
+    let mut out: Vec<(u32, Vec<u32>)> = kept
+        .iter()
+        .map(|&j| (j, Vec::with_capacity(counts[j as usize] as usize)))
+        .collect();
+    for shard_lists in locals {
+        for (sl, mut list) in shard_lists.into_iter().enumerate() {
+            out[sl].1.append(&mut list);
+        }
+    }
+    out
+}
+
 /// A supervised dataset over either database kind.
 #[derive(Clone, Debug)]
 pub struct LabeledTransactions {

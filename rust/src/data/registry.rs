@@ -1,16 +1,25 @@
 //! Dataset registry: the paper's eight benchmark datasets by name,
-//! plus the `synth-seq` sequence preset exercising the third substrate.
+//! plus the `synth-seq` sequence preset exercising the third substrate
+//! and the out-of-core `synth-xxl` itemset preset (10–100× the paper's
+//! largest n, only reachable through [`lookup_sharded`]).
 //!
 //! Every preset is a seeded synthetic stand-in at the paper's scale
 //! (DESIGN.md §2).  `lookup` accepts an optional scale factor so the
 //! figure benches can run the full sweep at reduced n when wall-clock
 //! budget demands it (EXPERIMENTS.md records the scale used).
+//! [`lookup_sharded`] serializes any preset into an on-disk shard
+//! container and hands back a [`crate::storage::ShardedDb`] — the
+//! `synth-xxl` preset streams straight from the chunked generator into
+//! the shard writer, so at no point is the whole database resident.
 
-use super::sequence::{self, LabeledSequences, SeqSynthConfig};
+use std::path::Path;
+
+use super::sequence::{self, LabeledSequences, SeqSynthConfig, Sequences};
 use super::synth_graphs::{self, GraphSynthConfig};
-use super::synth_itemsets::{self, ItemsetSynthConfig};
-use super::{graph::GraphDatabase, LabeledTransactions};
+use super::synth_itemsets::{self, ChunkedItemsetGen, ItemsetSynthConfig};
+use super::{graph::GraphDatabase, LabeledTransactions, Transactions};
 use crate::solver::problem::Task;
+use crate::storage::{write_sharded, ShardWriter, ShardedDb};
 
 /// Default seed for all registry datasets — fixed so every bench and
 /// example sees identical data.
@@ -59,8 +68,9 @@ pub enum Kind {
 }
 
 /// All eight paper datasets plus the `synth-seq` sequence preset (the
-/// third-substrate workload; `paper_n` is its scale-1.0 record count).
-pub const ALL: [DatasetInfo; 9] = [
+/// third-substrate workload) and the out-of-core `synth-xxl` itemset
+/// preset (`paper_n` is each one's scale-1.0 record count).
+pub const ALL: [DatasetInfo; 10] = [
     DatasetInfo {
         name: "cpdb",
         kind: Kind::Graph,
@@ -115,6 +125,12 @@ pub const ALL: [DatasetInfo; 9] = [
         task: Task::Classification,
         paper_n: 600,
     },
+    DatasetInfo {
+        name: "synth-xxl",
+        kind: Kind::Itemset,
+        task: Task::Regression,
+        paper_n: 25_000_000,
+    },
 ];
 
 pub fn info(name: &str) -> Option<DatasetInfo> {
@@ -154,12 +170,105 @@ pub fn lookup(name: &str, scale: f64) -> crate::Result<Dataset> {
         "synth-seq" => Dataset::Sequences(
             sequence::generate(&SeqSynthConfig::preset_synth_seq(seed).scaled(scale)).labeled(),
         ),
+        // In-memory materialization of the out-of-core preset — only
+        // sensible at small scales (tests, smoke runs); real runs go
+        // through `lookup_sharded`, which streams it shard by shard.
+        "synth-xxl" => Dataset::Itemsets(
+            synth_itemsets::generate(&ItemsetSynthConfig::preset_xxl(seed).scaled(scale)).labeled(),
+        ),
         other => anyhow::bail!(
             "unknown dataset '{other}' (expected one of {:?})",
             ALL.map(|d| d.name)
         ),
     };
     Ok(ds)
+}
+
+/// A registry dataset behind the out-of-core shard container: records
+/// live on disk in `ShardedDb`'s file and stream one shard at a time;
+/// only the targets (O(n) doubles — the path engine consumes the full
+/// `y` regardless) are held in memory.
+#[derive(Debug)]
+pub enum ShardedDataset {
+    Itemsets { db: ShardedDb<Transactions>, y: Vec<f64> },
+    Graphs { db: ShardedDb<GraphDatabase>, y: Vec<f64> },
+    Sequences { db: ShardedDb<Sequences>, y: Vec<f64> },
+}
+
+impl ShardedDataset {
+    pub fn n_records(&self) -> usize {
+        match self {
+            ShardedDataset::Itemsets { y, .. }
+            | ShardedDataset::Graphs { y, .. }
+            | ShardedDataset::Sequences { y, .. } => y.len(),
+        }
+    }
+
+    pub fn targets(&self) -> &[f64] {
+        match self {
+            ShardedDataset::Itemsets { y, .. }
+            | ShardedDataset::Graphs { y, .. }
+            | ShardedDataset::Sequences { y, .. } => y,
+        }
+    }
+}
+
+/// Serialize a registry preset into an on-disk shard container under
+/// `dir` (`<name>-s<scale>-x<shards>.spps`, overwritten if present) and
+/// open it as a [`ShardedDataset`].
+///
+/// The `synth-xxl` preset streams batches from [`ChunkedItemsetGen`]
+/// straight into the shard writer — identical records to `lookup` at
+/// the same scale (batching-invariant generator), but the peak
+/// footprint is one shard, not the database.  Every other preset is
+/// materialized once and cut into shards.
+pub fn lookup_sharded(
+    name: &str,
+    scale: f64,
+    shards: usize,
+    dir: &Path,
+) -> crate::Result<ShardedDataset> {
+    anyhow::ensure!(shards >= 1, "--shards must be >= 1");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}-s{scale}-x{shards}.spps"));
+
+    if name == "synth-xxl" {
+        let cfg = ItemsetSynthConfig::preset_xxl(REGISTRY_SEED).scaled(scale);
+        let shard_size = (cfg.n + shards - 1) / shards;
+        let mut chunks = ChunkedItemsetGen::new(cfg);
+        let mut writer = ShardWriter::<Transactions>::create(&path, shard_size)?;
+        let mut y = Vec::with_capacity(chunks.remaining());
+        while chunks.remaining() > 0 {
+            let (batch, yb) = chunks.next_batch(shard_size);
+            y.extend(yb);
+            writer.write_shard(&batch)?;
+        }
+        writer.finish()?;
+        let db = ShardedDb::<Transactions>::open(&path)?;
+        return Ok(ShardedDataset::Itemsets { db, y });
+    }
+
+    match lookup(name, scale)? {
+        Dataset::Itemsets(t) => {
+            let shard_size = (t.db.len() + shards - 1) / shards;
+            write_sharded(&t.db, &path, shard_size)?;
+            let db = ShardedDb::<Transactions>::open(&path)?;
+            Ok(ShardedDataset::Itemsets { db, y: t.y })
+        }
+        Dataset::Graphs(g) => {
+            let shard_size = (g.len() + shards - 1) / shards;
+            write_sharded(&g, &path, shard_size)?;
+            let db = ShardedDb::<GraphDatabase>::open(&path)?;
+            let y = g.y;
+            Ok(ShardedDataset::Graphs { db, y })
+        }
+        Dataset::Sequences(s) => {
+            let shard_size = (s.db.len() + shards - 1) / shards;
+            write_sharded(&s.db, &path, shard_size)?;
+            let db = ShardedDb::<Sequences>::open(&path)?;
+            Ok(ShardedDataset::Sequences { db, y: s.y })
+        }
+    }
 }
 
 #[cfg(test)]
@@ -169,7 +278,14 @@ mod tests {
     #[test]
     fn all_presets_materialize_at_tiny_scale() {
         for d in ALL {
-            let ds = lookup(d.name, 0.02).unwrap();
+            // the out-of-core preset's paper n is 25M — 2% would still
+            // be half a million records, so cap it at ~400 for the test
+            let scale = if d.paper_n > 1_000_000 {
+                400.0 / d.paper_n as f64
+            } else {
+                0.02
+            };
+            let ds = lookup(d.name, scale).unwrap();
             assert!(ds.n_records() > 0, "{} empty", d.name);
             assert_eq!(ds.n_records(), ds.targets().len());
             match (d.kind, &ds) {
@@ -202,5 +318,44 @@ mod tests {
     fn classification_targets_are_pm1() {
         let ds = lookup("cpdb", 0.05).unwrap();
         assert!(ds.targets().iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn sharded_lookup_round_trips_every_kind() {
+        let dir = std::env::temp_dir().join(format!("spp-reg-shards-{}", std::process::id()));
+        for (name, shards) in [("splice", 3usize), ("cpdb", 2), ("synth-seq", 4)] {
+            let ds = lookup_sharded(name, 0.05, shards, &dir).unwrap();
+            let mem = lookup(name, 0.05).unwrap();
+            assert_eq!(ds.n_records(), mem.n_records(), "{name}");
+            assert_eq!(ds.targets(), mem.targets(), "{name}");
+        }
+        assert!(lookup_sharded("nope", 0.05, 2, &dir).is_err());
+        assert!(lookup_sharded("splice", 0.05, 0, &dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sharded_xxl_streams_without_materializing() {
+        let dir = std::env::temp_dir().join(format!("spp-reg-xxl-{}", std::process::id()));
+        // 25M × 1.6e-5 = 400 records — the streaming path, test-sized
+        let scale = 1.6e-5;
+        let ds = lookup_sharded("synth-xxl", scale, 5, &dir).unwrap();
+        match &ds {
+            ShardedDataset::Itemsets { db, y } => {
+                assert_eq!(db.n_shards(), 5);
+                assert_eq!(db.n_records(), y.len());
+                // record-identical to the in-memory materialization at
+                // the same scale (the generator is batching-invariant)
+                let mem = lookup("synth-xxl", scale).unwrap();
+                assert_eq!(&y[..], mem.targets());
+                let union = db.materialize().unwrap();
+                match mem {
+                    Dataset::Itemsets(t) => assert_eq!(union.items, t.db.items),
+                    _ => unreachable!(),
+                }
+            }
+            _ => panic!("synth-xxl is an itemset preset"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -126,6 +126,58 @@ impl PatternSubstrate for Sequences {
     const KIND_TAG: &'static str = "S";
 }
 
+impl crate::storage::ShardCodec for Sequences {
+    // PrefixSpan projects the records themselves, so a sharded
+    // sequence database materializes its union for traversal
+    // (`STREAMS` stays false) — the container still provides the
+    // on-disk format, the O(1) id remap and CV-fold streaming.
+
+    /// Text shard blob: `symbols <n_symbols>` header, then one
+    /// space-separated symbol row per record.
+    fn encode_shard(&self) -> Vec<u8> {
+        let mut out = format!("symbols {}\n", self.n_symbols);
+        for row in &self.seqs {
+            let mut first = true;
+            for &a in row {
+                if !first {
+                    out.push(' ');
+                }
+                out.push_str(&a.to_string());
+                first = false;
+            }
+            out.push('\n');
+        }
+        out.into_bytes()
+    }
+
+    fn decode_shard(bytes: &[u8]) -> crate::Result<Self> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|e| anyhow::anyhow!("sequence shard is not UTF-8: {e}"))?;
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or_default();
+        let n_symbols = header
+            .strip_prefix("symbols ")
+            .and_then(|v| v.parse::<usize>().ok())
+            .ok_or_else(|| anyhow::anyhow!("sequence shard header '{header}' malformed"))?;
+        let seqs = lines
+            .map(|line| {
+                line.split_whitespace()
+                    .map(|t| t.parse::<u32>())
+                    .collect::<Result<Vec<u32>, _>>()
+            })
+            .collect::<Result<Vec<Vec<u32>>, _>>()?;
+        let db = Sequences { n_symbols, seqs };
+        db.validate()?;
+        Ok(db)
+    }
+
+    fn concat(parts: Vec<Self>) -> crate::Result<Self> {
+        let n_symbols = parts.iter().map(|p| p.n_symbols).max().unwrap_or(0);
+        let seqs = parts.into_iter().flat_map(|p| p.seqs).collect();
+        Ok(Sequences { n_symbols, seqs })
+    }
+}
+
 /// One planted rule: records containing `symbols` as a subsequence get
 /// `weight` added to their score.
 #[derive(Clone, Debug)]

@@ -87,6 +87,13 @@ impl ItemsetSynthConfig {
         c
     }
 
+    /// Out-of-core scale: n=25M, d=256 — 10–100× the paper's largest
+    /// preset, only reachable through [`ChunkedItemsetGen`] + the shard
+    /// writer (materializing it in one piece costs tens of GB).
+    pub fn preset_xxl(seed: u64) -> Self {
+        Self::base(seed, 25_000_000, 256, 10.0, false)
+    }
+
     /// Scale record count by `f` (benchmark `--scale` support).
     pub fn scaled(mut self, f: f64) -> Self {
         self.n = ((self.n as f64 * f).round() as usize).max(8);
@@ -115,82 +122,135 @@ impl SynthItemsets {
     }
 }
 
+/// Streaming face of [`generate`]: the header phase (marginals, planted
+/// rules) runs once at construction, then records are drawn in bounded
+/// batches from the **same single sequential RNG stream** the one-shot
+/// generator uses — so concatenating batches of *any* sizing is
+/// byte-identical to one `generate` call (every record is a pure
+/// function of the stream position; labels are per-record).  This is
+/// what lets the out-of-core shard writer emit the tens-of-millions-
+/// record `preset_xxl` shard by shard without ever holding the whole
+/// database.
+pub struct ChunkedItemsetGen {
+    cfg: ItemsetSynthConfig,
+    rng: SplitMix64,
+    marginals: Vec<f64>,
+    rules: Vec<PlantedRule>,
+    emitted: usize,
+}
+
+impl ChunkedItemsetGen {
+    /// Run the header phase for `cfg` (deterministic in `cfg.seed`).
+    pub fn new(cfg: ItemsetSynthConfig) -> Self {
+        assert!(cfg.d >= 4 && cfg.n >= 4);
+        let mut rng = SplitMix64::new(cfg.seed);
+
+        // Power-law item marginals, scaled so the expected row weight is
+        // avg_items.
+        let mut marginals: Vec<f64> = (0..cfg.d)
+            .map(|j| 1.0 / (1.0 + j as f64).powf(0.75))
+            .collect();
+        let sum: f64 = marginals.iter().sum();
+        for m in &mut marginals {
+            *m = (*m / sum * cfg.avg_items).min(0.95);
+        }
+        // Shuffle so item id does not encode frequency (the miner orders by
+        // id; correlating the two would make trees artificially easy).
+        rng.shuffle(&mut marginals);
+
+        // Planted rules over moderately frequent items so supports are
+        // non-trivial.
+        let mut freq_items: Vec<u32> = (0..cfg.d as u32).collect();
+        freq_items.sort_by(|&a, &b| {
+            marginals[b as usize]
+                .partial_cmp(&marginals[a as usize])
+                .unwrap()
+        });
+        let pool = &freq_items[..(cfg.d / 2).max(cfg.max_rule_len + 1)];
+        let mut rules = Vec::with_capacity(cfg.n_rules);
+        for _ in 0..cfg.n_rules {
+            let len = rng.range(2, cfg.max_rule_len.max(2));
+            let mut items: Vec<u32> = rng
+                .sample_distinct(pool.len(), len.min(pool.len()))
+                .into_iter()
+                .map(|k| pool[k])
+                .collect();
+            items.sort_unstable();
+            items.dedup();
+            let mag = 1.0 + rng.next_f64() * 2.0;
+            let weight = if rng.coin(0.5) { mag } else { -mag };
+            rules.push(PlantedRule { items, weight });
+        }
+
+        ChunkedItemsetGen {
+            cfg,
+            rng,
+            marginals,
+            rules,
+            emitted: 0,
+        }
+    }
+
+    /// The planted ground-truth rules (fixed after the header phase).
+    pub fn rules(&self) -> &[PlantedRule] {
+        &self.rules
+    }
+
+    /// Records not yet emitted (`cfg.n` down to 0).
+    pub fn remaining(&self) -> usize {
+        self.cfg.n - self.emitted
+    }
+
+    /// Draw the next `max_records.min(remaining)` records and their
+    /// targets.  Returns an empty batch once the configured `n` records
+    /// have been emitted.
+    pub fn next_batch(&mut self, max_records: usize) -> (Transactions, Vec<f64>) {
+        let take = max_records.min(self.remaining());
+        let mut items_rows = Vec::with_capacity(take);
+        let mut y = Vec::with_capacity(take);
+        for _ in 0..take {
+            let mut row: Vec<u32> = (0..self.cfg.d as u32)
+                .filter(|&j| self.rng.coin(self.marginals[j as usize]))
+                .collect();
+            if self.rng.coin(self.cfg.implant_prob) {
+                let r = &self.rules[self.rng.below(self.rules.len())];
+                row.extend_from_slice(&r.items);
+                row.sort_unstable();
+                row.dedup();
+            }
+            let mut score = 0.0;
+            for r in &self.rules {
+                if contains_all(&row, &r.items) {
+                    score += r.weight;
+                }
+            }
+            score += self.cfg.noise * self.rng.gauss();
+            if self.cfg.classify {
+                y.push(if score >= 0.0 { 1.0 } else { -1.0 });
+            } else {
+                y.push(score);
+            }
+            items_rows.push(row);
+        }
+        self.emitted += take;
+        (
+            Transactions {
+                n_items: self.cfg.d,
+                items: items_rows,
+            },
+            y,
+        )
+    }
+}
+
 /// Generate a dataset per `cfg`.  Fully deterministic in `cfg.seed`.
 pub fn generate(cfg: &ItemsetSynthConfig) -> SynthItemsets {
-    assert!(cfg.d >= 4 && cfg.n >= 4);
-    let mut rng = SplitMix64::new(cfg.seed);
-
-    // Power-law item marginals, scaled so the expected row weight is
-    // avg_items.
-    let mut marginals: Vec<f64> = (0..cfg.d)
-        .map(|j| 1.0 / (1.0 + j as f64).powf(0.75))
-        .collect();
-    let sum: f64 = marginals.iter().sum();
-    for m in &mut marginals {
-        *m = (*m / sum * cfg.avg_items).min(0.95);
-    }
-    // Shuffle so item id does not encode frequency (the miner orders by
-    // id; correlating the two would make trees artificially easy).
-    rng.shuffle(&mut marginals);
-
-    // Planted rules over moderately frequent items so supports are
-    // non-trivial.
-    let mut freq_items: Vec<u32> = (0..cfg.d as u32).collect();
-    freq_items.sort_by(|&a, &b| {
-        marginals[b as usize]
-            .partial_cmp(&marginals[a as usize])
-            .unwrap()
-    });
-    let pool = &freq_items[..(cfg.d / 2).max(cfg.max_rule_len + 1)];
-    let mut rules = Vec::with_capacity(cfg.n_rules);
-    for _ in 0..cfg.n_rules {
-        let len = rng.range(2, cfg.max_rule_len.max(2));
-        let mut items: Vec<u32> = rng
-            .sample_distinct(pool.len(), len.min(pool.len()))
-            .into_iter()
-            .map(|k| pool[k])
-            .collect();
-        items.sort_unstable();
-        items.dedup();
-        let mag = 1.0 + rng.next_f64() * 2.0;
-        let weight = if rng.coin(0.5) { mag } else { -mag };
-        rules.push(PlantedRule { items, weight });
-    }
-
-    let mut items_rows = Vec::with_capacity(cfg.n);
-    let mut y = Vec::with_capacity(cfg.n);
-    for _ in 0..cfg.n {
-        let mut row: Vec<u32> = (0..cfg.d as u32)
-            .filter(|&j| rng.coin(marginals[j as usize]))
-            .collect();
-        if rng.coin(cfg.implant_prob) {
-            let r = &rules[rng.below(rules.len())];
-            row.extend_from_slice(&r.items);
-            row.sort_unstable();
-            row.dedup();
-        }
-        let mut score = 0.0;
-        for r in &rules {
-            if contains_all(&row, &r.items) {
-                score += r.weight;
-            }
-        }
-        score += cfg.noise * rng.gauss();
-        if cfg.classify {
-            y.push(if score >= 0.0 { 1.0 } else { -1.0 });
-        } else {
-            y.push(score);
-        }
-        items_rows.push(row);
-    }
-
+    let mut chunks = ChunkedItemsetGen::new(cfg.clone());
+    let (db, y) = chunks.next_batch(cfg.n);
     SynthItemsets {
-        db: Transactions {
-            n_items: cfg.d,
-            items: items_rows,
-        },
+        db,
         y,
-        rules,
+        rules: chunks.rules,
     }
 }
 
@@ -279,6 +339,27 @@ mod tests {
         let cfg = ItemsetSynthConfig::preset_splice(0).scaled(0.1);
         assert_eq!(cfg.n, 100);
         assert_eq!(cfg.d, 120);
+    }
+
+    #[test]
+    fn chunked_generation_is_batching_invariant() {
+        let cfg = ItemsetSynthConfig::tiny(11, true);
+        let whole = generate(&cfg);
+        for batch in [1usize, 7, 16, 59, 60, 61] {
+            let mut chunks = ChunkedItemsetGen::new(cfg.clone());
+            let mut rows = Vec::new();
+            let mut y = Vec::new();
+            while chunks.remaining() > 0 {
+                let (db, yb) = chunks.next_batch(batch);
+                rows.extend(db.items);
+                y.extend(yb);
+            }
+            assert_eq!(rows, whole.db.items, "batch={batch}");
+            assert_eq!(y, whole.y, "batch={batch}");
+            // drained generators emit empty batches
+            let (db, yb) = chunks.next_batch(batch);
+            assert!(db.items.is_empty() && yb.is_empty());
+        }
     }
 
     #[test]

@@ -113,6 +113,16 @@ impl SppEstimator {
         self
     }
 
+    /// Resident-byte ceiling for the path's support-column pool (see
+    /// `PathConfig::memory_budget`): least-recently-used columns spill
+    /// to a temp file and reload on demand.  Every budget produces
+    /// bit-identical fits.  `0` (the default) = auto
+    /// (`SPP_MEMORY_BUDGET` env, else unlimited).
+    pub fn memory_budget(mut self, bytes: usize) -> Self {
+        self.cfg.memory_budget = bytes;
+        self
+    }
+
     /// Restricted-solver settings (tolerance, epoch caps).
     pub fn cd(mut self, cd: CdConfig) -> Self {
         self.cfg.cd = cd;
@@ -198,18 +208,21 @@ mod tests {
             .dynamic_screening(false)
             .threads(3)
             .range_chunk(5)
-            .columns(ColumnLayout::Sparse);
+            .columns(ColumnLayout::Sparse)
+            .memory_budget(1 << 20);
         assert!(!est.config().reuse_forest);
         assert!(!est.config().cd.dynamic_screen);
         assert_eq!(est.config().threads, 3);
         assert_eq!(est.config().range_chunk, 5);
         assert_eq!(est.config().columns, Some(ColumnLayout::Sparse));
+        assert_eq!(est.config().memory_budget, 1 << 20);
         let est = SppEstimator::new(Task::Regression);
         assert!(est.config().reuse_forest, "forest reuse must default on");
         assert!(est.config().cd.dynamic_screen, "dynamic screening must default on");
         assert_eq!(est.config().threads, 0, "threads must default to auto");
         assert_eq!(est.config().range_chunk, 0, "range chunk must default to auto");
         assert_eq!(est.config().columns, None, "column layout must default to auto");
+        assert_eq!(est.config().memory_budget, 0, "memory budget must default to auto");
     }
 
     #[test]

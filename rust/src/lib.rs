@@ -54,6 +54,12 @@
 //!   a line-delimited JSON protocol, a hot-reloadable model registry,
 //!   and compiled per-substrate matchers that score a batch in one
 //!   pass per record while staying bit-identical to the naive scorer.
+//! * [`storage`] — out-of-core sharded databases: a fixed-size shard
+//!   container with a footer index, and [`storage::ShardedDb`], the
+//!   `PatternSubstrate` adapter that streams one shard at a time
+//!   (item-set traversal never materializes the record union) while
+//!   the column pool's spill tier keeps resident bytes under
+//!   `--memory-budget`.
 //! * [`coordinator`] — experiment orchestration: worker pool, metrics,
 //!   result reporting; drives every figure bench.
 //! * [`testutil`] — SplitMix64 PRNG, property-test harness, brute-force
@@ -96,6 +102,7 @@ pub mod runtime;
 pub mod screening;
 pub mod serve;
 pub mod solver;
+pub mod storage;
 pub mod testutil;
 
 pub use estimator::{SppEstimator, SppFit};

@@ -7,6 +7,9 @@
 //!                [--threads N]          # 0 = auto; 1 = sequential
 //!                [--range-chunk C]      # 0 = auto; 1 = per-λ screening
 //!                [--columns sparse|hybrid]  # support-column layout
+//!                [--memory-budget B]    # pool spill ceiling in bytes; 0 = off
+//!                [--shards K]           # out-of-core: K-shard on-disk db
+//!                [--shard-dir DIR]      # where the shard container lives
 //!                [--engine rust|xla] [--json out.json]
 //! spp cv         --dataset splice --maxpat 3 [--folds 5] [--seed 13]
 //!                [--lambdas 100] [--min-ratio 0.01] [--scale 1.0]
@@ -16,6 +19,8 @@
 //!                [--lambda-index K]     # default: smallest λ
 //! spp predict    --dataset synth-seq --model out.spp [--scale 1.0]
 //!                [--top 10] [--matcher compiled|naive] [--threads N]
+//!                [--batch N]            # records scored per bounded batch
+//!                [--shards K --shard-dir DIR]   # stream shard by shard
 //! spp serve      --stdio | --socket /path/to.sock [--threads N]
 //!                # persistent JSON-lines prediction service (see
 //!                # DESIGN.md: compiled matcher, hot reload)
@@ -50,6 +55,7 @@ const SWITCHES: &[&str] = &["certify", "dynamic-screen", "help", "no-reuse", "st
 /// grammar; anything else is rejected with the flag named.
 const FLAGS: &[&str] = &[
     "artifacts",
+    "batch",
     "columns",
     "dataset",
     "engine",
@@ -60,6 +66,7 @@ const FLAGS: &[&str] = &[
     "lambdas",
     "matcher",
     "maxpat",
+    "memory-budget",
     "method",
     "min-ratio",
     "minsup",
@@ -67,6 +74,8 @@ const FLAGS: &[&str] = &[
     "range-chunk",
     "scale",
     "seed",
+    "shard-dir",
+    "shards",
     "socket",
     "threads",
     "top",
@@ -157,6 +166,10 @@ fn path_config(args: &cli::Args) -> spp::Result<PathConfig> {
             Some("hybrid") => Some(spp::columns::ColumnLayout::Hybrid),
             Some(other) => anyhow::bail!("--columns must be sparse|hybrid, got '{other}'"),
         },
+        // `--memory-budget BYTES` caps the resident support-column pool
+        // (LRU spill to a temp file); 0 = auto (SPP_MEMORY_BUDGET env,
+        // else unlimited) — bit-identical at any budget
+        memory_budget: args.get_usize("memory-budget", 0)?,
         k_add: args.get_usize("k-add", 1)?,
         ..PathConfig::default()
     })
@@ -173,6 +186,15 @@ fn cmd_path(args: &cli::Args) -> spp::Result<()> {
         other => anyhow::bail!("--method must be spp|boosting|both, got '{other}'"),
     };
     let engine = args.get_or("engine", "rust").to_string();
+    // `--shards K` routes through the on-disk shard container: the
+    // database is serialized shard by shard and screening streams it
+    // back, bit-identical to the in-memory run at any thread count.
+    let shards = args.get_usize("shards", 0)?;
+    let shard_dir = args.get_or("shard-dir", "shards").to_string();
+    anyhow::ensure!(
+        shards == 0 || engine == "rust",
+        "--shards streams through the rust engine; drop --engine {engine}"
+    );
 
     let mut results = Vec::new();
     for method in methods {
@@ -183,7 +205,9 @@ fn cmd_path(args: &cli::Args) -> spp::Result<()> {
             method,
             cfg,
         };
-        let r = if engine == "xla" && method == Method::Spp {
+        let r = if shards > 0 {
+            run_path_sharded(&spec, shards, &shard_dir)?
+        } else if engine == "xla" && method == Method::Spp {
             run_path_xla(&spec)?
         } else {
             run_experiment(&spec)?
@@ -314,19 +338,105 @@ fn cmd_fit(args: &cli::Args) -> spp::Result<()> {
     Ok(())
 }
 
+/// Streaming accumulator for `spp predict`: the running metric, op
+/// counts and the first `top` display rows survive each batch — the
+/// per-record predictions do not, which is the point of bounded-batch
+/// scoring (peak matcher input is one `--batch` window).
+struct PredictAccum {
+    task: Task,
+    top: usize,
+    n: usize,
+    correct: usize,
+    sse: f64,
+    ops: u64,
+    batches: u64,
+    rows: Vec<(f64, f64)>,
+}
+
+impl PredictAccum {
+    fn new(task: Task, top: usize) -> Self {
+        PredictAccum {
+            task,
+            top,
+            n: 0,
+            correct: 0,
+            sse: 0.0,
+            ops: 0,
+            batches: 0,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Fold one window of final predictions (output transform already
+    /// applied) against its aligned target slice.
+    fn absorb(&mut self, preds: &[f64], y: &[f64], ops: u64) {
+        debug_assert_eq!(preds.len(), y.len());
+        self.ops += ops;
+        for (&p, &yi) in preds.iter().zip(y) {
+            match self.task {
+                Task::Classification => {
+                    if (p >= 0.0) == (yi > 0.0) {
+                        self.correct += 1;
+                    }
+                }
+                Task::Regression => self.sse += (p - yi) * (p - yi),
+            }
+            if self.rows.len() < self.top {
+                self.rows.push((p, yi));
+            }
+            self.n += 1;
+        }
+    }
+}
+
+/// Score `rows` through the compiled matcher in `batch`-sized windows,
+/// folding each window into `acc`.  `score` is the substrate-specific
+/// batch entrypoint (`score_itemsets` / `score_graphs` /
+/// `score_sequences`); batching is invisible in the results because
+/// each record is scored independently.
+fn predict_batches<R>(
+    compiled: &spp::serve::compiled::CompiledModel,
+    rows: &[R],
+    y: &[f64],
+    batch: usize,
+    acc: &mut PredictAccum,
+    score: impl Fn(&[R]) -> spp::Result<spp::serve::compiled::ScoreBatch>,
+) -> spp::Result<()> {
+    anyhow::ensure!(rows.len() == y.len(), "rows/targets length mismatch");
+    let mut lo = 0;
+    while lo < rows.len() {
+        let hi = (lo + batch).min(rows.len());
+        let out = score(&rows[lo..hi])?;
+        let preds: Vec<f64> = out.scores.iter().map(|&s| compiled.output(s)).collect();
+        acc.absorb(&preds, &y[lo..hi], out.ops);
+        acc.batches += 1;
+        lo = hi;
+    }
+    Ok(())
+}
+
 /// Load a persisted model and predict a registry dataset.
 ///
 /// `--matcher compiled` (the default) routes scoring through the serve
 /// layer's compiled matcher — one pass per record instead of one per
-/// (record, pattern) pair — and reports its telemetry on the summary
-/// line; `--matcher naive` keeps the historical per-pattern scorer as
-/// a differential oracle.  Predictions are bit-identical either way
-/// (pinned by `tests/integration_serve.rs`).
+/// (record, pattern) pair, streamed in `--batch`-sized windows — and
+/// reports its telemetry on the summary line; with `--shards K` the
+/// records come off the on-disk shard container one shard at a time,
+/// so the resident input is one shard regardless of dataset size.
+/// `--matcher naive` keeps the historical per-pattern whole-dataset
+/// scorer as a differential oracle.  Predictions are bit-identical
+/// either way (pinned by `tests/integration_serve.rs`).
 fn cmd_predict(args: &cli::Args) -> spp::Result<()> {
     let dataset = args.get_or("dataset", "splice");
     let scale = args.get_f64("scale", 1.0)?;
     let top = args.get_usize("top", 10)?;
     let threads = args.get_usize("threads", 0)?;
+    // bounded-batch streaming: at most `batch` records are handed to
+    // the matcher at once; `--shards` streams them off the disk
+    // container one shard at a time
+    let batch = args.get_usize("batch", 8192)?;
+    anyhow::ensure!(batch >= 1, "--batch must be >= 1");
+    let shards = args.get_usize("shards", 0)?;
     let file = args.require("model")?;
     let model = SparsePatternModel::parse(&std::fs::read_to_string(file)?)?;
     let info = registry::info(dataset)
@@ -352,64 +462,114 @@ fn cmd_predict(args: &cli::Args) -> spp::Result<()> {
         "model {file} has no {expected_tag}-kind patterns — it was fitted on a different \
          substrate than dataset '{dataset}'"
     );
-    let data = registry::lookup(dataset, scale)?;
-    let (preds, telemetry) = match args.get_or("matcher", "compiled") {
+    let mut acc = PredictAccum::new(model.task, top);
+    let telemetry = match args.get_or("matcher", "compiled") {
         "naive" => {
+            anyhow::ensure!(
+                shards == 0,
+                "--matcher naive scores the whole dataset at once; --shards streams \
+                 through the compiled matcher"
+            );
+            let data = registry::lookup(dataset, scale)?;
             let preds = match &data {
                 Dataset::Graphs(g) => model.predict(g),
                 Dataset::Itemsets(t) => model.predict(&t.db),
                 Dataset::Sequences(s) => model.predict(&s.db),
             };
             let calls = (model.terms.len() as u64) * (data.n_records() as u64);
-            (preds, format!("matcher=naive match_calls={calls}"))
+            acc.absorb(&preds, data.targets(), 0);
+            format!("matcher=naive match_calls={calls}")
         }
         "compiled" => {
             let compiled =
                 spp::serve::compiled::CompiledModel::compile_for(&model, expected_tag)?;
-            let out = compiled.score_dataset(&data, threads)?;
-            let preds: Vec<f64> = out.scores.iter().map(|&s| compiled.output(s)).collect();
-            let telemetry = format!(
-                "matcher=compiled compiled_patterns={} index_nodes={} records_per_pass={} ops={}",
+            if shards > 0 {
+                use spp::data::registry::ShardedDataset;
+                let dir = args.get_or("shard-dir", "shards");
+                let data =
+                    registry::lookup_sharded(dataset, scale, shards, std::path::Path::new(dir))?;
+                // walk the container shard by shard; `base` keeps the
+                // target slice aligned with the shard's global records
+                let mut base = 0usize;
+                match &data {
+                    ShardedDataset::Itemsets { db, y } => {
+                        for s in 0..db.n_shards() {
+                            let shard = db.shard(s)?;
+                            let ys = &y[base..base + shard.items.len()];
+                            predict_batches(&compiled, &shard.items, ys, batch, &mut acc, |w| {
+                                compiled.score_itemsets(w, threads)
+                            })?;
+                            base += shard.items.len();
+                        }
+                    }
+                    ShardedDataset::Graphs { db, y } => {
+                        for s in 0..db.n_shards() {
+                            let shard = db.shard(s)?;
+                            let ys = &y[base..base + shard.graphs.len()];
+                            predict_batches(&compiled, &shard.graphs, ys, batch, &mut acc, |w| {
+                                compiled.score_graphs(w, threads)
+                            })?;
+                            base += shard.graphs.len();
+                        }
+                    }
+                    ShardedDataset::Sequences { db, y } => {
+                        for s in 0..db.n_shards() {
+                            let shard = db.shard(s)?;
+                            let ys = &y[base..base + shard.seqs.len()];
+                            predict_batches(&compiled, &shard.seqs, ys, batch, &mut acc, |w| {
+                                compiled.score_sequences(w, threads)
+                            })?;
+                            base += shard.seqs.len();
+                        }
+                    }
+                }
+            } else {
+                let data = registry::lookup(dataset, scale)?;
+                let y = data.targets();
+                match &data {
+                    Dataset::Itemsets(t) => {
+                        predict_batches(&compiled, &t.db.items, y, batch, &mut acc, |w| {
+                            compiled.score_itemsets(w, threads)
+                        })?
+                    }
+                    Dataset::Graphs(g) => {
+                        predict_batches(&compiled, &g.graphs, y, batch, &mut acc, |w| {
+                            compiled.score_graphs(w, threads)
+                        })?
+                    }
+                    Dataset::Sequences(s) => {
+                        predict_batches(&compiled, &s.db.seqs, y, batch, &mut acc, |w| {
+                            compiled.score_sequences(w, threads)
+                        })?
+                    }
+                }
+            }
+            format!(
+                "matcher=compiled compiled_patterns={} index_nodes={} batches={} batch={} ops={}",
                 compiled.stats.compiled_terms,
                 compiled.stats.index_nodes,
-                preds.len(),
-                out.ops
-            );
-            (preds, telemetry)
+                acc.batches,
+                batch,
+                acc.ops
+            )
         }
         other => anyhow::bail!("--matcher must be compiled|naive, got '{other}'"),
     };
-    let y = data.targets();
     match model.task {
-        Task::Classification => {
-            let correct = preds
-                .iter()
-                .zip(y)
-                .filter(|(&p, &yi)| (p >= 0.0) == (yi > 0.0))
-                .count();
-            println!(
-                "predict {dataset}: n={} accuracy={:.1}% ({} patterns in model) {telemetry}",
-                preds.len(),
-                100.0 * correct as f64 / preds.len().max(1) as f64,
-                model.terms.len()
-            );
-        }
-        Task::Regression => {
-            let mse = preds
-                .iter()
-                .zip(y)
-                .map(|(&p, &yi)| (p - yi) * (p - yi))
-                .sum::<f64>()
-                / preds.len().max(1) as f64;
-            println!(
-                "predict {dataset}: n={} mse={:.4} ({} patterns in model) {telemetry}",
-                preds.len(),
-                mse,
-                model.terms.len()
-            );
-        }
+        Task::Classification => println!(
+            "predict {dataset}: n={} accuracy={:.1}% ({} patterns in model) {telemetry}",
+            acc.n,
+            100.0 * acc.correct as f64 / acc.n.max(1) as f64,
+            model.terms.len()
+        ),
+        Task::Regression => println!(
+            "predict {dataset}: n={} mse={:.4} ({} patterns in model) {telemetry}",
+            acc.n,
+            acc.sse / acc.n.max(1) as f64,
+            model.terms.len()
+        ),
     }
-    for (i, (&p, &yi)) in preds.iter().zip(y).take(top).enumerate() {
+    for (i, (p, yi)) in acc.rows.iter().enumerate() {
         println!("  record {i:<5} pred={p:+.4} y={yi:+.4}");
     }
     Ok(())
@@ -433,6 +593,67 @@ fn cmd_serve(args: &cli::Args) -> spp::Result<()> {
             anyhow::bail!("serve needs a transport: --stdio or --socket /path/to.sock")
         }
     }
+}
+
+/// Path over an on-disk sharded database ([`registry::lookup_sharded`]).
+///
+/// Identical math to [`run_experiment`] — `ShardedDb` implements
+/// [`PatternSubstrate`], so the whole path stack runs unchanged; the
+/// shard layer only changes *where the records live* during the
+/// screening traversals (per-shard streaming for item sets, a resident
+/// union for graph/sequence shards — DESIGN.md "Out-of-core shards").
+fn run_path_sharded(
+    spec: &ExperimentSpec,
+    shards: usize,
+    dir: &str,
+) -> spp::Result<spp::coordinator::ExperimentResult> {
+    use spp::data::registry::ShardedDataset;
+    use spp::path::{compute_path_boosting, compute_path_spp, PathResult};
+
+    fn run<S: PatternSubstrate>(
+        db: &S,
+        y: &[f64],
+        task: Task,
+        method: Method,
+        cfg: &PathConfig,
+    ) -> spp::Result<PathResult> {
+        match method {
+            Method::Spp => compute_path_spp(db, y, task, cfg),
+            Method::Boosting => compute_path_boosting(db, y, task, cfg),
+        }
+    }
+
+    let info = registry::info(&spec.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{}'", spec.dataset))?;
+    let data =
+        registry::lookup_sharded(&spec.dataset, spec.scale, shards, std::path::Path::new(dir))?;
+    let t = std::time::Instant::now();
+    let path = match &data {
+        ShardedDataset::Itemsets { db, y } => run(db, y, info.task, spec.method, &spec.cfg)?,
+        ShardedDataset::Graphs { db, y } => run(db, y, info.task, spec.method, &spec.cfg)?,
+        ShardedDataset::Sequences { db, y } => run(db, y, info.task, spec.method, &spec.cfg)?,
+    };
+    eprintln!(
+        "sharded engine: {} shards in {dir}, peak resident columns {} bytes, {} reloads",
+        shards,
+        path.max_resident_bytes(),
+        path.total_spill_reloads()
+    );
+    let max_gap = path.points.iter().map(|p| p.gap).fold(0.0f64, f64::max);
+    Ok(spp::coordinator::ExperimentResult {
+        task: info.task,
+        n_records: data.n_records(),
+        lambda_max: path.lambda_max,
+        traverse_secs: path.total_traverse_secs(),
+        solve_secs: path.total_solve_secs(),
+        total_secs: path.total_secs(),
+        wall_secs: t.elapsed().as_secs_f64(),
+        traverse_nodes: path.total_nodes(),
+        final_active: path.points.last().map(|p| p.active.len()).unwrap_or(0),
+        max_gap,
+        path,
+        spec: spec.clone(),
+    })
 }
 
 /// SPP path with the XLA FISTA engine for the restricted solves.

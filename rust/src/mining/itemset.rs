@@ -21,9 +21,20 @@ use super::{PatternNode, SubtreeVisitors, TreeVisitor, Walk};
 use crate::columns::{resolve_columns, ColumnLayout, HybridColumn, TidSet};
 use crate::data::Transactions;
 
+/// Where the depth-1 vertical layout comes from: a borrowed in-memory
+/// database (tid-lists built on demand), or pre-built `(item,
+/// tid-list)` pairs — the out-of-core sharded traversal
+/// (`storage::ShardCodec for Transactions`) streams each shard once to
+/// assemble exactly the pairs the in-memory path would have built, so
+/// both sources drive bit-identical traversals.
+enum VerticalSource<'a> {
+    Db(&'a Transactions),
+    Owned(Vec<(u32, Vec<u32>)>),
+}
+
 /// Configurable item-set miner.
 pub struct ItemsetMiner<'a> {
-    db: &'a Transactions,
+    source: VerticalSource<'a>,
     /// Maximum item-set size (the paper's `maxpat`).
     pub maxpat: usize,
     /// Minimum support; patterns below it are not visited (and their
@@ -39,7 +50,21 @@ pub struct ItemsetMiner<'a> {
 impl<'a> ItemsetMiner<'a> {
     pub fn new(db: &'a Transactions, maxpat: usize) -> Self {
         ItemsetMiner {
-            db,
+            source: VerticalSource::Db(db),
+            maxpat,
+            minsup: 1,
+            layout: resolve_columns(None),
+        }
+    }
+
+    /// A miner over a pre-built vertical layout: ascending `(item,
+    /// sorted global tid-list)` pairs.  Eclat never touches records —
+    /// only this layout — so a caller that can produce the pairs some
+    /// other way (e.g. streamed shard-by-shard) gets the exact
+    /// traversal [`Self::new`] would run on the equivalent database.
+    pub fn from_tidlists(pairs: Vec<(u32, Vec<u32>)>, maxpat: usize) -> ItemsetMiner<'static> {
+        ItemsetMiner {
+            source: VerticalSource::Owned(pairs),
             maxpat,
             minsup: 1,
             layout: resolve_columns(None),
@@ -52,13 +77,19 @@ impl<'a> ItemsetMiner<'a> {
     /// splice guarantee depends on both engines expanding the same
     /// frontier.
     fn root_candidates(&self) -> Vec<(u32, Vec<u32>)> {
-        self.db
-            .tidlists()
-            .into_iter()
-            .enumerate()
-            .filter(|(_, t)| t.len() >= self.minsup)
-            .map(|(j, t)| (j as u32, t))
-            .collect()
+        let pairs: Vec<(u32, Vec<u32>)> = match &self.source {
+            VerticalSource::Db(db) => db
+                .tidlists()
+                .into_iter()
+                .enumerate()
+                .map(|(j, t)| (j as u32, t))
+                .collect(),
+            // Cloned because the carriers below take ownership; the
+            // transient copy is the minsup-filtered vertical layout,
+            // not the record database.
+            VerticalSource::Owned(pairs) => pairs.clone(),
+        };
+        pairs.into_iter().filter(|(_, t)| t.len() >= self.minsup).collect()
     }
 
     /// Depth-first traversal; the visitor sees each item-set exactly

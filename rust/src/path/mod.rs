@@ -64,7 +64,7 @@ use crate::runtime::parallel::{self, ThreadStats};
 use crate::screening::certify::certify;
 use crate::screening::forest::ScreenForest;
 use crate::screening::lambda_max::lambda_max;
-use crate::screening::pool::{SupportId, SupportPool};
+use crate::screening::pool::{resolve_memory_budget, SpillStats, SupportId, SupportPool};
 use crate::screening::range;
 use crate::screening::sppc::{screen_pass, Survivor};
 use crate::solver::{CdConfig, CdSolver, Task};
@@ -113,6 +113,17 @@ pub struct PathConfig {
     /// Both layouts produce bit-identical paths
     /// (`tests/integration_columns.rs`).
     pub columns: Option<ColumnLayout>,
+    /// Resident-byte ceiling for the path's [`SupportPool`] (CLI
+    /// `--memory-budget BYTES`): least-recently-touched support columns
+    /// spill to a temp file and reload on demand, with per-λ telemetry
+    /// in [`PathPoint::spill`].  `0` = auto (`SPP_MEMORY_BUDGET` env,
+    /// else unlimited).  Columns reload byte-identical, so every budget
+    /// produces bit-identical paths (`tests/integration_shards.rs`);
+    /// the from-scratch per-λ engine (`--no-reuse --range-chunk 1`)
+    /// additionally holds the ceiling *during* screening, while
+    /// forest-walking engines restore full residency per walk and spill
+    /// back down between λs.
+    pub memory_budget: usize,
     /// Boosting: patterns added per round.
     pub k_add: usize,
     /// Boosting: violation tolerance.
@@ -132,6 +143,7 @@ impl Default for PathConfig {
             threads: 0,
             range_chunk: 0,
             columns: None,
+            memory_budget: 0,
             k_add: 1,
             viol_tol: 1e-6,
         }
@@ -198,6 +210,10 @@ pub struct PathPoint {
     /// Thread utilisation of this λ's screening phase (workers used,
     /// tasks farmed; `workers == 1` for a sequential pass).
     pub threads: ThreadStats,
+    /// Column-pool spill telemetry: residency gauges after this λ's
+    /// budget enforcement, plus this λ's reload/eviction deltas (all
+    /// zero without `--memory-budget`).
+    pub spill: SpillStats,
 }
 
 /// Whole-path result.
@@ -249,6 +265,22 @@ impl PathResult {
     /// tree (no substrate re-entry; 0 in per-λ mode).
     pub fn chunk_hits(&self) -> usize {
         self.points.iter().filter(|p| p.reuse.chunk_hit).count()
+    }
+
+    /// Peak of the per-λ resident-byte gauges — what the A6 bench
+    /// reports as the pool's memory ceiling under `--memory-budget`.
+    pub fn max_resident_bytes(&self) -> usize {
+        self.points.iter().map(|p| p.spill.resident_bytes).max().unwrap_or(0)
+    }
+
+    /// Columns reloaded from the spill file across the path.
+    pub fn total_spill_reloads(&self) -> u64 {
+        self.points.iter().map(|p| p.spill.reloaded).sum()
+    }
+
+    /// Columns evicted to the spill file across the path.
+    pub fn total_spill_evictions(&self) -> u64 {
+        self.points.iter().map(|p| p.spill.evicted).sum()
     }
 }
 
@@ -465,10 +497,20 @@ pub fn compute_path_spp_with<S: PatternSubstrate>(
         cd_epochs: 0,
         reuse: ReuseStats::default(),
         threads: ThreadStats::sequential(),
+        spill: SpillStats::default(),
     });
 
     // screening state from the previous λ
     let mut pool = SupportPool::with_layout(resolve_columns(cfg.columns));
+    let budget = resolve_memory_budget(cfg.memory_budget);
+    pool.set_memory_budget(budget);
+    // Budget enforcement *inside* `intern` is only safe for from-scratch
+    // per-λ screening: forest walks (persistent or chunk-local) read
+    // previously-interned columns by id, so those engines restore full
+    // residency per walk and spill between phases instead (module docs
+    // of `screening::pool`).
+    pool.set_spill_on_intern(!cfg.reuse_forest && !chunked);
+    let mut spill_base = pool.spill_stats();
     let mut forest = cfg
         .reuse_forest
         .then(|| ScreenForest::new(cfg.maxpat, cfg.minsup));
@@ -504,6 +546,9 @@ pub fn compute_path_spp_with<S: PatternSubstrate>(
             let r_chunk = range::interval_radius(
                 task, y, &theta, &slack, l1, chunk_lams[span - 1], chunk_lams[0],
             );
+            if budget > 0 {
+                pool.ensure_all_resident();
+            }
             let f = forest
                 .as_mut()
                 .or_else(|| chunk_forest.as_mut())
@@ -526,6 +571,13 @@ pub fn compute_path_spp_with<S: PatternSubstrate>(
             let l1: f64 = w.iter().map(|x| x.abs()).sum();
             let radius = range::lambda_radius(task, y, &theta, &slack, l1, lam);
 
+            // A forest walk reads every stored column by id, so restore
+            // full residency first — the transient peak is the
+            // forest-mode budget caveat; `--no-reuse --range-chunk 1`
+            // holds the ceiling mid-screen (see `PathConfig::memory_budget`).
+            if budget > 0 && (forest.is_some() || chunk_forest.is_some()) {
+                pool.ensure_all_resident();
+            }
             let t1 = Instant::now();
             let engine = forest.as_mut().or_else(|| chunk_forest.as_mut());
             let (survivors, stats, mut reuse, tstats) =
@@ -560,7 +612,12 @@ pub fn compute_path_spp_with<S: PatternSubstrate>(
             ws = new_ws;
 
             // (3) restricted solve, warm-started, on borrowed column
-            // views.
+            // views — after making exactly the working set's columns
+            // resident (they are exempt from the reload's enforcement
+            // pass).
+            if budget > 0 {
+                pool.ensure_resident(&ws.support_ids);
+            }
             let t2 = Instant::now();
             let cols = ws.columns(&pool);
             let sol = solver.solve_restricted(task, &cols, y, lam, &w0, b);
@@ -582,6 +639,18 @@ pub fn compute_path_spp_with<S: PatternSubstrate>(
                 theta = c.theta;
             }
 
+            // (5) settle the pool back under the budget and account
+            // this λ's spill traffic (deltas of the lifetime counters;
+            // the chunk pre-mine's traffic lands on its leading λ).
+            pool.enforce_budget();
+            let spill_now = pool.spill_stats();
+            let spill = SpillStats {
+                reloaded: spill_now.reloaded - spill_base.reloaded,
+                evicted: spill_now.evicted - spill_base.evicted,
+                ..spill_now
+            };
+            spill_base = spill_now;
+
             let active: Vec<(Pattern, f64)> = ws
                 .patterns
                 .iter()
@@ -602,6 +671,7 @@ pub fn compute_path_spp_with<S: PatternSubstrate>(
                 cd_epochs: sol.epochs,
                 reuse,
                 threads: tstats,
+                spill,
             });
         }
         k += span;
@@ -656,16 +726,35 @@ pub fn compute_path_boosting<S: PatternSubstrate>(
         cd_epochs: 0,
         reuse: ReuseStats::default(),
         threads: ThreadStats::sequential(),
+        spill: SpillStats::default(),
     });
 
     let mut pool = SupportPool::with_layout(resolve_columns(cfg.columns));
+    let budget = resolve_memory_budget(cfg.memory_budget);
+    pool.set_memory_budget(budget);
+    let mut spill_base = pool.spill_stats();
     let mut ws = WorkingSet::new();
     let mut w: Vec<f64> = Vec::new();
     let mut b = lm.b0;
     for &lam in &grid[1..] {
+        // Boosting interleaves searching, interning and column reads
+        // inside each round, so the budget is enforced at λ boundaries:
+        // full residency during the λ, spilled back down before the
+        // gauges are recorded.
+        if budget > 0 {
+            pool.ensure_all_resident();
+        }
         let out = boosting_solve(
             db, y, task, lam, cfg.maxpat, cfg.minsup, &mut pool, &mut ws, &mut w, &mut b, &bcfg,
         );
+        pool.enforce_budget();
+        let spill_now = pool.spill_stats();
+        let spill = SpillStats {
+            reloaded: spill_now.reloaded - spill_base.reloaded,
+            evicted: spill_now.evicted - spill_base.evicted,
+            ..spill_now
+        };
+        spill_base = spill_now;
         let active: Vec<(Pattern, f64)> = ws
             .patterns
             .iter()
@@ -691,6 +780,7 @@ pub fn compute_path_boosting<S: PatternSubstrate>(
             // boosting's most-violating search tracks a global top-k —
             // order-dependent pruning, kept sequential
             threads: ThreadStats::sequential(),
+            spill,
         });
     }
 

@@ -1,0 +1,356 @@
+//! Out-of-core sharded databases behind the [`PatternSubstrate`] seam.
+//!
+//! The rest of the engine is generic over `PatternSubstrate`, so the
+//! out-of-core story is one adapter: [`ShardedDb<S>`] implements the
+//! trait over a shard container ([`shard`]) instead of an in-memory
+//! database, mapping global record ids to `(shard, local id)` and
+//! streaming one shard at a time.  Two hooks on [`ShardCodec`] let a
+//! substrate traverse *without* materializing the record union:
+//!
+//! * `Transactions` overrides them — Eclat only ever touches records
+//!   through its depth-1 vertical layout, so the sharded itemset
+//!   traversal streams each shard once to build exactly the tidlists
+//!   the in-memory miner would have built (per-shard counts and lists
+//!   computed on pool workers, reduced **in shard order**, so the
+//!   traversal is bit-identical at any thread count — same discipline
+//!   as `runtime::parallel`).  Record rows are resident one shard at a
+//!   time; only the minsup-filtered vertical layout stays in memory.
+//! * gSpan / PrefixSpan grow patterns against the records themselves,
+//!   so [`ShardedDb::open`] materializes the union for those substrates
+//!   up front (`ShardCodec::STREAMS = false`) — the honest fallback;
+//!   the adapter still buys them the on-disk interchange format, the
+//!   O(1) id remap and the spill-tier column budget
+//!   (`screening::pool`).
+//!
+//! DESIGN.md §"Out-of-core shards" documents the file format, the
+//! determinism argument and the memory model.
+
+pub mod shard;
+
+use std::path::{Path, PathBuf};
+
+use crate::mining::{Pattern, PatternSubstrate, SubtreeVisitors, TreeVisitor};
+
+pub use shard::{read_index, read_shard_bytes, ShardIndex, ShardWriter, MAGIC};
+
+/// A substrate that can live in a shard container: a per-shard record
+/// codec plus (optionally) a traversal that streams shards instead of
+/// materializing the union.
+pub trait ShardCodec: PatternSubstrate + Clone + Sized {
+    /// Does [`traverse_sharded`](ShardCodec::traverse_sharded) stream
+    /// shards without the record union?  When `false` (the default),
+    /// [`ShardedDb::open`] materializes the union eagerly so every
+    /// `PatternSubstrate` method works unchanged.
+    const STREAMS: bool = false;
+
+    /// Serialize this database as one standalone shard blob (must
+    /// round-trip through [`decode_shard`](ShardCodec::decode_shard)).
+    fn encode_shard(&self) -> Vec<u8>;
+
+    /// Decode one shard blob back into a database.
+    fn decode_shard(bytes: &[u8]) -> crate::Result<Self>;
+
+    /// Concatenate shard databases, in order, into one database whose
+    /// record `i` is record `i` of the concatenation.
+    fn concat(parts: Vec<Self>) -> crate::Result<Self>;
+
+    /// Sequential canonical traversal of a sharded database; must
+    /// visit the exact node sequence `PatternSubstrate::traverse`
+    /// visits on the materialized union.  The default delegates to the
+    /// union.
+    fn traverse_sharded(
+        db: &ShardedDb<Self>,
+        maxpat: usize,
+        minsup: usize,
+        visitor: &mut dyn TreeVisitor,
+    ) {
+        db.union_db().traverse(maxpat, minsup, visitor)
+    }
+
+    /// Subtree-parallel twin of
+    /// [`traverse_sharded`](ShardCodec::traverse_sharded); same splice
+    /// contract as `PatternSubstrate::traverse_parallel`.
+    fn traverse_sharded_parallel<F: SubtreeVisitors>(
+        db: &ShardedDb<Self>,
+        maxpat: usize,
+        minsup: usize,
+        threads: usize,
+        factory: &F,
+    ) -> Vec<F::V> {
+        db.union_db().traverse_parallel(maxpat, minsup, threads, factory)
+    }
+}
+
+enum Backing<S> {
+    File {
+        path: PathBuf,
+        index: ShardIndex,
+        /// Materialized record union — `Some` for non-streaming
+        /// substrates (filled by [`ShardedDb::open`]).
+        union: Option<Box<S>>,
+    },
+    Mem(S),
+}
+
+/// A [`PatternSubstrate`] over a shard container (or, after
+/// [`select`](PatternSubstrate::select), over an in-memory database —
+/// CV folds of a sharded db are ordinary databases).
+pub struct ShardedDb<S: ShardCodec> {
+    backing: Backing<S>,
+}
+
+impl<S: ShardCodec> ShardedDb<S> {
+    /// Open a shard container written by [`ShardWriter`] for this
+    /// substrate.  Non-streaming substrates materialize the record
+    /// union here, once.
+    pub fn open(path: &Path) -> crate::Result<Self> {
+        let index = shard::read_index(path)?;
+        anyhow::ensure!(
+            index.kind == S::KIND_TAG,
+            "{}: shard kind '{}' does not match substrate '{}'",
+            path.display(),
+            index.kind,
+            S::KIND_TAG
+        );
+        let mut db = ShardedDb {
+            backing: Backing::File {
+                path: path.to_path_buf(),
+                index,
+                union: None,
+            },
+        };
+        if !S::STREAMS {
+            let materialized = db.materialize()?;
+            if let Backing::File { union, .. } = &mut db.backing {
+                *union = Some(Box::new(materialized));
+            }
+        }
+        Ok(db)
+    }
+
+    /// Wrap an in-memory database (one logical shard).
+    pub fn from_mem(db: S) -> Self {
+        ShardedDb {
+            backing: Backing::Mem(db),
+        }
+    }
+
+    /// The in-memory database, if this adapter is memory-backed.
+    pub fn as_mem(&self) -> Option<&S> {
+        match &self.backing {
+            Backing::Mem(db) => Some(db),
+            Backing::File { .. } => None,
+        }
+    }
+
+    /// The container path, if file-backed.
+    pub fn path(&self) -> Option<&Path> {
+        match &self.backing {
+            Backing::File { path, .. } => Some(path),
+            Backing::Mem(_) => None,
+        }
+    }
+
+    /// Number of shards (a memory backing counts as one).
+    pub fn n_shards(&self) -> usize {
+        match &self.backing {
+            Backing::File { index, .. } => index.n_shards(),
+            Backing::Mem(_) => 1,
+        }
+    }
+
+    /// Records per full shard.
+    pub fn shard_size(&self) -> usize {
+        match &self.backing {
+            Backing::File { index, .. } => index.shard_size,
+            Backing::Mem(db) => db.n_records().max(1),
+        }
+    }
+
+    /// Global id of the first record in shard `s`.
+    pub fn shard_base(&self, s: usize) -> usize {
+        s * self.shard_size()
+    }
+
+    /// Records held by shard `s`.
+    pub fn shard_records(&self, s: usize) -> usize {
+        match &self.backing {
+            Backing::File { index, .. } => index.shard_records(s),
+            Backing::Mem(db) => db.n_records(),
+        }
+    }
+
+    /// Map a global record id to `(shard, local id)`.
+    pub fn locate(&self, gid: usize) -> (usize, usize) {
+        match &self.backing {
+            Backing::File { index, .. } => index.locate(gid),
+            Backing::Mem(_) => (0, gid),
+        }
+    }
+
+    /// Decode shard `s` into an owned database (fresh file handle, so
+    /// pool workers may call this concurrently).
+    pub fn shard(&self, s: usize) -> crate::Result<S> {
+        match &self.backing {
+            Backing::File { path, index, .. } => {
+                S::decode_shard(&shard::read_shard_bytes(path, index, s)?)
+            }
+            Backing::Mem(db) => {
+                anyhow::ensure!(s == 0, "memory backing has a single shard");
+                Ok(db.clone())
+            }
+        }
+    }
+
+    /// Decode and concatenate every shard into one in-memory database.
+    pub fn materialize(&self) -> crate::Result<S> {
+        match &self.backing {
+            Backing::File {
+                path,
+                index,
+                union,
+            } => {
+                if let Some(u) = union {
+                    return Ok((**u).clone());
+                }
+                let mut parts = Vec::with_capacity(index.n_shards());
+                for s in 0..index.n_shards() {
+                    parts.push(S::decode_shard(&shard::read_shard_bytes(path, index, s)?)?);
+                }
+                S::concat(parts)
+            }
+            Backing::Mem(db) => Ok(db.clone()),
+        }
+    }
+
+    /// Borrow the materialized record union.  Panics for a streaming
+    /// substrate's file backing (those never materialize; record-level
+    /// access goes through [`ShardedDb::shard`]).
+    pub fn union_db(&self) -> &S {
+        match &self.backing {
+            Backing::Mem(db) => db,
+            Backing::File { union: Some(u), .. } => u,
+            Backing::File { path, .. } => panic!(
+                "record union of streaming substrate '{}' is not materialized ({}); \
+                 stream records via ShardedDb::shard",
+                S::KIND_TAG,
+                path.display()
+            ),
+        }
+    }
+}
+
+impl<S: ShardCodec> PatternSubstrate for ShardedDb<S> {
+    type Record = S::Record;
+
+    fn n_records(&self) -> usize {
+        match &self.backing {
+            Backing::File { index, .. } => index.n_records,
+            Backing::Mem(db) => db.n_records(),
+        }
+    }
+
+    fn traverse(&self, maxpat: usize, minsup: usize, visitor: &mut dyn TreeVisitor) {
+        S::traverse_sharded(self, maxpat, minsup, visitor)
+    }
+
+    fn traverse_parallel<F: SubtreeVisitors>(
+        &self,
+        maxpat: usize,
+        minsup: usize,
+        threads: usize,
+        factory: &F,
+    ) -> Vec<F::V> {
+        S::traverse_sharded_parallel(self, maxpat, minsup, threads, factory)
+    }
+
+    fn matches(pattern: &Pattern, record: &Self::Record) -> bool {
+        S::matches(pattern, record)
+    }
+
+    fn record(&self, i: usize) -> &Self::Record {
+        self.union_db().record(i)
+    }
+
+    /// Record-subset clone: shards are streamed in order, the requested
+    /// rows extracted per shard, and the concatenation permuted back to
+    /// the caller's index order — so arbitrary (even duplicated) index
+    /// lists behave exactly like the in-memory `select`, while at most
+    /// one shard's records are decoded at a time beyond the selection
+    /// itself.  The result is memory-backed (CV folds are ordinary
+    /// databases).
+    fn select(&self, indices: &[usize]) -> Self {
+        if let Some(db) = self.as_mem() {
+            return ShardedDb::from_mem(db.select(indices));
+        }
+        let n = self.n_records();
+        // (gid, original position), stably sorted by gid: duplicates
+        // keep their relative order, so the permutation below is total.
+        let mut order: Vec<(usize, usize)> = indices
+            .iter()
+            .copied()
+            .enumerate()
+            .map(|(p, g)| (g, p))
+            .collect();
+        for &(g, _) in &order {
+            assert!(g < n, "select index {g} out of range ({n} records)");
+        }
+        order.sort_by_key(|&(g, _)| g);
+        let mut parts = Vec::new();
+        let mut i = 0;
+        for s in 0..self.n_shards() {
+            let base = self.shard_base(s);
+            let end = base + self.shard_records(s);
+            let lo = i;
+            while i < order.len() && order[i].0 < end {
+                i += 1;
+            }
+            if lo < i {
+                let locals: Vec<usize> = order[lo..i].iter().map(|&(g, _)| g - base).collect();
+                let sh = self
+                    .shard(s)
+                    .unwrap_or_else(|e| panic!("decoding shard {s} for select: {e}"));
+                parts.push(sh.select(&locals));
+            }
+        }
+        let sorted = S::concat(parts).unwrap_or_else(|e| panic!("concatenating selection: {e}"));
+        let mut perm = vec![0usize; order.len()];
+        for (j, &(_, p)) in order.iter().enumerate() {
+            perm[p] = j;
+        }
+        ShardedDb::from_mem(sorted.select(&perm))
+    }
+
+    fn parse_pattern(body: &str) -> crate::Result<Pattern> {
+        S::parse_pattern(body)
+    }
+
+    fn format_pattern(pattern: &Pattern) -> String {
+        S::format_pattern(pattern)
+    }
+
+    const KIND_TAG: &'static str = S::KIND_TAG;
+}
+
+/// Shard an in-memory database into a container at `path`: records are
+/// cut into runs of `shard_size` via `select`, encoded and streamed
+/// out.  (The huge synthetic presets bypass this and write shards
+/// straight from their chunked generator — `data::registry` wires
+/// that.)
+pub fn write_sharded<S: ShardCodec>(
+    db: &S,
+    path: &Path,
+    shard_size: usize,
+) -> crate::Result<ShardIndex> {
+    let n = db.n_records();
+    anyhow::ensure!(n > 0, "cannot shard an empty database");
+    let mut writer = ShardWriter::<S>::create(path, shard_size)?;
+    let mut base = 0usize;
+    while base < n {
+        let end = (base + shard_size).min(n);
+        let idx: Vec<usize> = (base..end).collect();
+        writer.write_shard(&db.select(&idx))?;
+        base = end;
+    }
+    writer.finish()
+}

@@ -1,0 +1,326 @@
+//! On-disk shard container: fixed-size record shards + a footer index.
+//!
+//! One `.spps` file holds an entire database as a sequence of opaque
+//! shard blobs followed by a self-describing footer:
+//!
+//! ```text
+//! [shard 0 blob][shard 1 blob] … [shard k-1 blob]
+//! spp-shards v1
+//! kind <KIND_TAG>
+//! records <n>
+//! shard_size <m>
+//! offset <o_0>
+//! …
+//! offset <o_k>            ← k+1 prefix byte offsets; o_k = payload len
+//! [footer_len: u64 LE][b"SPPSHRD1"]
+//! ```
+//!
+//! The blobs are opaque to this layer — each substrate's
+//! [`ShardCodec`](super::ShardCodec) defines the per-shard encoding.
+//! Every shard except the last holds exactly `shard_size` records
+//! ([`ShardWriter::write_shard`] enforces it), so a global record id
+//! maps to `(id / shard_size, id % shard_size)` with no per-record
+//! index — the O(1) remap [`ShardIndex::locate`] implements and
+//! `tests/integration_shards.rs` pins at the shard-size edge cases.
+//!
+//! The footer lives at the *end* so the writer can stream shards
+//! front-to-back without knowing the shard count up front (the
+//! tens-of-millions-of-records synthetic preset is generated and
+//! written one shard at a time).  The fixed 16-byte trailer (footer
+//! length + magic) makes the file self-locating: readers seek to the
+//! end, read the trailer, then parse the footer — no side-car index
+//! file.
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::marker::PhantomData;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context as _;
+
+use super::ShardCodec;
+
+/// Trailing magic identifying a shard container file.
+pub const MAGIC: &[u8; 8] = b"SPPSHRD1";
+
+/// Parsed footer of a shard container: everything a reader needs to
+/// stream any shard independently.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardIndex {
+    /// `KIND_TAG` of the substrate the shards encode (`I`, `G`, `S`).
+    pub kind: String,
+    /// Total records across all shards.
+    pub n_records: usize,
+    /// Records per shard; every shard but the last holds exactly this
+    /// many.  Always `> 0`.
+    pub shard_size: usize,
+    /// `n_shards + 1` ascending byte offsets into the payload region;
+    /// shard `s` occupies `offsets[s]..offsets[s + 1]`.
+    pub offsets: Vec<u64>,
+}
+
+impl ShardIndex {
+    /// Number of shards in the container.
+    pub fn n_shards(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Global id of the first record in shard `s`.
+    pub fn shard_base(&self, s: usize) -> usize {
+        s * self.shard_size
+    }
+
+    /// Records held by shard `s` (only the last shard may be short).
+    pub fn shard_records(&self, s: usize) -> usize {
+        let base = self.shard_base(s);
+        self.shard_size.min(self.n_records - base)
+    }
+
+    /// Map a global record id to `(shard, local id)` — the O(1) remap
+    /// the fixed shard size buys.
+    pub fn locate(&self, gid: usize) -> (usize, usize) {
+        (gid / self.shard_size, gid % self.shard_size)
+    }
+}
+
+/// Streaming shard writer: feed databases of exactly `shard_size`
+/// records (the last may be short), then [`ShardWriter::finish`] to
+/// write the footer.  Generic over the substrate so the footer records
+/// the right `KIND_TAG` and a reader for a different substrate refuses
+/// the file.
+pub struct ShardWriter<S: ShardCodec> {
+    out: BufWriter<File>,
+    path: PathBuf,
+    shard_size: usize,
+    offsets: Vec<u64>,
+    records: usize,
+    /// A short shard has been written — it must remain the last.
+    sealed: bool,
+    _marker: PhantomData<S>,
+}
+
+impl<S: ShardCodec> ShardWriter<S> {
+    /// Create (truncate) `path` and start a container with the given
+    /// shard size.
+    pub fn create(path: &Path, shard_size: usize) -> crate::Result<Self> {
+        anyhow::ensure!(shard_size > 0, "shard_size must be positive");
+        let file = File::create(path)
+            .with_context(|| format!("creating shard file {}", path.display()))?;
+        Ok(ShardWriter {
+            out: BufWriter::new(file),
+            path: path.to_path_buf(),
+            shard_size,
+            offsets: vec![0],
+            records: 0,
+            sealed: false,
+            _marker: PhantomData,
+        })
+    }
+
+    /// Records written so far.
+    pub fn records(&self) -> usize {
+        self.records
+    }
+
+    /// Append one shard.  Every shard must hold exactly `shard_size`
+    /// records except the last, which may be short — enforced here so
+    /// [`ShardIndex::locate`]'s division remap stays valid.
+    pub fn write_shard(&mut self, shard: &S) -> crate::Result<()> {
+        let n = shard.n_records();
+        anyhow::ensure!(
+            !self.sealed,
+            "a short shard was already written; only the last shard may hold \
+             fewer than shard_size={} records",
+            self.shard_size
+        );
+        anyhow::ensure!(
+            n > 0 && n <= self.shard_size,
+            "shard holds {n} records; expected 1..={}",
+            self.shard_size
+        );
+        if n < self.shard_size {
+            self.sealed = true;
+        }
+        let blob = shard.encode_shard();
+        self.out
+            .write_all(&blob)
+            .with_context(|| format!("writing shard to {}", self.path.display()))?;
+        self.records += n;
+        let end = *self.offsets.last().expect("offsets start at [0]") + blob.len() as u64;
+        self.offsets.push(end);
+        Ok(())
+    }
+
+    /// Write the footer + trailer and flush; returns the index the
+    /// footer encodes.
+    pub fn finish(mut self) -> crate::Result<ShardIndex> {
+        let mut footer = String::from("spp-shards v1\n");
+        footer.push_str(&format!("kind {}\n", S::KIND_TAG));
+        footer.push_str(&format!("records {}\n", self.records));
+        footer.push_str(&format!("shard_size {}\n", self.shard_size));
+        for o in &self.offsets {
+            footer.push_str(&format!("offset {o}\n"));
+        }
+        self.out.write_all(footer.as_bytes())?;
+        self.out.write_all(&(footer.len() as u64).to_le_bytes())?;
+        self.out.write_all(MAGIC)?;
+        self.out
+            .flush()
+            .with_context(|| format!("finishing shard file {}", self.path.display()))?;
+        Ok(ShardIndex {
+            kind: S::KIND_TAG.to_string(),
+            n_records: self.records,
+            shard_size: self.shard_size,
+            offsets: self.offsets,
+        })
+    }
+}
+
+/// Read and validate the footer of a shard container.
+pub fn read_index(path: &Path) -> crate::Result<ShardIndex> {
+    let mut f =
+        File::open(path).with_context(|| format!("opening shard file {}", path.display()))?;
+    let len = f.seek(SeekFrom::End(0))?;
+    anyhow::ensure!(len >= 16, "{}: too short for a shard container", path.display());
+    f.seek(SeekFrom::End(-16))?;
+    let mut trailer = [0u8; 16];
+    f.read_exact(&mut trailer)?;
+    anyhow::ensure!(
+        &trailer[8..] == MAGIC,
+        "{}: missing shard magic (not a spp-shards file)",
+        path.display()
+    );
+    let footer_len = u64::from_le_bytes(trailer[..8].try_into().expect("8-byte slice"));
+    anyhow::ensure!(
+        footer_len + 16 <= len,
+        "{}: footer length {footer_len} exceeds file size {len}",
+        path.display()
+    );
+    f.seek(SeekFrom::Start(len - 16 - footer_len))?;
+    let mut buf = vec![0u8; footer_len as usize];
+    f.read_exact(&mut buf)?;
+    let text = std::str::from_utf8(&buf)
+        .with_context(|| format!("{}: footer is not UTF-8", path.display()))?;
+    parse_footer(text, len - 16 - footer_len)
+        .with_context(|| format!("parsing shard footer of {}", path.display()))
+}
+
+fn parse_footer(text: &str, payload_len: u64) -> crate::Result<ShardIndex> {
+    let mut lines = text.lines();
+    anyhow::ensure!(
+        lines.next() == Some("spp-shards v1"),
+        "unsupported shard footer header"
+    );
+    let mut kind: Option<String> = None;
+    let mut n_records: Option<usize> = None;
+    let mut shard_size: Option<usize> = None;
+    let mut offsets: Vec<u64> = Vec::new();
+    for line in lines {
+        let (key, value) = line
+            .split_once(' ')
+            .ok_or_else(|| anyhow::anyhow!("malformed footer line '{line}'"))?;
+        match key {
+            "kind" => kind = Some(value.to_string()),
+            "records" => n_records = Some(value.parse()?),
+            "shard_size" => shard_size = Some(value.parse()?),
+            "offset" => offsets.push(value.parse()?),
+            other => anyhow::bail!("unknown footer key '{other}'"),
+        }
+    }
+    let kind = kind.ok_or_else(|| anyhow::anyhow!("footer missing 'kind'"))?;
+    let n_records = n_records.ok_or_else(|| anyhow::anyhow!("footer missing 'records'"))?;
+    let shard_size = shard_size.ok_or_else(|| anyhow::anyhow!("footer missing 'shard_size'"))?;
+    anyhow::ensure!(shard_size > 0, "shard_size must be positive");
+    anyhow::ensure!(!offsets.is_empty(), "footer missing offsets");
+    anyhow::ensure!(
+        offsets.windows(2).all(|w| w[0] <= w[1]),
+        "shard offsets must be non-decreasing"
+    );
+    anyhow::ensure!(
+        *offsets.last().expect("non-empty") == payload_len,
+        "last offset {} does not match payload length {payload_len}",
+        offsets.last().expect("non-empty")
+    );
+    let n_shards = offsets.len() - 1;
+    let capacity_ok = if n_records == 0 {
+        n_shards == 0
+    } else {
+        n_records > (n_shards - 1) * shard_size && n_records <= n_shards * shard_size
+    };
+    anyhow::ensure!(
+        capacity_ok,
+        "{n_records} records do not fit {n_shards} shards of size {shard_size}"
+    );
+    Ok(ShardIndex {
+        kind,
+        n_records,
+        shard_size,
+        offsets,
+    })
+}
+
+/// Read the raw blob of shard `s` (a fresh file handle per call, so
+/// concurrent pool workers can each stream their own shard).
+pub fn read_shard_bytes(path: &Path, index: &ShardIndex, s: usize) -> crate::Result<Vec<u8>> {
+    anyhow::ensure!(s < index.n_shards(), "shard {s} out of range");
+    let (lo, hi) = (index.offsets[s], index.offsets[s + 1]);
+    let mut f =
+        File::open(path).with_context(|| format!("opening shard file {}", path.display()))?;
+    f.seek(SeekFrom::Start(lo))?;
+    let mut buf = vec![0u8; (hi - lo) as usize];
+    f.read_exact(&mut buf)
+        .with_context(|| format!("reading shard {s} of {}", path.display()))?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locate_covers_shard_size_edges() {
+        for (shard_size, n) in [(1usize, 5usize), (2, 5), (3, 5), (5, 5), (4, 13)] {
+            let n_shards = (n + shard_size - 1) / shard_size;
+            let idx = ShardIndex {
+                kind: "I".into(),
+                n_records: n,
+                shard_size,
+                offsets: vec![0; n_shards + 1],
+            };
+            assert_eq!(idx.n_shards(), n_shards);
+            let mut seen = 0usize;
+            for s in 0..n_shards {
+                assert_eq!(idx.shard_base(s), seen);
+                seen += idx.shard_records(s);
+            }
+            assert_eq!(seen, n);
+            for gid in 0..n {
+                let (s, local) = idx.locate(gid);
+                assert!(s < n_shards && local < idx.shard_records(s));
+                assert_eq!(idx.shard_base(s) + local, gid);
+            }
+        }
+    }
+
+    #[test]
+    fn footer_round_trips_and_rejects_corruption() {
+        let idx = ShardIndex {
+            kind: "I".into(),
+            n_records: 7,
+            shard_size: 3,
+            offsets: vec![0, 10, 20, 26],
+        };
+        let mut footer = String::from("spp-shards v1\n");
+        footer.push_str("kind I\nrecords 7\nshard_size 3\n");
+        for o in &idx.offsets {
+            footer.push_str(&format!("offset {o}\n"));
+        }
+        assert_eq!(parse_footer(&footer, 26).unwrap(), idx);
+        assert!(parse_footer(&footer, 25).is_err(), "payload length mismatch");
+        assert!(parse_footer("garbage\n", 0).is_err(), "bad header");
+        assert!(
+            parse_footer("spp-shards v1\nkind I\nrecords 9\nshard_size 3\noffset 0\n", 0).is_err(),
+            "record count exceeding shard capacity"
+        );
+    }
+}

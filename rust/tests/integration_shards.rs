@@ -1,0 +1,281 @@
+//! Out-of-core sharded databases, end to end.
+//!
+//! Three properties pin the storage layer:
+//!
+//! 1. **Remap**: the global↔local record-id arithmetic survives the
+//!    pathological shard sizes (1 record per shard, boundary ±1, a
+//!    last shard holding a single record), `select` handles arbitrary
+//!    permuted/duplicated index lists, and the materialized union is
+//!    record-identical to the source database.
+//! 2. **Differential path**: the full SPP path over a file-backed
+//!    [`ShardedDb`] is **bit-identical** to the in-memory path — same
+//!    λ grid, active sets, weight/intercept/gap bits, same |Â| and
+//!    solver trajectory — on all three substrates, at 1 and 4 threads.
+//! 3. **Spill ceiling**: a small `memory_budget` leaves every path
+//!    point's post-enforcement resident-byte gauge at or under the
+//!    budget, moves real traffic through the spill tier (evictions and
+//!    reloads), and never changes a single output bit — for the SPP
+//!    forest engine, the per-λ scratch engine and the boosting
+//!    baseline alike.
+
+use std::path::PathBuf;
+
+use spp::data::registry::{self, Dataset, ShardedDataset};
+use spp::data::synth_itemsets::{self, ItemsetSynthConfig};
+use spp::data::Transactions;
+use spp::mining::PatternSubstrate;
+use spp::path::{compute_path_boosting, compute_path_spp, PathConfig, PathResult};
+use spp::solver::Task;
+use spp::storage::{read_index, write_sharded, ShardedDb};
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("spp-it-shards-{tag}-{}", std::process::id()))
+}
+
+fn cfg(n_lambdas: usize, maxpat: usize) -> PathConfig {
+    PathConfig {
+        n_lambdas,
+        lambda_min_ratio: 0.05,
+        maxpat,
+        threads: 1,
+        ..PathConfig::default()
+    }
+}
+
+/// Bitwise equality of everything the solver produced (telemetry and
+/// wall-clock excluded — where the traversal work happens is exactly
+/// what the storage layer is allowed to move).
+fn assert_paths_bitwise(a: &PathResult, b: &PathResult) {
+    assert_eq!(a.lambda_max.to_bits(), b.lambda_max.to_bits());
+    assert_eq!(a.points.len(), b.points.len());
+    for (p, q) in a.points.iter().zip(&b.points) {
+        assert_eq!(p.lambda.to_bits(), q.lambda.to_bits());
+        assert_eq!(
+            p.active.len(),
+            q.active.len(),
+            "active-set size mismatch at λ={}: {} vs {}",
+            p.lambda,
+            p.active.len(),
+            q.active.len()
+        );
+        for ((pa, wa), (pb, wb)) in p.active.iter().zip(&q.active) {
+            assert_eq!(pa, pb, "active pattern/order mismatch at λ={}", p.lambda);
+            assert_eq!(
+                wa.to_bits(),
+                wb.to_bits(),
+                "weight bits differ at λ={} on {}: {wa} vs {wb}",
+                p.lambda,
+                pa.display()
+            );
+        }
+        assert_eq!(p.b.to_bits(), q.b.to_bits(), "intercept bits at λ={}", p.lambda);
+        assert_eq!(p.gap.to_bits(), q.gap.to_bits(), "gap bits at λ={}", p.lambda);
+        assert!(p.gap <= 2e-6, "uncertified λ={}", p.lambda);
+        assert_eq!(p.working_size, q.working_size, "|Â| at λ={}", p.lambda);
+        assert_eq!(p.cd_epochs, q.cd_epochs, "solver epochs at λ={}", p.lambda);
+    }
+}
+
+#[test]
+fn remap_survives_pathological_shard_sizes() {
+    let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(301, false));
+    let n = d.db.len();
+    assert!(n >= 4, "tiny preset too tiny for boundary cases ({n})");
+    let dir = tmp("remap");
+    std::fs::create_dir_all(&dir).unwrap();
+    // 1 record/shard; boundary ±1 around a mid split; a full-db shard;
+    // oversized (single-shard); and a last shard holding ONE record
+    let sizes = [1, 2, (n + 1) / 2, n - 1, n, n + 3];
+    for (case, &size) in sizes.iter().enumerate() {
+        let path = dir.join(format!("case{case}.spps"));
+        let index = write_sharded(&d.db, &path, size).unwrap();
+        let n_shards = (n + size - 1) / size;
+        assert_eq!(index.n_shards(), n_shards, "size={size}");
+        assert_eq!(index.n_records, n);
+        assert_eq!(index.shard_size, size);
+        // the footer read back from disk agrees with the writer's index
+        let reread = read_index(&path).unwrap();
+        assert_eq!(reread.n_records, index.n_records);
+        assert_eq!(reread.shard_size, index.shard_size);
+        assert_eq!(reread.n_shards(), index.n_shards());
+
+        let db = ShardedDb::<Transactions>::open(&path).unwrap();
+        assert_eq!(db.n_records(), n);
+        assert_eq!(db.n_shards(), n_shards);
+        // global↔local arithmetic, every record
+        let mut total = 0usize;
+        for s in 0..n_shards {
+            let base = db.shard_base(s);
+            let cnt = db.shard_records(s);
+            assert!(cnt >= 1, "size={size}: empty shard {s}");
+            assert_eq!(base, s * size);
+            for local in 0..cnt {
+                assert_eq!(db.locate(base + local), (s, local), "size={size}");
+            }
+            // per-shard rows are exactly the source's contiguous run
+            let shard = db.shard(s).unwrap();
+            assert_eq!(shard.items.len(), cnt);
+            assert_eq!(&shard.items[..], &d.db.items[base..base + cnt], "size={size}");
+            total += cnt;
+        }
+        assert_eq!(total, n, "size={size}: shard records don't cover the db");
+        // last shard of `n - 1` holds exactly one record
+        if size == n - 1 {
+            assert_eq!(db.shard_records(n_shards - 1), 1);
+        }
+        // the union is record-identical to the source
+        let union = db.materialize().unwrap();
+        assert_eq!(union.n_items, d.db.n_items);
+        assert_eq!(union.items, d.db.items);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn select_on_sharded_matches_in_memory_select() {
+    let d = synth_itemsets::generate(&ItemsetSynthConfig::tiny(302, true));
+    let n = d.db.len();
+    let dir = tmp("select");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("db.spps");
+    write_sharded(&d.db, &path, (n + 2) / 3).unwrap();
+    let db = ShardedDb::<Transactions>::open(&path).unwrap();
+    // permuted, duplicated, cross-shard index lists — including one
+    // that revisits the same record with other shards in between
+    let picks: [Vec<usize>; 4] = [
+        (0..n).rev().collect(),
+        vec![n - 1, 0, n / 2, 0, n - 1, n - 1],
+        vec![1; 5],
+        (0..n).step_by(2).chain(0..n).collect(),
+    ];
+    for idx in &picks {
+        let got = db.select(idx);
+        let want = d.db.select(idx);
+        assert_eq!(got.n_records(), idx.len());
+        assert_eq!(got.as_mem().unwrap().items, want.items, "{idx:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// In-memory vs file-backed sharded path on one registry preset, the
+/// sharded run at 1 and at 4 threads — all bit-identical.
+fn preset_case(name: &str, scale: f64, n_lambdas: usize) {
+    let dir = tmp(&format!("path-{name}"));
+    let info = registry::info(name).unwrap();
+    let base = cfg(n_lambdas, 3);
+    let mem = registry::lookup(name, scale).unwrap();
+    let a = match &mem {
+        Dataset::Itemsets(t) => compute_path_spp(&t.db, &t.y, info.task, &base),
+        Dataset::Graphs(g) => compute_path_spp(g, &g.y, info.task, &base),
+        Dataset::Sequences(s) => compute_path_spp(&s.db, &s.y, info.task, &base),
+    }
+    .unwrap();
+    let sharded = registry::lookup_sharded(name, scale, 3, &dir).unwrap();
+    for threads in [1usize, 4] {
+        let mut c = base;
+        c.threads = threads;
+        let b = match &sharded {
+            ShardedDataset::Itemsets { db, y } => compute_path_spp(db, y, info.task, &c),
+            ShardedDataset::Graphs { db, y } => compute_path_spp(db, y, info.task, &c),
+            ShardedDataset::Sequences { db, y } => compute_path_spp(db, y, info.task, &c),
+        }
+        .unwrap();
+        assert_paths_bitwise(&a, &b);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sharded_path_bit_identical_itemsets() {
+    preset_case("splice", 0.05, 6);
+}
+
+#[test]
+fn sharded_path_bit_identical_graphs() {
+    preset_case("cpdb", 0.1, 5);
+}
+
+#[test]
+fn sharded_path_bit_identical_sequences() {
+    preset_case("synth-seq", 0.1, 5);
+}
+
+const BUDGET: usize = 4096;
+
+#[test]
+fn spill_budget_is_bit_identical_with_bounded_residency() {
+    let data = registry::lookup("splice", 0.1).unwrap();
+    let Dataset::Itemsets(t) = &data else {
+        unreachable!()
+    };
+    for reuse in [true, false] {
+        let mut unlimited = cfg(8, 3);
+        unlimited.reuse_forest = reuse;
+        let mut budgeted = unlimited;
+        budgeted.memory_budget = BUDGET;
+        let a = compute_path_spp(&t.db, &t.y, Task::Classification, &unlimited).unwrap();
+        let b = compute_path_spp(&t.db, &t.y, Task::Classification, &budgeted).unwrap();
+        assert_paths_bitwise(&a, &b);
+        // the unlimited run never touches the spill tier
+        assert_eq!(a.total_spill_evictions(), 0);
+        assert_eq!(a.total_spill_reloads(), 0);
+        // the budgeted run moves real traffic through it...
+        assert!(b.total_spill_evictions() > 0, "reuse={reuse}: budget never bit");
+        if reuse {
+            // ...and the forest engine restores residency every λ
+            assert!(b.total_spill_reloads() > 0, "forest never reloaded");
+        }
+        // ...while the post-enforcement gauge stays at or under budget
+        for p in &b.points {
+            assert!(
+                p.spill.resident_bytes <= BUDGET,
+                "reuse={reuse}: resident {} > budget {BUDGET} at λ={}",
+                p.spill.resident_bytes,
+                p.lambda
+            );
+        }
+        // so its peak gauge sits strictly under the unlimited run's
+        assert!(b.max_resident_bytes() < a.max_resident_bytes(), "reuse={reuse}");
+    }
+}
+
+#[test]
+fn boosting_budget_is_bit_identical_and_enforced_at_lambda_boundaries() {
+    let data = registry::lookup("splice", 0.08).unwrap();
+    let Dataset::Itemsets(t) = &data else {
+        unreachable!()
+    };
+    let unlimited = cfg(6, 3);
+    let mut budgeted = unlimited;
+    budgeted.memory_budget = BUDGET;
+    let a = compute_path_boosting(&t.db, &t.y, Task::Classification, &unlimited).unwrap();
+    let b = compute_path_boosting(&t.db, &t.y, Task::Classification, &budgeted).unwrap();
+    assert_paths_bitwise(&a, &b);
+    assert!(b.total_spill_evictions() > 0, "budget never bit");
+    assert!(b.total_spill_reloads() > 0, "λ-boundary restore never ran");
+    for p in &b.points {
+        assert!(p.spill.resident_bytes <= BUDGET, "resident gauge over budget");
+    }
+}
+
+#[test]
+fn sharded_path_with_budget_composes() {
+    // the tentpole end state: records on disk AND columns under a
+    // budget, still bit-identical to the fully-resident run
+    let dir = tmp("compose");
+    let mem = registry::lookup("splice", 0.08).unwrap();
+    let Dataset::Itemsets(t) = &mem else {
+        unreachable!()
+    };
+    let a = compute_path_spp(&t.db, &t.y, Task::Classification, &cfg(6, 3)).unwrap();
+    let sharded = registry::lookup_sharded("splice", 0.08, 4, &dir).unwrap();
+    let ShardedDataset::Itemsets { db, y } = &sharded else {
+        unreachable!()
+    };
+    let mut c = cfg(6, 3);
+    c.memory_budget = BUDGET;
+    let b = compute_path_spp(db, y, Task::Classification, &c).unwrap();
+    assert_paths_bitwise(&a, &b);
+    assert!(b.total_spill_evictions() > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

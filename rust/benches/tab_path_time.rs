@@ -1,0 +1,11 @@
+//! Tabular-rule substrate: SPP vs boosting on the `synth-tab` preset.
+//!
+//! Beyond the paper's figures — the same (dataset × maxpat × method)
+//! sweep as Figures 2/3, run over the RuleFit threshold-refinement
+//! tree through the open `PatternSubstrate` trait.  The headline
+//! quantity is unchanged: one tree search per λ (SPP) vs one per round
+//! (boosting), now on numeric tabular data the original code could not
+//! express.
+fn main() {
+    spp::benchkit::run_figure("tab", spp::benchkit::TAB_WORKLOADS);
+}

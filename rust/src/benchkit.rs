@@ -225,6 +225,15 @@ pub const SEQ_WORKLOADS: &[Workload] = &[Workload {
     full_maxpats: &[3, 4, 5],
 }];
 
+/// The tabular-rule workload (beyond the paper; exercises the RuleFit
+/// threshold-refinement tree through the same SPP-vs-boosting sweep).
+pub const TAB_WORKLOADS: &[Workload] = &[Workload {
+    dataset: "synth-tab",
+    scale: 0.25,
+    maxpats: &[1, 2],
+    full_maxpats: &[2, 3],
+}];
+
 /// Criterion-style micro benchmark: returns (min, median, mean) seconds
 /// per iteration and prints one line.
 pub fn bench_fn<F: FnMut()>(name: &str, samples: usize, mut f: F) -> (f64, f64, f64) {
@@ -283,6 +292,7 @@ mod tests {
             .iter()
             .chain(ITEMSET_WORKLOADS)
             .chain(SEQ_WORKLOADS)
+            .chain(TAB_WORKLOADS)
         {
             assert!(
                 crate::data::registry::info(w.dataset).is_some(),

@@ -33,8 +33,9 @@
 //! bit-identical, layout notwithstanding.  Set intersections are exact
 //! integer operations.  The scalar layout therefore stays alive as the
 //! test oracle behind the [`ColumnLayout`] knob (`SPP_COLUMNS`), and
-//! `tests/integration_columns.rs` pins sparse-vs-hybrid bit-identity
-//! end to end on all three substrates.
+//! `tests/integration_columns.rs` (plus the tabular cross in
+//! `tests/integration_tabular.rs`) pins sparse-vs-hybrid bit-identity
+//! end to end per substrate.
 
 /// Record ids covered by one chunk (4096 = 64 words × 64 bits).
 pub const CHUNK_SPAN: u32 = 4096;

@@ -91,6 +91,7 @@ pub fn run_experiment(spec: &ExperimentSpec) -> crate::Result<ExperimentResult> 
         Dataset::Graphs(g) => run_path(g, &g.y, info.task, spec.method, &cfg),
         Dataset::Itemsets(t) => run_path(&t.db, &t.y, info.task, spec.method, &cfg),
         Dataset::Sequences(s) => run_path(&s.db, &s.y, info.task, spec.method, &cfg),
+        Dataset::Tabular(t) => run_path(&t.db, &t.y, info.task, spec.method, &cfg),
     }?;
     let wall_secs = wall.elapsed().as_secs_f64();
 

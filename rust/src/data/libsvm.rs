@@ -1,47 +1,88 @@
-//! LIBSVM sparse text format parser.
+//! LIBSVM sparse text format parsers.
 //!
 //! `<label> <idx>:<val> <idx>:<val> ...` per line, 1-based indices.
-//! Values are binarized at `> 0.5` into item occurrences (the paper's
-//! item-set experiments use binary indicator features; splice/a9a/dna
-//! are already 0/1 coded).  If the real LIBSVM files are available they
-//! drop straight into the pipeline through this parser.
+//! Two parse paths, one per consuming substrate:
+//!
+//! * [`parse_libsvm`] — binary indicator features into a transaction
+//!   database (the paper's item-set experiments; splice/a9a/dna are
+//!   0/1 coded).  Values must be exactly `0` or `1`: a real-valued
+//!   file is **refused** with an error pointing at the dense path —
+//!   silently binarizing it would change the learning problem.
+//! * [`parse_libsvm_dense`] — real-valued features into a dense
+//!   numeric [`TabularData`] for the RuleFit rule substrate; absent
+//!   indices are 0.0 (the LIBSVM sparse-default convention).
+//!
+//! If the real LIBSVM files are available they drop straight into the
+//! pipeline through these parsers.
 
+use super::tabular::{LabeledTabular, TabularData};
 use super::{LabeledTransactions, Transactions};
 
-/// Parse LIBSVM text into a labeled transaction database.
+/// Parse one data line into `(label, sparse (idx, val) pairs)`;
+/// `None` for blank/comment lines.  Shared by both parse paths so
+/// they agree on the line grammar.
+fn parse_line(lineno: usize, line: &str) -> crate::Result<Option<(f64, Vec<(usize, f64)>)>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let mut toks = line.split_whitespace();
+    let label: f64 = toks
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("line {}: empty", lineno + 1))?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("line {}: bad label: {e}", lineno + 1))?;
+    let mut pairs = Vec::new();
+    for tok in toks {
+        let (idx, val) = tok
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("line {}: bad pair '{tok}'", lineno + 1))?;
+        let idx: usize = idx
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {}: bad index: {e}", lineno + 1))?;
+        if idx == 0 {
+            anyhow::bail!("line {}: LIBSVM indices are 1-based", lineno + 1);
+        }
+        let val: f64 = val
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {}: bad value: {e}", lineno + 1))?;
+        if !val.is_finite() {
+            anyhow::bail!("line {}: value {val} is not finite", lineno + 1);
+        }
+        pairs.push((idx, val));
+    }
+    Ok(Some((label, pairs)))
+}
+
+/// Parse 0/1-coded LIBSVM text into a labeled transaction database.
 ///
 /// `n_items` is inferred as the max seen index unless `min_items`
 /// forces a wider universe (useful to match a preset's `d`).
+///
+/// Every value must be exactly `0` (item absent) or `1` (item
+/// present).  Any other value is an error: real-valued features
+/// belong to the tabular substrate — load them with
+/// [`parse_libsvm_dense`] instead.
 pub fn parse_libsvm(text: &str, min_items: usize) -> crate::Result<LabeledTransactions> {
     let mut items = Vec::new();
     let mut y = Vec::new();
     let mut max_idx = 0usize;
     for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
+        let Some((label, pairs)) = parse_line(lineno, line)? else {
             continue;
-        }
-        let mut toks = line.split_whitespace();
-        let label: f64 = toks
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("line {}: empty", lineno + 1))?
-            .parse()
-            .map_err(|e| anyhow::anyhow!("line {}: bad label: {e}", lineno + 1))?;
+        };
         let mut row = Vec::new();
-        for tok in toks {
-            let (idx, val) = tok
-                .split_once(':')
-                .ok_or_else(|| anyhow::anyhow!("line {}: bad pair '{tok}'", lineno + 1))?;
-            let idx: usize = idx
-                .parse()
-                .map_err(|e| anyhow::anyhow!("line {}: bad index: {e}", lineno + 1))?;
-            if idx == 0 {
-                anyhow::bail!("line {}: LIBSVM indices are 1-based", lineno + 1);
+        for (idx, val) in pairs {
+            if val != 0.0 && val != 1.0 {
+                anyhow::bail!(
+                    "line {}: value {idx}:{val} is not binary; this file holds \
+                     real-valued features, which the transaction (item-set) substrate \
+                     cannot represent — load it as dense numeric tabular data \
+                     (`parse_libsvm_dense`, dataset kind `tabular`) instead",
+                    lineno + 1
+                );
             }
-            let val: f64 = val
-                .parse()
-                .map_err(|e| anyhow::anyhow!("line {}: bad value: {e}", lineno + 1))?;
-            if val > 0.5 {
+            if val == 1.0 {
                 row.push((idx - 1) as u32);
                 max_idx = max_idx.max(idx);
             }
@@ -60,6 +101,41 @@ pub fn parse_libsvm(text: &str, min_items: usize) -> crate::Result<LabeledTransa
     })
 }
 
+/// Parse real-valued LIBSVM text into a dense labeled tabular
+/// database (the RuleFit rule substrate's input).
+///
+/// `n_features` is inferred as the max seen index unless
+/// `min_features` forces a wider table; absent indices are 0.0.
+pub fn parse_libsvm_dense(text: &str, min_features: usize) -> crate::Result<LabeledTabular> {
+    let mut sparse: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut y = Vec::new();
+    let mut max_idx = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let Some((label, pairs)) = parse_line(lineno, line)? else {
+            continue;
+        };
+        for &(idx, _) in &pairs {
+            max_idx = max_idx.max(idx);
+        }
+        sparse.push(pairs);
+        y.push(label);
+    }
+    let n_features = max_idx.max(min_features);
+    let rows = sparse
+        .into_iter()
+        .map(|pairs| {
+            let mut row = vec![0.0; n_features];
+            for (idx, val) in pairs {
+                row[idx - 1] = val;
+            }
+            row
+        })
+        .collect();
+    let db = TabularData::new(n_features, rows);
+    db.validate()?;
+    Ok(LabeledTabular { db, y })
+}
+
 /// Serialize a labeled transaction database to LIBSVM text.
 pub fn to_libsvm(data: &LabeledTransactions) -> String {
     let mut out = String::new();
@@ -73,13 +149,30 @@ pub fn to_libsvm(data: &LabeledTransactions) -> String {
     out
 }
 
+/// Serialize a labeled tabular database to LIBSVM text (zero values
+/// are omitted, per the sparse-default convention; values print
+/// through `f64`'s shortest-round-trip `Display`).
+pub fn to_libsvm_dense(data: &LabeledTabular) -> String {
+    let mut out = String::new();
+    for (row, &yi) in data.db.rows.iter().zip(&data.y) {
+        out.push_str(&format!("{yi}"));
+        for (j, &v) in row.iter().enumerate() {
+            if v != 0.0 {
+                out.push_str(&format!(" {}:{v}", j + 1));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn parses_basic_lines() {
-        let d = parse_libsvm("+1 1:1 3:1\n-1 2:0.9\n", 0).unwrap();
+        let d = parse_libsvm("+1 1:1 3:1\n-1 2:1\n", 0).unwrap();
         assert_eq!(d.y, vec![1.0, -1.0]);
         assert_eq!(d.db.items[0], vec![0, 2]);
         assert_eq!(d.db.items[1], vec![1]);
@@ -87,9 +180,49 @@ mod tests {
     }
 
     #[test]
-    fn binarizes_small_values_away() {
-        let d = parse_libsvm("1 1:0.2 2:0.8\n", 0).unwrap();
+    fn explicit_zeros_are_absent_items() {
+        let d = parse_libsvm("1 1:0 2:1\n", 0).unwrap();
         assert_eq!(d.db.items[0], vec![1]);
+    }
+
+    #[test]
+    fn rejects_real_values_as_transactions() {
+        // regression: these used to be silently binarized at > 0.5
+        for src in ["1 1:0.2 2:0.8\n", "-1 2:0.9\n", "1 3:2\n"] {
+            let err = parse_libsvm(src, 0).unwrap_err().to_string();
+            assert!(err.contains("not binary"), "{err}");
+            assert!(err.contains("tabular"), "{err}");
+            assert!(err.contains("parse_libsvm_dense"), "{err}");
+        }
+    }
+
+    #[test]
+    fn dense_parses_real_values_with_sparse_defaults() {
+        let d = parse_libsvm_dense("+1 1:0.25 3:-1.5\n-1 2:0.9\n", 0).unwrap();
+        assert_eq!(d.y, vec![1.0, -1.0]);
+        assert_eq!(d.db.n_features, 3);
+        assert_eq!(d.db.rows[0], vec![0.25, 0.0, -1.5]);
+        assert_eq!(d.db.rows[1], vec![0.0, 0.9, 0.0]);
+        d.db.validate().unwrap();
+    }
+
+    #[test]
+    fn dense_respects_min_features_and_rejects_bad_input() {
+        let d = parse_libsvm_dense("1 1:0.5\n", 7).unwrap();
+        assert_eq!(d.db.n_features, 7);
+        assert_eq!(d.db.rows[0].len(), 7);
+        assert!(parse_libsvm_dense("1 0:1\n", 0).is_err());
+        assert!(parse_libsvm_dense("abc 1:1\n", 0).is_err());
+        assert!(parse_libsvm_dense("1 1:inf\n", 0).is_err());
+    }
+
+    #[test]
+    fn dense_round_trip_is_bit_exact() {
+        let src = "1 1:0.1 3:0.3333333333333333\n-2.5 2:-7\n";
+        let d = parse_libsvm_dense(src, 0).unwrap();
+        let d2 = parse_libsvm_dense(&to_libsvm_dense(&d), 0).unwrap();
+        assert_eq!(d.db.rows, d2.db.rows);
+        assert_eq!(d.y, d2.y);
     }
 
     #[test]

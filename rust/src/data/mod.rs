@@ -1,6 +1,6 @@
 //! Datasets: containers, parsers, and seeded synthetic generators.
 //!
-//! Three database kinds, each implementing the open
+//! Four database kinds, each implementing the open
 //! [`crate::mining::PatternSubstrate`] trait next to its container:
 //! * **transaction databases** ([`Transactions`]) for item-set mining —
 //!   each record is a set of item ids (the paper's first substrate);
@@ -8,7 +8,10 @@
 //!   each record is a labeled undirected graph (the paper's second);
 //! * **sequence databases** ([`sequence::Sequences`]) for subsequence
 //!   mining — each record is an ordered symbol stream (an extension
-//!   proving the substrate API is open).
+//!   proving the substrate API is open);
+//! * **numeric tabular databases** ([`tabular::TabularData`]) for
+//!   RuleFit-style threshold-rule mining — each record is a dense row
+//!   of real-valued features (Kato et al.'s Safe RuleFit setting).
 //!
 //! The paper's benchmark datasets (CPDB, Mutagenicity, Bergstrom,
 //! Karthikeyan from cheminformatics.org; splice/a9a/dna/protein from the
@@ -23,6 +26,7 @@ pub mod registry;
 pub mod sequence;
 pub mod synth_graphs;
 pub mod synth_itemsets;
+pub mod tabular;
 
 use crate::mining::itemset::ItemsetMiner;
 use crate::mining::{Pattern, PatternSubstrate, TreeVisitor};

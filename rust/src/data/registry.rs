@@ -1,7 +1,9 @@
 //! Dataset registry: the paper's eight benchmark datasets by name,
-//! plus the `synth-seq` sequence preset exercising the third substrate
-//! and the out-of-core `synth-xxl` itemset preset (10–100× the paper's
-//! largest n, only reachable through [`lookup_sharded`]).
+//! plus the `synth-seq` sequence preset exercising the third
+//! substrate, the `synth-tab` numeric tabular preset exercising the
+//! fourth (RuleFit rules), and the out-of-core `synth-xxl` itemset
+//! preset (10–100× the paper's largest n, only reachable through
+//! [`lookup_sharded`]).
 //!
 //! Every preset is a seeded synthetic stand-in at the paper's scale
 //! (DESIGN.md §2).  `lookup` accepts an optional scale factor so the
@@ -17,6 +19,7 @@ use std::path::Path;
 use super::sequence::{self, LabeledSequences, SeqSynthConfig, Sequences};
 use super::synth_graphs::{self, GraphSynthConfig};
 use super::synth_itemsets::{self, ChunkedItemsetGen, ItemsetSynthConfig};
+use super::tabular::{self, LabeledTabular, TabSynthConfig, TabularData};
 use super::{graph::GraphDatabase, LabeledTransactions, Transactions};
 use crate::solver::problem::Task;
 use crate::storage::{write_sharded, ShardWriter, ShardedDb};
@@ -30,6 +33,7 @@ pub enum Dataset {
     Graphs(GraphDatabase),
     Itemsets(LabeledTransactions),
     Sequences(LabeledSequences),
+    Tabular(LabeledTabular),
 }
 
 impl Dataset {
@@ -38,6 +42,7 @@ impl Dataset {
             Dataset::Graphs(g) => g.len(),
             Dataset::Itemsets(t) => t.db.len(),
             Dataset::Sequences(s) => s.db.len(),
+            Dataset::Tabular(t) => t.db.len(),
         }
     }
 
@@ -46,6 +51,7 @@ impl Dataset {
             Dataset::Graphs(g) => &g.y,
             Dataset::Itemsets(t) => &t.y,
             Dataset::Sequences(s) => &s.y,
+            Dataset::Tabular(t) => &t.y,
         }
     }
 }
@@ -65,12 +71,14 @@ pub enum Kind {
     Graph,
     Itemset,
     Sequence,
+    Tabular,
 }
 
 /// All eight paper datasets plus the `synth-seq` sequence preset (the
-/// third-substrate workload) and the out-of-core `synth-xxl` itemset
+/// third-substrate workload), the `synth-tab` tabular preset (the
+/// fourth, RuleFit rules) and the out-of-core `synth-xxl` itemset
 /// preset (`paper_n` is each one's scale-1.0 record count).
-pub const ALL: [DatasetInfo; 10] = [
+pub const ALL: [DatasetInfo; 11] = [
     DatasetInfo {
         name: "cpdb",
         kind: Kind::Graph,
@@ -126,6 +134,12 @@ pub const ALL: [DatasetInfo; 10] = [
         paper_n: 600,
     },
     DatasetInfo {
+        name: "synth-tab",
+        kind: Kind::Tabular,
+        task: Task::Classification,
+        paper_n: 500,
+    },
+    DatasetInfo {
         name: "synth-xxl",
         kind: Kind::Itemset,
         task: Task::Regression,
@@ -170,6 +184,9 @@ pub fn lookup(name: &str, scale: f64) -> crate::Result<Dataset> {
         "synth-seq" => Dataset::Sequences(
             sequence::generate(&SeqSynthConfig::preset_synth_seq(seed).scaled(scale)).labeled(),
         ),
+        "synth-tab" => Dataset::Tabular(
+            tabular::generate(&TabSynthConfig::preset_synth_tab(seed).scaled(scale)).labeled(),
+        ),
         // In-memory materialization of the out-of-core preset — only
         // sensible at small scales (tests, smoke runs); real runs go
         // through `lookup_sharded`, which streams it shard by shard.
@@ -193,6 +210,7 @@ pub enum ShardedDataset {
     Itemsets { db: ShardedDb<Transactions>, y: Vec<f64> },
     Graphs { db: ShardedDb<GraphDatabase>, y: Vec<f64> },
     Sequences { db: ShardedDb<Sequences>, y: Vec<f64> },
+    Tabular { db: ShardedDb<TabularData>, y: Vec<f64> },
 }
 
 impl ShardedDataset {
@@ -200,7 +218,8 @@ impl ShardedDataset {
         match self {
             ShardedDataset::Itemsets { y, .. }
             | ShardedDataset::Graphs { y, .. }
-            | ShardedDataset::Sequences { y, .. } => y.len(),
+            | ShardedDataset::Sequences { y, .. }
+            | ShardedDataset::Tabular { y, .. } => y.len(),
         }
     }
 
@@ -208,7 +227,8 @@ impl ShardedDataset {
         match self {
             ShardedDataset::Itemsets { y, .. }
             | ShardedDataset::Graphs { y, .. }
-            | ShardedDataset::Sequences { y, .. } => y,
+            | ShardedDataset::Sequences { y, .. }
+            | ShardedDataset::Tabular { y, .. } => y,
         }
     }
 }
@@ -268,6 +288,12 @@ pub fn lookup_sharded(
             let db = ShardedDb::<Sequences>::open(&path)?;
             Ok(ShardedDataset::Sequences { db, y: s.y })
         }
+        Dataset::Tabular(t) => {
+            let shard_size = (t.db.len() + shards - 1) / shards;
+            write_sharded(&t.db, &path, shard_size)?;
+            let db = ShardedDb::<TabularData>::open(&path)?;
+            Ok(ShardedDataset::Tabular { db, y: t.y })
+        }
     }
 }
 
@@ -292,6 +318,7 @@ mod tests {
                 (Kind::Graph, Dataset::Graphs(_)) => {}
                 (Kind::Itemset, Dataset::Itemsets(_)) => {}
                 (Kind::Sequence, Dataset::Sequences(_)) => {}
+                (Kind::Tabular, Dataset::Tabular(_)) => {}
                 _ => panic!("{}: kind mismatch", d.name),
             }
         }
@@ -305,6 +332,8 @@ mod tests {
         assert_eq!(ds.n_records(), 1000);
         let ds = lookup("synth-seq", 1.0).unwrap();
         assert_eq!(ds.n_records(), 600);
+        let ds = lookup("synth-tab", 1.0).unwrap();
+        assert_eq!(ds.n_records(), 500);
     }
 
     #[test]
@@ -323,7 +352,7 @@ mod tests {
     #[test]
     fn sharded_lookup_round_trips_every_kind() {
         let dir = std::env::temp_dir().join(format!("spp-reg-shards-{}", std::process::id()));
-        for (name, shards) in [("splice", 3usize), ("cpdb", 2), ("synth-seq", 4)] {
+        for (name, shards) in [("splice", 3usize), ("cpdb", 2), ("synth-seq", 4), ("synth-tab", 2)] {
             let ds = lookup_sharded(name, 0.05, shards, &dir).unwrap();
             let mem = lookup(name, 0.05).unwrap();
             assert_eq!(ds.n_records(), mem.n_records(), "{name}");

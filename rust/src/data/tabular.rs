@@ -1,0 +1,506 @@
+//! Dense numeric tabular databases: the fourth pattern substrate.
+//!
+//! Records are fixed-width rows of real-valued features (ordinary
+//! tabular data: sensor readings, measurements, the classic libsvm
+//! regression/classification files); a pattern is a RuleFit-style
+//! conjunction of threshold predicates `x_j ≤ t` / `x_j > t` and the
+//! binary feature is `x_it = I(rule t holds on row i)`.  The
+//! enumeration tree is the rule-refinement lattice of
+//! [`crate::mining::rulefit`], which is anti-monotone — so the whole
+//! SPP machinery applies unchanged through the [`PatternSubstrate`]
+//! impl below, and the per-node SPPC test plays the role of Kato et
+//! al.'s meta safe screening bound (one evaluation certifies every
+//! refinement of a rule).
+//!
+//! Real-valued libsvm files load through
+//! [`crate::data::libsvm::parse_libsvm_dense`]; like the other
+//! substrates, [`generate`] provides a seeded synthetic stand-in with
+//! planted predictive rules (registry entry `synth-tab`).
+
+use crate::mining::rulefit::{RulefitMiner, RuleOp, RulePredicate};
+use crate::mining::{Pattern, PatternSubstrate, TreeVisitor};
+use crate::testutil::SplitMix64;
+
+/// Default per-feature cap on candidate thresholds (see
+/// [`TabularData::max_thresholds`]).
+pub const DEFAULT_MAX_THRESHOLDS: usize = 16;
+
+/// A dense numeric database: each record is a row of `n_features`
+/// finite values.
+#[derive(Clone, Debug)]
+pub struct TabularData {
+    pub n_features: usize,
+    pub rows: Vec<Vec<f64>>,
+    /// Per-feature cap on candidate split thresholds
+    /// ([`crate::mining::rulefit::predicate_universe`] quantile-thins
+    /// down to this many cuts).  Part of the database — CV folds and
+    /// shards inherit it through `select`/the shard codec, so every
+    /// engine enumerates the same tree.
+    pub max_thresholds: usize,
+}
+
+impl Default for TabularData {
+    fn default() -> Self {
+        TabularData {
+            n_features: 0,
+            rows: Vec::new(),
+            max_thresholds: DEFAULT_MAX_THRESHOLDS,
+        }
+    }
+}
+
+impl TabularData {
+    /// A database with the default threshold cap.
+    pub fn new(n_features: usize, rows: Vec<Vec<f64>>) -> Self {
+        TabularData {
+            n_features,
+            rows,
+            max_thresholds: DEFAULT_MAX_THRESHOLDS,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Validate invariants: every row `n_features` wide, every value
+    /// finite (NaN/±∞ would poison threshold selection and matching).
+    pub fn validate(&self) -> crate::Result<()> {
+        for (i, r) in self.rows.iter().enumerate() {
+            if r.len() != self.n_features {
+                anyhow::bail!(
+                    "tabular row {i} has {} values, expected {}",
+                    r.len(),
+                    self.n_features
+                );
+            }
+            if let Some(&bad) = r.iter().find(|v| !v.is_finite()) {
+                anyhow::bail!("tabular row {i} value {bad} is not finite");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A supervised tabular dataset.
+#[derive(Clone, Debug)]
+pub struct LabeledTabular {
+    pub db: TabularData,
+    /// Regression targets, or ±1 class labels.
+    pub y: Vec<f64>,
+}
+
+/// Does the conjunction `rule` hold on `row`?  Every predicate must
+/// pass; a NaN value or missing column fails its predicate (see
+/// [`RulePredicate::eval`]).
+pub fn rule_matches(rule: &[RulePredicate], row: &[f64]) -> bool {
+    rule.iter().all(|p| p.eval(row))
+}
+
+impl PatternSubstrate for TabularData {
+    type Record = [f64];
+
+    fn n_records(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn traverse(&self, maxpat: usize, minsup: usize, visitor: &mut dyn TreeVisitor) {
+        let mut m = RulefitMiner::new(self, maxpat);
+        m.minsup = minsup;
+        m.traverse(visitor);
+    }
+
+    fn traverse_parallel<F: crate::mining::SubtreeVisitors>(
+        &self,
+        maxpat: usize,
+        minsup: usize,
+        threads: usize,
+        factory: &F,
+    ) -> Vec<F::V> {
+        let mut m = RulefitMiner::new(self, maxpat);
+        m.minsup = minsup;
+        m.traverse_par(threads, factory)
+    }
+
+    fn matches(pattern: &Pattern, record: &[f64]) -> bool {
+        match pattern {
+            Pattern::Rule(r) => rule_matches(r, record),
+            _ => false,
+        }
+    }
+
+    fn record(&self, i: usize) -> &[f64] {
+        &self.rows[i]
+    }
+
+    fn select(&self, indices: &[usize]) -> Self {
+        TabularData {
+            n_features: self.n_features,
+            rows: indices.iter().map(|&i| self.rows[i].clone()).collect(),
+            max_thresholds: self.max_thresholds,
+        }
+    }
+
+    fn parse_pattern(body: &str) -> crate::Result<Pattern> {
+        let preds = body
+            .split('&')
+            .map(RulePredicate::parse)
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(Pattern::Rule(preds))
+    }
+
+    fn format_pattern(pattern: &Pattern) -> String {
+        match pattern {
+            Pattern::Rule(r) => r.iter().map(|p| p.display()).collect::<Vec<_>>().join("&"),
+            other => unreachable!("rule codec asked to format {other:?}"),
+        }
+    }
+
+    const KIND_TAG: &'static str = "R";
+}
+
+impl crate::storage::ShardCodec for TabularData {
+    // The rule miner filters row supports directly, so a sharded
+    // tabular database materializes its union for traversal (`STREAMS`
+    // stays false) — the container still provides the on-disk format,
+    // the O(1) id remap and CV-fold streaming.
+
+    /// Text shard blob: `features <n> thresholds <m>` header, then one
+    /// space-separated value row per record.  Values print through
+    /// `f64`'s shortest-round-trip `Display`, so decoding recovers the
+    /// exact bits.
+    fn encode_shard(&self) -> Vec<u8> {
+        let mut out = format!("features {} thresholds {}\n", self.n_features, self.max_thresholds);
+        for row in &self.rows {
+            let mut first = true;
+            for &v in row {
+                if !first {
+                    out.push(' ');
+                }
+                out.push_str(&v.to_string());
+                first = false;
+            }
+            out.push('\n');
+        }
+        out.into_bytes()
+    }
+
+    fn decode_shard(bytes: &[u8]) -> crate::Result<Self> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|e| anyhow::anyhow!("tabular shard is not UTF-8: {e}"))?;
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or_default();
+        let fields: Vec<&str> = header.split_whitespace().collect();
+        let parsed = match fields.as_slice() {
+            ["features", n, "thresholds", m] => n
+                .parse::<usize>()
+                .ok()
+                .zip(m.parse::<usize>().ok()),
+            _ => None,
+        };
+        let Some((n_features, max_thresholds)) = parsed else {
+            anyhow::bail!("tabular shard header '{header}' malformed");
+        };
+        let rows = lines
+            .map(|line| {
+                line.split_whitespace()
+                    .map(|t| t.parse::<f64>())
+                    .collect::<Result<Vec<f64>, _>>()
+            })
+            .collect::<Result<Vec<Vec<f64>>, _>>()?;
+        let db = TabularData {
+            n_features,
+            rows,
+            max_thresholds,
+        };
+        db.validate()?;
+        Ok(db)
+    }
+
+    fn concat(parts: Vec<Self>) -> crate::Result<Self> {
+        let n_features = parts.iter().map(|p| p.n_features).max().unwrap_or(0);
+        let max_thresholds = parts
+            .iter()
+            .map(|p| p.max_thresholds)
+            .max()
+            .unwrap_or(DEFAULT_MAX_THRESHOLDS);
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        for p in parts {
+            if !p.rows.is_empty() && p.n_features != n_features {
+                anyhow::bail!(
+                    "tabular shards disagree on width ({} vs {n_features})",
+                    p.n_features
+                );
+            }
+            rows.extend(p.rows);
+        }
+        Ok(TabularData {
+            n_features,
+            rows,
+            max_thresholds,
+        })
+    }
+}
+
+/// One planted rule: rows satisfying every predicate of `rule` get
+/// `weight` added to their score.
+#[derive(Clone, Debug)]
+pub struct PlantedTabRule {
+    pub rule: Vec<RulePredicate>,
+    pub weight: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TabSynthConfig {
+    pub seed: u64,
+    pub n: usize,
+    /// Number of numeric feature columns (values uniform in `[0, 1]`).
+    pub n_features: usize,
+    /// Number of planted predictive rules.
+    pub n_rules: usize,
+    /// Rule lengths are drawn in `[1, max_rule_len]`.
+    pub max_rule_len: usize,
+    /// Gaussian noise on regression targets / label-flip margin.
+    pub noise: f64,
+    /// true => ±1 labels (classification); false => real targets.
+    pub classify: bool,
+}
+
+impl TabSynthConfig {
+    fn base(seed: u64, n: usize, n_features: usize, classify: bool) -> Self {
+        Self {
+            seed,
+            n,
+            n_features,
+            n_rules: 5,
+            max_rule_len: 2,
+            noise: 0.5,
+            classify,
+        }
+    }
+
+    /// The `synth-tab` registry preset: n = 500 rows over 10 numeric
+    /// features, classification.
+    pub fn preset_synth_tab(seed: u64) -> Self {
+        Self::base(seed, 500, 10, true)
+    }
+
+    /// Small config for tests.
+    pub fn tiny(seed: u64, classify: bool) -> Self {
+        let mut c = Self::base(seed, 60, 5, classify);
+        c.n_rules = 3;
+        c.noise = 0.25;
+        c
+    }
+
+    /// Scale record count by `f` (benchmark `--scale` support).
+    pub fn scaled(mut self, f: f64) -> Self {
+        self.n = ((self.n as f64 * f).round() as usize).max(8);
+        self
+    }
+}
+
+/// Generated dataset plus the ground-truth rules (handy in tests).
+#[derive(Clone, Debug)]
+pub struct SynthTabular {
+    pub db: TabularData,
+    pub y: Vec<f64>,
+    pub rules: Vec<PlantedTabRule>,
+}
+
+impl SynthTabular {
+    pub fn labeled(&self) -> LabeledTabular {
+        LabeledTabular {
+            db: self.db.clone(),
+            y: self.y.clone(),
+        }
+    }
+}
+
+/// Generate a dataset per `cfg`.  Fully deterministic in `cfg.seed`.
+///
+/// Features are independent uniforms on `[0, 1]`; planted rules are
+/// conjunctions over distinct features with mid-range thresholds
+/// (`[0.25, 0.75]`), so each fires on a non-trivial fraction of rows —
+/// no implanting step is needed, threshold rules fire naturally.
+pub fn generate(cfg: &TabSynthConfig) -> SynthTabular {
+    assert!(cfg.n >= 4 && cfg.n_features >= 2 && cfg.n_rules >= 1 && cfg.max_rule_len >= 1);
+    let mut rng = SplitMix64::new(cfg.seed);
+
+    let mut rules = Vec::with_capacity(cfg.n_rules);
+    for _ in 0..cfg.n_rules {
+        let len = rng.range(1, cfg.max_rule_len.min(cfg.n_features));
+        let feats = rng.sample_distinct(cfg.n_features, len);
+        let rule: Vec<RulePredicate> = feats
+            .iter()
+            .map(|&j| {
+                let op = if rng.coin(0.5) { RuleOp::Le } else { RuleOp::Gt };
+                let thr = 0.25 + 0.5 * rng.next_f64();
+                RulePredicate::new(j as u32, op, thr)
+            })
+            .collect();
+        let mag = 1.0 + rng.next_f64() * 2.0;
+        let weight = if rng.coin(0.5) { mag } else { -mag };
+        rules.push(PlantedTabRule { rule, weight });
+    }
+
+    let mut rows = Vec::with_capacity(cfg.n);
+    let mut y = Vec::with_capacity(cfg.n);
+    for _ in 0..cfg.n {
+        let row: Vec<f64> = (0..cfg.n_features).map(|_| rng.next_f64()).collect();
+        let mut score = 0.0;
+        for r in &rules {
+            if rule_matches(&r.rule, &row) {
+                score += r.weight;
+            }
+        }
+        score += cfg.noise * rng.gauss();
+        if cfg.classify {
+            y.push(if score >= 0.0 { 1.0 } else { -1.0 });
+        } else {
+            y.push(score);
+        }
+        rows.push(row);
+    }
+
+    SynthTabular {
+        db: TabularData::new(cfg.n_features, rows),
+        y,
+        rules,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::ShardCodec;
+
+    #[test]
+    fn rule_matcher_cases() {
+        let le = RulePredicate::new(0, RuleOp::Le, 0.5);
+        let gt = RulePredicate::new(1, RuleOp::Gt, 0.5);
+        assert!(rule_matches(&[le, gt], &[0.5, 0.6]));
+        assert!(!rule_matches(&[le, gt], &[0.5, 0.5]));
+        assert!(!rule_matches(&[le, gt], &[0.6, 0.6]));
+        assert!(rule_matches(&[], &[0.0])); // empty conjunction is true
+        assert!(!rule_matches(&[le], &[f64::NAN]));
+    }
+
+    #[test]
+    fn deterministic_in_seed_and_shapes_match() {
+        let cfg = TabSynthConfig::tiny(9, true);
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.db.rows, b.db.rows);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.db.rows.len(), cfg.n);
+        assert_eq!(a.db.n_features, cfg.n_features);
+        a.db.validate().unwrap();
+        let c = generate(&TabSynthConfig::tiny(10, true));
+        assert_ne!(a.db.rows, c.db.rows);
+    }
+
+    #[test]
+    fn classification_labels_are_pm1_both_classes() {
+        let d = generate(&TabSynthConfig::tiny(2, true));
+        assert!(d.y.iter().all(|&v| v == 1.0 || v == -1.0));
+        assert!(d.y.iter().any(|&v| v == 1.0));
+        assert!(d.y.iter().any(|&v| v == -1.0));
+    }
+
+    #[test]
+    fn planted_rules_have_nontrivial_support() {
+        let d = generate(&TabSynthConfig::tiny(4, false));
+        for r in &d.rules {
+            assert!(!r.rule.is_empty() && r.rule.len() <= 2);
+            assert!(r.rule.iter().all(|p| (p.feature as usize) < d.db.n_features));
+            assert!(
+                d.db.rows.iter().any(|row| rule_matches(&r.rule, row)),
+                "rule {:?} supported nowhere",
+                r.rule
+            );
+        }
+    }
+
+    #[test]
+    fn substrate_matches_agrees_with_miner_supports() {
+        use crate::mining::{PatternNode, Walk};
+        let d = generate(&TabSynthConfig::tiny(5, false));
+        let mut checked = 0usize;
+        let mut v = |n: &PatternNode<'_>| {
+            let pat = n.to_pattern();
+            for i in 0..d.db.n_records() {
+                let in_support = n.support.contains(&(i as u32));
+                assert_eq!(TabularData::matches(&pat, d.db.record(i)), in_support);
+                checked += 1;
+            }
+            Walk::Descend
+        };
+        d.db.traverse(2, 1, &mut v);
+        assert!(checked > 0);
+    }
+
+    #[test]
+    fn select_subsets_records_in_order() {
+        let db = TabularData::new(1, vec![vec![0.0], vec![1.0], vec![2.0], vec![3.0]]);
+        let sub = db.select(&[3, 1]);
+        assert_eq!(sub.n_features, 1);
+        assert_eq!(sub.max_thresholds, db.max_thresholds);
+        assert_eq!(sub.rows, vec![vec![3.0], vec![1.0]]);
+    }
+
+    #[test]
+    fn validate_rejects_ragged_and_non_finite() {
+        let ragged = TabularData::new(2, vec![vec![0.0]]);
+        assert!(ragged.validate().is_err());
+        let nan = TabularData::new(1, vec![vec![f64::NAN]]);
+        assert!(nan.validate().is_err());
+        let inf = TabularData::new(1, vec![vec![f64::INFINITY]]);
+        assert!(inf.validate().is_err());
+    }
+
+    #[test]
+    fn pattern_codec_round_trips_exact_bits() {
+        let p = Pattern::Rule(vec![
+            RulePredicate::new(0, RuleOp::Le, 1.0 / 3.0),
+            RulePredicate::new(4, RuleOp::Gt, -0.1),
+        ]);
+        let body = TabularData::format_pattern(&p);
+        assert_eq!(TabularData::parse_pattern(&body).unwrap(), p);
+        assert!(TabularData::parse_pattern("x0<1").is_err());
+    }
+
+    #[test]
+    fn shard_codec_round_trips_exact_bits() {
+        let mut db = TabularData::new(2, vec![vec![0.1, 1.0 / 3.0], vec![-2.5, 1e-300]]);
+        db.max_thresholds = 7;
+        let back = TabularData::decode_shard(&db.encode_shard()).unwrap();
+        assert_eq!(back.n_features, 2);
+        assert_eq!(back.max_thresholds, 7);
+        assert_eq!(back.rows, db.rows);
+        assert!(TabularData::decode_shard(b"bogus header\n").is_err());
+    }
+
+    #[test]
+    fn shard_concat_appends_rows() {
+        let a = TabularData::new(1, vec![vec![0.0]]);
+        let b = TabularData::new(1, vec![vec![1.0], vec![2.0]]);
+        let c = TabularData::concat(vec![a, b]).unwrap();
+        assert_eq!(c.rows, vec![vec![0.0], vec![1.0], vec![2.0]]);
+        let w = TabularData::new(2, vec![vec![0.0, 1.0]]);
+        let v = TabularData::new(1, vec![vec![0.0]]);
+        assert!(TabularData::concat(vec![w, v]).is_err());
+    }
+
+    #[test]
+    fn scaled_changes_n_only() {
+        let cfg = TabSynthConfig::preset_synth_tab(0).scaled(0.1);
+        assert_eq!(cfg.n, 50);
+        assert_eq!(cfg.n_features, 10);
+        assert!(TabSynthConfig::preset_synth_tab(0).classify);
+    }
+}

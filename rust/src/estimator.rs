@@ -4,20 +4,22 @@
 //! [`compute_path_spp`], freeze a [`SparsePatternModel`]) stays public
 //! for benchmarks and ablations, but the common "fit a model on this
 //! database" workflow is three lines, generic over any
-//! [`PatternSubstrate`]:
+//! [`PatternSubstrate`] (this example runs under `cargo test --doc`;
+//! the paper-scale settings are `maxpat(4).lambda_grid(100, 0.01)`):
 //!
-//! ```no_run
+//! ```
 //! use spp::data::synth_itemsets::{generate, ItemsetSynthConfig};
 //! use spp::solver::Task;
 //! use spp::SppEstimator;
 //!
-//! let data = generate(&ItemsetSynthConfig::preset_splice(42));
+//! let data = generate(&ItemsetSynthConfig::tiny(42, true));
 //! let fit = SppEstimator::new(Task::Classification)
-//!     .maxpat(4)
-//!     .lambda_grid(100, 0.01)
+//!     .maxpat(2)
+//!     .lambda_grid(5, 0.1)
 //!     .fit(&data.db, &data.y)
 //!     .unwrap();
-//! println!("{} active patterns at the smallest λ", fit.model.terms.len());
+//! assert!(fit.path.points.iter().all(|p| p.gap <= 2e-6), "certified");
+//! assert_eq!(fit.predict(&data.db).len(), data.db.len());
 //! ```
 
 use crate::mining::PatternSubstrate;
@@ -136,7 +138,27 @@ impl SppEstimator {
 
     /// Compute the full SPP regularization path on `db` and freeze the
     /// smallest-λ model.  Works on any substrate: transactions, graphs,
-    /// sequences, or your own [`PatternSubstrate`] impl.
+    /// sequences, numeric tabular rules, or your own
+    /// [`PatternSubstrate`] impl.
+    ///
+    /// On tabular data the fitted terms are interpretable threshold
+    /// rules:
+    ///
+    /// ```
+    /// use spp::data::tabular::{self, TabSynthConfig};
+    /// use spp::solver::Task;
+    /// use spp::SppEstimator;
+    ///
+    /// let d = tabular::generate(&TabSynthConfig::tiny(7, false));
+    /// let fit = SppEstimator::new(Task::Regression)
+    ///     .maxpat(2)
+    ///     .lambda_grid(5, 0.1)
+    ///     .fit(&d.db, &d.y)
+    ///     .unwrap();
+    /// for (pat, w) in &fit.model.terms {
+    ///     println!("{w:+.3} * {}", pat.display()); // e.g. +0.82 * [x3<=0.41 & x0>0.63]
+    /// }
+    /// ```
     pub fn fit<S: PatternSubstrate>(&self, db: &S, y: &[f64]) -> crate::Result<SppFit> {
         anyhow::ensure!(
             db.n_records() == y.len(),
@@ -286,6 +308,20 @@ mod tests {
     #[test]
     fn fit_works_on_sequences() {
         let d = sgen(&SeqSynthConfig::tiny(32, false));
+        let fit = SppEstimator::new(Task::Regression)
+            .maxpat(2)
+            .lambda_grid(5, 0.1)
+            .fit(&d.db, &d.y)
+            .unwrap();
+        assert!(fit.path.lambda_max > 0.0);
+        assert!(fit.path.points.iter().all(|p| p.gap <= 2e-6));
+        assert_eq!(fit.predict(&d.db).len(), d.db.len());
+    }
+
+    #[test]
+    fn fit_works_on_tabular() {
+        use crate::data::tabular::{generate as tgen, TabSynthConfig};
+        let d = tgen(&TabSynthConfig::tiny(32, false));
         let fit = SppEstimator::new(Task::Regression)
             .maxpat(2)
             .lambda_grid(5, 0.1)

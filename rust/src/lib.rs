@@ -6,8 +6,9 @@
 //!
 //! The library fits L1-regularized linear models over the (exponentially
 //! large) space of **patterns** in a database — item-sets of a
-//! transaction database, connected subgraphs of a graph database, or
-//! subsequences of a sequence database — without ever materializing
+//! transaction database, connected subgraphs of a graph database,
+//! subsequences of a sequence database, or RuleFit-style threshold
+//! rules over numeric tabular data — without ever materializing
 //! that space.  The paper's contribution, the **SPP rule**, is a
 //! gap-safe screening test evaluable at any node of the
 //! pattern-enumeration tree; when it fires, the *entire subtree* is
@@ -17,13 +18,14 @@
 //!
 //! ## Layout (one module per subsystem; see DESIGN.md)
 //!
-//! * [`data`] — datasets: LIBSVM parser, graph/sequence containers,
-//!   seeded synthetic generators standing in for the paper's benchmark
-//!   data; each container implements [`mining::PatternSubstrate`].
+//! * [`data`] — datasets: LIBSVM parsers (binary transactions and
+//!   dense numeric), graph/sequence/tabular containers, seeded
+//!   synthetic generators standing in for the paper's benchmark data;
+//!   each container implements [`mining::PatternSubstrate`].
 //! * [`mining`] — the pattern-tree substrates: a prefix-extension
-//!   item-set enumerator, a full gSpan implementation, and a
-//!   PrefixSpan subsequence miner, all driven through the same
-//!   [`mining::TreeVisitor`] API, plus the open
+//!   item-set enumerator, a full gSpan implementation, a PrefixSpan
+//!   subsequence miner, and a RuleFit threshold-rule miner, all driven
+//!   through the same [`mining::TreeVisitor`] API, plus the open
 //!   [`mining::PatternSubstrate`] trait every search is generic over.
 //! * [`columns`] — hybrid sparse/bitset support columns: the
 //!   [`columns::ColumnRead`] fold/dot kernels every layer shares, the
@@ -84,9 +86,10 @@
 //!          fit.path.points.len(), fit.path.total_nodes());
 //! ```
 //!
-//! The same three lines fit graph databases (`&graph_db`, gSpan tree)
-//! and sequence databases (`&sequences`, PrefixSpan tree) — `fit` is
-//! generic over [`mining::PatternSubstrate`].
+//! The same three lines fit graph databases (`&graph_db`, gSpan tree),
+//! sequence databases (`&sequences`, PrefixSpan tree) and numeric
+//! tabular databases (`&tabular`, RuleFit threshold-rule tree) — `fit`
+//! is generic over [`mining::PatternSubstrate`].
 
 pub mod benchkit;
 pub mod boosting;

@@ -32,7 +32,8 @@
 //!
 //! Every data-facing command dispatches the registry [`Dataset`] once
 //! and then runs generic code over [`PatternSubstrate`] — item-set,
-//! graph and sequence presets all flow through the same paths.
+//! graph, sequence and tabular-rule presets all flow through the same
+//! paths.
 
 use std::io::Write;
 
@@ -252,6 +253,7 @@ fn cmd_cv(args: &cli::Args) -> spp::Result<()> {
         Dataset::Graphs(g) => cross_validate(g, &g.y, info.task, &cfg, folds, seed)?,
         Dataset::Itemsets(t) => cross_validate(&t.db, &t.y, info.task, &cfg, folds, seed)?,
         Dataset::Sequences(s) => cross_validate(&s.db, &s.y, info.task, &cfg, folds, seed)?,
+        Dataset::Tabular(t) => cross_validate(&t.db, &t.y, info.task, &cfg, folds, seed)?,
     };
     let secs = t0.elapsed().as_secs_f64();
     let metric = match info.task {
@@ -312,6 +314,7 @@ fn cmd_fit(args: &cli::Args) -> spp::Result<()> {
         Dataset::Graphs(g) => est.fit(g, &g.y)?,
         Dataset::Itemsets(t) => est.fit(&t.db, &t.y)?,
         Dataset::Sequences(s) => est.fit(&s.db, &s.y)?,
+        Dataset::Tabular(t) => est.fit(&t.db, &t.y)?,
     };
     let idx = args.get_usize("lambda-index", fit.path.points.len() - 1)?;
     anyhow::ensure!(
@@ -450,11 +453,14 @@ fn cmd_predict(args: &cli::Args) -> spp::Result<()> {
         info.task
     );
     let expected_tag = {
-        use spp::data::{graph::GraphDatabase, sequence::Sequences, Transactions};
+        use spp::data::{
+            graph::GraphDatabase, sequence::Sequences, tabular::TabularData, Transactions,
+        };
         match info.kind {
             registry::Kind::Itemset => Transactions::KIND_TAG,
             registry::Kind::Graph => GraphDatabase::KIND_TAG,
             registry::Kind::Sequence => Sequences::KIND_TAG,
+            registry::Kind::Tabular => TabularData::KIND_TAG,
         }
     };
     anyhow::ensure!(
@@ -475,6 +481,7 @@ fn cmd_predict(args: &cli::Args) -> spp::Result<()> {
                 Dataset::Graphs(g) => model.predict(g),
                 Dataset::Itemsets(t) => model.predict(&t.db),
                 Dataset::Sequences(s) => model.predict(&s.db),
+                Dataset::Tabular(t) => model.predict(&t.db),
             };
             let calls = (model.terms.len() as u64) * (data.n_records() as u64);
             acc.absorb(&preds, data.targets(), 0);
@@ -522,6 +529,16 @@ fn cmd_predict(args: &cli::Args) -> spp::Result<()> {
                             base += shard.seqs.len();
                         }
                     }
+                    ShardedDataset::Tabular { db, y } => {
+                        for s in 0..db.n_shards() {
+                            let shard = db.shard(s)?;
+                            let ys = &y[base..base + shard.rows.len()];
+                            predict_batches(&compiled, &shard.rows, ys, batch, &mut acc, |w| {
+                                compiled.score_tabular(w, threads)
+                            })?;
+                            base += shard.rows.len();
+                        }
+                    }
                 }
             } else {
                 let data = registry::lookup(dataset, scale)?;
@@ -540,6 +557,11 @@ fn cmd_predict(args: &cli::Args) -> spp::Result<()> {
                     Dataset::Sequences(s) => {
                         predict_batches(&compiled, &s.db.seqs, y, batch, &mut acc, |w| {
                             compiled.score_sequences(w, threads)
+                        })?
+                    }
+                    Dataset::Tabular(t) => {
+                        predict_batches(&compiled, &t.db.rows, y, batch, &mut acc, |w| {
+                            compiled.score_tabular(w, threads)
                         })?
                     }
                 }
@@ -632,6 +654,7 @@ fn run_path_sharded(
         ShardedDataset::Itemsets { db, y } => run(db, y, info.task, spec.method, &spec.cfg)?,
         ShardedDataset::Graphs { db, y } => run(db, y, info.task, spec.method, &spec.cfg)?,
         ShardedDataset::Sequences { db, y } => run(db, y, info.task, spec.method, &spec.cfg)?,
+        ShardedDataset::Tabular { db, y } => run(db, y, info.task, spec.method, &spec.cfg)?,
     };
     eprintln!(
         "sharded engine: {} shards in {dir}, peak resident columns {} bytes, {} reloads",
@@ -675,6 +698,9 @@ fn run_path_xla(spec: &ExperimentSpec) -> spp::Result<spp::coordinator::Experime
         Dataset::Sequences(s) => {
             compute_path_spp_with(&s.db, &s.y, info.task, &spec.cfg, &solver)?
         }
+        Dataset::Tabular(t) => {
+            compute_path_spp_with(&t.db, &t.y, info.task, &spec.cfg, &solver)?
+        }
     };
     eprintln!(
         "xla engine: {} subproblem fallbacks to CD",
@@ -708,6 +734,7 @@ fn cmd_lambda_max(args: &cli::Args) -> spp::Result<()> {
         Dataset::Graphs(g) => lambda_max(g, &g.y, info.task, maxpat, 1),
         Dataset::Itemsets(t) => lambda_max(&t.db, &t.y, info.task, maxpat, 1),
         Dataset::Sequences(s) => lambda_max(&s.db, &s.y, info.task, maxpat, 1),
+        Dataset::Tabular(t) => lambda_max(&t.db, &t.y, info.task, maxpat, 1),
     };
     println!(
         "dataset={dataset} n={} task={:?} maxpat={maxpat} lambda_max={:.6} b0={:.6} nodes={} pruned={}",
@@ -744,6 +771,7 @@ fn cmd_mine(args: &cli::Args) -> spp::Result<()> {
         Dataset::Graphs(g) => g.traverse(maxpat, minsup, &mut c),
         Dataset::Itemsets(t) => t.db.traverse(maxpat, minsup, &mut c),
         Dataset::Sequences(s) => s.db.traverse(maxpat, minsup, &mut c),
+        Dataset::Tabular(t) => t.db.traverse(maxpat, minsup, &mut c),
     }
     c.rows.sort_by(|a, b| b.0.cmp(&a.0));
     println!(

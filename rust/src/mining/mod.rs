@@ -20,8 +20,10 @@
 //! `lambda_max`, `certify`, boosting, the regularization path, CV) is
 //! generic over it, so adding a new pattern language is a matter of
 //! implementing the trait — no search code changes.  The crate ships
-//! three substrates: transaction databases (item-sets), graph databases
-//! (connected subgraphs), and sequence databases (subsequences).
+//! four substrates: transaction databases (item-sets), graph databases
+//! (connected subgraphs), sequence databases (subsequences), and
+//! numeric tabular databases (RuleFit-style threshold-rule
+//! conjunctions, [`rulefit`]).
 //!
 //! Traversal has a deterministic parallel form as well:
 //! [`PatternSubstrate::traverse_parallel`] farms independent depth-1
@@ -33,6 +35,7 @@
 pub mod gspan;
 pub mod itemset;
 pub mod prefixspan;
+pub mod rulefit;
 
 /// Decision returned by a visitor for the subtree rooted at a node.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -58,6 +61,9 @@ pub enum Pattern {
     Subgraph(Vec<gspan::DfsEdge>),
     /// Ordered symbol ids (a subsequence pattern; repeats allowed).
     Sequence(Vec<u32>),
+    /// Conjunction of threshold predicates over numeric features, in
+    /// canonical (universe-id) order.
+    Rule(Vec<rulefit::RulePredicate>),
 }
 
 impl Pattern {
@@ -67,6 +73,7 @@ impl Pattern {
             Pattern::Itemset(v) => v.len(),
             Pattern::Subgraph(c) => c.len(),
             Pattern::Sequence(s) => s.len(),
+            Pattern::Rule(r) => r.len(),
         }
     }
 
@@ -96,6 +103,16 @@ impl Pattern {
         }
     }
 
+    /// The predicate list of a [`Pattern::Rule`], else `None` — the
+    /// introspection hook the serve-time compiled matcher collapses
+    /// into per-feature intervals.
+    pub fn as_rule(&self) -> Option<&[rulefit::RulePredicate]> {
+        match self {
+            Pattern::Rule(r) => Some(r),
+            _ => None,
+        }
+    }
+
     /// Human-readable form used in model dumps.
     pub fn display(&self) -> String {
         match self {
@@ -117,6 +134,10 @@ impl Pattern {
                 "<{}>",
                 s.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
             ),
+            Pattern::Rule(r) => format!(
+                "[{}]",
+                r.iter().map(|p| p.display()).collect::<Vec<_>>().join(" & ")
+            ),
         }
     }
 
@@ -127,6 +148,7 @@ impl Pattern {
             Pattern::Itemset(_) => crate::data::Transactions::KIND_TAG,
             Pattern::Subgraph(_) => crate::data::graph::GraphDatabase::KIND_TAG,
             Pattern::Sequence(_) => crate::data::sequence::Sequences::KIND_TAG,
+            Pattern::Rule(_) => crate::data::tabular::TabularData::KIND_TAG,
         }
     }
 
@@ -137,17 +159,21 @@ impl Pattern {
             Pattern::Itemset(_) => crate::data::Transactions::format_pattern(self),
             Pattern::Subgraph(_) => crate::data::graph::GraphDatabase::format_pattern(self),
             Pattern::Sequence(_) => crate::data::sequence::Sequences::format_pattern(self),
+            Pattern::Rule(_) => crate::data::tabular::TabularData::format_pattern(self),
         }
     }
 
     /// Parse a persisted pattern by dispatching `tag` to the substrate
     /// that registered it (the only tag → substrate map in the crate).
     pub fn decode(tag: &str, body: &str) -> crate::Result<Pattern> {
-        use crate::data::{graph::GraphDatabase, sequence::Sequences, Transactions};
+        use crate::data::{
+            graph::GraphDatabase, sequence::Sequences, tabular::TabularData, Transactions,
+        };
         match tag {
             t if t == Transactions::KIND_TAG => Transactions::parse_pattern(body),
             t if t == GraphDatabase::KIND_TAG => GraphDatabase::parse_pattern(body),
             t if t == Sequences::KIND_TAG => Sequences::parse_pattern(body),
+            t if t == TabularData::KIND_TAG => TabularData::parse_pattern(body),
             other => anyhow::bail!("unknown pattern record '{other}'"),
         }
     }
@@ -267,7 +293,7 @@ pub trait PatternSubstrate {
         Self: Sized;
 
     /// Unique one-token tag naming this substrate's patterns in the
-    /// model text format (`I`, `G`, `S` for the shipped three).
+    /// model text format (`I`, `G`, `S`, `R` for the shipped four).
     const KIND_TAG: &'static str;
 }
 
@@ -285,6 +311,7 @@ pub(crate) enum PatternBorrow<'a> {
     Itemset(&'a [u32]),
     Subgraph(&'a [gspan::DfsEdge]),
     Sequence(&'a [u32]),
+    Rule(&'a [rulefit::RulePredicate]),
 }
 
 impl<'a> PatternNode<'a> {
@@ -312,12 +339,21 @@ impl<'a> PatternNode<'a> {
         }
     }
 
+    pub(crate) fn rule(predicates: &'a [rulefit::RulePredicate], support: &'a [u32]) -> Self {
+        PatternNode {
+            support,
+            depth: predicates.len(),
+            pattern: PatternBorrow::Rule(predicates),
+        }
+    }
+
     /// Clone the borrowed identity into an owned [`Pattern`].
     pub fn to_pattern(&self) -> Pattern {
         match self.pattern {
             PatternBorrow::Itemset(v) => Pattern::Itemset(v.to_vec()),
             PatternBorrow::Subgraph(c) => Pattern::Subgraph(c.to_vec()),
             PatternBorrow::Sequence(s) => Pattern::Sequence(s.to_vec()),
+            PatternBorrow::Rule(r) => Pattern::Rule(r.to_vec()),
         }
     }
 }
@@ -393,6 +429,12 @@ mod tests {
         let p = Pattern::Itemset(vec![1, 4, 9]);
         assert_eq!(p.size(), 3);
         assert_eq!(p.display(), "{1,4,9}");
+        let r = Pattern::Rule(vec![
+            rulefit::RulePredicate::new(0, rulefit::RuleOp::Le, 1.5),
+            rulefit::RulePredicate::new(2, rulefit::RuleOp::Gt, 0.25),
+        ]);
+        assert_eq!(r.size(), 2);
+        assert_eq!(r.display(), "[x0<=1.5 & x2>0.25]");
     }
 
     #[test]
@@ -406,12 +448,15 @@ mod tests {
             to_label: 3,
         }]);
         let s = Pattern::Sequence(vec![7, 7]);
+        let r = Pattern::Rule(vec![rulefit::RulePredicate::new(0, rulefit::RuleOp::Le, 1.5)]);
         assert_eq!(i.as_itemset(), Some(&[1u32, 4][..]));
-        assert!(i.as_subgraph().is_none() && i.as_sequence().is_none());
+        assert!(i.as_subgraph().is_none() && i.as_sequence().is_none() && i.as_rule().is_none());
         assert_eq!(g.as_subgraph().map(|c| c.len()), Some(1));
-        assert!(g.as_itemset().is_none() && g.as_sequence().is_none());
+        assert!(g.as_itemset().is_none() && g.as_sequence().is_none() && g.as_rule().is_none());
         assert_eq!(s.as_sequence(), Some(&[7u32, 7][..]));
-        assert!(s.as_itemset().is_none() && s.as_subgraph().is_none());
+        assert!(s.as_itemset().is_none() && s.as_subgraph().is_none() && s.as_rule().is_none());
+        assert_eq!(r.as_rule().map(|p| p.len()), Some(1));
+        assert!(r.as_itemset().is_none() && r.as_subgraph().is_none() && r.as_sequence().is_none());
     }
 
     #[test]
@@ -544,6 +589,10 @@ mod tests {
                 to_label: 3,
             }]),
             Pattern::Sequence(vec![7, 7, 2]),
+            Pattern::Rule(vec![
+                rulefit::RulePredicate::new(0, rulefit::RuleOp::Le, 0.25),
+                rulefit::RulePredicate::new(3, rulefit::RuleOp::Gt, -1.5),
+            ]),
         ];
         let mut tags = std::collections::HashSet::new();
         for p in &pats {

@@ -1,0 +1,439 @@
+//! Rule-conjunction enumeration tree over numeric features — the
+//! fourth substrate, after Kato et al.'s Safe RuleFit (meta safe
+//! screening; see PAPERS.md).
+//!
+//! A pattern is a conjunction of threshold predicates
+//! `x_{j_1} ◇ t_1 ∧ … ∧ x_{j_k} ◇ t_k` (◇ ∈ {≤, >}) over the numeric
+//! feature columns of a [`TabularData`] database; the binary feature is
+//! `x_it = I(rule t holds on row i)`.  The enumeration tree refines a
+//! rule one predicate at a time, so every child's support is a filter
+//! of its parent's — the anti-monotonicity the SPP rule (paper
+//! Theorem 2) and the boosting envelope bound require.  Applied to
+//! this lattice the per-node SPPC test *is* Kato et al.'s meta safe
+//! screening bound: one evaluation certifies the whole refinement
+//! subtree below a rule, not a single feature.
+//!
+//! Canonical enumeration: the finite predicate universe
+//! ([`predicate_universe`]) is ordered feature-major / threshold-
+//! ascending / `Le` before `Gt`, and a rule is extended only by
+//! predicates with a strictly larger universe index (skipping a
+//! `(feature, direction)` pair the rule already constrains — a second
+//! `x_j ≤ t'` is subsumed by the tighter of the two).  Every rule is
+//! therefore a strictly increasing predicate-id list and is visited
+//! exactly once, in lexicographic id order.
+
+use super::{PatternNode, SubtreeVisitors, TreeVisitor, Walk};
+use crate::data::tabular::TabularData;
+
+/// Direction of a threshold predicate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum RuleOp {
+    /// `x_j <= t`
+    Le,
+    /// `x_j > t`
+    Gt,
+}
+
+impl RuleOp {
+    /// The codec/display token (`<=` or `>`).
+    pub fn token(self) -> &'static str {
+        match self {
+            RuleOp::Le => "<=",
+            RuleOp::Gt => ">",
+        }
+    }
+}
+
+/// One threshold predicate `x_feature ◇ threshold`.
+///
+/// The threshold is stored as its IEEE-754 bit pattern so the type can
+/// derive `Eq`/`Hash`/`Ord` (which [`crate::mining::Pattern`]
+/// requires); the derived order is only used for map keys and is
+/// consistent because equal bits ⇔ equal thresholds.  Construct via
+/// [`RulePredicate::new`] and read back via
+/// [`RulePredicate::threshold`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RulePredicate {
+    /// Feature (column) index.
+    pub feature: u32,
+    /// Predicate direction.
+    pub op: RuleOp,
+    bits: u64,
+}
+
+impl RulePredicate {
+    pub fn new(feature: u32, op: RuleOp, threshold: f64) -> Self {
+        RulePredicate {
+            feature,
+            op,
+            bits: threshold.to_bits(),
+        }
+    }
+
+    /// The threshold value `t` of `x_feature ◇ t`.
+    pub fn threshold(&self) -> f64 {
+        f64::from_bits(self.bits)
+    }
+
+    /// Does the predicate hold on `row`?  A missing column (foreign
+    /// record width) or a NaN value fails the comparison — a rule
+    /// never matches a record it cannot be evaluated on.
+    pub fn eval(&self, row: &[f64]) -> bool {
+        match row.get(self.feature as usize) {
+            Some(&v) => match self.op {
+                RuleOp::Le => v <= self.threshold(),
+                RuleOp::Gt => v > self.threshold(),
+            },
+            None => false,
+        }
+    }
+
+    /// Codec/display form, e.g. `x3<=0.25`.  Thresholds print through
+    /// `f64`'s shortest-round-trip `Display`, so
+    /// [`RulePredicate::parse`] recovers the exact bits.
+    pub fn display(&self) -> String {
+        format!("x{}{}{}", self.feature, self.op.token(), self.threshold())
+    }
+
+    /// Inverse of [`RulePredicate::display`].
+    pub fn parse(token: &str) -> crate::Result<RulePredicate> {
+        let rest = token
+            .strip_prefix('x')
+            .ok_or_else(|| anyhow::anyhow!("rule predicate '{token}' does not start with 'x'"))?;
+        let cut = rest
+            .find(|c: char| !c.is_ascii_digit())
+            .ok_or_else(|| anyhow::anyhow!("rule predicate '{token}' has no operator"))?;
+        let feature: u32 = rest[..cut].parse()?;
+        let (op, value) = if let Some(v) = rest[cut..].strip_prefix("<=") {
+            (RuleOp::Le, v)
+        } else if let Some(v) = rest[cut..].strip_prefix('>') {
+            (RuleOp::Gt, v)
+        } else {
+            anyhow::bail!("rule predicate '{token}' has an unknown operator");
+        };
+        let threshold: f64 = value.parse()?;
+        if !threshold.is_finite() {
+            anyhow::bail!("rule predicate '{token}' threshold is not finite");
+        }
+        Ok(RulePredicate::new(feature, op, threshold))
+    }
+}
+
+/// The deterministic candidate-threshold universe of a database: per
+/// feature, the midpoints between consecutive distinct sorted values,
+/// quantile-thinned to at most
+/// [`TabularData::max_thresholds`] cuts, each paired with both
+/// directions.  Ordered feature-major, threshold-ascending, [`RuleOp::Le`]
+/// before [`RuleOp::Gt`] — the canonical predicate-id order every rule
+/// enumeration (production miner and test oracle alike) is defined
+/// over.
+pub fn predicate_universe(db: &TabularData) -> Vec<RulePredicate> {
+    let mut preds = Vec::new();
+    for j in 0..db.n_features {
+        let mut vals: Vec<f64> = db.rows.iter().map(|r| r[j]).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).expect("validate() refuses NaN"));
+        vals.dedup();
+        let k = vals.len();
+        if k < 2 {
+            continue; // a constant column supports no split
+        }
+        let cuts = k - 1;
+        let take = cuts.min(db.max_thresholds.max(1));
+        let mut last_idx = 0usize;
+        for t in 0..take {
+            // Evenly spaced cut indices in [1, cuts]; when cuts <= take
+            // this selects every cut exactly once.
+            let idx = ((t + 1) * k / (take + 1)).clamp(1, cuts);
+            if idx == last_idx {
+                continue;
+            }
+            last_idx = idx;
+            let thr = (vals[idx - 1] + vals[idx]) / 2.0;
+            if !thr.is_finite() {
+                continue;
+            }
+            preds.push(RulePredicate::new(j as u32, RuleOp::Le, thr));
+            preds.push(RulePredicate::new(j as u32, RuleOp::Gt, thr));
+        }
+    }
+    preds
+}
+
+/// Configurable rule miner (RuleFit-style conjunction enumeration).
+pub struct RulefitMiner<'a> {
+    db: &'a TabularData,
+    /// Maximum rule length (#predicates; the paper's `maxpat`).
+    pub maxpat: usize,
+    /// Minimum support; rules below it are not visited (their subtrees
+    /// are skipped — safe, supports are anti-monotone).
+    pub minsup: usize,
+    preds: Vec<RulePredicate>,
+}
+
+impl<'a> RulefitMiner<'a> {
+    pub fn new(db: &'a TabularData, maxpat: usize) -> Self {
+        RulefitMiner {
+            db,
+            maxpat,
+            minsup: 1,
+            preds: predicate_universe(db),
+        }
+    }
+
+    /// The predicate universe this miner enumerates over (pid order).
+    pub fn predicates(&self) -> &[RulePredicate] {
+        &self.preds
+    }
+
+    /// Depth-1 root frontier: every universe predicate with support
+    /// `>= minsup`, with its sorted row-id support, in pid order.  The
+    /// ONE root-frontier definition shared by [`Self::traverse`] and
+    /// [`Self::traverse_par`] — the splice guarantee depends on both
+    /// engines expanding the same frontier.
+    fn roots(&self) -> Vec<(usize, Vec<u32>)> {
+        (0..self.preds.len())
+            .filter_map(|pid| {
+                let p = self.preds[pid];
+                let support: Vec<u32> = (0..self.db.rows.len() as u32)
+                    .filter(|&i| p.eval(&self.db.rows[i as usize]))
+                    .collect();
+                (support.len() >= self.minsup).then_some((pid, support))
+            })
+            .collect()
+    }
+
+    /// Depth-first traversal; the visitor sees each canonical rule
+    /// exactly once, in lexicographic predicate-id order.
+    pub fn traverse<V: TreeVisitor + ?Sized>(&self, visitor: &mut V) {
+        if self.maxpat == 0 || self.db.rows.is_empty() {
+            return;
+        }
+        for (pid, support) in self.roots() {
+            let mut rule = vec![self.preds[pid]];
+            let node = PatternNode::rule(&rule, &support);
+            let walk = visitor.visit(&node);
+            if walk == Walk::Descend && rule.len() < self.maxpat {
+                self.recurse(pid, &support, &mut rule, visitor);
+            }
+        }
+    }
+
+    /// Subtree-parallel traversal (see
+    /// [`crate::mining::PatternSubstrate::traverse_parallel`]): the
+    /// root frontier (`roots`, shared with the sequential engine) is
+    /// computed once; each surviving predicate's subtree is then an
+    /// independent task, so per-subtree node sequences concatenated in
+    /// pid order equal the sequential traversal.
+    pub fn traverse_par<F: SubtreeVisitors>(&self, threads: usize, factory: &F) -> Vec<F::V> {
+        if self.maxpat == 0 || self.db.rows.is_empty() {
+            return Vec::new();
+        }
+        let roots = self.roots();
+        let roots = &roots;
+        crate::runtime::parallel::map_indexed(threads, roots.len(), move |i| {
+            let mut visitor = factory.visitor(i);
+            let (pid, support) = &roots[i];
+            let mut rule = vec![self.preds[*pid]];
+            let node = PatternNode::rule(&rule, support);
+            let walk = visitor.visit(&node);
+            if walk == Walk::Descend && rule.len() < self.maxpat {
+                self.recurse(*pid, support, &mut rule, &mut visitor);
+            }
+            visitor
+        })
+    }
+
+    fn recurse<V: TreeVisitor + ?Sized>(
+        &self,
+        last_pid: usize,
+        support: &[u32],
+        rule: &mut Vec<RulePredicate>,
+        visitor: &mut V,
+    ) {
+        for pid in last_pid + 1..self.preds.len() {
+            let p = self.preds[pid];
+            // One predicate per (feature, direction): a second bound in
+            // the same direction is subsumed by the tighter of the two.
+            if rule.iter().any(|q| q.feature == p.feature && q.op == p.op) {
+                continue;
+            }
+            let child: Vec<u32> = support
+                .iter()
+                .copied()
+                .filter(|&i| p.eval(&self.db.rows[i as usize]))
+                .collect();
+            if child.len() < self.minsup {
+                continue;
+            }
+            rule.push(p);
+            let node = PatternNode::rule(rule, &child);
+            let walk = visitor.visit(&node);
+            if walk == Walk::Descend && rule.len() < self.maxpat {
+                self.recurse(pid, &child, rule, visitor);
+            }
+            rule.pop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mining::Pattern;
+    use crate::testutil::oracle;
+
+    fn db() -> TabularData {
+        TabularData::new(
+            2,
+            vec![
+                vec![0.0, 1.0],
+                vec![1.0, 0.0],
+                vec![2.0, 1.0],
+                vec![3.0, 0.0],
+            ],
+        )
+    }
+
+    fn collect(db: &TabularData, maxpat: usize, minsup: usize) -> Vec<(Vec<RulePredicate>, Vec<u32>)> {
+        let mut out = Vec::new();
+        let mut v = |n: &PatternNode<'_>| {
+            if let Pattern::Rule(r) = n.to_pattern() {
+                out.push((r, n.support.to_vec()));
+            }
+            Walk::Descend
+        };
+        let mut m = RulefitMiner::new(db, maxpat);
+        m.minsup = minsup;
+        m.traverse(&mut v);
+        out
+    }
+
+    #[test]
+    fn predicate_eval_cases() {
+        let le = RulePredicate::new(0, RuleOp::Le, 1.5);
+        let gt = RulePredicate::new(0, RuleOp::Gt, 1.5);
+        assert!(le.eval(&[1.5]) && !gt.eval(&[1.5])); // boundary goes left
+        assert!(!le.eval(&[2.0]) && gt.eval(&[2.0]));
+        assert!(!le.eval(&[f64::NAN]) && !gt.eval(&[f64::NAN]));
+        assert!(!RulePredicate::new(3, RuleOp::Le, 0.0).eval(&[1.0])); // missing column
+    }
+
+    #[test]
+    fn predicate_display_parse_round_trip() {
+        for p in [
+            RulePredicate::new(0, RuleOp::Le, 0.1),
+            RulePredicate::new(7, RuleOp::Gt, -2.25),
+            RulePredicate::new(3, RuleOp::Le, 1.0 / 3.0),
+        ] {
+            assert_eq!(RulePredicate::parse(&p.display()).unwrap(), p);
+        }
+        assert!(RulePredicate::parse("y0<=1").is_err());
+        assert!(RulePredicate::parse("x0=1").is_err());
+        assert!(RulePredicate::parse("x0<=inf").is_err());
+    }
+
+    #[test]
+    fn universe_is_ordered_and_thinned() {
+        let d = db();
+        let preds = predicate_universe(&d);
+        // feature 0 has 4 distinct values (3 cuts), feature 1 has 2 (1
+        // cut); each cut yields a Le and a Gt predicate.
+        assert_eq!(preds.len(), 2 * 3 + 2 * 1);
+        // canonical order: feature-major, threshold-ascending, Le<Gt
+        let key = |p: &RulePredicate| (p.feature, p.threshold().to_bits(), p.op);
+        assert!(preds.windows(2).all(|w| key(&w[0]) < key(&w[1])));
+        // thinning: cap at 2 keeps 2 cuts of feature 0
+        let mut capped = d.clone();
+        capped.max_thresholds = 2;
+        assert_eq!(predicate_universe(&capped).len(), 2 * 2 + 2 * 1);
+    }
+
+    #[test]
+    fn matches_bruteforce_enumeration() {
+        let d = db();
+        for maxpat in [1usize, 2, 3] {
+            let got: std::collections::BTreeMap<Vec<RulePredicate>, Vec<u32>> =
+                collect(&d, maxpat, 1).into_iter().collect();
+            let brute = oracle::all_rules(&d, maxpat, 1, &predicate_universe(&d));
+            assert_eq!(got, brute, "maxpat={maxpat}");
+        }
+    }
+
+    #[test]
+    fn respects_maxpat_and_minsup() {
+        let d = db();
+        assert!(collect(&d, 2, 1).iter().all(|(p, _)| p.len() <= 2));
+        assert!(collect(&d, 3, 2).iter().all(|(_, s)| s.len() >= 2));
+        assert!(collect(&d, 0, 1).is_empty());
+    }
+
+    #[test]
+    fn prune_skips_subtree_but_not_siblings() {
+        let d = db();
+        let m = RulefitMiner::new(&d, 2);
+        let first = m.predicates()[0];
+        let mut seen: Vec<Vec<RulePredicate>> = Vec::new();
+        let mut v = |n: &PatternNode<'_>| {
+            let Pattern::Rule(r) = n.to_pattern() else {
+                unreachable!()
+            };
+            seen.push(r.clone());
+            if r == vec![first] {
+                Walk::Prune
+            } else {
+                Walk::Descend
+            }
+        };
+        m.traverse(&mut v);
+        assert!(seen.contains(&vec![first]));
+        assert!(!seen.iter().any(|r| r.len() > 1 && r[0] == first));
+        assert!(seen.iter().any(|r| r.len() == 2), "{seen:?}"); // sibling subtrees intact
+    }
+
+    #[test]
+    fn parallel_traversal_matches_sequential_blocks() {
+        struct Coll(Vec<(Vec<RulePredicate>, Vec<u32>)>);
+        impl TreeVisitor for Coll {
+            fn visit(&mut self, n: &PatternNode<'_>) -> Walk {
+                if let Pattern::Rule(r) = n.to_pattern() {
+                    self.0.push((r, n.support.to_vec()));
+                }
+                Walk::Descend
+            }
+        }
+        struct Fac;
+        impl SubtreeVisitors for Fac {
+            type V = Coll;
+
+            fn visitor(&self, _root: usize) -> Coll {
+                Coll(Vec::new())
+            }
+        }
+        let d = db();
+        for (maxpat, minsup, threads) in [(3, 1, 1), (3, 1, 4), (2, 2, 2)] {
+            let want = collect(&d, maxpat, minsup);
+            let mut m = RulefitMiner::new(&d, maxpat);
+            m.minsup = minsup;
+            let got: Vec<(Vec<RulePredicate>, Vec<u32>)> =
+                m.traverse_par(threads, &Fac).into_iter().flat_map(|c| c.0).collect();
+            assert_eq!(got, want, "maxpat={maxpat} minsup={minsup} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn anti_monotone_supports_along_paths() {
+        let d = db();
+        let mut stack: Vec<Vec<u32>> = Vec::new();
+        let mut v = |n: &PatternNode<'_>| {
+            while stack.len() >= n.depth {
+                stack.pop();
+            }
+            if let Some(parent) = stack.last() {
+                assert!(n.support.iter().all(|t| parent.contains(t)));
+            }
+            stack.push(n.support.to_vec());
+            Walk::Descend
+        };
+        RulefitMiner::new(&d, 3).traverse(&mut v);
+    }
+}

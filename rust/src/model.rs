@@ -17,6 +17,7 @@
 
 use crate::data::graph::{Graph, GraphDatabase};
 use crate::data::sequence::Sequences;
+use crate::data::tabular::TabularData;
 use crate::data::Transactions;
 use crate::mining::{Pattern, PatternSubstrate};
 use crate::path::PathPoint;
@@ -77,6 +78,11 @@ impl SparsePatternModel {
     /// Raw score for one sequence record.
     pub fn score_sequence(&self, seq: &[u32]) -> f64 {
         self.score::<Sequences>(seq)
+    }
+
+    /// Raw score for one numeric tabular row (rule terms).
+    pub fn score_tabular_row(&self, row: &[f64]) -> f64 {
+        self.score::<TabularData>(row)
     }
 
     /// Predictions for a transaction database (sign for classification).
@@ -361,6 +367,36 @@ mod tests {
         };
         assert_eq!(back.score_sequence(&[3, 0, 3, 1]), 0.75);
         assert_eq!(back.predict(&db), vec![1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn model_round_trip_rules() {
+        use crate::mining::rulefit::{RuleOp, RulePredicate};
+        let m = SparsePatternModel {
+            task: Task::Classification,
+            lambda: 0.5,
+            b: -0.25,
+            terms: vec![
+                (
+                    // thresholds that are not exactly representable in
+                    // decimal must still round-trip bit-exactly
+                    Pattern::Rule(vec![
+                        RulePredicate::new(0, RuleOp::Le, 1.0 / 3.0),
+                        RulePredicate::new(2, RuleOp::Gt, 0.1),
+                    ]),
+                    1.0,
+                ),
+                (Pattern::Rule(vec![RulePredicate::new(1, RuleOp::Gt, -2.5)]), -0.5),
+            ],
+        };
+        let text = m.serialize().unwrap();
+        assert!(text.contains("\nR "), "rule terms use the R tag:\n{text}");
+        let back = SparsePatternModel::parse(&text).unwrap();
+        assert_eq!(m, back);
+        // row [0.2, -3.0, 0.5]: rule 1 holds, rule 2 doesn't -> 0.75 -> +1
+        assert_eq!(back.score_tabular_row(&[0.2, -3.0, 0.5]), 0.75);
+        let db = TabularData::new(3, vec![vec![0.2, -3.0, 0.5], vec![0.9, 0.0, 0.0]]);
+        assert_eq!(back.predict(&db), vec![1.0, -1.0]);
     }
 
     #[test]

@@ -25,6 +25,16 @@
 //!   a cheap label/degree signature. Because a validated prefix graph
 //!   is a subgraph of every extension, a failed prefix check prunes
 //!   the whole subtree before any full subgraph-isomorphism test runs.
+//! - **Tabular rules** — per-term interval collapse. A rule is a
+//!   conjunction of `x_f ≤ t` / `x_f > t` predicates; all predicates
+//!   on one feature collapse to a single half-open interval
+//!   `lo < x_f ≤ hi` (`lo` = max `>` threshold, `hi` = min `≤`
+//!   threshold), so a term needs at most one comparison pair per
+//!   distinct feature instead of one per predicate, with
+//!   short-circuit on the first failed conjunct. NaN and
+//!   out-of-range features fail the interval test exactly as they
+//!   fail every individual predicate, so the collapse is semantics-
+//!   preserving.
 //!
 //! Scores are **bit-identical** to the naive scorer: matching only
 //! produces per-record boolean flags, and the final accumulation adds
@@ -39,9 +49,11 @@ use std::collections::BTreeMap;
 use crate::data::graph::{contains_subgraph, Graph, GraphDatabase};
 use crate::data::registry::Dataset;
 use crate::data::sequence::Sequences;
+use crate::data::tabular::TabularData;
 use crate::data::Transactions;
 use crate::mining::gspan::{checked_prefix_graph, code_to_labeled_graph, DfsEdge};
 use crate::mining::itemset::is_strictly_increasing;
+use crate::mining::rulefit::{RuleOp, RulePredicate};
 use crate::mining::PatternSubstrate;
 use crate::model::{task_output, SparsePatternModel};
 use crate::runtime::parallel::map_indexed;
@@ -64,9 +76,10 @@ pub struct CompileStats {
 /// One scored batch: spliced scores plus a matcher-work metric.
 ///
 /// `ops` counts item-posting visits (item sets), trie-node
-/// activations (sequences), or `contains_subgraph` calls (graphs) —
-/// the quantity the compiled index exists to shrink relative to the
-/// naive `records × patterns` bound. Summed in chunk order, so it is
+/// activations (sequences), `contains_subgraph` calls (graphs), or
+/// interval-conjunct comparisons (tabular rules) — the quantity the
+/// compiled index exists to shrink relative to the naive
+/// `records × patterns` bound. Summed in chunk order, so it is
 /// deterministic at any thread count.
 pub struct ScoreBatch {
     pub scores: Vec<f64>,
@@ -92,6 +105,7 @@ enum Kernel {
     Itemset(ItemsetIndex),
     Sequence(SequenceTrie),
     Graph(CodePrefixTree),
+    Rule(RuleIntervalIndex),
 }
 
 impl Kernel {
@@ -100,6 +114,7 @@ impl Kernel {
             Kernel::Itemset(idx) => idx.postings.len(),
             Kernel::Sequence(trie) => trie.len(),
             Kernel::Graph(tree) => tree.nodes.len(),
+            Kernel::Rule(idx) => idx.index_nodes(),
         }
     }
 }
@@ -140,8 +155,17 @@ impl CompiledModel {
                 }
             }
             (Sequences::KIND_TAG, Kernel::Sequence(SequenceTrie::build(&pats)))
+        } else if kind == TabularData::KIND_TAG {
+            let mut pats: Vec<&[RulePredicate]> = Vec::new();
+            for (p, w) in &model.terms {
+                if let Some(rule) = p.as_rule() {
+                    pats.push(rule);
+                    weights.push(*w);
+                }
+            }
+            (TabularData::KIND_TAG, Kernel::Rule(RuleIntervalIndex::build(&pats)))
         } else {
-            anyhow::bail!("unknown substrate kind '{kind}' (the shipped tags are I, G, S)");
+            anyhow::bail!("unknown substrate kind '{kind}' (the shipped tags are I, G, S, R)");
         };
         let index_nodes = kernel.index_nodes();
         Ok(CompiledModel {
@@ -202,6 +226,14 @@ impl CompiledModel {
         Ok(self.batch(graphs, threads, || (), |g, _scratch, flags| tree.matches_into(g, flags)))
     }
 
+    /// Score a batch of numeric tabular rows (rule models).
+    pub fn score_tabular(&self, rows: &[Vec<f64>], threads: usize) -> crate::Result<ScoreBatch> {
+        let Kernel::Rule(idx) = &self.kernel else {
+            anyhow::bail!("model compiled for kind '{}' cannot score tabular records", self.kind);
+        };
+        Ok(self.batch(rows, threads, || (), |row, _scratch, flags| idx.matches_into(row, flags)))
+    }
+
     /// Score a whole registry dataset; the dataset kind must match the
     /// compiled kind.
     pub fn score_dataset(&self, data: &Dataset, threads: usize) -> crate::Result<ScoreBatch> {
@@ -209,6 +241,7 @@ impl CompiledModel {
             Dataset::Itemsets(t) => self.score_itemsets(&t.db.items, threads),
             Dataset::Graphs(g) => self.score_graphs(&g.graphs, threads),
             Dataset::Sequences(s) => self.score_sequences(&s.db.seqs, threads),
+            Dataset::Tabular(t) => self.score_tabular(&t.db.rows, threads),
         }
     }
 
@@ -617,6 +650,65 @@ impl CodePrefixTree {
     }
 }
 
+/// Per-term interval collapse over rule patterns.
+struct RuleIntervalIndex {
+    /// Per term: `(feature, lo, hi)` conjuncts, feature-sorted. The
+    /// rule matches iff every conjunct holds as `lo < x_f ≤ hi`
+    /// (`lo` = −∞ with no `>` predicate, `hi` = +∞ with no `≤`).
+    terms: Vec<Vec<(u32, f64, f64)>>,
+}
+
+impl RuleIntervalIndex {
+    fn build(patterns: &[&[RulePredicate]]) -> RuleIntervalIndex {
+        let terms = patterns
+            .iter()
+            .map(|rule| {
+                let mut iv: BTreeMap<u32, (f64, f64)> = BTreeMap::new();
+                for p in *rule {
+                    let e = iv.entry(p.feature).or_insert((f64::NEG_INFINITY, f64::INFINITY));
+                    // A conjunction of `> t_i` is `> max t_i`; of
+                    // `≤ t_i`, `≤ min t_i` — exact, not approximate.
+                    match p.op {
+                        RuleOp::Gt => e.0 = e.0.max(p.threshold()),
+                        RuleOp::Le => e.1 = e.1.min(p.threshold()),
+                    }
+                }
+                iv.into_iter().map(|(f, (lo, hi))| (f, lo, hi)).collect()
+            })
+            .collect();
+        RuleIntervalIndex { terms }
+    }
+
+    fn index_nodes(&self) -> usize {
+        self.terms.iter().map(|t| t.len()).sum()
+    }
+
+    /// One short-circuit pass per term; returns the conjunct
+    /// comparisons made. A missing feature or a NaN fails its
+    /// conjunct, exactly as it fails every predicate the conjunct
+    /// collapsed.
+    fn matches_into(&self, row: &[f64], flags: &mut [bool]) -> u64 {
+        let mut ops = 0u64;
+        for (t, iv) in self.terms.iter().enumerate() {
+            let mut hit = true;
+            for &(f, lo, hi) in iv {
+                ops += 1;
+                match row.get(f as usize) {
+                    Some(&v) if v > lo && v <= hi => {}
+                    _ => {
+                        hit = false;
+                        break;
+                    }
+                }
+            }
+            if hit {
+                flags[t] = true;
+            }
+        }
+        ops
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -698,6 +790,47 @@ mod tests {
                 assert_bits_eq(s, model.score_sequence(seq));
             }
         }
+    }
+
+    #[test]
+    fn rule_kernel_matches_naive_bitwise() {
+        let r = RulePredicate::new;
+        // An interval pair collapsing to one conjunct, a contradictory
+        // (never-fire) interval, an empty rule (always fires), and a
+        // predicate on a feature some rows do not have.
+        let model = model_of(
+            Task::Regression,
+            0.125,
+            vec![
+                (Pattern::Rule(vec![r(0, RuleOp::Le, 0.5)]), 0.7),
+                (Pattern::Rule(vec![r(0, RuleOp::Gt, 0.25), r(0, RuleOp::Le, 0.75)]), -0.3),
+                (Pattern::Rule(vec![r(1, RuleOp::Gt, 0.0), r(2, RuleOp::Le, 1.0)]), 0.11),
+                (Pattern::Rule(vec![]), 0.05),
+                (Pattern::Rule(vec![r(0, RuleOp::Gt, 0.9), r(0, RuleOp::Le, 0.1)]), 10.0),
+                (Pattern::Rule(vec![r(5, RuleOp::Gt, -1.0)]), 0.9),
+            ],
+        );
+        let compiled = CompiledModel::compile_for(&model, "R").unwrap();
+        assert_eq!(compiled.stats.compiled_terms, 6);
+        // 1 + 1 (pair collapsed) + 2 + 0 + 1 (contradiction collapsed)
+        // + 1 conjuncts.
+        assert_eq!(compiled.stats.index_nodes, 6);
+        let rows: Vec<Vec<f64>> = vec![
+            vec![0.3, 0.5, 0.5],
+            vec![0.6, -1.0, 2.0],
+            vec![0.5, 0.1, 0.9, 0.0, 0.0, 3.0],
+            vec![],
+            vec![f64::NAN, 1.0, 0.5],
+        ];
+        for threads in [1, 4] {
+            let out = compiled.score_tabular(&rows, threads).unwrap();
+            assert_eq!(out.scores.len(), rows.len());
+            for (row, &s) in rows.iter().zip(&out.scores) {
+                assert_bits_eq(s, model.score_tabular_row(row));
+            }
+        }
+        // Wrong record kind for the compiled kernel is an error.
+        assert!(compiled.score_itemsets(&[vec![1]], 1).is_err());
     }
 
     fn path_graph(labels: &[u32]) -> Graph {

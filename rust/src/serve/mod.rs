@@ -168,6 +168,7 @@ impl ServeEngine {
                     RecordBatch::Itemsets(rows) => entry.compiled.score_itemsets(rows, threads)?,
                     RecordBatch::Graphs(gs) => entry.compiled.score_graphs(gs, threads)?,
                     RecordBatch::Sequences(s) => entry.compiled.score_sequences(s, threads)?,
+                    RecordBatch::Tabular(rows) => entry.compiled.score_tabular(rows, threads)?,
                 };
                 (out.scores, out.ops, "compiled")
             }
@@ -182,6 +183,9 @@ impl ServeEngine {
                     RecordBatch::Graphs(gs) => gs.iter().map(|g| model.score_graph(g)).collect(),
                     RecordBatch::Sequences(seqs) => {
                         seqs.iter().map(|s| model.score_sequence(s)).collect()
+                    }
+                    RecordBatch::Tabular(rows) => {
+                        rows.iter().map(|r| model.score_tabular_row(r)).collect()
                     }
                 };
                 let ops = (model.terms.len() as u64) * (n as u64);

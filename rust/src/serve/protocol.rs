@@ -20,9 +20,10 @@
 //! ```
 //!
 //! `<tag>` is a substrate `KIND_TAG`: `"I"` (item sets), `"G"`
-//! (graphs), `"S"` (sequences). Records are arrays of non-negative
-//! integers for `I`/`S`, and `{"v":[labels],"e":[[u,v,elabel],...]}`
-//! objects for `G`.
+//! (graphs), `"S"` (sequences), `"R"` (numeric tabular rows for rule
+//! models). Records are arrays of non-negative integers for `I`/`S`,
+//! arrays of finite numbers for `R`, and
+//! `{"v":[labels],"e":[[u,v,elabel],...]}` objects for `G`.
 //!
 //! Responses are enveloped as
 //! `{"spp":1,"ok":true,"id":...,"result":{...}}` or
@@ -32,6 +33,7 @@ use std::fmt::{self, Write as _};
 
 use crate::data::graph::{Graph, GraphDatabase};
 use crate::data::sequence::Sequences;
+use crate::data::tabular::TabularData;
 use crate::data::Transactions;
 use crate::mining::itemset::normalize_items;
 use crate::mining::PatternSubstrate;
@@ -465,7 +467,7 @@ fn req_kind(v: &Json) -> crate::Result<String> {
     v.get("kind")
         .and_then(Json::as_str)
         .map(str::to_string)
-        .ok_or_else(|| anyhow::anyhow!("request needs a string \"kind\" field (I, G or S)"))
+        .ok_or_else(|| anyhow::anyhow!("request needs a string \"kind\" field (I, G, S or R)"))
 }
 
 /// A decoded `records` payload, already normalized for its substrate.
@@ -473,6 +475,7 @@ pub enum RecordBatch {
     Itemsets(Vec<Vec<u32>>),
     Graphs(Vec<Graph>),
     Sequences(Vec<Vec<u32>>),
+    Tabular(Vec<Vec<f64>>),
 }
 
 impl RecordBatch {
@@ -481,6 +484,7 @@ impl RecordBatch {
             RecordBatch::Itemsets(rows) => rows.len(),
             RecordBatch::Graphs(gs) => gs.len(),
             RecordBatch::Sequences(seqs) => seqs.len(),
+            RecordBatch::Tabular(rows) => rows.len(),
         }
     }
 
@@ -515,8 +519,14 @@ pub fn decode_records(kind: &str, v: &Json) -> crate::Result<RecordBatch> {
             graphs.push(decode_graph(r).map_err(|e| anyhow::anyhow!("record {i}: {e}"))?);
         }
         Ok(RecordBatch::Graphs(graphs))
+    } else if kind == TabularData::KIND_TAG {
+        let mut rows = Vec::with_capacity(arr.len());
+        for (i, r) in arr.iter().enumerate() {
+            rows.push(f64_list(r).map_err(|e| anyhow::anyhow!("record {i}: {e}"))?);
+        }
+        Ok(RecordBatch::Tabular(rows))
     } else {
-        anyhow::bail!("unknown substrate kind '{kind}' (the shipped tags are I, G, S)")
+        anyhow::bail!("unknown substrate kind '{kind}' (the shipped tags are I, G, S, R)")
     }
 }
 
@@ -526,6 +536,16 @@ fn u32_list(v: &Json) -> crate::Result<Vec<u32>> {
         .ok_or_else(|| anyhow::anyhow!("expected an array of non-negative integers"))?;
     arr.iter()
         .map(|x| x.as_u32().ok_or_else(|| anyhow::anyhow!("expected a non-negative integer")))
+        .collect()
+}
+
+fn f64_list(v: &Json) -> crate::Result<Vec<f64>> {
+    let arr = v.as_arr().ok_or_else(|| anyhow::anyhow!("expected an array of finite numbers"))?;
+    arr.iter()
+        .map(|x| match x.as_f64() {
+            Some(f) if f.is_finite() => Ok(f),
+            _ => Err(anyhow::anyhow!("expected a finite number")),
+        })
         .collect()
 }
 
@@ -708,11 +728,19 @@ mod tests {
         assert_eq!(gs[0].n_vertices(), 2);
         assert_eq!(gs[0].n_edges(), 1);
 
+        let t = Json::parse("[[0.5,-1.25],[]]").unwrap();
+        let RecordBatch::Tabular(rows) = decode_records("R", &t).unwrap() else {
+            panic!("expected tabular rows");
+        };
+        assert_eq!(rows, vec![vec![0.5, -1.25], vec![]]);
+
         let bad = Json::parse(r#"[{"v":[5],"e":[[0,1,2]]}]"#).unwrap();
         assert!(decode_records("G", &bad).is_err(), "endpoint out of range");
         assert!(decode_records("X", &v).is_err(), "unknown kind");
         assert!(decode_records("I", &Json::parse("[[1.5]]").unwrap()).is_err());
         assert!(decode_records("I", &Json::parse("[[-1]]").unwrap()).is_err());
+        assert!(decode_records("R", &Json::parse(r#"[["a"]]"#).unwrap()).is_err());
+        assert!(decode_records("R", &Json::parse("[0.5]").unwrap()).is_err());
     }
 
     #[test]

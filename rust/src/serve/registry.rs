@@ -5,12 +5,13 @@
 //! format and the miners use. Loading a model for a kind that already
 //! has one replaces it atomically between requests — in-flight
 //! batches always see exactly one model. A `BTreeMap` keeps listing
-//! order deterministic (`G` < `I` < `S`).
+//! order deterministic (`G` < `I` < `R` < `S`).
 
 use std::collections::BTreeMap;
 
 use crate::data::graph::GraphDatabase;
 use crate::data::sequence::Sequences;
+use crate::data::tabular::TabularData;
 use crate::data::Transactions;
 use crate::mining::PatternSubstrate;
 use crate::model::SparsePatternModel;
@@ -26,8 +27,10 @@ pub fn canonical_tag(kind: &str) -> crate::Result<&'static str> {
         Ok(GraphDatabase::KIND_TAG)
     } else if kind == Sequences::KIND_TAG {
         Ok(Sequences::KIND_TAG)
+    } else if kind == TabularData::KIND_TAG {
+        Ok(TabularData::KIND_TAG)
     } else {
-        anyhow::bail!("unknown substrate kind '{kind}' (the shipped tags are I, G, S)")
+        anyhow::bail!("unknown substrate kind '{kind}' (the shipped tags are I, G, S, R)")
     }
 }
 
@@ -96,7 +99,9 @@ impl ModelRegistry {
             }
             (Some(h), None) => canonical_tag(h)?,
             (None, Some(i)) => i,
-            (None, None) => anyhow::bail!("an empty model needs an explicit \"kind\" (I, G or S)"),
+            (None, None) => {
+                anyhow::bail!("an empty model needs an explicit \"kind\" (I, G, S or R)")
+            }
         };
         let compiled = CompiledModel::compile_for(&model, kind)?;
         let loads = self.entries.get(kind).map(|e| e.loads).unwrap_or(0) + 1;
@@ -140,6 +145,7 @@ mod tests {
 
     const ITEMSET_MODEL: &str = "spp-model v1 task=classification lambda=1 b=0\nI 1 1,2\n";
     const SEQ_MODEL: &str = "spp-model v1 task=classification lambda=1 b=0\nS 1 3,4\n";
+    const RULE_MODEL: &str = "spp-model v1 task=regression lambda=1 b=0\nR 1 x0<=0.5&x2>0.25\n";
     const EMPTY_MODEL: &str = "spp-model v1 task=regression lambda=1 b=0.5\n";
 
     #[test]
@@ -155,11 +161,13 @@ mod tests {
         assert!(r.reloaded);
         assert_eq!(reg.get_mut("I").unwrap().loads, 2);
 
-        // A different kind coexists; listing order is tag-sorted.
+        // Other kinds coexist; listing order is tag-sorted.
         reg.load(SEQ_MODEL, None).unwrap();
+        let r = reg.load(RULE_MODEL, None).unwrap();
+        assert_eq!(r.kind, "R");
         let kinds: Vec<&str> = reg.iter().map(|(k, _)| k).collect();
-        assert_eq!(kinds, vec!["I", "S"]);
-        assert_eq!(reg.len(), 2);
+        assert_eq!(kinds, vec!["I", "R", "S"]);
+        assert_eq!(reg.len(), 3);
     }
 
     #[test]

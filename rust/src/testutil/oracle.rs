@@ -7,7 +7,9 @@ use std::collections::{BTreeMap, BTreeSet};
 use crate::data::graph::{Graph, GraphDatabase};
 use crate::data::sequence::Sequences;
 use crate::data::synth_itemsets::contains_all;
+use crate::data::tabular::TabularData;
 use crate::data::Transactions;
+use crate::mining::rulefit::RulePredicate;
 
 /// Exhaustively enumerate every item-set of size `1..=maxpat` with
 /// non-empty support, by direct combination search (no tid-list
@@ -89,6 +91,60 @@ pub fn all_sequences(db: &Sequences, maxpat: usize) -> BTreeMap<Vec<u32>, Vec<u3
     }
     if maxpat > 0 {
         rec(db, maxpat, &mut current, &mut out);
+    }
+    out
+}
+
+/// Exhaustively enumerate every canonical rule conjunction of length
+/// `1..=maxpat` with support `>= minsup` over the predicate universe
+/// `preds` (same universe the production miner enumerates; pass
+/// `rulefit::predicate_universe(db)`), by direct whole-rule evaluation
+/// against every row (no incremental support filtering — deliberately
+/// different from the production miner).  Canonical rules extend by
+/// strictly increasing universe index and never repeat a
+/// `(feature, direction)` pair, mirroring the miner's definition.
+pub fn all_rules(
+    db: &TabularData,
+    maxpat: usize,
+    minsup: usize,
+    preds: &[RulePredicate],
+) -> BTreeMap<Vec<RulePredicate>, Vec<u32>> {
+    let mut out = BTreeMap::new();
+    let mut current: Vec<RulePredicate> = Vec::new();
+    #[allow(clippy::too_many_arguments)]
+    fn rec(
+        db: &TabularData,
+        maxpat: usize,
+        minsup: usize,
+        preds: &[RulePredicate],
+        start: usize,
+        current: &mut Vec<RulePredicate>,
+        out: &mut BTreeMap<Vec<RulePredicate>, Vec<u32>>,
+    ) {
+        for pid in start..preds.len() {
+            let p = preds[pid];
+            if current.iter().any(|q| q.feature == p.feature && q.op == p.op) {
+                continue;
+            }
+            current.push(p);
+            let support: Vec<u32> = db
+                .rows
+                .iter()
+                .enumerate()
+                .filter(|(_, row)| current.iter().all(|q| q.eval(row)))
+                .map(|(i, _)| i as u32)
+                .collect();
+            if support.len() >= minsup.max(1) {
+                out.insert(current.clone(), support);
+                if current.len() < maxpat {
+                    rec(db, maxpat, minsup, preds, pid + 1, current, out);
+                }
+            }
+            current.pop();
+        }
+    }
+    if maxpat > 0 {
+        rec(db, maxpat, minsup, preds, 0, &mut current, &mut out);
     }
     out
 }
@@ -250,6 +306,21 @@ mod tests {
         assert_eq!(got[&vec![1u32, 1]], vec![1]);
         assert_eq!(got[&vec![0u32, 1]], vec![0]);
         assert!(all_sequences(&db, 0).is_empty());
+    }
+
+    #[test]
+    fn all_rules_tiny() {
+        use crate::mining::rulefit::{predicate_universe, RuleOp};
+        let db = TabularData::new(1, vec![vec![0.0], vec![1.0]]);
+        let preds = predicate_universe(&db);
+        // one cut at 0.5, both directions
+        assert_eq!(preds.len(), 2);
+        let got = all_rules(&db, 2, 1, &preds);
+        // x0<=0.5:[0]  x0>0.5:[1]  (their conjunction has empty support)
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[&vec![RulePredicate::new(0, RuleOp::Le, 0.5)]], vec![0]);
+        assert_eq!(got[&vec![RulePredicate::new(0, RuleOp::Gt, 0.5)]], vec![1]);
+        assert!(all_rules(&db, 0, 1, &preds).is_empty());
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! The tabular-rule substrate, tested end-to-end.
+//!
+//! RuleFit-style rules — conjunctions of threshold predicates over
+//! numeric features — are the fourth `PatternSubstrate`.  The per-node
+//! SPPC bound is computed from `node.support` alone, so the generic
+//! screening machinery applies to the rule-refinement lattice without
+//! any rule-specific screening code (Kato-style meta safe screening).
+//! This file pins the substrate's contracts:
+//!
+//! * the miner enumerates exactly the canonical rule set the
+//!   brute-force oracle does, with identical supports;
+//! * SPP screening visits **strictly fewer** nodes than the unpruned
+//!   enumeration, with a nonzero pruned count — the whole point of the
+//!   per-node bound;
+//! * SPP and boosting agree on the optimum (the Theorem-2 property);
+//! * paths are **bit-identical** across threads {1, 4}, forest-reuse
+//!   vs from-scratch, sparse vs hybrid columns, and chunked vs per-λ
+//!   screening;
+//! * `synth-tab` flows through the registry + coordinator like every
+//!   other preset, and fitted rule models round-trip through the text
+//!   format.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use spp::columns::ColumnLayout;
+use spp::data::tabular::{self, TabSynthConfig};
+use spp::mining::rulefit::predicate_universe;
+use spp::mining::{Counting, Pattern, PatternNode, PatternSubstrate, TreeVisitor, Walk};
+use spp::model::SparsePatternModel;
+use spp::path::{compute_path_boosting, compute_path_spp, PathConfig, PathPoint, PathResult};
+use spp::screening::lambda_max::lambda_max;
+use spp::screening::sppc::SppScreen;
+use spp::screening::SupportPool;
+use spp::solver::dual::safe_radius;
+use spp::solver::problem::{dual_value, primal_value};
+use spp::solver::Task;
+use spp::testutil::oracle;
+
+fn cfg(n_lambdas: usize, maxpat: usize) -> PathConfig {
+    PathConfig {
+        n_lambdas,
+        lambda_min_ratio: 0.05,
+        maxpat,
+        ..PathConfig::default()
+    }
+}
+
+/// The miner against the brute-force oracle on seeded instances: same
+/// canonical rule set, same supports.
+#[test]
+fn rule_miner_matches_oracle_on_seeded_instances() {
+    for seed in [1u64, 2, 3] {
+        let d = tabular::generate(&TabSynthConfig::tiny(seed, false));
+        let preds = predicate_universe(&d.db);
+        assert!(!preds.is_empty());
+        for maxpat in [1usize, 2] {
+            let mut mined = BTreeMap::new();
+            let mut v = |n: &PatternNode<'_>| {
+                let Pattern::Rule(r) = n.to_pattern() else {
+                    unreachable!()
+                };
+                assert!(
+                    mined.insert(r, n.support.to_vec()).is_none(),
+                    "duplicate rule (seed {seed})"
+                );
+                Walk::Descend
+            };
+            d.db.traverse(maxpat, 1, &mut v);
+            let brute = oracle::all_rules(&d.db, maxpat, 1, &preds);
+            assert_eq!(mined, brute, "seed {seed} maxpat {maxpat}");
+        }
+    }
+}
+
+/// Visitor that enumerates the whole tree — the unpruned baseline.
+struct Full;
+
+impl TreeVisitor for Full {
+    fn visit(&mut self, _: &PatternNode<'_>) -> Walk {
+        Walk::Descend
+    }
+}
+
+/// SPP screening on the rule tree does strictly less work than the
+/// unpruned enumeration: fewer visited nodes, nonzero pruned subtrees.
+#[test]
+fn screening_prunes_rule_tree_strictly() {
+    let d = tabular::generate(&TabSynthConfig::tiny(11, false));
+    let maxpat = 2;
+    let task = Task::Regression;
+
+    let mut every = Full;
+    let mut full = Counting::new(&mut every);
+    d.db.traverse(maxpat, 1, &mut full);
+    assert!(full.stats.nodes > 100, "tree too small to be a meaningful baseline");
+
+    // The path's state right after λ_max: w = 0, θ = slack0 / λ_max —
+    // exactly how the path engine seeds its first screening pass.
+    let lm = lambda_max(&d.db, &d.y, task, maxpat, 1);
+    let lam = 0.9 * lm.lambda_max;
+    let theta: Vec<f64> = lm.slack0.iter().map(|&s| s / lm.lambda_max).collect();
+    let primal = primal_value(&lm.slack0, 0.0, lam);
+    let dualv = dual_value(task, &theta, &d.y, lam);
+    let radius = safe_radius(primal, dualv, lam);
+    let mut pool = SupportPool::new();
+    let mut screen = SppScreen::new(task, &d.y, &theta, radius, &mut pool);
+    let mut counting = Counting::new(&mut screen);
+    d.db.traverse(maxpat, 1, &mut counting);
+
+    assert!(counting.stats.pruned > 0, "SPPC pruned no rule subtree");
+    assert!(
+        counting.stats.nodes < full.stats.nodes,
+        "screened traversal visited {} nodes, unpruned enumeration {}",
+        counting.stats.nodes,
+        full.stats.nodes
+    );
+}
+
+/// Support column of `pat`, recomputed independently of the miner
+/// through the substrate's matcher.
+fn support_by_matcher(db: &tabular::TabularData, pat: &Pattern) -> Vec<u32> {
+    (0..db.n_records())
+        .filter(|&i| tabular::TabularData::matches(pat, db.record(i)))
+        .map(|i| i as u32)
+        .collect()
+}
+
+/// Active weights merged by support column (identical columns are the
+/// same feature; the weight split among them is arbitrary).
+fn merged_weights(db: &tabular::TabularData, point: &PathPoint) -> BTreeMap<Vec<u32>, f64> {
+    let mut m: BTreeMap<Vec<u32>, f64> = BTreeMap::new();
+    for (pat, w) in &point.active {
+        *m.entry(support_by_matcher(db, pat)).or_insert(0.0) += w;
+    }
+    m
+}
+
+/// The Theorem-2 agreement property on tabular data: the screened SPP
+/// path reaches exactly the optima the boosting baseline reaches.
+#[test]
+fn active_sets_agree_spp_vs_boosting() {
+    for (seed, classify) in [(21u64, false), (22, true)] {
+        let d = tabular::generate(&TabSynthConfig::tiny(seed, classify)).labeled();
+        let task = if classify {
+            Task::Classification
+        } else {
+            Task::Regression
+        };
+        let c = cfg(8, 2);
+        let spp = compute_path_spp(&d.db, &d.y, task, &c).unwrap();
+        let boost = compute_path_boosting(&d.db, &d.y, task, &c).unwrap();
+        assert_eq!(spp.points.len(), boost.points.len());
+        assert!((spp.lambda_max - boost.lambda_max).abs() < 1e-9);
+        for (a, b) in spp.points.iter().zip(&boost.points) {
+            assert!(a.gap <= 2e-6 && b.gap <= 2e-6, "uncertified λ={}", a.lambda);
+            let l1a: f64 = a.active.iter().map(|(_, w)| w.abs()).sum();
+            let l1b: f64 = b.active.iter().map(|(_, w)| w.abs()).sum();
+            let scale = 1.0 + l1a.abs();
+            assert!(
+                (l1a - l1b).abs() < 1e-3 * scale,
+                "‖w‖₁ mismatch at λ={}: {l1a} vs {l1b}",
+                a.lambda
+            );
+            assert!((a.b - b.b).abs() < 2e-3, "b mismatch at λ={}", a.lambda);
+            let wa = merged_weights(&d.db, a);
+            let wb = merged_weights(&d.db, b);
+            let keys: BTreeSet<&Vec<u32>> = wa.keys().chain(wb.keys()).collect();
+            for k in keys {
+                let va = wa.get(k).copied().unwrap_or(0.0);
+                let vb = wb.get(k).copied().unwrap_or(0.0);
+                assert!(
+                    (va - vb).abs() < 2e-2 * scale,
+                    "active-set mismatch at λ={}: column {:?} has {va} (spp) vs {vb} (boosting)",
+                    a.lambda,
+                    k
+                );
+            }
+        }
+    }
+}
+
+/// Bitwise path equality on the optimization outputs (telemetry such
+/// as node counts legitimately differs across engine configurations).
+fn assert_results_bitwise(a: &PathResult, b: &PathResult) {
+    assert_eq!(a.lambda_max.to_bits(), b.lambda_max.to_bits());
+    assert_eq!(a.points.len(), b.points.len());
+    for (p, q) in a.points.iter().zip(&b.points) {
+        assert_eq!(p.lambda.to_bits(), q.lambda.to_bits());
+        assert_eq!(p.active.len(), q.active.len(), "active-set size at λ={}", p.lambda);
+        for ((pa, wa), (pb, wb)) in p.active.iter().zip(&q.active) {
+            assert_eq!(pa, pb, "active pattern/order mismatch at λ={}", p.lambda);
+            assert_eq!(
+                wa.to_bits(),
+                wb.to_bits(),
+                "weight bits differ at λ={} on {}",
+                p.lambda,
+                pa.display()
+            );
+        }
+        assert_eq!(p.b.to_bits(), q.b.to_bits(), "intercept bits at λ={}", p.lambda);
+        assert_eq!(p.gap.to_bits(), q.gap.to_bits(), "gap bits at λ={}", p.lambda);
+        assert!(p.gap <= 2e-6, "uncertified λ={}", p.lambda);
+    }
+}
+
+/// The engine-equivalence contract on the rule substrate: bit-identical
+/// paths across threads {1, 4} × forest/scratch × sparse/hybrid
+/// columns × chunked/per-λ screening — 16 configurations against one
+/// baseline.
+#[test]
+fn paths_bit_identical_across_engine_configurations() {
+    let d = tabular::generate(&TabSynthConfig::tiny(31, true)).labeled();
+    let task = Task::Classification;
+    let mut base_cfg = cfg(8, 2);
+    base_cfg.threads = 1;
+    base_cfg.reuse_forest = false;
+    base_cfg.range_chunk = 1;
+    base_cfg.columns = Some(ColumnLayout::Sparse);
+    let base = compute_path_spp(&d.db, &d.y, task, &base_cfg).unwrap();
+    assert!(
+        base.points.iter().any(|p| !p.active.is_empty()),
+        "trivial path would make bit-identity vacuous"
+    );
+
+    for threads in [1usize, 4] {
+        for reuse in [false, true] {
+            for columns in [ColumnLayout::Sparse, ColumnLayout::Hybrid] {
+                for range_chunk in [1usize, 4] {
+                    let mut c = base_cfg;
+                    c.threads = threads;
+                    c.reuse_forest = reuse;
+                    c.columns = Some(columns);
+                    c.range_chunk = range_chunk;
+                    let path = compute_path_spp(&d.db, &d.y, task, &c).unwrap();
+                    assert_results_bitwise(&base, &path);
+                }
+            }
+        }
+    }
+}
+
+/// `synth-tab` flows through the registry + coordinator exactly like
+/// the paper's presets (the `spp path --dataset synth-tab` path).
+#[test]
+fn tabular_dataset_runs_through_coordinator() {
+    use spp::coordinator::{run_experiment, ExperimentSpec, Method};
+    let mut results = Vec::new();
+    for method in [Method::Spp, Method::Boosting] {
+        let r = run_experiment(&ExperimentSpec {
+            dataset: "synth-tab".into(),
+            scale: 0.15,
+            maxpat: 2,
+            method,
+            cfg: PathConfig {
+                n_lambdas: 5,
+                lambda_min_ratio: 0.1,
+                ..PathConfig::default()
+            },
+        })
+        .unwrap();
+        assert!(r.max_gap <= 2e-6, "{method:?} gap {}", r.max_gap);
+        assert!(r.traverse_nodes > 0);
+        assert_eq!(r.task, Task::Classification);
+        results.push(r);
+    }
+    for (a, b) in results[0].path.points.iter().zip(&results[1].path.points) {
+        let l1a: f64 = a.active.iter().map(|(_, w)| w.abs()).sum();
+        let l1b: f64 = b.active.iter().map(|(_, w)| w.abs()).sum();
+        assert!((l1a - l1b).abs() < 1e-3 * (1.0 + l1a), "λ={}", a.lambda);
+    }
+}
+
+/// A rule model mined from a real path round-trips through the text
+/// format and predicts identically after the round trip.
+#[test]
+fn rule_model_round_trips_through_text_format() {
+    let d = tabular::generate(&TabSynthConfig::tiny(7, false)).labeled();
+    let path = compute_path_spp(&d.db, &d.y, Task::Regression, &cfg(6, 2)).unwrap();
+    let point = path.points.last().unwrap();
+    assert!(
+        !point.active.is_empty(),
+        "smallest-λ model should have active rule patterns"
+    );
+    let model = SparsePatternModel::from_path_point(Task::Regression, point);
+    let back = SparsePatternModel::parse(&model.serialize().unwrap()).unwrap();
+    assert_eq!(model, back);
+    assert_eq!(model.predict(&d.db), back.predict(&d.db));
+    // and the codec really used the rule tag, with space-free bodies
+    for line in model.serialize().unwrap().lines().skip(1) {
+        assert!(line.starts_with("R "), "non-rule term line: {line}");
+        assert_eq!(line.splitn(3, ' ').count(), 3, "body must be space-free: {line}");
+    }
+}

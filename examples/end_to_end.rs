@@ -127,23 +127,44 @@ fn main() {
         max_err
     );
 
-    // full path with the XLA FISTA restricted solver
-    use spp::data::registry::{lookup, Dataset};
-    use spp::path::{compute_path_spp, compute_path_spp_with};
+    // full path with the XLA FISTA restricted solver — dispatched
+    // through the registry visitor, so this leg is substrate-agnostic
+    // (swap the preset name and the same code runs on graphs or
+    // sequences)
+    use spp::data::registry::{self, lookup, RegistrySubstrate, SubstrateVisitor};
+    use spp::path::{compute_path_spp, compute_path_spp_with, PathResult, RestrictedSolver};
     use spp::runtime::engine::XlaRestricted;
+
+    struct BothEngines<'a> {
+        task: Task,
+        cfg: &'a PathConfig,
+        solver: &'a dyn RestrictedSolver,
+    }
+    impl SubstrateVisitor for BothEngines<'_> {
+        type Out = spp::Result<(PathResult, PathResult)>;
+        fn visit<S: RegistrySubstrate>(self, db: &S, y: &[f64]) -> Self::Out {
+            let rust = compute_path_spp(db, y, self.task, self.cfg)?;
+            let xla = compute_path_spp_with(db, y, self.task, self.cfg, self.solver)?;
+            Ok((rust, xla))
+        }
+    }
+
+    let task = registry::require_info("splice").unwrap().task;
     let data = lookup("splice", 0.1).unwrap();
-    let Dataset::Itemsets(tr) = &data else { unreachable!() };
     let small_cfg = PathConfig {
         n_lambdas: 8,
         lambda_min_ratio: 0.1,
         maxpat: 2,
         ..PathConfig::default()
     };
-    let rust_path = compute_path_spp(&tr.db, &tr.y, Task::Classification, &small_cfg).unwrap();
     let xla_solver = XlaRestricted::new(&rt);
-    let xla_path =
-        compute_path_spp_with(&tr.db, &tr.y, Task::Classification, &small_cfg, &xla_solver)
-            .unwrap();
+    let (rust_path, xla_path) = data
+        .visit(BothEngines {
+            task,
+            cfg: &small_cfg,
+            solver: &xla_solver,
+        })
+        .unwrap();
     for (a, b) in rust_path.points.iter().zip(&xla_path.points) {
         let l1a: f64 = a.active.iter().map(|(_, w)| w.abs()).sum();
         let l1b: f64 = b.active.iter().map(|(_, w)| w.abs()).sum();

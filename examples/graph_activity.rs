@@ -14,7 +14,6 @@ use std::collections::HashSet;
 
 use spp::data::graph::GraphDatabase;
 use spp::data::synth_graphs::{generate, GraphSynthConfig};
-use spp::mining::Pattern;
 use spp::path::{compute_path_spp, PathConfig};
 use spp::solver::Task;
 use spp::testutil::oracle;
@@ -81,12 +80,12 @@ fn main() {
         let feats: Vec<(String, f64)> = p
             .active
             .iter()
-            .map(|(pat, w)| match pat {
-                Pattern::Subgraph(code) => (
+            .map(|(pat, w)| {
+                let code = pat.as_subgraph().expect("graph path");
+                (
                     oracle::canonical_form(&spp::mining::gspan::code_to_labeled_graph(code)),
                     *w,
-                ),
-                _ => unreachable!(),
+                )
             })
             .collect();
         let mut correct = 0usize;

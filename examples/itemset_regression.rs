@@ -11,7 +11,6 @@
 
 use spp::data::synth_itemsets::{contains_all, generate, ItemsetSynthConfig};
 use spp::data::Transactions;
-use spp::mining::Pattern;
 use spp::path::{compute_path_spp, PathConfig};
 use spp::solver::Task;
 
@@ -51,13 +50,10 @@ fn main() {
     println!(" {:>10} {:>7} {:>10}", "λ", "active", "val-MSE");
     let mut best: Option<(f64, f64, usize)> = None;
     for (k, p) in path.points.iter().enumerate() {
-        let feats: Vec<(&Vec<u32>, f64)> = p
+        let feats: Vec<(&[u32], f64)> = p
             .active
             .iter()
-            .map(|(pat, w)| match pat {
-                Pattern::Itemset(items) => (items, *w),
-                _ => unreachable!(),
-            })
+            .map(|(pat, w)| (pat.as_itemset().expect("itemset path"), *w))
             .collect();
         let mse: f64 = test_rows
             .iter()

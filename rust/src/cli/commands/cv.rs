@@ -1,0 +1,76 @@
+//! `spp cv` — k-fold cross-validation over the SPP path: the paper's
+//! §3.4.1 model-selection workflow, served by the chunked (range-based
+//! SPP) engine — one database search per grid chunk, per fold.
+
+use crate::cli::Args;
+use crate::data::registry::{self, RegistrySubstrate, SubstrateVisitor};
+use crate::path::cv::{cross_validate, CvResult};
+use crate::path::PathConfig;
+use crate::solver::Task;
+
+struct CvV<'a> {
+    task: Task,
+    cfg: &'a PathConfig,
+    folds: usize,
+    seed: u64,
+}
+
+impl SubstrateVisitor for CvV<'_> {
+    type Out = crate::Result<CvResult>;
+    fn visit<S: RegistrySubstrate>(self, db: &S, y: &[f64]) -> Self::Out {
+        cross_validate(db, y, self.task, self.cfg, self.folds, self.seed)
+    }
+}
+
+pub fn run(args: &Args) -> crate::Result<()> {
+    let dataset = args.get_or("dataset", "splice").to_string();
+    let scale = args.get_f64("scale", 1.0)?;
+    let folds = args.get_usize("folds", 5)?;
+    let seed = args.get_usize("seed", 13)? as u64;
+    let cfg = super::path_config(args)?;
+    let info = registry::require_info(&dataset)?;
+    let data = registry::lookup(&dataset, scale)?;
+    anyhow::ensure!(
+        folds >= 2 && folds <= data.n_records(),
+        "--folds must be between 2 and the record count; got {folds} folds for {} records",
+        data.n_records()
+    );
+    let t0 = std::time::Instant::now();
+    let cv = data.visit(CvV {
+        task: info.task,
+        cfg: &cfg,
+        folds,
+        seed,
+    })?;
+    let secs = t0.elapsed().as_secs_f64();
+    let metric = match info.task {
+        Task::Regression => "mse",
+        Task::Classification => "error",
+    };
+    println!(
+        "cv {dataset}: n={} task={:?} folds={folds} lambdas={} chunk={} ({secs:.2}s)",
+        data.n_records(),
+        info.task,
+        cfg.n_lambdas,
+        crate::screening::range::resolve_range_chunk(cfg.range_chunk),
+    );
+    println!("{:<6} {:>12} {:>12} {:>12}", "idx", "lambda/lmax", metric, "mean_active");
+    for (i, p) in cv.points.iter().enumerate() {
+        println!(
+            "{:<6} {:>12.6} {:>12.6} {:>12.1}{}",
+            i,
+            p.lambda_frac,
+            p.mean_loss,
+            p.mean_active,
+            if i == cv.best { "   <- best" } else { "" }
+        );
+    }
+    let best = cv.best_point();
+    println!(
+        "best: index {} (λ/λ_max = {:.6}), mean {metric} {:.6} over {folds} folds",
+        cv.best,
+        best.lambda_frac,
+        best.mean_loss
+    );
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! `spp datasets` — list the registered synthetic presets.
+
+use crate::data::registry;
+
+pub fn run() -> crate::Result<()> {
+    let (name, kind, task) = ("name", "kind", "task");
+    println!("{name:<14} {kind:<8} {task:<15} paper_n");
+    for d in registry::ALL {
+        println!(
+            "{:<14} {:<8} {:<15} {}",
+            d.name,
+            format!("{:?}", d.kind).to_lowercase(),
+            format!("{:?}", d.task).to_lowercase(),
+            d.paper_n
+        );
+    }
+    Ok(())
+}

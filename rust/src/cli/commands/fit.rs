@@ -1,0 +1,52 @@
+//! `spp fit` — fit via the `SppEstimator` facade and persist the
+//! chosen model.
+
+use crate::cli::Args;
+use crate::data::registry;
+use crate::SppEstimator;
+
+pub fn run(args: &Args) -> crate::Result<()> {
+    let dataset = args.get_or("dataset", "splice");
+    let scale = args.get_f64("scale", 1.0)?;
+    let out = args.require("model")?;
+    let info = registry::require_info(dataset)?;
+    let data = registry::lookup(dataset, scale)?;
+    let cfg = super::path_config(args)?;
+    let est = SppEstimator::new(info.task)
+        .maxpat(cfg.maxpat)
+        .minsup(cfg.minsup)
+        .lambda_grid(cfg.n_lambdas, cfg.lambda_min_ratio)
+        .certify(cfg.certify)
+        .reuse_forest(cfg.reuse_forest)
+        .threads(cfg.threads)
+        .range_chunk(cfg.range_chunk)
+        .cd(cfg.cd);
+    let est = match cfg.columns {
+        Some(layout) => est.columns(layout),
+        None => est,
+    };
+    let fit = est.fit_dataset(&data)?;
+    let idx = args.get_usize("lambda-index", fit.path.points.len() - 1)?;
+    anyhow::ensure!(
+        idx < fit.path.points.len(),
+        "--lambda-index {idx} out of range (path has {} points)",
+        fit.path.points.len()
+    );
+    let model = fit.model_at(idx);
+    std::fs::write(out, model.serialize()?)?;
+    println!(
+        "fit {dataset}: n={} task={:?} λ_max={:.6} path={} λs, {} tree nodes",
+        data.n_records(),
+        info.task,
+        fit.path.lambda_max,
+        fit.path.points.len(),
+        fit.path.total_nodes()
+    );
+    println!(
+        "model @ λ={:.6} (index {idx}): {} patterns, b={:+.4} -> wrote {out}",
+        model.lambda,
+        model.terms.len(),
+        model.b
+    );
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! `spp lambda-max` — the paper's §3.4.1 λ_max by bounded search, on
+//! any substrate.
+
+use crate::cli::Args;
+use crate::data::registry::{self, RegistrySubstrate, SubstrateVisitor};
+use crate::screening::lambda_max::{lambda_max, LambdaMax};
+use crate::solver::Task;
+
+struct LmV {
+    task: Task,
+    maxpat: usize,
+}
+
+impl SubstrateVisitor for LmV {
+    type Out = LambdaMax;
+    fn visit<S: RegistrySubstrate>(self, db: &S, y: &[f64]) -> Self::Out {
+        lambda_max(db, y, self.task, self.maxpat, 1)
+    }
+}
+
+pub fn run(args: &Args) -> crate::Result<()> {
+    let dataset = args.get_or("dataset", "splice");
+    let scale = args.get_f64("scale", 1.0)?;
+    let maxpat = args.get_usize("maxpat", 4)?;
+    let info = registry::require_info(dataset)?;
+    let data = registry::lookup(dataset, scale)?;
+    let lm = data.visit(LmV {
+        task: info.task,
+        maxpat,
+    });
+    println!(
+        "dataset={dataset} n={} task={:?} maxpat={maxpat} lambda_max={:.6} b0={:.6} nodes={} pruned={}",
+        data.n_records(),
+        info.task,
+        lm.lambda_max,
+        lm.b0,
+        lm.stats.nodes,
+        lm.stats.pruned
+    );
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! `spp mine` — enumerate frequent patterns (substrate smoke test).
+
+use crate::cli::Args;
+use crate::data::registry::{self, RegistrySubstrate, SubstrateVisitor};
+use crate::mining::{PatternNode, TreeVisitor, Walk};
+
+struct MineV {
+    maxpat: usize,
+    minsup: usize,
+}
+
+impl SubstrateVisitor for MineV {
+    type Out = Vec<(usize, String)>;
+    fn visit<S: RegistrySubstrate>(self, db: &S, _y: &[f64]) -> Self::Out {
+        struct Collect {
+            rows: Vec<(usize, String)>,
+        }
+        impl TreeVisitor for Collect {
+            fn visit(&mut self, node: &PatternNode<'_>) -> Walk {
+                self.rows
+                    .push((node.support.len(), node.to_pattern().display()));
+                Walk::Descend
+            }
+        }
+        let mut c = Collect { rows: Vec::new() };
+        db.traverse(self.maxpat, self.minsup, &mut c);
+        c.rows
+    }
+}
+
+pub fn run(args: &Args) -> crate::Result<()> {
+    let dataset = args.get_or("dataset", "splice");
+    let scale = args.get_f64("scale", 0.2)?;
+    let maxpat = args.get_usize("maxpat", 3)?;
+    let minsup = args.get_usize("minsup", 1)?;
+    let top = args.get_usize("top", 20)?;
+    let data = registry::lookup(dataset, scale)?;
+
+    let mut rows = data.visit(MineV { maxpat, minsup });
+    rows.sort_by(|a, b| b.0.cmp(&a.0));
+    println!(
+        "dataset={dataset} scale={scale} maxpat={maxpat} minsup={minsup}: {} patterns",
+        rows.len()
+    );
+    for (sup, pat) in rows.into_iter().take(top) {
+        println!("  support={sup:<6} {pat}");
+    }
+    Ok(())
+}

@@ -1,0 +1,144 @@
+//! The `spp` subcommands, one module per command, all written against
+//! the registry's substrate visitors.
+//!
+//! Every data-facing command resolves its preset with
+//! [`registry::require_info`](crate::data::registry::require_info) /
+//! [`registry::lookup`](crate::data::registry::lookup) and then hops
+//! through the registry dataset's `visit` method (or its sharded twin)
+//! exactly once — from there the code is generic
+//! over [`PatternSubstrate`](crate::mining::PatternSubstrate), so
+//! item-set, graph, sequence and tabular-rule presets flow through the
+//! same bodies with zero per-substrate `match` ladders.  The only
+//! enum matches live in the two registries (`data::registry`,
+//! `serve::registry`); CI greps for strays.
+
+pub mod cv;
+pub mod datasets;
+pub mod fit;
+pub mod lambda_max;
+pub mod mine;
+pub mod path;
+pub mod predict;
+pub mod selftest;
+pub mod serve;
+
+use super::Args;
+use crate::path::PathConfig;
+
+/// Switches: flags that never consume a non-boolean token (see
+/// [`super::Args`]).  `help` keeps the universal `spp <command> --help`
+/// habit working under the strict grammar.
+pub const SWITCHES: &[&str] = &["certify", "dynamic-screen", "help", "no-reuse", "stdio"];
+
+/// Every value-taking flag any subcommand reads — the complete declared
+/// grammar; anything else is rejected with the flag named.
+pub const FLAGS: &[&str] = &[
+    "artifacts",
+    "batch",
+    "columns",
+    "dataset",
+    "engine",
+    "folds",
+    "json",
+    "k-add",
+    "lambda-index",
+    "lambdas",
+    "matcher",
+    "maxpat",
+    "memory-budget",
+    "method",
+    "min-ratio",
+    "minsup",
+    "model",
+    "range-chunk",
+    "scale",
+    "seed",
+    "shard-dir",
+    "shards",
+    "socket",
+    "threads",
+    "top",
+];
+
+pub const HELP: &str = "\
+spp — Safe Pattern Pruning (KDD'16 reproduction)
+
+commands:
+  path        compute a regularization path (SPP and/or boosting)
+  cv          k-fold cross-validation over the path (model selection)
+  fit         fit a sparse pattern model (SPP path) and save it
+  predict     load a saved model and predict a dataset
+  serve       persistent prediction service (JSON lines over stdio/socket)
+  lambda-max  compute the paper's §3.4.1 lambda_max by bounded search
+  mine        enumerate frequent patterns (substrate smoke test)
+  selftest    verify the PJRT/XLA engines against the Rust engines
+  datasets    list the registered synthetic datasets (all substrates)
+";
+
+/// Route a parsed command line to its subcommand.
+pub fn dispatch(args: &Args) -> crate::Result<()> {
+    // `spp <command> --help` prints help instead of running the command
+    if args.switch("help") {
+        print!("{HELP}");
+        return Ok(());
+    }
+    match args.command.as_str() {
+        "path" => path::run(args),
+        "cv" => cv::run(args),
+        "fit" => fit::run(args),
+        "predict" => predict::run(args),
+        "serve" => serve::run(args),
+        "lambda-max" => lambda_max::run(args),
+        "mine" => mine::run(args),
+        "selftest" => selftest::run(args),
+        "datasets" => datasets::run(),
+        "" | "help" | "--help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try `spp help`)"),
+    }
+}
+
+/// Assemble the [`PathConfig`] every path-shaped command shares.
+pub fn path_config(args: &Args) -> crate::Result<PathConfig> {
+    let mut cd = crate::solver::CdConfig::default();
+    // `--dynamic-screen=false` / `--dynamic-screen false` turns the
+    // in-solve gap-safe screening off; absent or bare means on.
+    if args.flag("dynamic-screen").is_some() {
+        cd.dynamic_screen = args.switch("dynamic-screen");
+    }
+    Ok(PathConfig {
+        n_lambdas: args.get_usize("lambdas", 100)?,
+        lambda_min_ratio: args.get_f64("min-ratio", 0.01)?,
+        maxpat: args.get_usize("maxpat", 4)?,
+        minsup: args.get_usize("minsup", 1)?,
+        cd,
+        certify: args.switch("certify"),
+        // `--no-reuse` falls back to the from-scratch traversal per λ
+        // (ablation of the incremental screening forest)
+        reuse_forest: !args.switch("no-reuse"),
+        // `--threads N` drives the deterministic parallel engine; 0 =
+        // auto (SPP_THREADS env, else available parallelism), 1 = the
+        // sequential engine — all bit-identical
+        threads: args.get_usize("threads", 0)?,
+        // `--range-chunk C` drives range-based SPP: one screening mine
+        // per chunk of C λs; 0 = auto (SPP_RANGE_CHUNK env, else 1 =
+        // per-λ screening) — all bit-identical
+        range_chunk: args.get_usize("range-chunk", 0)?,
+        // `--columns sparse|hybrid` picks the support-column layout;
+        // absent = auto (SPP_COLUMNS env, else hybrid) — bit-identical
+        columns: match args.flag("columns") {
+            None => None,
+            Some("sparse") => Some(crate::columns::ColumnLayout::Sparse),
+            Some("hybrid") => Some(crate::columns::ColumnLayout::Hybrid),
+            Some(other) => anyhow::bail!("--columns must be sparse|hybrid, got '{other}'"),
+        },
+        // `--memory-budget BYTES` caps the resident support-column pool
+        // (LRU spill to a temp file); 0 = auto (SPP_MEMORY_BUDGET env,
+        // else unlimited) — bit-identical at any budget
+        memory_budget: args.get_usize("memory-budget", 0)?,
+        k_add: args.get_usize("k-add", 1)?,
+        ..PathConfig::default()
+    })
+}

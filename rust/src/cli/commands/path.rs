@@ -1,0 +1,63 @@
+//! `spp path` — regularization paths (SPP and/or boosting), on any
+//! engine shape: in-memory, out-of-core sharded, or XLA-solved.  All
+//! three run the coordinator's visitor-based experiment runners.
+
+use std::io::Write;
+
+use crate::cli::Args;
+use crate::coordinator::{
+    report, run_experiment, run_experiment_sharded, run_experiment_xla, ExperimentSpec, Method,
+};
+
+pub fn run(args: &Args) -> crate::Result<()> {
+    let dataset = args.get_or("dataset", "splice").to_string();
+    let scale = args.get_f64("scale", 1.0)?;
+    let cfg = super::path_config(args)?;
+    let methods: Vec<Method> = match args.get_or("method", "both") {
+        "spp" => vec![Method::Spp],
+        "boosting" => vec![Method::Boosting],
+        "both" => vec![Method::Spp, Method::Boosting],
+        other => anyhow::bail!("--method must be spp|boosting|both, got '{other}'"),
+    };
+    let engine = args.get_or("engine", "rust").to_string();
+    // `--shards K` routes through the on-disk shard container: the
+    // database is serialized shard by shard and screening streams it
+    // back, bit-identical to the in-memory run at any thread count.
+    let shards = args.get_usize("shards", 0)?;
+    let shard_dir = args.get_or("shard-dir", "shards").to_string();
+    anyhow::ensure!(
+        shards == 0 || engine == "rust",
+        "--shards streams through the rust engine; drop --engine {engine}"
+    );
+
+    let mut results = Vec::new();
+    for method in methods {
+        let spec = ExperimentSpec {
+            dataset: dataset.clone(),
+            scale,
+            maxpat: cfg.maxpat,
+            method,
+            cfg,
+        };
+        let r = if shards > 0 {
+            run_experiment_sharded(&spec, shards, std::path::Path::new(&shard_dir))?
+        } else if engine == "xla" && method == Method::Spp {
+            run_experiment_xla(&spec)?
+        } else {
+            run_experiment(&spec)?
+        };
+        println!("{}", report::time_row(&r));
+        results.push(r);
+    }
+    if results.len() == 2 {
+        println!("{}", report::speedup_row(&results[0], &results[1]));
+    }
+    if let Some(path) = args.flag("json") {
+        let mut f = std::fs::File::create(path)?;
+        for r in &results {
+            writeln!(f, "{}", report::result_json(r))?;
+        }
+        println!("wrote {path}");
+    }
+    Ok(())
+}

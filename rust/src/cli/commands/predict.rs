@@ -1,0 +1,271 @@
+//! `spp predict` — load a persisted model and predict a registry
+//! dataset.
+//!
+//! `--matcher compiled` (the default) routes scoring through the serve
+//! layer's compiled matcher — one pass per record instead of one per
+//! (record, pattern) pair, streamed in `--batch`-sized windows — and
+//! reports its telemetry on the summary line; with `--shards K` the
+//! records come off the on-disk shard container one shard at a time,
+//! so the resident input is one shard regardless of dataset size.
+//! `--matcher naive` keeps the historical per-pattern whole-dataset
+//! scorer as a differential oracle.  Predictions are bit-identical
+//! either way (pinned by `tests/integration_serve.rs`).  Both matchers
+//! are substrate-generic: the compiled arm runs on the serve layer's
+//! [`BatchScore`] rows, the naive arm on `SparsePatternModel::predict`,
+//! each behind one visitor hop.
+
+use crate::cli::Args;
+use crate::data::registry::{
+    self, RegistrySubstrate, ShardedSubstrateVisitor, SubstrateVisitor,
+};
+use crate::model::SparsePatternModel;
+use crate::serve::compiled::{BatchScore, CompiledModel, ScoreBatch};
+use crate::solver::Task;
+use crate::storage::{ShardCodec, ShardedDb};
+
+/// Streaming accumulator for `spp predict`: the running metric, op
+/// counts and the first `top` display rows survive each batch — the
+/// per-record predictions do not, which is the point of bounded-batch
+/// scoring (peak matcher input is one `--batch` window).
+pub struct PredictAccum {
+    task: Task,
+    top: usize,
+    n: usize,
+    correct: usize,
+    sse: f64,
+    ops: u64,
+    batches: u64,
+    rows: Vec<(f64, f64)>,
+}
+
+impl PredictAccum {
+    fn new(task: Task, top: usize) -> Self {
+        PredictAccum {
+            task,
+            top,
+            n: 0,
+            correct: 0,
+            sse: 0.0,
+            ops: 0,
+            batches: 0,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Fold one window of final predictions (output transform already
+    /// applied) against its aligned target slice.
+    fn absorb(&mut self, preds: &[f64], y: &[f64], ops: u64) {
+        debug_assert_eq!(preds.len(), y.len());
+        self.ops += ops;
+        for (&p, &yi) in preds.iter().zip(y) {
+            match self.task {
+                Task::Classification => {
+                    if (p >= 0.0) == (yi > 0.0) {
+                        self.correct += 1;
+                    }
+                }
+                Task::Regression => self.sse += (p - yi) * (p - yi),
+            }
+            if self.rows.len() < self.top {
+                self.rows.push((p, yi));
+            }
+            self.n += 1;
+        }
+    }
+}
+
+/// Score `rows` through the compiled matcher in `batch`-sized windows,
+/// folding each window into `acc`.  `score` is the substrate's batch
+/// entrypoint ([`BatchScore::score_rows`]); batching is invisible in
+/// the results because each record is scored independently.
+fn predict_batches<R>(
+    compiled: &CompiledModel,
+    rows: &[R],
+    y: &[f64],
+    batch: usize,
+    acc: &mut PredictAccum,
+    score: impl Fn(&[R]) -> crate::Result<ScoreBatch>,
+) -> crate::Result<()> {
+    anyhow::ensure!(rows.len() == y.len(), "rows/targets length mismatch");
+    let mut lo = 0;
+    while lo < rows.len() {
+        let hi = (lo + batch).min(rows.len());
+        let out = score(&rows[lo..hi])?;
+        let preds: Vec<f64> = out.scores.iter().map(|&s| compiled.output(s)).collect();
+        acc.absorb(&preds, &y[lo..hi], out.ops);
+        acc.batches += 1;
+        lo = hi;
+    }
+    Ok(())
+}
+
+/// The historical per-pattern whole-dataset scorer (differential
+/// oracle for the compiled matcher).
+struct NaiveV<'a> {
+    model: &'a SparsePatternModel,
+    acc: &'a mut PredictAccum,
+}
+
+impl SubstrateVisitor for NaiveV<'_> {
+    type Out = u64;
+    /// Returns the match-call count the naive scorer performed.
+    fn visit<S: RegistrySubstrate>(self, db: &S, y: &[f64]) -> Self::Out {
+        let preds = self.model.predict(db);
+        self.acc.absorb(&preds, y, 0);
+        (self.model.terms.len() as u64) * (db.n_records() as u64)
+    }
+}
+
+/// Bounded-batch compiled scoring over an in-memory dataset.
+struct CompiledV<'a> {
+    compiled: &'a CompiledModel,
+    batch: usize,
+    threads: usize,
+    acc: &'a mut PredictAccum,
+}
+
+impl SubstrateVisitor for CompiledV<'_> {
+    type Out = crate::Result<()>;
+    fn visit<S: RegistrySubstrate>(self, db: &S, y: &[f64]) -> Self::Out {
+        let CompiledV {
+            compiled,
+            batch,
+            threads,
+            acc,
+        } = self;
+        predict_batches(compiled, db.rows(), y, batch, acc, |w| {
+            S::score_rows(compiled, w, threads)
+        })
+    }
+}
+
+/// Bounded-batch compiled scoring streamed shard by shard off the
+/// on-disk container; `base` keeps the target slice aligned with each
+/// shard's global records, so the resident input stays one shard.
+struct ShardedCompiledV<'a> {
+    compiled: &'a CompiledModel,
+    batch: usize,
+    threads: usize,
+    acc: &'a mut PredictAccum,
+}
+
+impl ShardedSubstrateVisitor for ShardedCompiledV<'_> {
+    type Out = crate::Result<()>;
+    fn visit<S>(self, db: &ShardedDb<S>, y: &[f64]) -> Self::Out
+    where
+        S: RegistrySubstrate + ShardCodec,
+    {
+        let ShardedCompiledV {
+            compiled,
+            batch,
+            threads,
+            acc,
+        } = self;
+        let mut base = 0usize;
+        for s in 0..db.n_shards() {
+            let shard = db.shard(s)?;
+            let rows = shard.rows();
+            let ys = &y[base..base + rows.len()];
+            predict_batches(compiled, rows, ys, batch, acc, |w| {
+                S::score_rows(compiled, w, threads)
+            })?;
+            base += rows.len();
+        }
+        Ok(())
+    }
+}
+
+pub fn run(args: &Args) -> crate::Result<()> {
+    let dataset = args.get_or("dataset", "splice");
+    let scale = args.get_f64("scale", 1.0)?;
+    let top = args.get_usize("top", 10)?;
+    let threads = args.get_usize("threads", 0)?;
+    // bounded-batch streaming: at most `batch` records are handed to
+    // the matcher at once; `--shards` streams them off the disk
+    // container one shard at a time
+    let batch = args.get_usize("batch", 8192)?;
+    anyhow::ensure!(batch >= 1, "--batch must be >= 1");
+    let shards = args.get_usize("shards", 0)?;
+    let file = args.require("model")?;
+    let model = SparsePatternModel::parse(&std::fs::read_to_string(file)?)?;
+    let info = registry::require_info(dataset)?;
+    // A mismatched model scores every record as sign(b) / b and prints
+    // a confidently wrong metric — reject the combination up front.
+    anyhow::ensure!(
+        model.task == info.task,
+        "model {file} is a {:?} model but dataset '{dataset}' is a {:?} task",
+        model.task,
+        info.task
+    );
+    let expected_tag = info.kind.tag();
+    anyhow::ensure!(
+        model.terms.is_empty() || model.terms.iter().any(|(p, _)| p.kind_tag() == expected_tag),
+        "model {file} has no {expected_tag}-kind patterns — it was fitted on a different \
+         substrate than dataset '{dataset}'"
+    );
+    let mut acc = PredictAccum::new(model.task, top);
+    let telemetry = match args.get_or("matcher", "compiled") {
+        "naive" => {
+            anyhow::ensure!(
+                shards == 0,
+                "--matcher naive scores the whole dataset at once; --shards streams \
+                 through the compiled matcher"
+            );
+            let data = registry::lookup(dataset, scale)?;
+            let calls = data.visit(NaiveV {
+                model: &model,
+                acc: &mut acc,
+            });
+            format!("matcher=naive match_calls={calls}")
+        }
+        "compiled" => {
+            let compiled = CompiledModel::compile_for(&model, expected_tag)?;
+            if shards > 0 {
+                let dir = args.get_or("shard-dir", "shards");
+                let data =
+                    registry::lookup_sharded(dataset, scale, shards, std::path::Path::new(dir))?;
+                data.visit(ShardedCompiledV {
+                    compiled: &compiled,
+                    batch,
+                    threads,
+                    acc: &mut acc,
+                })?;
+            } else {
+                let data = registry::lookup(dataset, scale)?;
+                data.visit(CompiledV {
+                    compiled: &compiled,
+                    batch,
+                    threads,
+                    acc: &mut acc,
+                })?;
+            }
+            format!(
+                "matcher=compiled compiled_patterns={} index_nodes={} batches={} batch={} ops={}",
+                compiled.stats.compiled_terms,
+                compiled.stats.index_nodes,
+                acc.batches,
+                batch,
+                acc.ops
+            )
+        }
+        other => anyhow::bail!("--matcher must be compiled|naive, got '{other}'"),
+    };
+    match model.task {
+        Task::Classification => println!(
+            "predict {dataset}: n={} accuracy={:.1}% ({} patterns in model) {telemetry}",
+            acc.n,
+            100.0 * acc.correct as f64 / acc.n.max(1) as f64,
+            model.terms.len()
+        ),
+        Task::Regression => println!(
+            "predict {dataset}: n={} mse={:.4} ({} patterns in model) {telemetry}",
+            acc.n,
+            acc.sse / acc.n.max(1) as f64,
+            model.terms.len()
+        ),
+    }
+    for (i, (p, yi)) in acc.rows.iter().enumerate() {
+        println!("  record {i:<5} pred={p:+.4} y={yi:+.4}");
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! `spp selftest` — verify the PJRT/XLA engines against the Rust
+//! engines (SPPC scorer vs the fold, FISTA vs coordinate descent).
+
+use crate::cli::Args;
+use crate::runtime::{default_artifact_dir, PjrtRuntime, XlaFistaSolver, XlaSppcScorer};
+use crate::screening::fold_weights;
+use crate::solver::{CdSolver, Task};
+use crate::testutil::SplitMix64;
+
+pub fn run(args: &Args) -> crate::Result<()> {
+    let dir = args
+        .flag("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+    let rt = PjrtRuntime::cpu(&dir)?;
+    println!("platform: {}", rt.platform());
+
+    // 1) SPPC scorer vs the Rust fold
+    let mut rng = SplitMix64::new(99);
+    let n = 700;
+    let y: Vec<f64> = (0..n).map(|_| if rng.coin(0.5) { 1.0 } else { -1.0 }).collect();
+    let theta: Vec<f64> = (0..n).map(|_| rng.gauss() * 0.1).collect();
+    let (wpos, wneg) = fold_weights(Task::Classification, &y, &theta);
+    let supports: Vec<Vec<u32>> = (0..300)
+        .map(|_| {
+            let m = rng.range(1, 60);
+            rng.sample_distinct(n, m).into_iter().map(|i| i as u32).collect()
+        })
+        .collect();
+    let scorer = XlaSppcScorer::new(&rt, n)?;
+    let scores = scorer.score(&supports, &wpos, &wneg, 0.3)?;
+    let mut max_err = 0.0f64;
+    for (sup, sc) in supports.iter().zip(&scores) {
+        let pos: f64 = sup.iter().map(|&i| wpos[i as usize]).sum();
+        let neg: f64 = sup.iter().map(|&i| wneg[i as usize]).sum();
+        let v = sup.len() as f64;
+        let want = pos.max(-neg) + 0.3 * v.sqrt();
+        max_err = max_err.max((sc.sppc - want).abs());
+    }
+    anyhow::ensure!(max_err < 1e-3, "sppc mismatch: {max_err}");
+    println!(
+        "sppc scorer OK (max err {max_err:.2e} over {} patterns)",
+        scores.len()
+    );
+
+    // 2) FISTA solver vs CD
+    let supports2: Vec<Vec<u32>> = supports.iter().take(40).cloned().collect();
+    let yv: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+    let xs = XlaFistaSolver::new(&rt).solve(Task::Regression, &supports2, &yv, 2.0)?;
+    let cd = CdSolver::default().solve(Task::Regression, &supports2, &yv, 2.0, None);
+    let rel = (xs.primal - cd.primal).abs() / cd.primal.abs().max(1.0);
+    anyhow::ensure!(rel < 1e-3, "fista vs cd primal mismatch: {rel}");
+    println!(
+        "fista solver OK (primal {:.6} vs cd {:.6}, {} execs)",
+        xs.primal, cd.primal, xs.execs
+    );
+    println!("selftest OK");
+    Ok(())
+}

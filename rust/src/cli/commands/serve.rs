@@ -1,0 +1,22 @@
+//! `spp serve` — persistent prediction service: line-delimited JSON
+//! requests over stdin/stdout (`--stdio`) or a Unix domain socket
+//! (`--socket PATH`), with hot-reloadable models and the compiled
+//! batch matcher.  Stdio mode writes nothing but response lines to
+//! stdout, so canned sessions pipe and diff cleanly (the CI
+//! `serve-smoke` job does exactly that against a golden transcript).
+
+use crate::cli::Args;
+
+pub fn run(args: &Args) -> crate::Result<()> {
+    let threads = args.get_usize("threads", 0)?;
+    let stdio = args.switch("stdio");
+    let socket = args.flag("socket");
+    match (stdio, socket) {
+        (true, Some(_)) => anyhow::bail!("--stdio and --socket are mutually exclusive"),
+        (false, Some(path)) => crate::serve::run_unix_socket(path, threads),
+        (true, None) => crate::serve::run_stdio(threads),
+        (false, None) => {
+            anyhow::bail!("serve needs a transport: --stdio or --socket /path/to.sock")
+        }
+    }
+}

@@ -41,6 +41,11 @@
 //! [`Args::switch`] answers truthiness from either form: a bare
 //! `--name` is on; `--name=false`, `--name=0`, `--name=no` and
 //! `--name=off` are off; any other value is on.
+//!
+//! The subcommand implementations live in [`commands`]; the `spp`
+//! binary is a thin parse-and-[`commands::dispatch`] shell.
+
+pub mod commands;
 
 use std::collections::HashMap;
 

@@ -12,10 +12,15 @@ pub mod report;
 
 use std::time::Instant;
 
-use crate::data::registry::{self, Dataset};
-use crate::mining::PatternSubstrate;
-use crate::path::{compute_path_boosting, compute_path_spp, PathConfig, PathResult};
+use crate::data::registry::{
+    self, RegistrySubstrate, ShardedSubstrateVisitor, SubstrateVisitor,
+};
+use crate::path::{
+    compute_path_boosting, compute_path_spp, compute_path_spp_with, PathConfig, PathResult,
+    RestrictedSolver,
+};
 use crate::solver::Task;
+use crate::storage::{ShardCodec, ShardedDb};
 
 /// Which method computes the path.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -62,47 +67,67 @@ pub struct ExperimentResult {
     pub path: PathResult,
 }
 
-/// Compute the path for one method on any substrate (the coordinator's
-/// only per-method dispatch; dataset-kind dispatch happens once, in
-/// [`run_experiment`], at the registry boundary).
-fn run_path<S: PatternSubstrate>(
-    db: &S,
-    y: &[f64],
+/// The coordinator's path visitor: per-method dispatch (SPP vs
+/// boosting — both run the shared `PathDriver`) over any substrate.
+/// Implements both visitor traits, so the same code runs in-memory
+/// datasets and out-of-core shard containers (`ShardedDb` is itself a
+/// `PatternSubstrate`).
+struct PathVisitor<'a> {
     task: Task,
     method: Method,
-    cfg: &PathConfig,
-) -> crate::Result<PathResult> {
-    match method {
-        Method::Spp => compute_path_spp(db, y, task, cfg),
-        Method::Boosting => compute_path_boosting(db, y, task, cfg),
+    cfg: &'a PathConfig,
+}
+
+impl SubstrateVisitor for PathVisitor<'_> {
+    type Out = crate::Result<PathResult>;
+    fn visit<S: RegistrySubstrate>(self, db: &S, y: &[f64]) -> Self::Out {
+        match self.method {
+            Method::Spp => compute_path_spp(db, y, self.task, self.cfg),
+            Method::Boosting => compute_path_boosting(db, y, self.task, self.cfg),
+        }
     }
 }
 
-/// Run one experiment spec to completion.
-pub fn run_experiment(spec: &ExperimentSpec) -> crate::Result<ExperimentResult> {
-    let info = registry::info(&spec.dataset)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{}'", spec.dataset))?;
-    let data = registry::lookup(&spec.dataset, spec.scale)?;
-    let mut cfg = spec.cfg;
-    cfg.maxpat = spec.maxpat;
+impl ShardedSubstrateVisitor for PathVisitor<'_> {
+    type Out = crate::Result<PathResult>;
+    fn visit<S>(self, db: &ShardedDb<S>, y: &[f64]) -> Self::Out
+    where
+        S: RegistrySubstrate + ShardCodec,
+    {
+        match self.method {
+            Method::Spp => compute_path_spp(db, y, self.task, self.cfg),
+            Method::Boosting => compute_path_boosting(db, y, self.task, self.cfg),
+        }
+    }
+}
 
-    let wall = Instant::now();
-    let path = match &data {
-        Dataset::Graphs(g) => run_path(g, &g.y, info.task, spec.method, &cfg),
-        Dataset::Itemsets(t) => run_path(&t.db, &t.y, info.task, spec.method, &cfg),
-        Dataset::Sequences(s) => run_path(&s.db, &s.y, info.task, spec.method, &cfg),
-        Dataset::Tabular(t) => run_path(&t.db, &t.y, info.task, spec.method, &cfg),
-    }?;
-    let wall_secs = wall.elapsed().as_secs_f64();
+/// SPP path with an explicit restricted-solver engine (the XLA FISTA
+/// engine in `run_experiment_xla`).
+struct SolverPathVisitor<'a> {
+    task: Task,
+    cfg: &'a PathConfig,
+    solver: &'a dyn RestrictedSolver,
+}
 
-    let max_gap = path
-        .points
-        .iter()
-        .map(|p| p.gap)
-        .fold(0.0f64, f64::max);
-    Ok(ExperimentResult {
-        task: info.task,
-        n_records: data.n_records(),
+impl SubstrateVisitor for SolverPathVisitor<'_> {
+    type Out = crate::Result<PathResult>;
+    fn visit<S: RegistrySubstrate>(self, db: &S, y: &[f64]) -> Self::Out {
+        compute_path_spp_with(db, y, self.task, self.cfg, self.solver)
+    }
+}
+
+/// Fold a finished path into the result row every engine shape shares.
+fn finish(
+    spec: &ExperimentSpec,
+    task: Task,
+    n_records: usize,
+    path: PathResult,
+    wall_secs: f64,
+) -> ExperimentResult {
+    let max_gap = path.points.iter().map(|p| p.gap).fold(0.0f64, f64::max);
+    ExperimentResult {
+        task,
+        n_records,
         lambda_max: path.lambda_max,
         traverse_secs: path.total_traverse_secs(),
         solve_secs: path.total_solve_secs(),
@@ -113,7 +138,98 @@ pub fn run_experiment(spec: &ExperimentSpec) -> crate::Result<ExperimentResult> 
         max_gap,
         path,
         spec: spec.clone(),
-    })
+    }
+}
+
+/// Run one experiment spec to completion.
+pub fn run_experiment(spec: &ExperimentSpec) -> crate::Result<ExperimentResult> {
+    let info = registry::require_info(&spec.dataset)?;
+    let data = registry::lookup(&spec.dataset, spec.scale)?;
+    let mut cfg = spec.cfg;
+    cfg.maxpat = spec.maxpat;
+
+    let wall = Instant::now();
+    let path = data.visit(PathVisitor {
+        task: info.task,
+        method: spec.method,
+        cfg: &cfg,
+    })?;
+    Ok(finish(
+        spec,
+        info.task,
+        data.n_records(),
+        path,
+        wall.elapsed().as_secs_f64(),
+    ))
+}
+
+/// Path over an on-disk sharded database ([`registry::lookup_sharded`]).
+///
+/// Identical math to [`run_experiment`] — `ShardedDb` implements
+/// `PatternSubstrate`, so the whole path stack runs unchanged; the
+/// shard layer only changes *where the records live* during the
+/// screening traversals (per-shard streaming for item sets, a resident
+/// union for graph/sequence shards — DESIGN.md "Out-of-core shards").
+pub fn run_experiment_sharded(
+    spec: &ExperimentSpec,
+    shards: usize,
+    dir: &std::path::Path,
+) -> crate::Result<ExperimentResult> {
+    let info = registry::require_info(&spec.dataset)?;
+    let data = registry::lookup_sharded(&spec.dataset, spec.scale, shards, dir)?;
+    let mut cfg = spec.cfg;
+    cfg.maxpat = spec.maxpat;
+
+    let wall = Instant::now();
+    let path = data.visit(PathVisitor {
+        task: info.task,
+        method: spec.method,
+        cfg: &cfg,
+    })?;
+    eprintln!(
+        "sharded engine: {} shards in {}, peak resident columns {} bytes, {} reloads",
+        shards,
+        dir.display(),
+        path.max_resident_bytes(),
+        path.total_spill_reloads()
+    );
+    Ok(finish(
+        spec,
+        info.task,
+        data.n_records(),
+        path,
+        wall.elapsed().as_secs_f64(),
+    ))
+}
+
+/// SPP path with the XLA FISTA engine for the restricted solves.
+pub fn run_experiment_xla(spec: &ExperimentSpec) -> crate::Result<ExperimentResult> {
+    use crate::runtime::{default_artifact_dir, engine::XlaRestricted, PjrtRuntime};
+
+    let info = registry::require_info(&spec.dataset)?;
+    let data = registry::lookup(&spec.dataset, spec.scale)?;
+    let mut cfg = spec.cfg;
+    cfg.maxpat = spec.maxpat;
+    let rt = PjrtRuntime::cpu(&default_artifact_dir())?;
+    let solver = XlaRestricted::new(&rt);
+
+    let wall = Instant::now();
+    let path = data.visit(SolverPathVisitor {
+        task: info.task,
+        cfg: &cfg,
+        solver: &solver,
+    })?;
+    eprintln!(
+        "xla engine: {} subproblem fallbacks to CD",
+        solver.fallbacks.get()
+    );
+    Ok(finish(
+        spec,
+        info.task,
+        data.n_records(),
+        path,
+        wall.elapsed().as_secs_f64(),
+    ))
 }
 
 /// A fixed-size worker pool over experiment specs.

@@ -13,6 +13,18 @@
 //! container and hands back a [`crate::storage::ShardedDb`] — the
 //! `synth-xxl` preset streams straight from the chunked generator into
 //! the shard writer, so at no point is the whole database resident.
+//!
+//! This file is also the crate's **only substrate dispatch point**
+//! (with `serve/registry.rs` for the tag-keyed model side): generic
+//! code reaches a concrete substrate through [`Dataset::visit`] /
+//! [`ShardedDataset::visit`] with a [`SubstrateVisitor`] /
+//! [`ShardedSubstrateVisitor`], monomorphized at the match sites
+//! below.  Adding a substrate = implement
+//! [`PatternSubstrate`] + [`BatchScore`] (+ `ShardCodec` for
+//! out-of-core), add one registry row, and every CLI subcommand,
+//! bench and example picks it up (DESIGN.md §3).  CI's
+//! dispatch-hygiene gate keeps `Dataset::`/`Kind::` match ladders
+//! from regrowing elsewhere.
 
 use std::path::Path;
 
@@ -21,8 +33,10 @@ use super::synth_graphs::{self, GraphSynthConfig};
 use super::synth_itemsets::{self, ChunkedItemsetGen, ItemsetSynthConfig};
 use super::tabular::{self, LabeledTabular, TabSynthConfig, TabularData};
 use super::{graph::GraphDatabase, LabeledTransactions, Transactions};
+use crate::mining::PatternSubstrate;
+use crate::serve::compiled::BatchScore;
 use crate::solver::problem::Task;
-use crate::storage::{write_sharded, ShardWriter, ShardedDb};
+use crate::storage::{write_sharded, ShardCodec, ShardWriter, ShardedDb};
 
 /// Default seed for all registry datasets — fixed so every bench and
 /// example sees identical data.
@@ -54,6 +68,55 @@ impl Dataset {
             Dataset::Tabular(t) => &t.y,
         }
     }
+
+    /// THE in-memory dispatch point: run a [`SubstrateVisitor`] on
+    /// this dataset's substrate and targets.  Generic code is
+    /// monomorphized here, once per substrate — commands, the
+    /// coordinator, the estimator and the serve layer all go through
+    /// this method instead of matching on the enum, so the only
+    /// substrate match ladders in the crate live in this file and in
+    /// `serve/registry.rs` (enforced by CI's dispatch-hygiene gate).
+    pub fn visit<V: SubstrateVisitor>(&self, v: V) -> V::Out {
+        match self {
+            Dataset::Graphs(g) => v.visit(g, &g.y),
+            Dataset::Itemsets(t) => v.visit(&t.db, &t.y),
+            Dataset::Sequences(s) => v.visit(&s.db, &s.y),
+            Dataset::Tabular(t) => v.visit(&t.db, &t.y),
+        }
+    }
+}
+
+/// Everything generic code may ask of a registry substrate: the
+/// pattern-tree search surface ([`PatternSubstrate`]), the serve
+/// layer's batch-scoring capability ([`BatchScore`]), and `Sync` (the
+/// deterministic parallel engine and CV fan records out).  Blanket-
+/// implemented, so a new substrate only implements the two base
+/// traits and gains registry dispatch for free.
+pub trait RegistrySubstrate: PatternSubstrate + BatchScore + Sync {}
+
+impl<T: PatternSubstrate + BatchScore + Sync> RegistrySubstrate for T {}
+
+/// A computation generic over every registry substrate.  Implementors
+/// write `visit` once against [`RegistrySubstrate`]; [`Dataset::visit`]
+/// instantiates it per substrate at the registry's single match site.
+///
+/// `visit` consumes `self` so a visitor can both carry borrowed inputs
+/// (configs, solvers, accumulators) and return owned results.
+pub trait SubstrateVisitor {
+    type Out;
+    fn visit<S: RegistrySubstrate>(self, db: &S, y: &[f64]) -> Self::Out;
+}
+
+/// The out-of-core twin of [`SubstrateVisitor`]: the substrate arrives
+/// as a [`ShardedDb`] adapter (itself a [`PatternSubstrate`], so path
+/// code runs on it unchanged) whose element type `S` still exposes the
+/// full [`RegistrySubstrate`] surface for per-shard work (e.g. batch
+/// scoring one decoded shard at a time).
+pub trait ShardedSubstrateVisitor {
+    type Out;
+    fn visit<S>(self, db: &ShardedDb<S>, y: &[f64]) -> Self::Out
+    where
+        S: RegistrySubstrate + ShardCodec;
 }
 
 /// Metadata for one registered dataset.
@@ -72,6 +135,19 @@ pub enum Kind {
     Itemset,
     Sequence,
     Tabular,
+}
+
+impl Kind {
+    /// The substrate `KIND_TAG` of this dataset kind — the tag models
+    /// and the serve registry key on.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Kind::Graph => GraphDatabase::KIND_TAG,
+            Kind::Itemset => Transactions::KIND_TAG,
+            Kind::Sequence => Sequences::KIND_TAG,
+            Kind::Tabular => TabularData::KIND_TAG,
+        }
+    }
 }
 
 /// All eight paper datasets plus the `synth-seq` sequence preset (the
@@ -151,6 +227,21 @@ pub fn info(name: &str) -> Option<DatasetInfo> {
     ALL.iter().find(|d| d.name == name).copied()
 }
 
+/// The one `unknown dataset` error every lookup shares — its message
+/// lists the registered preset names so a typo is self-correcting.
+fn unknown_dataset(name: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "unknown dataset '{name}' (available presets: {})",
+        ALL.map(|d| d.name).join(", ")
+    )
+}
+
+/// Metadata for `name`, or the registry's [`unknown_dataset`] error.
+/// Commands use this instead of hand-rolling `info(...).ok_or_else`.
+pub fn require_info(name: &str) -> crate::Result<DatasetInfo> {
+    info(name).ok_or_else(|| unknown_dataset(name))
+}
+
 /// Materialize a registry dataset, optionally scaled.
 pub fn lookup(name: &str, scale: f64) -> crate::Result<Dataset> {
     let seed = REGISTRY_SEED;
@@ -193,10 +284,7 @@ pub fn lookup(name: &str, scale: f64) -> crate::Result<Dataset> {
         "synth-xxl" => Dataset::Itemsets(
             synth_itemsets::generate(&ItemsetSynthConfig::preset_xxl(seed).scaled(scale)).labeled(),
         ),
-        other => anyhow::bail!(
-            "unknown dataset '{other}' (expected one of {:?})",
-            ALL.map(|d| d.name)
-        ),
+        other => return Err(unknown_dataset(other)),
     };
     Ok(ds)
 }
@@ -229,6 +317,18 @@ impl ShardedDataset {
             | ShardedDataset::Graphs { y, .. }
             | ShardedDataset::Sequences { y, .. }
             | ShardedDataset::Tabular { y, .. } => y,
+        }
+    }
+
+    /// THE out-of-core dispatch point, the sharded twin of
+    /// [`Dataset::visit`]: run a [`ShardedSubstrateVisitor`] on this
+    /// dataset's shard container and targets.
+    pub fn visit<V: ShardedSubstrateVisitor>(&self, v: V) -> V::Out {
+        match self {
+            ShardedDataset::Itemsets { db, y } => v.visit(db, y),
+            ShardedDataset::Graphs { db, y } => v.visit(db, y),
+            ShardedDataset::Sequences { db, y } => v.visit(db, y),
+            ShardedDataset::Tabular { db, y } => v.visit(db, y),
         }
     }
 }

@@ -191,6 +191,25 @@ impl SppEstimator {
             path,
         })
     }
+
+    /// [`fit`](Self::fit) against a registry
+    /// [`Dataset`](crate::data::registry::Dataset), whatever
+    /// substrate it wraps — the one visitor hop the CLI and examples
+    /// use instead of matching on the dataset enum.
+    pub fn fit_dataset(&self, data: &crate::data::registry::Dataset) -> crate::Result<SppFit> {
+        struct FitV<'a>(&'a SppEstimator);
+        impl crate::data::registry::SubstrateVisitor for FitV<'_> {
+            type Out = crate::Result<SppFit>;
+            fn visit<S: crate::data::registry::RegistrySubstrate>(
+                self,
+                db: &S,
+                y: &[f64],
+            ) -> Self::Out {
+                self.0.fit(db, y)
+            }
+        }
+        data.visit(FitV(self))
+    }
 }
 
 /// A completed fit: the whole certified path plus the smallest-λ model.

@@ -22,6 +22,11 @@
 //!   dense numeric), graph/sequence/tabular containers, seeded
 //!   synthetic generators standing in for the paper's benchmark data;
 //!   each container implements [`mining::PatternSubstrate`].
+//!   [`data::registry`] is also the crate's **single substrate
+//!   dispatch point**: generic code reaches a concrete substrate
+//!   through the dataset's `visit` hop with a
+//!   [`data::registry::SubstrateVisitor`], monomorphized at the
+//!   registry's one match site (CI greps for strays).
 //! * [`mining`] — the pattern-tree substrates: a prefix-extension
 //!   item-set enumerator, a full gSpan implementation, a PrefixSpan
 //!   subsequence miner, and a RuleFit threshold-rule miner, all driven
@@ -40,10 +45,12 @@
 //!   reuses the pruned tree across the λ path, and the range-based
 //!   (interval) SPP bound behind the chunked path engine.
 //! * [`boosting`] — the cutting-plane baseline the paper compares with.
-//! * [`path`] — Algorithm 1: the warm-started regularization path
-//!   (incremental screening-forest engine by default, from-scratch
-//!   under `--no-reuse`; chunked range-based screening under
-//!   `--range-chunk C`), and K-fold cross-validation over it
+//! * [`path`] — Algorithm 1: the warm-started regularization path,
+//!   run by the one shared λ loop [`path::PathDriver`] with a
+//!   per-method [`path::ActiveSetStrategy`] (SPP screening — the
+//!   incremental forest by default, from-scratch under `--no-reuse`,
+//!   chunked range-based screening under `--range-chunk C` — or the
+//!   boosting baseline), and K-fold cross-validation over it
 //!   (stratified folds for classification).
 //! * [`estimator`] — [`SppEstimator`], the sklearn-style builder facade
 //!   over the path machinery.
@@ -66,7 +73,10 @@
 //!   result reporting; drives every figure bench.
 //! * [`testutil`] — SplitMix64 PRNG, property-test harness, brute-force
 //!   oracles (exhaustive miners, dense ISTA) used across the test suite.
-//! * [`cli`] — the minimal argument parser behind the `spp` binary.
+//! * [`cli`] — the minimal argument parser behind the `spp` binary,
+//!   plus [`cli::commands`]: one module per subcommand, written
+//!   against the registry visitors (the binary itself is a thin
+//!   parse-and-dispatch shell).
 //!
 //! ## Quickstart
 //!

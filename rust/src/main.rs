@@ -30,61 +30,22 @@
 //! spp datasets                          # list registry presets
 //! ```
 //!
-//! Every data-facing command dispatches the registry [`Dataset`] once
-//! and then runs generic code over [`PatternSubstrate`] — item-set,
-//! graph, sequence and tabular-rule presets all flow through the same
-//! paths.
+//! The binary is a thin shell: parse the declared grammar, then
+//! [`spp::cli::commands::dispatch`].  The subcommands live in
+//! `spp::cli::commands`, written against the registry's substrate
+//! visitors — every data-facing command dispatches the dataset enum
+//! exactly once (in `data::registry`) and runs generic
+//! `PatternSubstrate` code from there.
 
-use std::io::Write;
-
-use spp::cli;
-use spp::coordinator::{report, run_experiment, ExperimentSpec, Method};
-use spp::data::registry::{self, Dataset};
-use spp::mining::{PatternNode, PatternSubstrate, TreeVisitor, Walk};
-use spp::model::SparsePatternModel;
-use spp::path::PathConfig;
-use spp::screening::lambda_max::lambda_max;
-use spp::solver::Task;
-use spp::SppEstimator;
-
-/// Switches: flags that never consume a non-boolean token (see
-/// `cli::Args`).  `help` keeps the universal `spp <command> --help`
-/// habit working under the strict grammar.
-const SWITCHES: &[&str] = &["certify", "dynamic-screen", "help", "no-reuse", "stdio"];
-
-/// Every value-taking flag any subcommand reads — the complete declared
-/// grammar; anything else is rejected with the flag named.
-const FLAGS: &[&str] = &[
-    "artifacts",
-    "batch",
-    "columns",
-    "dataset",
-    "engine",
-    "folds",
-    "json",
-    "k-add",
-    "lambda-index",
-    "lambdas",
-    "matcher",
-    "maxpat",
-    "memory-budget",
-    "method",
-    "min-ratio",
-    "minsup",
-    "model",
-    "range-chunk",
-    "scale",
-    "seed",
-    "shard-dir",
-    "shards",
-    "socket",
-    "threads",
-    "top",
-];
+use spp::cli::{self, commands};
 
 fn main() {
-    let code = match cli::Args::parse_with_switches(std::env::args().skip(1), SWITCHES, FLAGS)
-        .and_then(|args| dispatch(&args))
+    let code = match cli::Args::parse_with_switches(
+        std::env::args().skip(1),
+        commands::SWITCHES,
+        commands::FLAGS,
+    )
+    .and_then(|args| commands::dispatch(&args))
     {
         Ok(()) => 0,
         Err(e) => {
@@ -93,764 +54,4 @@ fn main() {
         }
     };
     std::process::exit(code);
-}
-
-fn dispatch(args: &cli::Args) -> spp::Result<()> {
-    // `spp <command> --help` prints help instead of running the command
-    if args.switch("help") {
-        print!("{HELP}");
-        return Ok(());
-    }
-    match args.command.as_str() {
-        "path" => cmd_path(args),
-        "cv" => cmd_cv(args),
-        "fit" => cmd_fit(args),
-        "predict" => cmd_predict(args),
-        "serve" => cmd_serve(args),
-        "lambda-max" => cmd_lambda_max(args),
-        "mine" => cmd_mine(args),
-        "selftest" => cmd_selftest(args),
-        "datasets" => cmd_datasets(),
-        "" | "help" | "--help" => {
-            print!("{HELP}");
-            Ok(())
-        }
-        other => anyhow::bail!("unknown command '{other}' (try `spp help`)"),
-    }
-}
-
-const HELP: &str = "\
-spp — Safe Pattern Pruning (KDD'16 reproduction)
-
-commands:
-  path        compute a regularization path (SPP and/or boosting)
-  cv          k-fold cross-validation over the path (model selection)
-  fit         fit a sparse pattern model (SPP path) and save it
-  predict     load a saved model and predict a dataset
-  serve       persistent prediction service (JSON lines over stdio/socket)
-  lambda-max  compute the paper's §3.4.1 lambda_max by bounded search
-  mine        enumerate frequent patterns (substrate smoke test)
-  selftest    verify the PJRT/XLA engines against the Rust engines
-  datasets    list the registered synthetic datasets (all substrates)
-";
-
-fn path_config(args: &cli::Args) -> spp::Result<PathConfig> {
-    let mut cd = spp::solver::CdConfig::default();
-    // `--dynamic-screen=false` / `--dynamic-screen false` turns the
-    // in-solve gap-safe screening off; absent or bare means on.
-    if args.flag("dynamic-screen").is_some() {
-        cd.dynamic_screen = args.switch("dynamic-screen");
-    }
-    Ok(PathConfig {
-        n_lambdas: args.get_usize("lambdas", 100)?,
-        lambda_min_ratio: args.get_f64("min-ratio", 0.01)?,
-        maxpat: args.get_usize("maxpat", 4)?,
-        minsup: args.get_usize("minsup", 1)?,
-        cd,
-        certify: args.switch("certify"),
-        // `--no-reuse` falls back to the from-scratch traversal per λ
-        // (ablation of the incremental screening forest)
-        reuse_forest: !args.switch("no-reuse"),
-        // `--threads N` drives the deterministic parallel engine; 0 =
-        // auto (SPP_THREADS env, else available parallelism), 1 = the
-        // sequential engine — all bit-identical
-        threads: args.get_usize("threads", 0)?,
-        // `--range-chunk C` drives range-based SPP: one screening mine
-        // per chunk of C λs; 0 = auto (SPP_RANGE_CHUNK env, else 1 =
-        // per-λ screening) — all bit-identical
-        range_chunk: args.get_usize("range-chunk", 0)?,
-        // `--columns sparse|hybrid` picks the support-column layout;
-        // absent = auto (SPP_COLUMNS env, else hybrid) — bit-identical
-        columns: match args.flag("columns") {
-            None => None,
-            Some("sparse") => Some(spp::columns::ColumnLayout::Sparse),
-            Some("hybrid") => Some(spp::columns::ColumnLayout::Hybrid),
-            Some(other) => anyhow::bail!("--columns must be sparse|hybrid, got '{other}'"),
-        },
-        // `--memory-budget BYTES` caps the resident support-column pool
-        // (LRU spill to a temp file); 0 = auto (SPP_MEMORY_BUDGET env,
-        // else unlimited) — bit-identical at any budget
-        memory_budget: args.get_usize("memory-budget", 0)?,
-        k_add: args.get_usize("k-add", 1)?,
-        ..PathConfig::default()
-    })
-}
-
-fn cmd_path(args: &cli::Args) -> spp::Result<()> {
-    let dataset = args.get_or("dataset", "splice").to_string();
-    let scale = args.get_f64("scale", 1.0)?;
-    let cfg = path_config(args)?;
-    let methods: Vec<Method> = match args.get_or("method", "both") {
-        "spp" => vec![Method::Spp],
-        "boosting" => vec![Method::Boosting],
-        "both" => vec![Method::Spp, Method::Boosting],
-        other => anyhow::bail!("--method must be spp|boosting|both, got '{other}'"),
-    };
-    let engine = args.get_or("engine", "rust").to_string();
-    // `--shards K` routes through the on-disk shard container: the
-    // database is serialized shard by shard and screening streams it
-    // back, bit-identical to the in-memory run at any thread count.
-    let shards = args.get_usize("shards", 0)?;
-    let shard_dir = args.get_or("shard-dir", "shards").to_string();
-    anyhow::ensure!(
-        shards == 0 || engine == "rust",
-        "--shards streams through the rust engine; drop --engine {engine}"
-    );
-
-    let mut results = Vec::new();
-    for method in methods {
-        let spec = ExperimentSpec {
-            dataset: dataset.clone(),
-            scale,
-            maxpat: cfg.maxpat,
-            method,
-            cfg,
-        };
-        let r = if shards > 0 {
-            run_path_sharded(&spec, shards, &shard_dir)?
-        } else if engine == "xla" && method == Method::Spp {
-            run_path_xla(&spec)?
-        } else {
-            run_experiment(&spec)?
-        };
-        println!("{}", report::time_row(&r));
-        results.push(r);
-    }
-    if results.len() == 2 {
-        println!("{}", report::speedup_row(&results[0], &results[1]));
-    }
-    if let Some(path) = args.flag("json") {
-        let mut f = std::fs::File::create(path)?;
-        for r in &results {
-            writeln!(f, "{}", report::result_json(r))?;
-        }
-        println!("wrote {path}");
-    }
-    Ok(())
-}
-
-/// K-fold cross-validation over the SPP path: the paper's §3.4.1
-/// model-selection workflow, served by the chunked (range-based SPP)
-/// engine — one database search per grid chunk, per fold.
-fn cmd_cv(args: &cli::Args) -> spp::Result<()> {
-    use spp::path::cv::cross_validate;
-
-    let dataset = args.get_or("dataset", "splice").to_string();
-    let scale = args.get_f64("scale", 1.0)?;
-    let folds = args.get_usize("folds", 5)?;
-    let seed = args.get_usize("seed", 13)? as u64;
-    let cfg = path_config(args)?;
-    let info = registry::info(&dataset)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
-    let data = registry::lookup(&dataset, scale)?;
-    anyhow::ensure!(
-        folds >= 2 && folds <= data.n_records(),
-        "--folds must be between 2 and the record count; got {folds} folds for {} records",
-        data.n_records()
-    );
-    let t0 = std::time::Instant::now();
-    let cv = match &data {
-        Dataset::Graphs(g) => cross_validate(g, &g.y, info.task, &cfg, folds, seed)?,
-        Dataset::Itemsets(t) => cross_validate(&t.db, &t.y, info.task, &cfg, folds, seed)?,
-        Dataset::Sequences(s) => cross_validate(&s.db, &s.y, info.task, &cfg, folds, seed)?,
-        Dataset::Tabular(t) => cross_validate(&t.db, &t.y, info.task, &cfg, folds, seed)?,
-    };
-    let secs = t0.elapsed().as_secs_f64();
-    let metric = match info.task {
-        Task::Regression => "mse",
-        Task::Classification => "error",
-    };
-    println!(
-        "cv {dataset}: n={} task={:?} folds={folds} lambdas={} chunk={} ({secs:.2}s)",
-        data.n_records(),
-        info.task,
-        cfg.n_lambdas,
-        spp::screening::range::resolve_range_chunk(cfg.range_chunk),
-    );
-    println!("{:<6} {:>12} {:>12} {:>12}", "idx", "lambda/lmax", metric, "mean_active");
-    for (i, p) in cv.points.iter().enumerate() {
-        println!(
-            "{:<6} {:>12.6} {:>12.6} {:>12.1}{}",
-            i,
-            p.lambda_frac,
-            p.mean_loss,
-            p.mean_active,
-            if i == cv.best { "   <- best" } else { "" }
-        );
-    }
-    let best = cv.best_point();
-    println!(
-        "best: index {} (λ/λ_max = {:.6}), mean {metric} {:.6} over {folds} folds",
-        cv.best,
-        best.lambda_frac,
-        best.mean_loss
-    );
-    Ok(())
-}
-
-/// Fit via the `SppEstimator` facade and persist the chosen model.
-fn cmd_fit(args: &cli::Args) -> spp::Result<()> {
-    let dataset = args.get_or("dataset", "splice");
-    let scale = args.get_f64("scale", 1.0)?;
-    let out = args.require("model")?;
-    let info = registry::info(dataset)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
-    let data = registry::lookup(dataset, scale)?;
-    let cfg = path_config(args)?;
-    let est = SppEstimator::new(info.task)
-        .maxpat(cfg.maxpat)
-        .minsup(cfg.minsup)
-        .lambda_grid(cfg.n_lambdas, cfg.lambda_min_ratio)
-        .certify(cfg.certify)
-        .reuse_forest(cfg.reuse_forest)
-        .threads(cfg.threads)
-        .range_chunk(cfg.range_chunk)
-        .cd(cfg.cd);
-    let est = match cfg.columns {
-        Some(layout) => est.columns(layout),
-        None => est,
-    };
-    let fit = match &data {
-        Dataset::Graphs(g) => est.fit(g, &g.y)?,
-        Dataset::Itemsets(t) => est.fit(&t.db, &t.y)?,
-        Dataset::Sequences(s) => est.fit(&s.db, &s.y)?,
-        Dataset::Tabular(t) => est.fit(&t.db, &t.y)?,
-    };
-    let idx = args.get_usize("lambda-index", fit.path.points.len() - 1)?;
-    anyhow::ensure!(
-        idx < fit.path.points.len(),
-        "--lambda-index {idx} out of range (path has {} points)",
-        fit.path.points.len()
-    );
-    let model = fit.model_at(idx);
-    std::fs::write(out, model.serialize()?)?;
-    println!(
-        "fit {dataset}: n={} task={:?} λ_max={:.6} path={} λs, {} tree nodes",
-        data.n_records(),
-        info.task,
-        fit.path.lambda_max,
-        fit.path.points.len(),
-        fit.path.total_nodes()
-    );
-    println!(
-        "model @ λ={:.6} (index {idx}): {} patterns, b={:+.4} -> wrote {out}",
-        model.lambda,
-        model.terms.len(),
-        model.b
-    );
-    Ok(())
-}
-
-/// Streaming accumulator for `spp predict`: the running metric, op
-/// counts and the first `top` display rows survive each batch — the
-/// per-record predictions do not, which is the point of bounded-batch
-/// scoring (peak matcher input is one `--batch` window).
-struct PredictAccum {
-    task: Task,
-    top: usize,
-    n: usize,
-    correct: usize,
-    sse: f64,
-    ops: u64,
-    batches: u64,
-    rows: Vec<(f64, f64)>,
-}
-
-impl PredictAccum {
-    fn new(task: Task, top: usize) -> Self {
-        PredictAccum {
-            task,
-            top,
-            n: 0,
-            correct: 0,
-            sse: 0.0,
-            ops: 0,
-            batches: 0,
-            rows: Vec::new(),
-        }
-    }
-
-    /// Fold one window of final predictions (output transform already
-    /// applied) against its aligned target slice.
-    fn absorb(&mut self, preds: &[f64], y: &[f64], ops: u64) {
-        debug_assert_eq!(preds.len(), y.len());
-        self.ops += ops;
-        for (&p, &yi) in preds.iter().zip(y) {
-            match self.task {
-                Task::Classification => {
-                    if (p >= 0.0) == (yi > 0.0) {
-                        self.correct += 1;
-                    }
-                }
-                Task::Regression => self.sse += (p - yi) * (p - yi),
-            }
-            if self.rows.len() < self.top {
-                self.rows.push((p, yi));
-            }
-            self.n += 1;
-        }
-    }
-}
-
-/// Score `rows` through the compiled matcher in `batch`-sized windows,
-/// folding each window into `acc`.  `score` is the substrate-specific
-/// batch entrypoint (`score_itemsets` / `score_graphs` /
-/// `score_sequences`); batching is invisible in the results because
-/// each record is scored independently.
-fn predict_batches<R>(
-    compiled: &spp::serve::compiled::CompiledModel,
-    rows: &[R],
-    y: &[f64],
-    batch: usize,
-    acc: &mut PredictAccum,
-    score: impl Fn(&[R]) -> spp::Result<spp::serve::compiled::ScoreBatch>,
-) -> spp::Result<()> {
-    anyhow::ensure!(rows.len() == y.len(), "rows/targets length mismatch");
-    let mut lo = 0;
-    while lo < rows.len() {
-        let hi = (lo + batch).min(rows.len());
-        let out = score(&rows[lo..hi])?;
-        let preds: Vec<f64> = out.scores.iter().map(|&s| compiled.output(s)).collect();
-        acc.absorb(&preds, &y[lo..hi], out.ops);
-        acc.batches += 1;
-        lo = hi;
-    }
-    Ok(())
-}
-
-/// Load a persisted model and predict a registry dataset.
-///
-/// `--matcher compiled` (the default) routes scoring through the serve
-/// layer's compiled matcher — one pass per record instead of one per
-/// (record, pattern) pair, streamed in `--batch`-sized windows — and
-/// reports its telemetry on the summary line; with `--shards K` the
-/// records come off the on-disk shard container one shard at a time,
-/// so the resident input is one shard regardless of dataset size.
-/// `--matcher naive` keeps the historical per-pattern whole-dataset
-/// scorer as a differential oracle.  Predictions are bit-identical
-/// either way (pinned by `tests/integration_serve.rs`).
-fn cmd_predict(args: &cli::Args) -> spp::Result<()> {
-    let dataset = args.get_or("dataset", "splice");
-    let scale = args.get_f64("scale", 1.0)?;
-    let top = args.get_usize("top", 10)?;
-    let threads = args.get_usize("threads", 0)?;
-    // bounded-batch streaming: at most `batch` records are handed to
-    // the matcher at once; `--shards` streams them off the disk
-    // container one shard at a time
-    let batch = args.get_usize("batch", 8192)?;
-    anyhow::ensure!(batch >= 1, "--batch must be >= 1");
-    let shards = args.get_usize("shards", 0)?;
-    let file = args.require("model")?;
-    let model = SparsePatternModel::parse(&std::fs::read_to_string(file)?)?;
-    let info = registry::info(dataset)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
-    // A mismatched model scores every record as sign(b) / b and prints
-    // a confidently wrong metric — reject the combination up front.
-    anyhow::ensure!(
-        model.task == info.task,
-        "model {file} is a {:?} model but dataset '{dataset}' is a {:?} task",
-        model.task,
-        info.task
-    );
-    let expected_tag = {
-        use spp::data::{
-            graph::GraphDatabase, sequence::Sequences, tabular::TabularData, Transactions,
-        };
-        match info.kind {
-            registry::Kind::Itemset => Transactions::KIND_TAG,
-            registry::Kind::Graph => GraphDatabase::KIND_TAG,
-            registry::Kind::Sequence => Sequences::KIND_TAG,
-            registry::Kind::Tabular => TabularData::KIND_TAG,
-        }
-    };
-    anyhow::ensure!(
-        model.terms.is_empty() || model.terms.iter().any(|(p, _)| p.kind_tag() == expected_tag),
-        "model {file} has no {expected_tag}-kind patterns — it was fitted on a different \
-         substrate than dataset '{dataset}'"
-    );
-    let mut acc = PredictAccum::new(model.task, top);
-    let telemetry = match args.get_or("matcher", "compiled") {
-        "naive" => {
-            anyhow::ensure!(
-                shards == 0,
-                "--matcher naive scores the whole dataset at once; --shards streams \
-                 through the compiled matcher"
-            );
-            let data = registry::lookup(dataset, scale)?;
-            let preds = match &data {
-                Dataset::Graphs(g) => model.predict(g),
-                Dataset::Itemsets(t) => model.predict(&t.db),
-                Dataset::Sequences(s) => model.predict(&s.db),
-                Dataset::Tabular(t) => model.predict(&t.db),
-            };
-            let calls = (model.terms.len() as u64) * (data.n_records() as u64);
-            acc.absorb(&preds, data.targets(), 0);
-            format!("matcher=naive match_calls={calls}")
-        }
-        "compiled" => {
-            let compiled =
-                spp::serve::compiled::CompiledModel::compile_for(&model, expected_tag)?;
-            if shards > 0 {
-                use spp::data::registry::ShardedDataset;
-                let dir = args.get_or("shard-dir", "shards");
-                let data =
-                    registry::lookup_sharded(dataset, scale, shards, std::path::Path::new(dir))?;
-                // walk the container shard by shard; `base` keeps the
-                // target slice aligned with the shard's global records
-                let mut base = 0usize;
-                match &data {
-                    ShardedDataset::Itemsets { db, y } => {
-                        for s in 0..db.n_shards() {
-                            let shard = db.shard(s)?;
-                            let ys = &y[base..base + shard.items.len()];
-                            predict_batches(&compiled, &shard.items, ys, batch, &mut acc, |w| {
-                                compiled.score_itemsets(w, threads)
-                            })?;
-                            base += shard.items.len();
-                        }
-                    }
-                    ShardedDataset::Graphs { db, y } => {
-                        for s in 0..db.n_shards() {
-                            let shard = db.shard(s)?;
-                            let ys = &y[base..base + shard.graphs.len()];
-                            predict_batches(&compiled, &shard.graphs, ys, batch, &mut acc, |w| {
-                                compiled.score_graphs(w, threads)
-                            })?;
-                            base += shard.graphs.len();
-                        }
-                    }
-                    ShardedDataset::Sequences { db, y } => {
-                        for s in 0..db.n_shards() {
-                            let shard = db.shard(s)?;
-                            let ys = &y[base..base + shard.seqs.len()];
-                            predict_batches(&compiled, &shard.seqs, ys, batch, &mut acc, |w| {
-                                compiled.score_sequences(w, threads)
-                            })?;
-                            base += shard.seqs.len();
-                        }
-                    }
-                    ShardedDataset::Tabular { db, y } => {
-                        for s in 0..db.n_shards() {
-                            let shard = db.shard(s)?;
-                            let ys = &y[base..base + shard.rows.len()];
-                            predict_batches(&compiled, &shard.rows, ys, batch, &mut acc, |w| {
-                                compiled.score_tabular(w, threads)
-                            })?;
-                            base += shard.rows.len();
-                        }
-                    }
-                }
-            } else {
-                let data = registry::lookup(dataset, scale)?;
-                let y = data.targets();
-                match &data {
-                    Dataset::Itemsets(t) => {
-                        predict_batches(&compiled, &t.db.items, y, batch, &mut acc, |w| {
-                            compiled.score_itemsets(w, threads)
-                        })?
-                    }
-                    Dataset::Graphs(g) => {
-                        predict_batches(&compiled, &g.graphs, y, batch, &mut acc, |w| {
-                            compiled.score_graphs(w, threads)
-                        })?
-                    }
-                    Dataset::Sequences(s) => {
-                        predict_batches(&compiled, &s.db.seqs, y, batch, &mut acc, |w| {
-                            compiled.score_sequences(w, threads)
-                        })?
-                    }
-                    Dataset::Tabular(t) => {
-                        predict_batches(&compiled, &t.db.rows, y, batch, &mut acc, |w| {
-                            compiled.score_tabular(w, threads)
-                        })?
-                    }
-                }
-            }
-            format!(
-                "matcher=compiled compiled_patterns={} index_nodes={} batches={} batch={} ops={}",
-                compiled.stats.compiled_terms,
-                compiled.stats.index_nodes,
-                acc.batches,
-                batch,
-                acc.ops
-            )
-        }
-        other => anyhow::bail!("--matcher must be compiled|naive, got '{other}'"),
-    };
-    match model.task {
-        Task::Classification => println!(
-            "predict {dataset}: n={} accuracy={:.1}% ({} patterns in model) {telemetry}",
-            acc.n,
-            100.0 * acc.correct as f64 / acc.n.max(1) as f64,
-            model.terms.len()
-        ),
-        Task::Regression => println!(
-            "predict {dataset}: n={} mse={:.4} ({} patterns in model) {telemetry}",
-            acc.n,
-            acc.sse / acc.n.max(1) as f64,
-            model.terms.len()
-        ),
-    }
-    for (i, (p, yi)) in acc.rows.iter().enumerate() {
-        println!("  record {i:<5} pred={p:+.4} y={yi:+.4}");
-    }
-    Ok(())
-}
-
-/// Persistent prediction service: line-delimited JSON requests over
-/// stdin/stdout (`--stdio`) or a Unix domain socket (`--socket PATH`),
-/// with hot-reloadable models and the compiled batch matcher.  Stdio
-/// mode writes nothing but response lines to stdout, so canned
-/// sessions pipe and diff cleanly (the CI `serve-smoke` job does
-/// exactly that against a golden transcript).
-fn cmd_serve(args: &cli::Args) -> spp::Result<()> {
-    let threads = args.get_usize("threads", 0)?;
-    let stdio = args.switch("stdio");
-    let socket = args.flag("socket");
-    match (stdio, socket) {
-        (true, Some(_)) => anyhow::bail!("--stdio and --socket are mutually exclusive"),
-        (false, Some(path)) => spp::serve::run_unix_socket(path, threads),
-        (true, None) => spp::serve::run_stdio(threads),
-        (false, None) => {
-            anyhow::bail!("serve needs a transport: --stdio or --socket /path/to.sock")
-        }
-    }
-}
-
-/// Path over an on-disk sharded database ([`registry::lookup_sharded`]).
-///
-/// Identical math to [`run_experiment`] — `ShardedDb` implements
-/// [`PatternSubstrate`], so the whole path stack runs unchanged; the
-/// shard layer only changes *where the records live* during the
-/// screening traversals (per-shard streaming for item sets, a resident
-/// union for graph/sequence shards — DESIGN.md "Out-of-core shards").
-fn run_path_sharded(
-    spec: &ExperimentSpec,
-    shards: usize,
-    dir: &str,
-) -> spp::Result<spp::coordinator::ExperimentResult> {
-    use spp::data::registry::ShardedDataset;
-    use spp::path::{compute_path_boosting, compute_path_spp, PathResult};
-
-    fn run<S: PatternSubstrate>(
-        db: &S,
-        y: &[f64],
-        task: Task,
-        method: Method,
-        cfg: &PathConfig,
-    ) -> spp::Result<PathResult> {
-        match method {
-            Method::Spp => compute_path_spp(db, y, task, cfg),
-            Method::Boosting => compute_path_boosting(db, y, task, cfg),
-        }
-    }
-
-    let info = registry::info(&spec.dataset)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{}'", spec.dataset))?;
-    let data =
-        registry::lookup_sharded(&spec.dataset, spec.scale, shards, std::path::Path::new(dir))?;
-    let t = std::time::Instant::now();
-    let path = match &data {
-        ShardedDataset::Itemsets { db, y } => run(db, y, info.task, spec.method, &spec.cfg)?,
-        ShardedDataset::Graphs { db, y } => run(db, y, info.task, spec.method, &spec.cfg)?,
-        ShardedDataset::Sequences { db, y } => run(db, y, info.task, spec.method, &spec.cfg)?,
-        ShardedDataset::Tabular { db, y } => run(db, y, info.task, spec.method, &spec.cfg)?,
-    };
-    eprintln!(
-        "sharded engine: {} shards in {dir}, peak resident columns {} bytes, {} reloads",
-        shards,
-        path.max_resident_bytes(),
-        path.total_spill_reloads()
-    );
-    let max_gap = path.points.iter().map(|p| p.gap).fold(0.0f64, f64::max);
-    Ok(spp::coordinator::ExperimentResult {
-        task: info.task,
-        n_records: data.n_records(),
-        lambda_max: path.lambda_max,
-        traverse_secs: path.total_traverse_secs(),
-        solve_secs: path.total_solve_secs(),
-        total_secs: path.total_secs(),
-        wall_secs: t.elapsed().as_secs_f64(),
-        traverse_nodes: path.total_nodes(),
-        final_active: path.points.last().map(|p| p.active.len()).unwrap_or(0),
-        max_gap,
-        path,
-        spec: spec.clone(),
-    })
-}
-
-/// SPP path with the XLA FISTA engine for the restricted solves.
-fn run_path_xla(spec: &ExperimentSpec) -> spp::Result<spp::coordinator::ExperimentResult> {
-    use spp::path::compute_path_spp_with;
-    use spp::runtime::{default_artifact_dir, engine::XlaRestricted, PjrtRuntime};
-
-    let info = registry::info(&spec.dataset)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{}'", spec.dataset))?;
-    let data = registry::lookup(&spec.dataset, spec.scale)?;
-    let rt = PjrtRuntime::cpu(&default_artifact_dir())?;
-    let solver = XlaRestricted::new(&rt);
-    let t = std::time::Instant::now();
-    let path = match &data {
-        Dataset::Graphs(g) => compute_path_spp_with(g, &g.y, info.task, &spec.cfg, &solver)?,
-        Dataset::Itemsets(tr) => {
-            compute_path_spp_with(&tr.db, &tr.y, info.task, &spec.cfg, &solver)?
-        }
-        Dataset::Sequences(s) => {
-            compute_path_spp_with(&s.db, &s.y, info.task, &spec.cfg, &solver)?
-        }
-        Dataset::Tabular(t) => {
-            compute_path_spp_with(&t.db, &t.y, info.task, &spec.cfg, &solver)?
-        }
-    };
-    eprintln!(
-        "xla engine: {} subproblem fallbacks to CD",
-        solver.fallbacks.get()
-    );
-    let max_gap = path.points.iter().map(|p| p.gap).fold(0.0f64, f64::max);
-    Ok(spp::coordinator::ExperimentResult {
-        task: info.task,
-        n_records: data.n_records(),
-        lambda_max: path.lambda_max,
-        traverse_secs: path.total_traverse_secs(),
-        solve_secs: path.total_solve_secs(),
-        total_secs: path.total_secs(),
-        wall_secs: t.elapsed().as_secs_f64(),
-        traverse_nodes: path.total_nodes(),
-        final_active: path.points.last().map(|p| p.active.len()).unwrap_or(0),
-        max_gap,
-        path,
-        spec: spec.clone(),
-    })
-}
-
-fn cmd_lambda_max(args: &cli::Args) -> spp::Result<()> {
-    let dataset = args.get_or("dataset", "splice");
-    let scale = args.get_f64("scale", 1.0)?;
-    let maxpat = args.get_usize("maxpat", 4)?;
-    let info = registry::info(dataset)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
-    let data = registry::lookup(dataset, scale)?;
-    let lm = match &data {
-        Dataset::Graphs(g) => lambda_max(g, &g.y, info.task, maxpat, 1),
-        Dataset::Itemsets(t) => lambda_max(&t.db, &t.y, info.task, maxpat, 1),
-        Dataset::Sequences(s) => lambda_max(&s.db, &s.y, info.task, maxpat, 1),
-        Dataset::Tabular(t) => lambda_max(&t.db, &t.y, info.task, maxpat, 1),
-    };
-    println!(
-        "dataset={dataset} n={} task={:?} maxpat={maxpat} lambda_max={:.6} b0={:.6} nodes={} pruned={}",
-        data.n_records(),
-        info.task,
-        lm.lambda_max,
-        lm.b0,
-        lm.stats.nodes,
-        lm.stats.pruned
-    );
-    Ok(())
-}
-
-fn cmd_mine(args: &cli::Args) -> spp::Result<()> {
-    let dataset = args.get_or("dataset", "splice");
-    let scale = args.get_f64("scale", 0.2)?;
-    let maxpat = args.get_usize("maxpat", 3)?;
-    let minsup = args.get_usize("minsup", 1)?;
-    let top = args.get_usize("top", 20)?;
-    let data = registry::lookup(dataset, scale)?;
-
-    struct Collect {
-        rows: Vec<(usize, String)>,
-    }
-    impl TreeVisitor for Collect {
-        fn visit(&mut self, node: &PatternNode<'_>) -> Walk {
-            self.rows
-                .push((node.support.len(), node.to_pattern().display()));
-            Walk::Descend
-        }
-    }
-    let mut c = Collect { rows: Vec::new() };
-    match &data {
-        Dataset::Graphs(g) => g.traverse(maxpat, minsup, &mut c),
-        Dataset::Itemsets(t) => t.db.traverse(maxpat, minsup, &mut c),
-        Dataset::Sequences(s) => s.db.traverse(maxpat, minsup, &mut c),
-        Dataset::Tabular(t) => t.db.traverse(maxpat, minsup, &mut c),
-    }
-    c.rows.sort_by(|a, b| b.0.cmp(&a.0));
-    println!(
-        "dataset={dataset} scale={scale} maxpat={maxpat} minsup={minsup}: {} patterns",
-        c.rows.len()
-    );
-    for (sup, pat) in c.rows.into_iter().take(top) {
-        println!("  support={sup:<6} {pat}");
-    }
-    Ok(())
-}
-
-fn cmd_selftest(args: &cli::Args) -> spp::Result<()> {
-    use spp::runtime::{default_artifact_dir, PjrtRuntime, XlaFistaSolver, XlaSppcScorer};
-    use spp::screening::fold_weights;
-    use spp::solver::CdSolver;
-    use spp::testutil::SplitMix64;
-
-    let dir = args
-        .flag("artifacts")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(default_artifact_dir);
-    let rt = PjrtRuntime::cpu(&dir)?;
-    println!("platform: {}", rt.platform());
-
-    // 1) SPPC scorer vs the Rust fold
-    let mut rng = SplitMix64::new(99);
-    let n = 700;
-    let y: Vec<f64> = (0..n).map(|_| if rng.coin(0.5) { 1.0 } else { -1.0 }).collect();
-    let theta: Vec<f64> = (0..n).map(|_| rng.gauss() * 0.1).collect();
-    let (wpos, wneg) = fold_weights(Task::Classification, &y, &theta);
-    let supports: Vec<Vec<u32>> = (0..300)
-        .map(|_| {
-            let m = rng.range(1, 60);
-            rng.sample_distinct(n, m).into_iter().map(|i| i as u32).collect()
-        })
-        .collect();
-    let scorer = XlaSppcScorer::new(&rt, n)?;
-    let scores = scorer.score(&supports, &wpos, &wneg, 0.3)?;
-    let mut max_err = 0.0f64;
-    for (sup, sc) in supports.iter().zip(&scores) {
-        let pos: f64 = sup.iter().map(|&i| wpos[i as usize]).sum();
-        let neg: f64 = sup.iter().map(|&i| wneg[i as usize]).sum();
-        let v = sup.len() as f64;
-        let want = pos.max(-neg) + 0.3 * v.sqrt();
-        max_err = max_err.max((sc.sppc - want).abs());
-    }
-    anyhow::ensure!(max_err < 1e-3, "sppc mismatch: {max_err}");
-    println!(
-        "sppc scorer OK (max err {max_err:.2e} over {} patterns)",
-        scores.len()
-    );
-
-    // 2) FISTA solver vs CD
-    let supports2: Vec<Vec<u32>> = supports.iter().take(40).cloned().collect();
-    let yv: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
-    let xs = XlaFistaSolver::new(&rt).solve(Task::Regression, &supports2, &yv, 2.0)?;
-    let cd = CdSolver::default().solve(Task::Regression, &supports2, &yv, 2.0, None);
-    let rel = (xs.primal - cd.primal).abs() / cd.primal.abs().max(1.0);
-    anyhow::ensure!(rel < 1e-3, "fista vs cd primal mismatch: {rel}");
-    println!(
-        "fista solver OK (primal {:.6} vs cd {:.6}, {} execs)",
-        xs.primal, cd.primal, xs.execs
-    );
-    println!("selftest OK");
-    Ok(())
-}
-
-fn cmd_datasets() -> spp::Result<()> {
-    let (name, kind, task) = ("name", "kind", "task");
-    println!("{name:<14} {kind:<8} {task:<15} paper_n");
-    for d in registry::ALL {
-        println!(
-            "{:<14} {:<8} {:<15} {}",
-            d.name,
-            format!("{:?}", d.kind).to_lowercase(),
-            format!("{:?}", d.task).to_lowercase(),
-            d.paper_n
-        );
-    }
-    Ok(())
 }

@@ -1,0 +1,663 @@
+//! The one λ-loop (paper Algorithm 1) behind every path engine.
+//!
+//! Historically the repo carried three hand-cloned copies of the
+//! regularization-path loop — the SPP engine, the boosting baseline,
+//! and (by transitivity) every CV fold.  [`PathDriver`] is the single
+//! copy: it owns the per-λ scaffolding every method shares —
+//!
+//! * the λ_max search, its degeneracy guard, and the log grid;
+//! * the [`SupportPool`] with its column layout, memory budget, and
+//!   spill policy;
+//! * the chunk walk over the grid tail;
+//! * per-λ budget enforcement, [`SpillStats`] delta accounting, the
+//!   active-set snapshot, and [`PathPoint`] emission —
+//!
+//! and delegates *what happens at one λ* to an [`ActiveSetStrategy`]:
+//! [`SppStrategy`] (screen → restricted solve, unifying the scratch,
+//! screening-forest, and range-chunk shapes behind the `screen_at`
+//! seam) and [`BoostingStrategy`] (constraint-generation rounds).  The
+//! public entry points `compute_path_spp{,_with}` and
+//! `compute_path_boosting` in [`crate::path`] are thin wrappers that
+//! pick a strategy and run the driver; `path/cv.rs` folds call those
+//! wrappers, so every fold runs this loop too.
+//!
+//! The driver is deliberately *not* where engine shapes live: a new
+//! path method (e.g. the selective-inference layer of ROADMAP item 5)
+//! is one new strategy — it inherits the grid, the pool, the spill
+//! accounting, and the telemetry for free, and its paths are
+//! comparable point-for-point with the existing methods because every
+//! strategy emits the same [`PathPoint`] currency.
+//!
+//! Bit-identity contract: the driver performs the exact operation
+//! sequence of the pre-refactor loops (pre-mine → screen → assemble →
+//! solve → certify → enforce → snapshot), so paths are bit-for-bit
+//! what they were — pinned by `tests/integration_dispatch.rs` across
+//! all four substrates × forest/scratch × range-chunk × threads.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::boosting::{solve_lambda as boosting_solve, BoostingConfig};
+use crate::columns::resolve_columns;
+use crate::mining::{Pattern, PatternSubstrate, TraverseStats};
+use crate::runtime::parallel::{self, ThreadStats};
+use crate::screening::certify::certify;
+use crate::screening::forest::ScreenForest;
+use crate::screening::lambda_max::{lambda_max, LambdaMax};
+use crate::screening::pool::{resolve_memory_budget, SpillStats, SupportId, SupportPool};
+use crate::screening::range;
+use crate::screening::sppc::{screen_pass, Survivor};
+use crate::solver::Task;
+
+use super::working_set::WorkingSet;
+use super::{
+    lambda_grid, PathConfig, PathPoint, PathResult, RestrictedSolver, ReuseStats,
+};
+
+/// Mutable path state owned by the driver and shared with the
+/// strategy: the column pool, the working set, and the warm-start
+/// weights/intercept.  A strategy mutates these in [`ActiveSetStrategy::step`];
+/// the driver reads them back for the per-λ active-set snapshot.
+pub struct PathState {
+    /// Column-interning arena spanning the whole path (ids stay stable
+    /// across λ steps, so warm starts and dedup survive every engine
+    /// shape).
+    pub pool: SupportPool,
+    /// Resolved resident-byte ceiling (`0` = unlimited); strategies
+    /// consult it before forest walks / solves that read columns by id.
+    pub budget: usize,
+    /// Working set of the most recent restricted solve.
+    pub ws: WorkingSet,
+    /// Optimal weights aligned with `ws`.
+    pub w: Vec<f64>,
+    /// Intercept.
+    pub b: f64,
+}
+
+/// What one λ step reports back to the driver: the telemetry half of a
+/// [`PathPoint`] (the model half — active set, weights, intercept —
+/// is read from [`PathState`]).
+pub struct StepOutcome {
+    pub gap: f64,
+    pub traverse_secs: f64,
+    pub solve_secs: f64,
+    pub stats: TraverseStats,
+    pub rounds: usize,
+    pub cd_epochs: usize,
+    pub reuse: ReuseStats,
+    pub threads: ThreadStats,
+}
+
+/// One path method: how the active set is produced at each λ.  The
+/// driver calls `init` once (from the analytic λ_max solution), then
+/// walks the grid tail in chunks of `chunk_span()` points, calling
+/// `begin_chunk` once per chunk and `step` once per λ.
+pub trait ActiveSetStrategy<S: PatternSubstrate> {
+    /// Whether the pool may enforce its budget *inside* `intern`.
+    /// Only safe when no engine re-reads previously-interned columns
+    /// mid-screen (the from-scratch per-λ SPP shape); forest-walking
+    /// engines restore residency per walk and spill between phases.
+    fn spill_on_intern(&self, cfg: &PathConfig) -> bool;
+
+    /// Grid points covered by one chunk: `1` = per-λ (the paper's
+    /// Algorithm 1 cadence), `C > 1` = the range-based chunked shape.
+    fn chunk_span(&self) -> usize;
+
+    /// Seed strategy state from the λ_max solution (dual certificate,
+    /// slacks) before the first chunk.
+    fn init(&mut self, lm: &LambdaMax);
+
+    /// Once per chunk, before its λ steps (e.g. the range-based SPP
+    /// pre-mine).  Default: nothing.
+    fn begin_chunk(
+        &mut self,
+        db: &S,
+        y: &[f64],
+        task: Task,
+        cfg: &PathConfig,
+        chunk_lams: &[f64],
+        st: &mut PathState,
+    ) {
+        let _ = (db, y, task, cfg, chunk_lams, st);
+    }
+
+    /// One λ step: produce the active set and the solution at `lam`,
+    /// mutating `st.{ws, w, b}` (and any warm-start state the strategy
+    /// carries).  `j` is the λ's index within its chunk, `span` the
+    /// chunk's length.
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &mut self,
+        db: &S,
+        y: &[f64],
+        task: Task,
+        cfg: &PathConfig,
+        j: usize,
+        span: usize,
+        lam: f64,
+        st: &mut PathState,
+    ) -> StepOutcome;
+}
+
+/// The shared λ-loop.  Construct one per path over a [`PathConfig`],
+/// pick a strategy, and [`PathDriver::run`] it.
+pub struct PathDriver<'c> {
+    cfg: &'c PathConfig,
+}
+
+impl<'c> PathDriver<'c> {
+    pub fn new(cfg: &'c PathConfig) -> Self {
+        PathDriver { cfg }
+    }
+
+    /// Algorithm 1's outer loop: λ_max + guard + grid, pool setup,
+    /// chunk walk, and per-λ `step` → budget enforcement → spill
+    /// deltas → active snapshot → [`PathPoint`].
+    pub fn run<S, A>(
+        &self,
+        db: &S,
+        y: &[f64],
+        task: Task,
+        strategy: &mut A,
+    ) -> crate::Result<PathResult>
+    where
+        S: PatternSubstrate,
+        A: ActiveSetStrategy<S>,
+    {
+        let cfg = self.cfg;
+        let n = y.len();
+        anyhow::ensure!(
+            db.n_records() == n,
+            "database has {} records but y has {n} targets",
+            db.n_records()
+        );
+
+        // λ_0 = λ_max; analytic zero solution + its dual certificate.
+        // The λ_max search stays sequential: its envelope pruning
+        // tightens with the best value found so far, which is
+        // traversal-order-dependent — sharing it across workers would
+        // change node counts run to run.
+        let t0 = Instant::now();
+        let lm = lambda_max(db, y, task, cfg.maxpat, cfg.minsup);
+        let lmax_secs = t0.elapsed().as_secs_f64();
+        super::lambda_max_guard(lm.lambda_max, task)?;
+        let grid = lambda_grid(lm.lambda_max, cfg.n_lambdas, cfg.lambda_min_ratio);
+
+        let mut points: Vec<PathPoint> = Vec::with_capacity(grid.len());
+        points.push(PathPoint {
+            lambda: grid[0],
+            active: Vec::new(),
+            b: lm.b0,
+            gap: 0.0,
+            traverse_secs: lmax_secs,
+            solve_secs: 0.0,
+            stats: lm.stats,
+            working_size: 0,
+            rounds: 1,
+            cd_epochs: 0,
+            reuse: ReuseStats::default(),
+            threads: ThreadStats::sequential(),
+            spill: SpillStats::default(),
+        });
+
+        let mut st = PathState {
+            pool: SupportPool::with_layout(resolve_columns(cfg.columns)),
+            budget: resolve_memory_budget(cfg.memory_budget),
+            ws: WorkingSet::new(),
+            w: Vec::new(),
+            b: lm.b0,
+        };
+        st.pool.set_memory_budget(st.budget);
+        st.pool.set_spill_on_intern(strategy.spill_on_intern(cfg));
+        let mut spill_base = st.pool.spill_stats();
+        strategy.init(&lm);
+
+        let chunk_size = strategy.chunk_span().max(1);
+        let tail = &grid[1..];
+        let mut k = 0usize;
+        while k < tail.len() {
+            let span = chunk_size.min(tail.len() - k);
+            let chunk_lams = &tail[k..k + span];
+            strategy.begin_chunk(db, y, task, cfg, chunk_lams, &mut st);
+
+            for (j, &lam) in chunk_lams.iter().enumerate() {
+                let out = strategy.step(db, y, task, cfg, j, span, lam, &mut st);
+
+                // settle the pool back under the budget and account
+                // this λ's spill traffic (deltas of the lifetime
+                // counters; a chunk pre-mine's traffic lands on its
+                // leading λ).
+                st.pool.enforce_budget();
+                let spill_now = st.pool.spill_stats();
+                let spill = SpillStats {
+                    reloaded: spill_now.reloaded - spill_base.reloaded,
+                    evicted: spill_now.evicted - spill_base.evicted,
+                    ..spill_now
+                };
+                spill_base = spill_now;
+
+                let active: Vec<(Pattern, f64)> = st
+                    .ws
+                    .patterns
+                    .iter()
+                    .zip(&st.w)
+                    .filter(|(_, &wi)| wi != 0.0)
+                    .map(|(p, &wi)| (p.clone(), wi))
+                    .collect();
+                points.push(PathPoint {
+                    lambda: lam,
+                    active,
+                    b: st.b,
+                    gap: out.gap,
+                    traverse_secs: out.traverse_secs,
+                    solve_secs: out.solve_secs,
+                    stats: out.stats,
+                    working_size: st.ws.len(),
+                    rounds: out.rounds,
+                    cd_epochs: out.cd_epochs,
+                    reuse: out.reuse,
+                    threads: out.threads,
+                    spill,
+                });
+            }
+            k += span;
+        }
+
+        Ok(PathResult {
+            lambda_max: lm.lambda_max,
+            points,
+        })
+    }
+}
+
+/// Â for one λ: survivors ∪ previously-active patterns (the latter are
+/// kept even if tolerance slop screened them; safety tests verify this
+/// set is a superset of the true active set).  Patterns with
+/// *identical* support columns — id equality in the pool — are
+/// collapsed to one representative: redundant columns change neither
+/// the optimal objective nor the fitted model, and dominate |Â| on
+/// dense data.  Previous representatives are inserted first so warm
+/// starts transfer exactly.
+fn assemble_working_set(prev: &WorkingSet, w: &[f64], survivors: Vec<Survivor>) -> WorkingSet {
+    let mut next = WorkingSet::new();
+    let mut seen: HashMap<SupportId, usize> = HashMap::new();
+    for (i, p) in prev.patterns.iter().enumerate() {
+        if w[i] != 0.0 {
+            let sid = prev.support_ids[i];
+            let idx = next.insert(p.clone(), sid);
+            seen.entry(sid).or_insert(idx);
+        }
+    }
+    for s in survivors {
+        if seen.contains_key(&s.support) {
+            continue;
+        }
+        let idx = next.insert(s.pattern, s.support);
+        seen.insert(s.support, idx);
+    }
+    next
+}
+
+/// One λ's screening pass: on a stored forest when one exists
+/// (persistent or chunk-local), from scratch otherwise.  The single
+/// dispatch point of the per-λ loop, shared by every SPP engine shape.
+#[allow(clippy::too_many_arguments)]
+fn screen_at<S: PatternSubstrate>(
+    db: &S,
+    task: Task,
+    y: &[f64],
+    theta: &[f64],
+    radius: f64,
+    cfg: &PathConfig,
+    threads: usize,
+    forest: Option<&mut ScreenForest>,
+    pool: &mut SupportPool,
+) -> (Vec<Survivor>, TraverseStats, ReuseStats, ThreadStats) {
+    match forest {
+        Some(f) => {
+            let out = f.screen(db, task, y, theta, radius, true, threads, pool);
+            let reuse = ReuseStats {
+                forest_hits: out.forest_hits,
+                cert_skips: out.cert_skips,
+                reopened: out.reopened,
+                ..ReuseStats::default()
+            };
+            (out.survivors, out.stats, reuse, out.threads)
+        }
+        None => {
+            let (survivors, stats, tstats) = screen_pass(
+                db, task, y, theta, radius, true, cfg.maxpat, cfg.minsup, threads, pool,
+            );
+            (survivors, stats, ReuseStats::default(), tstats)
+        }
+    }
+}
+
+/// The SPP strategy (paper Algorithm 1): per λ, one screening pass
+/// with the SPP rule built from the previous λ's primal/dual pair,
+/// then *one* restricted solve on Â.  Unifies the three screening
+/// shapes behind the `screen_at` seam:
+///
+/// * **forest** (`reuse_forest`, the default) — a persistent
+///   [`ScreenForest`] re-evaluated in place across λs;
+/// * **scratch** (`--no-reuse`) — the paper-literal traversal per λ;
+/// * **range-chunk** (`range_chunk > 1`) — one interval-radius
+///   pre-mine per chunk ([`range::interval_radius`]) materializes
+///   every subtree any λ in the chunk can need, and each λ re-derives
+///   its exact survivor set from the stored columns (a chunk-local
+///   forest when `reuse_forest` is off, so the ablation baseline never
+///   carries state across chunks).
+///
+/// All shapes produce bit-identical paths.
+pub struct SppStrategy<'a> {
+    solver: &'a dyn RestrictedSolver,
+    /// Resolved once for the whole path: `--threads 1` is the
+    /// sequential engine, anything else is bit-identical to it.
+    threads: usize,
+    /// Resolved once: `--range-chunk 1` is the per-λ engine.
+    chunk_size: usize,
+    chunked: bool,
+    forest: Option<ScreenForest>,
+    /// Chunked mode without forest reuse screens against a chunk-local
+    /// forest instead (fresh per chunk; the SupportPool still spans the
+    /// whole path, so ids stay stable for warm starts and dedup).
+    chunk_forest: Option<ScreenForest>,
+    slack: Vec<f64>,
+    theta: Vec<f64>,
+    // Carry of the chunk pre-mine, merged into the chunk-leading λ's
+    // telemetry by `step`.
+    chunk_mine: TraverseStats,
+    chunk_mine_reuse: ReuseStats,
+    chunk_mine_threads: ThreadStats,
+    chunk_mine_secs: f64,
+}
+
+impl<'a> SppStrategy<'a> {
+    pub fn new(cfg: &PathConfig, solver: &'a dyn RestrictedSolver) -> Self {
+        let chunk_size = range::resolve_range_chunk(cfg.range_chunk);
+        SppStrategy {
+            solver,
+            threads: parallel::resolve_threads(cfg.threads),
+            chunk_size,
+            chunked: chunk_size > 1,
+            forest: cfg
+                .reuse_forest
+                .then(|| ScreenForest::new(cfg.maxpat, cfg.minsup)),
+            chunk_forest: None,
+            slack: Vec::new(),
+            theta: Vec::new(),
+            chunk_mine: TraverseStats::default(),
+            chunk_mine_reuse: ReuseStats::default(),
+            chunk_mine_threads: ThreadStats::sequential(),
+            chunk_mine_secs: 0.0,
+        }
+    }
+}
+
+impl<S: PatternSubstrate> ActiveSetStrategy<S> for SppStrategy<'_> {
+    fn spill_on_intern(&self, cfg: &PathConfig) -> bool {
+        // Budget enforcement *inside* `intern` is only safe for
+        // from-scratch per-λ screening: forest walks (persistent or
+        // chunk-local) read previously-interned columns by id, so
+        // those engines restore full residency per walk and spill
+        // between phases instead (module docs of `screening::pool`).
+        !cfg.reuse_forest && !self.chunked
+    }
+
+    fn chunk_span(&self) -> usize {
+        self.chunk_size
+    }
+
+    fn init(&mut self, lm: &LambdaMax) {
+        self.slack = lm.slack0.clone();
+        self.theta = lm.slack0.iter().map(|&s| s / lm.lambda_max).collect();
+    }
+
+    /// The chunk pre-mine: ONE traversal at the interval radius of the
+    /// pair entering the chunk covers every λ the chunk holds
+    /// (range-based SPP; survivors are discarded — the per-λ screens
+    /// re-derive their exact sets from the stored columns).
+    fn begin_chunk(
+        &mut self,
+        db: &S,
+        y: &[f64],
+        task: Task,
+        cfg: &PathConfig,
+        chunk_lams: &[f64],
+        st: &mut PathState,
+    ) {
+        if self.chunked && !cfg.reuse_forest {
+            self.chunk_forest = Some(ScreenForest::new(cfg.maxpat, cfg.minsup));
+        }
+        self.chunk_mine = TraverseStats::default();
+        self.chunk_mine_reuse = ReuseStats::default();
+        self.chunk_mine_threads = ThreadStats::sequential();
+        self.chunk_mine_secs = 0.0;
+        let span = chunk_lams.len();
+        if span > 1 {
+            let l1: f64 = st.w.iter().map(|x| x.abs()).sum();
+            let r_chunk = range::interval_radius(
+                task,
+                y,
+                &self.theta,
+                &self.slack,
+                l1,
+                chunk_lams[span - 1],
+                chunk_lams[0],
+            );
+            if st.budget > 0 {
+                st.pool.ensure_all_resident();
+            }
+            let f = self
+                .forest
+                .as_mut()
+                .or(self.chunk_forest.as_mut())
+                .expect("chunked mode always screens on a forest");
+            let t = Instant::now();
+            let (_, mine_stats, mine_reuse, mine_threads) = screen_at(
+                db,
+                task,
+                y,
+                &self.theta,
+                r_chunk,
+                cfg,
+                self.threads,
+                Some(f),
+                &mut st.pool,
+            );
+            self.chunk_mine_secs = t.elapsed().as_secs_f64();
+            self.chunk_mine = mine_stats;
+            self.chunk_mine_reuse = mine_reuse;
+            self.chunk_mine_threads = mine_threads;
+        }
+    }
+
+    fn step(
+        &mut self,
+        db: &S,
+        y: &[f64],
+        task: Task,
+        cfg: &PathConfig,
+        j: usize,
+        span: usize,
+        lam: f64,
+        st: &mut PathState,
+    ) -> StepOutcome {
+        // (1) SPP rule from the previous pair, evaluated at the new λ —
+        // on the stored forest when one exists (persistent or
+        // chunk-local), from scratch otherwise.  The radius comes from
+        // the same kernel the interval bound is built on, so the
+        // endpoint rule's per-λ ≤ chunk dominance is exact.
+        let l1: f64 = st.w.iter().map(|x| x.abs()).sum();
+        let radius = range::lambda_radius(task, y, &self.theta, &self.slack, l1, lam);
+
+        // A forest walk reads every stored column by id, so restore
+        // full residency first — the transient peak is the forest-mode
+        // budget caveat; `--no-reuse --range-chunk 1` holds the
+        // ceiling mid-screen (see `PathConfig::memory_budget`).
+        if st.budget > 0 && (self.forest.is_some() || self.chunk_forest.is_some()) {
+            st.pool.ensure_all_resident();
+        }
+        let t1 = Instant::now();
+        let engine = self.forest.as_mut().or(self.chunk_forest.as_mut());
+        let (survivors, stats, mut reuse, tstats) = screen_at(
+            db,
+            task,
+            y,
+            &self.theta,
+            radius,
+            cfg,
+            self.threads,
+            engine,
+            &mut st.pool,
+        );
+        let mut traverse_secs = t1.elapsed().as_secs_f64();
+        let mut stats = stats;
+        // chunk telemetry: a hit = a non-leading λ fully served by its
+        // chunk's stored tree (no substrate re-entry); the pre-mine's
+        // cost AND its forest telemetry land on the chunk-leading λ,
+        // so chunked totals stay honest.
+        reuse.chunk_hit = j > 0 && span > 1 && stats.nodes == 0;
+        let mut tstats = tstats;
+        if j == 0 {
+            reuse.forest_hits += self.chunk_mine_reuse.forest_hits;
+            reuse.cert_skips += self.chunk_mine_reuse.cert_skips;
+            reuse.reopened += self.chunk_mine_reuse.reopened;
+            reuse.chunk_mine_nodes = self.chunk_mine.nodes;
+            stats.nodes += self.chunk_mine.nodes;
+            stats.pruned += self.chunk_mine.pruned;
+            traverse_secs += self.chunk_mine_secs;
+            // the pre-mine is usually this λ's dominant screening
+            // phase; report whichever pass farmed more tasks
+            if self.chunk_mine_threads.tasks > tstats.tasks {
+                tstats = self.chunk_mine_threads;
+            }
+        }
+
+        // (2) Â = survivors ∪ previously-active, deduped by SupportId.
+        let new_ws = assemble_working_set(&st.ws, &st.w, survivors);
+        let w0 = new_ws.transfer_weights(&st.ws, &st.w);
+        st.ws = new_ws;
+
+        // (3) restricted solve, warm-started, on borrowed column views
+        // — after making exactly the working set's columns resident
+        // (they are exempt from the reload's enforcement pass).
+        if st.budget > 0 {
+            st.pool.ensure_resident(&st.ws.support_ids);
+        }
+        let t2 = Instant::now();
+        let sol = {
+            let cols = st.ws.columns(&st.pool);
+            self.solver.solve_restricted(task, &cols, y, lam, &w0, st.b)
+        };
+        let solve_secs = t2.elapsed().as_secs_f64();
+        st.w = sol.w.clone();
+        st.b = sol.b;
+        self.slack = sol.slack.clone();
+        self.theta = sol.theta.clone();
+        reuse.solver_screened = sol.screened;
+
+        // (4) optional exact feasibility pass for the *next* screening.
+        if cfg.certify {
+            let t3 = Instant::now();
+            let c = certify(db, y, task, &self.theta, cfg.maxpat, cfg.minsup);
+            traverse_secs += t3.elapsed().as_secs_f64();
+            stats.nodes += c.stats.nodes;
+            stats.pruned += c.stats.pruned;
+            self.theta = c.theta;
+        }
+
+        StepOutcome {
+            gap: sol.gap,
+            traverse_secs,
+            solve_secs,
+            stats,
+            rounds: 1,
+            cd_epochs: sol.epochs,
+            reuse,
+            threads: tstats,
+        }
+    }
+}
+
+/// The boosting baseline (paper §2.2 / §4): per λ, constraint-
+/// generation rounds (most-violating search + solve per round) on a
+/// working set inherited across the path.  `cfg.range_chunk` is
+/// ignored (there is no screening pass to chunk), so `chunk_span` is
+/// pinned at 1.
+pub struct BoostingStrategy {
+    bcfg: BoostingConfig,
+}
+
+impl BoostingStrategy {
+    pub fn new(cfg: &PathConfig) -> Self {
+        BoostingStrategy {
+            bcfg: BoostingConfig {
+                k_add: cfg.k_add,
+                viol_tol: cfg.viol_tol,
+                max_rounds: 10_000,
+                cd: cfg.cd,
+            },
+        }
+    }
+}
+
+impl<S: PatternSubstrate> ActiveSetStrategy<S> for BoostingStrategy {
+    fn spill_on_intern(&self, _cfg: &PathConfig) -> bool {
+        false
+    }
+
+    fn chunk_span(&self) -> usize {
+        1
+    }
+
+    fn init(&mut self, _lm: &LambdaMax) {}
+
+    fn step(
+        &mut self,
+        db: &S,
+        y: &[f64],
+        task: Task,
+        cfg: &PathConfig,
+        _j: usize,
+        _span: usize,
+        lam: f64,
+        st: &mut PathState,
+    ) -> StepOutcome {
+        // Boosting interleaves searching, interning and column reads
+        // inside each round, so the budget is enforced at λ boundaries:
+        // full residency during the λ, spilled back down (by the
+        // driver) before the gauges are recorded.
+        if st.budget > 0 {
+            st.pool.ensure_all_resident();
+        }
+        let out = boosting_solve(
+            db,
+            y,
+            task,
+            lam,
+            cfg.maxpat,
+            cfg.minsup,
+            &mut st.pool,
+            &mut st.ws,
+            &mut st.w,
+            &mut st.b,
+            &self.bcfg,
+        );
+        StepOutcome {
+            gap: out.solution.gap,
+            traverse_secs: out.traverse_secs,
+            solve_secs: out.solve_secs,
+            stats: out.stats,
+            rounds: out.rounds,
+            cd_epochs: out.solution.epochs,
+            reuse: ReuseStats {
+                solver_screened: out.solution.screened,
+                ..ReuseStats::default()
+            },
+            // boosting's most-violating search tracks a global top-k —
+            // order-dependent pruning, kept sequential
+            threads: ThreadStats::sequential(),
+        }
+    }
+}

@@ -50,25 +50,31 @@
 //! [`ReuseStats::chunk_hit`]).  `C = 1` (the default) is the classic
 //! one-search-per-λ engine; `0` resolves the `SPP_RANGE_CHUNK`
 //! environment variable (CI's test-matrix runs the suite both ways).
+//!
+//! All of the above is **one loop**: the per-λ scaffolding (λ_max
+//! guard + grid, the [`screening::pool::SupportPool`](crate::screening::pool::SupportPool)
+//! with its budget and spill accounting, chunk walk, [`PathPoint`]
+//! emission) lives once in [`driver::PathDriver`], parameterized by an
+//! [`driver::ActiveSetStrategy`] — [`driver::SppStrategy`] and
+//! [`driver::BoostingStrategy`] are the two shipped methods, and the
+//! `compute_path_*` entry points below are thin wrappers over them.
+//! CV folds call those wrappers, so K-fold runs the same driver.  A
+//! new path method (e.g. a selective-inference layer) is one new
+//! strategy, not a new loop.
 
 pub mod cv;
+pub mod driver;
 pub mod working_set;
 
-use std::collections::HashMap;
-use std::time::Instant;
-
-use crate::boosting::{solve_lambda as boosting_solve, BoostingConfig};
-use crate::columns::{resolve_columns, ColumnLayout, ColumnView};
+use crate::columns::{ColumnLayout, ColumnView};
 use crate::mining::{Pattern, PatternSubstrate, TraverseStats};
-use crate::runtime::parallel::{self, ThreadStats};
-use crate::screening::certify::certify;
-use crate::screening::forest::ScreenForest;
-use crate::screening::lambda_max::lambda_max;
-use crate::screening::pool::{resolve_memory_budget, SpillStats, SupportId, SupportPool};
-use crate::screening::range;
-use crate::screening::sppc::{screen_pass, Survivor};
+use crate::runtime::parallel::ThreadStats;
+use crate::screening::pool::SpillStats;
 use crate::solver::{CdConfig, CdSolver, Task};
-use working_set::WorkingSet;
+
+pub use driver::{
+    ActiveSetStrategy, BoostingStrategy, PathDriver, PathState, SppStrategy, StepOutcome,
+};
 
 /// Path configuration shared by both methods.
 #[derive(Clone, Copy, Debug)]
@@ -376,83 +382,17 @@ fn lambda_max_guard(lambda_max: f64, task: Task) -> crate::Result<()> {
     )
 }
 
-/// Â for one λ: survivors ∪ previously-active patterns (the latter are
-/// kept even if tolerance slop screened them; safety tests verify this
-/// set is a superset of the true active set).  Patterns with
-/// *identical* support columns — id equality in the pool — are
-/// collapsed to one representative: redundant columns change neither
-/// the optimal objective nor the fitted model, and dominate |Â| on
-/// dense data.  Previous representatives are inserted first so warm
-/// starts transfer exactly.
-fn assemble_working_set(
-    prev: &WorkingSet,
-    w: &[f64],
-    survivors: Vec<Survivor>,
-) -> WorkingSet {
-    let mut next = WorkingSet::new();
-    let mut seen: HashMap<SupportId, usize> = HashMap::new();
-    for (i, p) in prev.patterns.iter().enumerate() {
-        if w[i] != 0.0 {
-            let sid = prev.support_ids[i];
-            let idx = next.insert(p.clone(), sid);
-            seen.entry(sid).or_insert(idx);
-        }
-    }
-    for s in survivors {
-        if seen.contains_key(&s.support) {
-            continue;
-        }
-        let idx = next.insert(s.pattern, s.support);
-        seen.insert(s.support, idx);
-    }
-    next
-}
-
-/// One λ's screening pass: on a stored forest when one exists
-/// (persistent or chunk-local), from scratch otherwise.  The single
-/// dispatch point of the per-λ loop, shared by every engine shape.
-#[allow(clippy::too_many_arguments)]
-fn screen_at<S: PatternSubstrate>(
-    db: &S,
-    task: Task,
-    y: &[f64],
-    theta: &[f64],
-    radius: f64,
-    cfg: &PathConfig,
-    threads: usize,
-    forest: Option<&mut ScreenForest>,
-    pool: &mut SupportPool,
-) -> (Vec<Survivor>, TraverseStats, ReuseStats, ThreadStats) {
-    match forest {
-        Some(f) => {
-            let out = f.screen(db, task, y, theta, radius, true, threads, pool);
-            let reuse = ReuseStats {
-                forest_hits: out.forest_hits,
-                cert_skips: out.cert_skips,
-                reopened: out.reopened,
-                ..ReuseStats::default()
-            };
-            (out.survivors, out.stats, reuse, out.threads)
-        }
-        None => {
-            let (survivors, stats, tstats) = screen_pass(
-                db, task, y, theta, radius, true, cfg.maxpat, cfg.minsup, threads, pool,
-            );
-            (survivors, stats, ReuseStats::default(), tstats)
-        }
-    }
-}
-
-/// Algorithm 1 with an explicit restricted-solver engine.
+/// Algorithm 1 with an explicit restricted-solver engine: the
+/// [`PathDriver`] running [`SppStrategy`].
 ///
 /// With `cfg.range_chunk > 1` the grid is solved in chunks: one
-/// substrate mine at the [`range::interval_radius`] per chunk (the
-/// range-based SPP bound, anchored at the pair entering the chunk)
-/// materializes every subtree any λ in the chunk can need into the
-/// screening forest; each λ then derives its exact survivor set from
-/// the stored columns.  A fresh chunk-local forest is used when
-/// `reuse_forest` is off, so the ablation baseline still never carries
-/// state across chunks.  All engine shapes produce bit-identical paths.
+/// substrate mine at the interval radius per chunk (the range-based
+/// SPP bound, anchored at the pair entering the chunk) materializes
+/// every subtree any λ in the chunk can need into the screening
+/// forest; each λ then derives its exact survivor set from the stored
+/// columns.  A fresh chunk-local forest is used when `reuse_forest` is
+/// off, so the ablation baseline still never carries state across
+/// chunks.  All engine shapes produce bit-identical paths.
 pub fn compute_path_spp_with<S: PatternSubstrate>(
     db: &S,
     y: &[f64],
@@ -460,334 +400,22 @@ pub fn compute_path_spp_with<S: PatternSubstrate>(
     cfg: &PathConfig,
     solver: &dyn RestrictedSolver,
 ) -> crate::Result<PathResult> {
-    let n = y.len();
-    anyhow::ensure!(
-        db.n_records() == n,
-        "database has {} records but y has {n} targets",
-        db.n_records()
-    );
-    // One resolution for the whole path: `--threads 1` is the
-    // sequential engine, anything else is bit-identical to it.  Same
-    // for the chunk size: `--range-chunk 1` is the per-λ engine.
-    let threads = parallel::resolve_threads(cfg.threads);
-    let chunk_size = range::resolve_range_chunk(cfg.range_chunk);
-    let chunked = chunk_size > 1;
-
-    // λ_0 = λ_max; analytic zero solution + its dual certificate.  The
-    // λ_max search stays sequential: its envelope pruning tightens with
-    // the best value found so far, which is traversal-order-dependent —
-    // sharing it across workers would change node counts run to run.
-    let t0 = Instant::now();
-    let lm = lambda_max(db, y, task, cfg.maxpat, cfg.minsup);
-    let lmax_secs = t0.elapsed().as_secs_f64();
-    lambda_max_guard(lm.lambda_max, task)?;
-    let grid = lambda_grid(lm.lambda_max, cfg.n_lambdas, cfg.lambda_min_ratio);
-
-    let mut points: Vec<PathPoint> = Vec::with_capacity(grid.len());
-    points.push(PathPoint {
-        lambda: grid[0],
-        active: Vec::new(),
-        b: lm.b0,
-        gap: 0.0,
-        traverse_secs: lmax_secs,
-        solve_secs: 0.0,
-        stats: lm.stats,
-        working_size: 0,
-        rounds: 1,
-        cd_epochs: 0,
-        reuse: ReuseStats::default(),
-        threads: ThreadStats::sequential(),
-        spill: SpillStats::default(),
-    });
-
-    // screening state from the previous λ
-    let mut pool = SupportPool::with_layout(resolve_columns(cfg.columns));
-    let budget = resolve_memory_budget(cfg.memory_budget);
-    pool.set_memory_budget(budget);
-    // Budget enforcement *inside* `intern` is only safe for from-scratch
-    // per-λ screening: forest walks (persistent or chunk-local) read
-    // previously-interned columns by id, so those engines restore full
-    // residency per walk and spill between phases instead (module docs
-    // of `screening::pool`).
-    pool.set_spill_on_intern(!cfg.reuse_forest && !chunked);
-    let mut spill_base = pool.spill_stats();
-    let mut forest = cfg
-        .reuse_forest
-        .then(|| ScreenForest::new(cfg.maxpat, cfg.minsup));
-    // Chunked mode without forest reuse screens against a chunk-local
-    // forest instead (fresh per chunk; the SupportPool still spans the
-    // whole path, so ids stay stable for warm starts and dedup).
-    let mut chunk_forest: Option<ScreenForest> = None;
-    let mut ws = WorkingSet::new();
-    let mut w: Vec<f64> = Vec::new();
-    let mut b = lm.b0;
-    let mut slack: Vec<f64> = lm.slack0.clone();
-    let mut theta: Vec<f64> = lm.slack0.iter().map(|&s| s / lm.lambda_max).collect();
-
-    let tail = &grid[1..];
-    let mut k = 0usize;
-    while k < tail.len() {
-        let span = chunk_size.min(tail.len() - k);
-        let chunk_lams = &tail[k..k + span];
-        if chunked && !cfg.reuse_forest {
-            chunk_forest = Some(ScreenForest::new(cfg.maxpat, cfg.minsup));
-        }
-
-        // (0) chunk pre-mine: ONE traversal at the interval radius of
-        // the pair entering the chunk covers every λ the chunk holds
-        // (range-based SPP; survivors are discarded — the per-λ screens
-        // below re-derive their exact sets from the stored columns).
-        let mut chunk_mine = TraverseStats::default();
-        let mut chunk_mine_reuse = ReuseStats::default();
-        let mut chunk_mine_threads = ThreadStats::sequential();
-        let mut chunk_mine_secs = 0.0f64;
-        if span > 1 {
-            let l1: f64 = w.iter().map(|x| x.abs()).sum();
-            let r_chunk = range::interval_radius(
-                task, y, &theta, &slack, l1, chunk_lams[span - 1], chunk_lams[0],
-            );
-            if budget > 0 {
-                pool.ensure_all_resident();
-            }
-            let f = forest
-                .as_mut()
-                .or_else(|| chunk_forest.as_mut())
-                .expect("chunked mode always screens on a forest");
-            let t = Instant::now();
-            let (_, mine_stats, mine_reuse, mine_threads) =
-                screen_at(db, task, y, &theta, r_chunk, cfg, threads, Some(f), &mut pool);
-            chunk_mine_secs = t.elapsed().as_secs_f64();
-            chunk_mine = mine_stats;
-            chunk_mine_reuse = mine_reuse;
-            chunk_mine_threads = mine_threads;
-        }
-
-        for (j, &lam) in chunk_lams.iter().enumerate() {
-            // (1) SPP rule from the previous pair, evaluated at the new
-            // λ — on the stored forest when one exists (persistent or
-            // chunk-local), from scratch otherwise.  The radius comes
-            // from the same kernel the interval bound is built on, so
-            // the endpoint rule's per-λ ≤ chunk dominance is exact.
-            let l1: f64 = w.iter().map(|x| x.abs()).sum();
-            let radius = range::lambda_radius(task, y, &theta, &slack, l1, lam);
-
-            // A forest walk reads every stored column by id, so restore
-            // full residency first — the transient peak is the
-            // forest-mode budget caveat; `--no-reuse --range-chunk 1`
-            // holds the ceiling mid-screen (see `PathConfig::memory_budget`).
-            if budget > 0 && (forest.is_some() || chunk_forest.is_some()) {
-                pool.ensure_all_resident();
-            }
-            let t1 = Instant::now();
-            let engine = forest.as_mut().or_else(|| chunk_forest.as_mut());
-            let (survivors, stats, mut reuse, tstats) =
-                screen_at(db, task, y, &theta, radius, cfg, threads, engine, &mut pool);
-            let mut traverse_secs = t1.elapsed().as_secs_f64();
-            let mut stats = stats;
-            // chunk telemetry: a hit = a non-leading λ fully served by
-            // its chunk's stored tree (no substrate re-entry); the
-            // pre-mine's cost AND its forest telemetry land on the
-            // chunk-leading λ, so chunked totals stay honest.
-            reuse.chunk_hit = j > 0 && span > 1 && stats.nodes == 0;
-            let mut tstats = tstats;
-            if j == 0 {
-                reuse.forest_hits += chunk_mine_reuse.forest_hits;
-                reuse.cert_skips += chunk_mine_reuse.cert_skips;
-                reuse.reopened += chunk_mine_reuse.reopened;
-                reuse.chunk_mine_nodes = chunk_mine.nodes;
-                stats.nodes += chunk_mine.nodes;
-                stats.pruned += chunk_mine.pruned;
-                traverse_secs += chunk_mine_secs;
-                // the pre-mine is usually this λ's dominant screening
-                // phase; report whichever pass farmed more tasks
-                if chunk_mine_threads.tasks > tstats.tasks {
-                    tstats = chunk_mine_threads;
-                }
-            }
-
-            // (2) Â = survivors ∪ previously-active, deduped by
-            // SupportId.
-            let new_ws = assemble_working_set(&ws, &w, survivors);
-            let w0 = new_ws.transfer_weights(&ws, &w);
-            ws = new_ws;
-
-            // (3) restricted solve, warm-started, on borrowed column
-            // views — after making exactly the working set's columns
-            // resident (they are exempt from the reload's enforcement
-            // pass).
-            if budget > 0 {
-                pool.ensure_resident(&ws.support_ids);
-            }
-            let t2 = Instant::now();
-            let cols = ws.columns(&pool);
-            let sol = solver.solve_restricted(task, &cols, y, lam, &w0, b);
-            let solve_secs = t2.elapsed().as_secs_f64();
-            w = sol.w.clone();
-            b = sol.b;
-            slack = sol.slack.clone();
-            theta = sol.theta.clone();
-            reuse.solver_screened = sol.screened;
-
-            // (4) optional exact feasibility pass for the *next*
-            // screening.
-            if cfg.certify {
-                let t3 = Instant::now();
-                let c = certify(db, y, task, &theta, cfg.maxpat, cfg.minsup);
-                traverse_secs += t3.elapsed().as_secs_f64();
-                stats.nodes += c.stats.nodes;
-                stats.pruned += c.stats.pruned;
-                theta = c.theta;
-            }
-
-            // (5) settle the pool back under the budget and account
-            // this λ's spill traffic (deltas of the lifetime counters;
-            // the chunk pre-mine's traffic lands on its leading λ).
-            pool.enforce_budget();
-            let spill_now = pool.spill_stats();
-            let spill = SpillStats {
-                reloaded: spill_now.reloaded - spill_base.reloaded,
-                evicted: spill_now.evicted - spill_base.evicted,
-                ..spill_now
-            };
-            spill_base = spill_now;
-
-            let active: Vec<(Pattern, f64)> = ws
-                .patterns
-                .iter()
-                .zip(&w)
-                .filter(|(_, &wi)| wi != 0.0)
-                .map(|(p, &wi)| (p.clone(), wi))
-                .collect();
-            points.push(PathPoint {
-                lambda: lam,
-                active,
-                b,
-                gap: sol.gap,
-                traverse_secs,
-                solve_secs,
-                stats,
-                working_size: ws.len(),
-                rounds: 1,
-                cd_epochs: sol.epochs,
-                reuse,
-                threads: tstats,
-                spill,
-            });
-        }
-        k += span;
-    }
-
-    Ok(PathResult {
-        lambda_max: lm.lambda_max,
-        points,
-    })
+    let mut strategy = SppStrategy::new(cfg, solver);
+    PathDriver::new(cfg).run(db, y, task, &mut strategy)
 }
 
-/// The boosting baseline over the same grid (paper §2.2 / §4).
-/// `cfg.range_chunk` is ignored (boosting has no screening pass to
-/// chunk); degenerate targets error exactly like the SPP path.
+/// The boosting baseline over the same grid (paper §2.2 / §4): the
+/// [`PathDriver`] running [`BoostingStrategy`].  `cfg.range_chunk` is
+/// ignored (boosting has no screening pass to chunk); degenerate
+/// targets error exactly like the SPP path.
 pub fn compute_path_boosting<S: PatternSubstrate>(
     db: &S,
     y: &[f64],
     task: Task,
     cfg: &PathConfig,
 ) -> crate::Result<PathResult> {
-    let n = y.len();
-    anyhow::ensure!(
-        db.n_records() == n,
-        "database has {} records but y has {n} targets",
-        db.n_records()
-    );
-
-    let t0 = Instant::now();
-    let lm = lambda_max(db, y, task, cfg.maxpat, cfg.minsup);
-    let lmax_secs = t0.elapsed().as_secs_f64();
-    lambda_max_guard(lm.lambda_max, task)?;
-    let grid = lambda_grid(lm.lambda_max, cfg.n_lambdas, cfg.lambda_min_ratio);
-
-    let bcfg = BoostingConfig {
-        k_add: cfg.k_add,
-        viol_tol: cfg.viol_tol,
-        max_rounds: 10_000,
-        cd: cfg.cd,
-    };
-
-    let mut points: Vec<PathPoint> = Vec::with_capacity(grid.len());
-    points.push(PathPoint {
-        lambda: grid[0],
-        active: Vec::new(),
-        b: lm.b0,
-        gap: 0.0,
-        traverse_secs: lmax_secs,
-        solve_secs: 0.0,
-        stats: lm.stats,
-        working_size: 0,
-        rounds: 1,
-        cd_epochs: 0,
-        reuse: ReuseStats::default(),
-        threads: ThreadStats::sequential(),
-        spill: SpillStats::default(),
-    });
-
-    let mut pool = SupportPool::with_layout(resolve_columns(cfg.columns));
-    let budget = resolve_memory_budget(cfg.memory_budget);
-    pool.set_memory_budget(budget);
-    let mut spill_base = pool.spill_stats();
-    let mut ws = WorkingSet::new();
-    let mut w: Vec<f64> = Vec::new();
-    let mut b = lm.b0;
-    for &lam in &grid[1..] {
-        // Boosting interleaves searching, interning and column reads
-        // inside each round, so the budget is enforced at λ boundaries:
-        // full residency during the λ, spilled back down before the
-        // gauges are recorded.
-        if budget > 0 {
-            pool.ensure_all_resident();
-        }
-        let out = boosting_solve(
-            db, y, task, lam, cfg.maxpat, cfg.minsup, &mut pool, &mut ws, &mut w, &mut b, &bcfg,
-        );
-        pool.enforce_budget();
-        let spill_now = pool.spill_stats();
-        let spill = SpillStats {
-            reloaded: spill_now.reloaded - spill_base.reloaded,
-            evicted: spill_now.evicted - spill_base.evicted,
-            ..spill_now
-        };
-        spill_base = spill_now;
-        let active: Vec<(Pattern, f64)> = ws
-            .patterns
-            .iter()
-            .zip(&w)
-            .filter(|(_, &wi)| wi != 0.0)
-            .map(|(p, &wi)| (p.clone(), wi))
-            .collect();
-        points.push(PathPoint {
-            lambda: lam,
-            active,
-            b,
-            gap: out.solution.gap,
-            traverse_secs: out.traverse_secs,
-            solve_secs: out.solve_secs,
-            stats: out.stats,
-            working_size: ws.len(),
-            rounds: out.rounds,
-            cd_epochs: out.solution.epochs,
-            reuse: ReuseStats {
-                solver_screened: out.solution.screened,
-                ..ReuseStats::default()
-            },
-            // boosting's most-violating search tracks a global top-k —
-            // order-dependent pruning, kept sequential
-            threads: ThreadStats::sequential(),
-            spill,
-        });
-    }
-
-    Ok(PathResult {
-        lambda_max: lm.lambda_max,
-        points,
-    })
+    let mut strategy = BoostingStrategy::new(cfg);
+    PathDriver::new(cfg).run(db, y, task, &mut strategy)
 }
 
 #[cfg(test)]

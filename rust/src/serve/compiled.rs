@@ -47,7 +47,7 @@
 use std::collections::BTreeMap;
 
 use crate::data::graph::{contains_subgraph, Graph, GraphDatabase};
-use crate::data::registry::Dataset;
+use crate::data::registry::{Dataset, RegistrySubstrate, SubstrateVisitor};
 use crate::data::sequence::Sequences;
 use crate::data::tabular::TabularData;
 use crate::data::Transactions;
@@ -235,14 +235,23 @@ impl CompiledModel {
     }
 
     /// Score a whole registry dataset; the dataset kind must match the
-    /// compiled kind.
+    /// compiled kind.  One visitor dispatch — the per-substrate batch
+    /// entrypoint is picked by [`BatchScore`], not a match ladder.
     pub fn score_dataset(&self, data: &Dataset, threads: usize) -> crate::Result<ScoreBatch> {
-        match data {
-            Dataset::Itemsets(t) => self.score_itemsets(&t.db.items, threads),
-            Dataset::Graphs(g) => self.score_graphs(&g.graphs, threads),
-            Dataset::Sequences(s) => self.score_sequences(&s.db.seqs, threads),
-            Dataset::Tabular(t) => self.score_tabular(&t.db.rows, threads),
+        struct Score<'a> {
+            compiled: &'a CompiledModel,
+            threads: usize,
         }
+        impl SubstrateVisitor for Score<'_> {
+            type Out = crate::Result<ScoreBatch>;
+            fn visit<S: RegistrySubstrate>(self, db: &S, _y: &[f64]) -> Self::Out {
+                S::score_rows(self.compiled, db.rows(), self.threads)
+            }
+        }
+        data.visit(Score {
+            compiled: self,
+            threads,
+        })
     }
 
     /// Chunked batch driver. Each chunk gets private scratch and a
@@ -292,6 +301,95 @@ impl CompiledModel {
             ops += o;
         }
         ScoreBatch { scores, ops }
+    }
+}
+
+/// The batch-scoring capability of a registry substrate: its owned
+/// record rows plus the compiled-matcher entrypoint that scores them.
+/// This is the serve-layer half of
+/// [`crate::data::registry::RegistrySubstrate`] — generic code reaches
+/// a substrate's batch kernel through `S::score_rows` instead of a
+/// per-kind match ladder, so adding a substrate means one `BatchScore`
+/// impl here, one registry row, and nothing else.
+pub trait BatchScore: PatternSubstrate {
+    /// The owned per-record row type the batch kernels consume
+    /// (`Vec<u32>` transactions/sequences, [`Graph`]s, `Vec<f64>`
+    /// tabular rows).
+    type Row: Sync;
+
+    /// The substrate's records, as stored.
+    fn rows(&self) -> &[Self::Row];
+
+    /// Score `rows` through `compiled`'s batch kernel; errors when the
+    /// model was compiled for a different substrate kind.
+    fn score_rows(
+        compiled: &CompiledModel,
+        rows: &[Self::Row],
+        threads: usize,
+    ) -> crate::Result<ScoreBatch>;
+}
+
+impl BatchScore for Transactions {
+    type Row = Vec<u32>;
+
+    fn rows(&self) -> &[Vec<u32>] {
+        &self.items
+    }
+
+    fn score_rows(
+        compiled: &CompiledModel,
+        rows: &[Vec<u32>],
+        threads: usize,
+    ) -> crate::Result<ScoreBatch> {
+        compiled.score_itemsets(rows, threads)
+    }
+}
+
+impl BatchScore for GraphDatabase {
+    type Row = Graph;
+
+    fn rows(&self) -> &[Graph] {
+        &self.graphs
+    }
+
+    fn score_rows(
+        compiled: &CompiledModel,
+        rows: &[Graph],
+        threads: usize,
+    ) -> crate::Result<ScoreBatch> {
+        compiled.score_graphs(rows, threads)
+    }
+}
+
+impl BatchScore for Sequences {
+    type Row = Vec<u32>;
+
+    fn rows(&self) -> &[Vec<u32>] {
+        &self.seqs
+    }
+
+    fn score_rows(
+        compiled: &CompiledModel,
+        rows: &[Vec<u32>],
+        threads: usize,
+    ) -> crate::Result<ScoreBatch> {
+        compiled.score_sequences(rows, threads)
+    }
+}
+
+impl BatchScore for TabularData {
+    type Row = Vec<f64>;
+
+    fn rows(&self) -> &[Vec<f64>] {
+        &self.rows
+    }
+
+    fn score_rows(
+        compiled: &CompiledModel,
+        rows: &[Vec<f64>],
+        threads: usize,
+    ) -> crate::Result<ScoreBatch> {
+        compiled.score_tabular(rows, threads)
     }
 }
 

@@ -1,0 +1,244 @@
+//! Dispatch-layer integration: the registry visitor is the crate's one
+//! substrate dispatch point, so this suite drives every preset through
+//! the same generic bodies the CLI commands use — path, fit, predict,
+//! λ_max, mine — and then pins the `PathDriver` refactor with a
+//! cross-engine-shape differential: every (forest × range-chunk ×
+//! threads) shape must reproduce the baseline path bit for bit.
+
+use spp::coordinator::{run_experiment, ExperimentSpec, Method};
+use spp::data::registry::{self, RegistrySubstrate, SubstrateVisitor};
+use spp::mining::{PatternNode, TreeVisitor, Walk};
+use spp::model::SparsePatternModel;
+use spp::path::{PathConfig, PathResult};
+use spp::screening::lambda_max::{lambda_max, LambdaMax};
+use spp::serve::compiled::CompiledModel;
+use spp::solver::Task;
+use spp::SppEstimator;
+
+/// ~60 records whatever the preset's paper n (synth-xxl's is 25M).
+fn tiny_scale(info: &registry::DatasetInfo) -> f64 {
+    (60.0 / info.paper_n as f64).min(1.0)
+}
+
+fn tiny_cfg(maxpat: usize) -> PathConfig {
+    PathConfig {
+        n_lambdas: 6,
+        lambda_min_ratio: 0.1,
+        maxpat,
+        ..PathConfig::default()
+    }
+}
+
+/// The naive per-pattern scorer behind one visitor hop (the oracle the
+/// `spp predict --matcher naive` arm runs).
+struct NaivePredict<'a> {
+    model: &'a SparsePatternModel,
+}
+
+impl SubstrateVisitor for NaivePredict<'_> {
+    type Out = Vec<f64>;
+    fn visit<S: RegistrySubstrate>(self, db: &S, _y: &[f64]) -> Self::Out {
+        self.model.predict(db)
+    }
+}
+
+/// `spp lambda-max`'s visitor, test-local.
+struct LmV {
+    task: Task,
+    maxpat: usize,
+}
+
+impl SubstrateVisitor for LmV {
+    type Out = LambdaMax;
+    fn visit<S: RegistrySubstrate>(self, db: &S, y: &[f64]) -> Self::Out {
+        lambda_max(db, y, self.task, self.maxpat, 1)
+    }
+}
+
+/// `spp mine`'s visitor, test-local.
+struct MineV {
+    maxpat: usize,
+}
+
+impl SubstrateVisitor for MineV {
+    type Out = Vec<(usize, String)>;
+    fn visit<S: RegistrySubstrate>(self, db: &S, _y: &[f64]) -> Self::Out {
+        struct Collect {
+            rows: Vec<(usize, String)>,
+        }
+        impl TreeVisitor for Collect {
+            fn visit(&mut self, node: &PatternNode<'_>) -> Walk {
+                self.rows
+                    .push((node.support.len(), node.to_pattern().display()));
+                Walk::Descend
+            }
+        }
+        let mut c = Collect { rows: Vec::new() };
+        db.traverse(self.maxpat, 1, &mut c);
+        c.rows
+    }
+}
+
+/// Every registered preset flows through the full visitor surface:
+/// path (coordinator), fit (estimator), predict (compiled + naive,
+/// bit-identical), λ_max and mine.
+#[test]
+fn every_preset_runs_the_whole_command_surface() {
+    for info in registry::ALL {
+        let scale = tiny_scale(&info);
+        let cfg = tiny_cfg(2);
+
+        // path — through the coordinator's visitor
+        let r = run_experiment(&ExperimentSpec {
+            dataset: info.name.into(),
+            scale,
+            maxpat: cfg.maxpat,
+            method: Method::Spp,
+            cfg,
+        })
+        .unwrap_or_else(|e| panic!("{}: path failed: {e:#}", info.name));
+        assert_eq!(r.path.points.len(), cfg.n_lambdas, "{}", info.name);
+        assert!(r.max_gap <= 2e-6, "{}: gap {}", info.name, r.max_gap);
+        assert_eq!(r.task, info.task, "{}", info.name);
+
+        // λ_max — the standalone command agrees with the path's head
+        let data = registry::lookup(info.name, scale).unwrap();
+        let lm = data.visit(LmV {
+            task: info.task,
+            maxpat: cfg.maxpat,
+        });
+        assert_eq!(
+            lm.lambda_max.to_bits(),
+            r.path.lambda_max.to_bits(),
+            "{}: lambda-max drifted from the path engine",
+            info.name
+        );
+        assert!(lm.stats.nodes > 0, "{}", info.name);
+
+        // fit — the estimator's visitor entrypoint
+        let est = SppEstimator::new(info.task)
+            .maxpat(cfg.maxpat)
+            .lambda_grid(cfg.n_lambdas, cfg.lambda_min_ratio);
+        let fit = est
+            .fit_dataset(&data)
+            .unwrap_or_else(|e| panic!("{}: fit failed: {e:#}", info.name));
+        assert_eq!(
+            fit.path.lambda_max.to_bits(),
+            r.path.lambda_max.to_bits(),
+            "{}: fit_dataset diverged from run_experiment",
+            info.name
+        );
+
+        // predict — serve-layer compiled matcher vs the naive oracle,
+        // bit-identical final predictions
+        let model = fit.model;
+        let reparsed = SparsePatternModel::parse(&model.serialize().unwrap()).unwrap();
+        let compiled = CompiledModel::compile_for(&reparsed, info.kind.tag()).unwrap();
+        let batch = compiled.score_dataset(&data, 1).unwrap();
+        let naive = data.visit(NaivePredict { model: &reparsed });
+        assert_eq!(batch.scores.len(), naive.len(), "{}", info.name);
+        for (s, n) in batch.scores.iter().zip(&naive) {
+            assert_eq!(
+                compiled.output(*s).to_bits(),
+                n.to_bits(),
+                "{}: compiled and naive matchers disagree",
+                info.name
+            );
+        }
+
+        // mine — raw traversal through the same dispatch point
+        let rows = data.visit(MineV { maxpat: cfg.maxpat });
+        assert!(!rows.is_empty(), "{}: mine found nothing", info.name);
+        assert!(
+            rows.len() as u64 >= lm.stats.nodes - lm.stats.pruned,
+            "{}: mine saw fewer nodes than the screened traversal kept",
+            info.name
+        );
+    }
+}
+
+fn shaped_path(
+    dataset: &str,
+    scale: f64,
+    reuse_forest: bool,
+    range_chunk: usize,
+    threads: usize,
+) -> PathResult {
+    let cfg = PathConfig {
+        reuse_forest,
+        range_chunk,
+        threads,
+        ..tiny_cfg(2)
+    };
+    run_experiment(&ExperimentSpec {
+        dataset: dataset.into(),
+        scale,
+        maxpat: cfg.maxpat,
+        method: Method::Spp,
+        cfg,
+    })
+    .unwrap_or_else(|e| panic!("{dataset} shape ({reuse_forest},{range_chunk},{threads}): {e:#}"))
+    .path
+}
+
+fn assert_bit_identical(dataset: &str, shape: &str, a: &PathResult, b: &PathResult) {
+    assert_eq!(a.lambda_max.to_bits(), b.lambda_max.to_bits(), "{dataset} {shape}");
+    assert_eq!(a.points.len(), b.points.len(), "{dataset} {shape}");
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.lambda.to_bits(), pb.lambda.to_bits(), "{dataset} {shape}");
+        assert_eq!(pa.b.to_bits(), pb.b.to_bits(), "{dataset} {shape} λ={}", pa.lambda);
+        assert_eq!(pa.gap.to_bits(), pb.gap.to_bits(), "{dataset} {shape} λ={}", pa.lambda);
+        assert_eq!(
+            pa.working_size, pb.working_size,
+            "{dataset} {shape} λ={}",
+            pa.lambda
+        );
+        assert_eq!(pa.active.len(), pb.active.len(), "{dataset} {shape} λ={}", pa.lambda);
+        for ((qa, wa), (qb, wb)) in pa.active.iter().zip(&pb.active) {
+            assert_eq!(qa, qb, "{dataset} {shape} λ={}", pa.lambda);
+            assert_eq!(wa.to_bits(), wb.to_bits(), "{dataset} {shape} λ={}", pa.lambda);
+        }
+    }
+}
+
+/// The `PathDriver` correctness bar: on one substrate per kind, every
+/// engine shape — forest on/off × per-λ vs chunked screening × 1 vs 4
+/// workers — reproduces the baseline (forest, chunk 1, sequential)
+/// path bit for bit, and the driver's telemetry still tells the shapes
+/// apart.
+#[test]
+fn every_engine_shape_is_bit_identical_to_the_baseline() {
+    for dataset in ["splice", "cpdb", "synth-seq", "synth-tab"] {
+        let info = registry::require_info(dataset).unwrap();
+        let scale = tiny_scale(&info);
+        let base = shaped_path(dataset, scale, true, 1, 1);
+
+        for reuse in [true, false] {
+            for chunk in [1usize, 4] {
+                let mut per_thread = Vec::new();
+                for threads in [1usize, 4] {
+                    let p = shaped_path(dataset, scale, reuse, chunk, threads);
+                    let shape = format!("forest={reuse} chunk={chunk} threads={threads}");
+                    assert_bit_identical(dataset, &shape, &base, &p);
+
+                    // telemetry still distinguishes the shapes
+                    if chunk > 1 {
+                        assert!(p.total_chunk_mine_nodes() > 0, "{dataset} {shape}");
+                        assert!(p.chunk_hits() > 0, "{dataset} {shape}");
+                    } else {
+                        assert_eq!(p.total_chunk_mine_nodes(), 0, "{dataset} {shape}");
+                        assert_eq!(p.chunk_hits(), 0, "{dataset} {shape}");
+                        if reuse {
+                            assert!(p.total_forest_hits() > 0, "{dataset} {shape}");
+                        }
+                    }
+                    per_thread.push(p);
+                }
+                // the traversal bill is a per-shape property, not a
+                // per-thread-count one
+                let nodes: Vec<u64> = per_thread.iter().map(|p| p.total_nodes()).collect();
+                assert_eq!(nodes[0], nodes[1], "{dataset} forest={reuse} chunk={chunk}");
+            }
+        }
+    }
+}

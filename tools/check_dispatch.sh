@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Dispatch-hygiene gate: the substrate enums (`Dataset`,
+# `ShardedDataset`, `registry::Kind`) may only be matched inside the
+# two registries — data/registry.rs (dataset side) and
+# serve/registry.rs (tag-keyed model side).  Everything else reaches a
+# concrete substrate through the visitor hop, so a `Dataset::Itemsets`
+# arm appearing anywhere else is a regression toward the per-substrate
+# match ladders this gate exists to keep dead.
+#
+# The pattern is word-bounded so unrelated `ArtifactKind::` /
+# `ErrorKind::` paths don't trip it.  Library sources and the runnable
+# examples are gated; benches and tests may still destructure the enums
+# (some are differential oracles that want the raw substrate).
+set -u
+cd "$(dirname "$0")/.."
+
+strays=$(grep -rnE '\b(Dataset|ShardedDataset|Kind)::' rust/src examples \
+    --include='*.rs' \
+    | grep -vE '^rust/src/(data|serve)/registry\.rs:' || true)
+
+if [ -n "$strays" ]; then
+    echo "substrate dispatch outside the registries:" >&2
+    echo "$strays" >&2
+    echo >&2
+    echo "route the code through data::registry's visitors instead" >&2
+    exit 1
+fi
+echo "dispatch hygiene OK: substrate matches only in the registries"
